@@ -1,0 +1,85 @@
+"""AOT lowering: JAX graphs -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (not ``lowered.compile().serialize()``) is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla_extension 0.5.1 bundled with the published ``xla`` crate rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Emits, for every loss kind and block size:
+    artifacts/stats_{kind}_{B}.hlo.txt
+    artifacts/linesearch_{kind}_{B}.hlo.txt
+plus a manifest (artifacts/manifest.json) the Rust runtime reads to discover
+available shapes.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import linesearch as ls
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+# Block sizes (example-axis); the runtime picks the smallest that fits n.
+BLOCK_SIZES = (1024, 4096, 16384, 65536)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stats(kind, b):
+    vec = jax.ShapeDtypeStruct((b,), jnp.float64)
+    fn = model.stats_model(kind)
+    return to_hlo_text(jax.jit(fn).lower(vec, vec, vec))
+
+
+def lower_linesearch(kind, b):
+    vec = jax.ShapeDtypeStruct((b,), jnp.float64)
+    kvec = jax.ShapeDtypeStruct((ls.K_ALPHAS,), jnp.float64)
+    fn = model.linesearch_model(kind)
+    return to_hlo_text(jax.jit(fn).lower(vec, vec, vec, vec, kvec))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--kinds", default=",".join(ref.LOSS_KINDS))
+    ap.add_argument("--blocks", default=",".join(str(b) for b in BLOCK_SIZES))
+    args = ap.parse_args()
+
+    kinds = [k for k in args.kinds.split(",") if k]
+    blocks = [int(b) for b in args.blocks.split(",") if b]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"k_alphas": ls.K_ALPHAS, "tile": ls.TILE, "artifacts": []}
+    for kind in kinds:
+        for b in blocks:
+            for name, lower in (("stats", lower_stats), ("linesearch", lower_linesearch)):
+                fname = f"{name}_{kind}_{b}.hlo.txt"
+                path = os.path.join(args.out_dir, fname)
+                text = lower(kind, b)
+                with open(path, "w") as f:
+                    f.write(text)
+                manifest["artifacts"].append(
+                    {"file": fname, "model": name, "kind": kind, "block": b}
+                )
+                print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: per-example GLM statistics.
+
+Computes, for a block of examples, the working weight w = d²l/dŷ², working
+response z = -g/w and per-example loss from (margins, y, mask) — the inner
+loop of every d-GLMNET outer iteration (Section 2 of the paper: the
+quadratic approximation coefficients).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the example axis is tiled with
+TILE-sized blocks resident in VMEM; all math is elementwise VPU work
+(sigmoid / erf / exp), no MXU involvement. `interpret=True` everywhere —
+the CPU PJRT plugin cannot execute Mosaic custom-calls; numerics are
+identical.
+
+VMEM footprint per grid step (TILE = 1024, f64):
+  3 input vectors + 3 output vectors = 6 · 1024 · 8 B = 48 KiB  « 16 MiB VMEM.
+Estimated TPU utilization is VPU-bound; see DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+# Example-axis tile. Interpret-mode Pallas executes the grid as a sequential
+# HLO while-loop with dynamic-slice per step, so grid-step COUNT (not tile
+# size) dominates CPU latency: prefer the largest tile that divides the
+# block and stays VMEM-modest. 8192 keeps 6 resident f64 vectors at 384 KiB
+# (≪ 16 MiB VMEM) and cuts the 65536-block step count 8× vs TILE=1024 —
+# measured 4.7× faster through PJRT (EXPERIMENTS.md §Perf).
+TILE = 8192
+
+
+def tile_for(b):
+    """Largest tile ≤ TILE dividing the block size."""
+    t = min(b, TILE)
+    while b % t != 0:
+        t //= 2
+    return max(t, 1)
+
+
+def _stats_kernel(kind, m_ref, y_ref, mask_ref, w_ref, z_ref, l_ref):
+    m = m_ref[...]
+    y = y_ref[...]
+    mask = mask_ref[...]
+    w_raw = ref.loss_d2(kind, y, m)
+    w = jnp.maximum(w_raw, ref.W_FLOOR)
+    g = ref.loss_d1(kind, y, m)
+    z = -g / w
+    ell = ref.loss_value(kind, y, m)
+    w_ref[...] = w * mask
+    z_ref[...] = z * mask
+    l_ref[...] = ell * mask
+
+
+def glm_stats(kind, margins, y, mask):
+    """Pallas-tiled (w, z, per-example loss). Shapes: all (B,), B % TILE == 0."""
+    (b,) = margins.shape
+    tile = tile_for(b)
+    grid = (b // tile,)
+    spec = pl.BlockSpec((tile,), lambda i: (i,))
+    kernel = functools.partial(_stats_kernel, kind)
+    dtype = margins.dtype
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), dtype),
+            jax.ShapeDtypeStruct((b,), dtype),
+            jax.ShapeDtypeStruct((b,), dtype),
+        ],
+        interpret=True,
+    )(margins, y, mask)

@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: batched line-search objective.
+
+Evaluates  L(alpha_k) = sum_i l(y_i, m_i + alpha_k * d_i)  for a whole vector
+of candidate step sizes in one pass over the examples — the batched
+evaluation that lets one PJRT execution serve an entire Armijo backtrack
+(Algorithm 3; rust/src/solver/linesearch.rs mirrors the batching).
+
+TPU mapping: grid over example tiles; each grid step loads one TILE of
+(m, d, y, mask) into VMEM, broadcasts against the K alphas (K*TILE f64
+intermediate = 512 KiB at K=64, TILE=1024 — VMEM-resident), reduces over the
+tile and accumulates into the K-vector output. The output block maps every
+grid step to the same block; first step initializes, later steps accumulate —
+the standard Pallas reduction pattern.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+# K×TILE f64 intermediate lives in VMEM: 64 × 2048 × 8 B = 1 MiB. Larger
+# tiles cut interpret-mode grid steps (see glm_stats.py) at acceptable VMEM.
+TILE = 2048
+
+
+def tile_for(b):
+    """Largest tile ≤ TILE dividing the block size."""
+    t = min(b, TILE)
+    while b % t != 0:
+        t //= 2
+    return max(t, 1)
+# Number of candidate step sizes per call. Covers the coordinator's grid
+# phase (17 candidates) and Armijo phase (40) with room to spare; unused
+# lanes are padded with alpha = 0 and simply ignored by the caller.
+K_ALPHAS = 64
+
+
+def _ls_kernel(kind, m_ref, d_ref, y_ref, mask_ref, alpha_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    m = m_ref[...]
+    d = d_ref[...]
+    y = y_ref[...]
+    mask = mask_ref[...]
+    alphas = alpha_ref[...]
+    shifted = m[None, :] + alphas[:, None] * d[None, :]  # (K, TILE)
+    ell = ref.loss_value(kind, y[None, :], shifted) * mask[None, :]
+    out_ref[...] += jnp.sum(ell, axis=1)
+
+
+def linesearch_losses(kind, margins, dmargins, y, mask, alphas):
+    """Pallas-tiled batched line-search loss sums.
+
+    Shapes: margins/dmargins/y/mask (B,) with B % TILE == 0; alphas (K,).
+    Returns (K,) loss sums over the masked examples.
+    """
+    (b,) = margins.shape
+    (k,) = alphas.shape
+    tile = tile_for(b)
+    grid = (b // tile,)
+    vec = pl.BlockSpec((tile,), lambda i: (i,))
+    whole_k = pl.BlockSpec((k,), lambda i: (0,))
+    kernel = functools.partial(_ls_kernel, kind)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[vec, vec, vec, vec, whole_k],
+        out_specs=whole_k,
+        out_shape=jax.ShapeDtypeStruct((k,), margins.dtype),
+        interpret=True,
+    )(margins, dmargins, y, mask, alphas)

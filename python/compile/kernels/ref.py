@@ -1,0 +1,159 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the numerical ground truth the kernels (and, transitively, the
+Rust-side `NativeCompute`) are tested against. They mirror the Rust
+implementations in `rust/src/glm/loss.rs` exactly — same W_FLOOR, same
+stable formulations — so the three implementations (jnp ref, Pallas kernel,
+Rust native) can be cross-checked to tight tolerances.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+# ---------------------------------------------------------------------------
+# Normal distribution helpers WITHOUT the `erf` HLO opcode.
+#
+# jax.scipy.stats.norm lowers to the dedicated `erf` HLO instruction, which
+# the xla_extension 0.5.1 HLO-text parser bundled with the rust `xla` crate
+# does not know. We therefore implement erfc from basic ops, mirroring
+# rust/src/util/stats.rs BRANCH FOR BRANCH (same Numerical-Recipes rational
+# approximation, same small-|x| Maclaurin series, same z>6 tail series) so
+# the Rust native path and the XLA path agree to ~1e-12 even where the
+# approximation itself is only ~1e-7 from true erfc.
+# ---------------------------------------------------------------------------
+
+_SQRT_PI = math.sqrt(math.pi)
+_INV_SQRT_2PI = 0.3989422804014327
+_SQRT_2PI = math.sqrt(2.0 * math.pi)
+
+
+def _erf_small(x):
+    """Maclaurin series for erf, |x| < 0.5 (30 fixed terms, like the rust)."""
+    x = jnp.clip(x, -0.6, 0.6)  # keep the unselected-branch lanes finite
+    x2 = x * x
+    term = x
+    acc = x
+    for n in range(1, 30):
+        term = term * (-x2 / n)
+        acc = acc + term / (2 * n + 1)
+    return (2.0 / _SQRT_PI) * acc
+
+
+def erfc(x):
+    """Complementary error function, mirroring rust util::stats::erfc."""
+    ax = jnp.abs(x)
+    z = ax
+    t = 1.0 / (1.0 + 0.5 * z)
+    tau = t * jnp.exp(
+        -z * z
+        - 1.26551223
+        + t
+        * (1.00002368
+           + t
+           * (0.37409196
+              + t
+              * (0.09678418
+                 + t
+                 * (-0.18628806
+                    + t
+                    * (0.27886807
+                       + t
+                       * (-1.13520398
+                          + t * (1.48851587 + t * (-0.82215223 + t * 0.17087277))))))))
+    )
+    zs = jnp.maximum(z, 1e-10)
+    zi2 = 1.0 / (zs * zs)
+    tail = jnp.exp(-z * z) / (zs * _SQRT_PI) * (1.0 - 0.5 * zi2 + 0.75 * zi2 * zi2)
+    r = jnp.where(z > 6.0, tail, tau)
+    r = jnp.where(x >= 0.0, r, 2.0 - r)
+    return jnp.where(ax < 0.5, 1.0 - _erf_small(x), r)
+
+
+def normal_cdf(x):
+    return 0.5 * erfc(-x * (1.0 / math.sqrt(2.0)))
+
+
+def normal_pdf(x):
+    return _INV_SQRT_2PI * jnp.exp(-0.5 * x * x)
+
+
+def _mills_ratio_inv(t):
+    """phi(t)/Phi(t), stable for t << 0 — mirrors rust mills_ratio_inv."""
+    a = jnp.maximum(-t, 1e-10)
+    extreme = a + 1.0 / a
+    c = normal_cdf(t)
+    mid = normal_pdf(t) / jnp.maximum(c, 1e-300)
+    return jnp.where((t < -30.0) | (c < 1e-300), extreme, mid)
+
+# Floor for the working weight w = d2l/dyhat2, matching rust glm::loss::W_FLOOR.
+W_FLOOR = 1e-10
+
+LOSS_KINDS = ("logistic", "squared", "probit")
+
+
+def loss_value(kind, y, yhat):
+    """Example-wise loss l(y, yhat)."""
+    if kind == "logistic":
+        # log(1 + exp(-y yhat)), stable.
+        return jnp.logaddexp(0.0, -y * yhat)
+    if kind == "squared":
+        return 0.5 * (y - yhat) ** 2
+    if kind == "probit":
+        # -log Phi(y yhat); asymptotic branch for the deep tail, mirroring
+        # the rust implementation (guard c > 1e-300).
+        t = y * yhat
+        c = normal_cdf(t)
+        direct = -jnp.log(jnp.maximum(c, 1e-300))
+        tail = 0.5 * t * t + jnp.log(jnp.maximum(jnp.abs(t), 1e-10) * _SQRT_2PI)
+        return jnp.where(c > 1e-300, direct, tail)
+    raise ValueError(kind)
+
+
+def loss_d1(kind, y, yhat):
+    """dl/dyhat."""
+    if kind == "logistic":
+        return -y * jax.nn.sigmoid(-y * yhat)
+    if kind == "squared":
+        return yhat - y
+    if kind == "probit":
+        t = y * yhat
+        return -y * _mills_ratio_inv(t)
+    raise ValueError(kind)
+
+
+def loss_d2(kind, y, yhat):
+    """d2l/dyhat2."""
+    if kind == "logistic":
+        p = jax.nn.sigmoid(yhat)
+        return p * (1.0 - p)
+    if kind == "squared":
+        return jnp.ones_like(yhat)
+    if kind == "probit":
+        t = y * yhat
+        mills = _mills_ratio_inv(t)
+        return t * mills + mills**2
+    raise ValueError(kind)
+
+
+def glm_stats_ref(kind, margins, y, mask):
+    """Reference for the glm_stats kernel.
+
+    Returns (w, z, per_example_loss), all masked (pad lanes produce 0).
+    """
+    w_raw = loss_d2(kind, y, margins)
+    w = jnp.maximum(w_raw, W_FLOOR)
+    g = loss_d1(kind, y, margins)
+    z = -g / w
+    ell = loss_value(kind, y, margins)
+    return w * mask, z * mask, ell * mask
+
+
+def linesearch_ref(kind, margins, y, dmargins, mask, alphas):
+    """Reference for the linesearch kernel: sum_i l(y_i, m_i + a d_i) per a."""
+    shifted = margins[None, :] + alphas[:, None] * dmargins[None, :]
+    ell = loss_value(kind, y[None, :], shifted)
+    return jnp.sum(ell * mask[None, :], axis=1)

@@ -1,0 +1,43 @@
+"""L2: the JAX compute graphs the Rust coordinator executes through PJRT.
+
+Two graphs per loss family, both wrapping the L1 Pallas kernels:
+
+* ``stats_model``      — (margins, y, mask) -> (w, z, loss_sum)
+                         the per-iteration working-set computation
+                         (Section 2's quadratic approximation coefficients).
+* ``linesearch_model`` — (margins, dmargins, y, mask, alphas) -> loss_sums[K]
+                         the batched Armijo evaluation (Algorithm 3).
+
+Shapes are static per artifact (block size B, K_ALPHAS candidates); the Rust
+runtime pads with mask = 0. Everything is f64 to match the Rust-side native
+oracle bit-for-bit at the comparison tolerances.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import glm_stats as gs
+from compile.kernels import linesearch as ls
+
+jax.config.update("jax_enable_x64", True)
+
+
+def stats_model(kind):
+    """Returns fn(margins[B], y[B], mask[B]) -> (w[B], z[B], loss_sum[1])."""
+
+    def fn(margins, y, mask):
+        w, z, ell = gs.glm_stats(kind, margins, y, mask)
+        # Sum the masked per-example losses; keep as a length-1 vector so the
+        # rust side reads a uniform layout.
+        return w, z, jnp.sum(ell)[None]
+
+    return fn
+
+
+def linesearch_model(kind):
+    """Returns fn(margins[B], dmargins[B], y[B], mask[B], alphas[K]) -> losses[K]."""
+
+    def fn(margins, dmargins, y, mask, alphas):
+        return (ls.linesearch_losses(kind, margins, dmargins, y, mask, alphas),)
+
+    return fn

@@ -1,0 +1,129 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+The Pallas kernels must agree with the pure-jnp oracles (ref.py) across loss
+families, shapes, masks and value ranges. Hypothesis drives the sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import glm_stats as gs
+from compile.kernels import linesearch as ls
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+KINDS = list(ref.LOSS_KINDS)
+
+
+def _mk(n, seed, margin_scale=3.0):
+    rng = np.random.default_rng(seed)
+    m = jnp.array(rng.normal(scale=margin_scale, size=n))
+    y = jnp.array(np.where(rng.random(n) < 0.5, 1.0, -1.0))
+    mask = jnp.array((np.arange(n) < n - n // 7).astype(float))  # some padding
+    return m, y, mask
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("blocks", [1, 2, 4])
+def test_glm_stats_matches_ref(kind, blocks):
+    n = gs.TILE * blocks
+    m, y, mask = _mk(n, seed=blocks)
+    w, z, ell = gs.glm_stats(kind, m, y, mask)
+    wr, zr, lr = ref.glm_stats_ref(kind, m, y, mask)
+    # interpret-mode Pallas and the jnp reference can differ by a few ULPs
+    # on the probit tails (different fusion order in erf/exp chains).
+    np.testing.assert_allclose(w, wr, rtol=1e-9, atol=1e-300)
+    np.testing.assert_allclose(z, zr, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(ell, lr, rtol=1e-9, atol=1e-12)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_linesearch_matches_ref(kind):
+    n = gs.TILE * 3
+    m, y, mask = _mk(n, seed=9)
+    rng = np.random.default_rng(10)
+    d = jnp.array(rng.normal(size=n))
+    alphas = jnp.array(np.concatenate([[1.0, 0.0], rng.random(ls.K_ALPHAS - 2)]))
+    got = ls.linesearch_losses(kind, m, d, y, mask, alphas)
+    want = ref.linesearch_ref(kind, m, y, d, mask, alphas)
+    np.testing.assert_allclose(got, want, rtol=1e-11)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_mask_zero_lanes_contribute_nothing(kind):
+    n = gs.TILE
+    m, y, _ = _mk(n, seed=3)
+    mask = jnp.zeros(n)
+    w, z, ell = gs.glm_stats(kind, m, y, mask)
+    assert float(jnp.abs(w).max()) == 0.0
+    assert float(jnp.abs(z).max()) == 0.0
+    assert float(jnp.abs(ell).max()) == 0.0
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_alpha_zero_equals_stats_loss(kind):
+    # linesearch at alpha=0 must equal the masked loss sum from glm_stats.
+    n = gs.TILE * 2
+    m, y, mask = _mk(n, seed=4)
+    d = jnp.ones(n)
+    alphas = jnp.zeros(ls.K_ALPHAS)
+    losses = ls.linesearch_losses(kind, m, d, y, mask, alphas)
+    _, _, ell = gs.glm_stats(kind, m, y, mask)
+    np.testing.assert_allclose(losses[0], jnp.sum(ell), rtol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    kind=st.sampled_from(KINDS),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.1, 20.0),
+)
+def test_hypothesis_stats_sweep(kind, seed, scale):
+    """Random margins at many scales: kernel == ref, outputs finite."""
+    n = gs.TILE
+    rng = np.random.default_rng(seed)
+    m = jnp.array(rng.normal(scale=scale, size=n))
+    y = jnp.array(np.where(rng.random(n) < 0.5, 1.0, -1.0))
+    mask = jnp.array(rng.integers(0, 2, size=n).astype(float))
+    w, z, ell = gs.glm_stats(kind, m, y, mask)
+    wr, zr, lr = ref.glm_stats_ref(kind, m, y, mask)
+    for got, want in ((w, wr), (z, zr), (ell, lr)):
+        assert bool(jnp.isfinite(got).all())
+        np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    kind=st.sampled_from(KINDS),
+    seed=st.integers(0, 2**31 - 1),
+    alpha_hi=st.floats(0.01, 1.0),
+)
+def test_hypothesis_linesearch_sweep(kind, seed, alpha_hi):
+    n = gs.TILE
+    rng = np.random.default_rng(seed)
+    m = jnp.array(rng.normal(size=n))
+    d = jnp.array(rng.normal(size=n))
+    y = jnp.array(np.where(rng.random(n) < 0.5, 1.0, -1.0))
+    mask = jnp.ones(n)
+    alphas = jnp.array(np.linspace(0.0, alpha_hi, ls.K_ALPHAS))
+    got = ls.linesearch_losses(kind, m, d, y, mask, alphas)
+    want = ref.linesearch_ref(kind, m, y, d, mask, alphas)
+    assert bool(jnp.isfinite(got).all())
+    np.testing.assert_allclose(got, want, rtol=1e-10)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_extreme_margins_finite(kind):
+    # Saturated sigmoid / tail probit: everything must stay finite (the rust
+    # side relies on this for line searches that overshoot).
+    n = gs.TILE
+    m = jnp.array(np.linspace(-40.0, 40.0, n))
+    y = jnp.array(np.where(np.arange(n) % 2 == 0, 1.0, -1.0))
+    mask = jnp.ones(n)
+    w, z, ell = gs.glm_stats(kind, m, y, mask)
+    for v in (w, z, ell):
+        assert bool(jnp.isfinite(v).all()), f"{kind} produced non-finite values"

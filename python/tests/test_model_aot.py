@@ -1,0 +1,79 @@
+"""L2 model + AOT lowering checks: shapes, HLO text validity, manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import linesearch as ls
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.mark.parametrize("kind", ref.LOSS_KINDS)
+def test_stats_model_shapes(kind):
+    b = 1024
+    fn = model.stats_model(kind)
+    m = jnp.zeros(b)
+    y = jnp.ones(b)
+    mask = jnp.ones(b)
+    w, z, lsum = jax.jit(fn)(m, y, mask)
+    assert w.shape == (b,) and z.shape == (b,) and lsum.shape == (1,)
+    # At zero margins the loss sums are known analytically.
+    if kind == "logistic":
+        np.testing.assert_allclose(lsum[0], b * np.log(2.0), rtol=1e-12)
+    if kind == "probit":
+        np.testing.assert_allclose(lsum[0], -b * np.log(0.5), rtol=1e-12)
+
+
+@pytest.mark.parametrize("kind", ref.LOSS_KINDS)
+def test_linesearch_model_monotone_for_descent(kind):
+    # Moving along the exact margin-space Newton direction must decrease the
+    # loss for small alpha.
+    b = 1024
+    rng = np.random.default_rng(0)
+    m = jnp.array(rng.normal(size=b))
+    y = jnp.array(np.where(rng.random(b) < 0.5, 1.0, -1.0))
+    mask = jnp.ones(b)
+    d = -ref.loss_d1(kind, y, m)  # steepest descent in margin space
+    alphas = jnp.array(np.linspace(0.0, 0.2, ls.K_ALPHAS))
+    fn = model.linesearch_model(kind)
+    (losses,) = jax.jit(fn)(m, d, y, mask, alphas)
+    assert float(losses[1]) < float(losses[0])
+
+
+def test_hlo_text_lowering_roundtrip():
+    text = aot.lower_stats("logistic", 1024)
+    assert text.startswith("HloModule")
+    assert "f64[1024]" in text
+    text2 = aot.lower_linesearch("squared", 1024)
+    assert f"f64[{ls.K_ALPHAS}]" in text2
+
+
+def test_aot_main_writes_manifest(tmp_path):
+    out = tmp_path / "arts"
+    argv = [
+        sys.executable,
+        "-m",
+        "compile.aot",
+        "--out-dir",
+        str(out),
+        "--kinds",
+        "logistic",
+        "--blocks",
+        "1024",
+    ]
+    subprocess.run(argv, check=True, cwd=os.path.dirname(os.path.dirname(__file__)))
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["k_alphas"] == ls.K_ALPHAS
+    files = {a["file"] for a in manifest["artifacts"]}
+    assert files == {"stats_logistic_1024.hlo.txt", "linesearch_logistic_1024.hlo.txt"}
+    for f in files:
+        assert (out / f).read_text().startswith("HloModule")

@@ -1,0 +1,165 @@
+//! Design-choice ablations (DESIGN.md calls these out):
+//!   1. AllReduce algorithm: ring vs naive, end-to-end training time.
+//!   2. Feature partition: hashed (the paper's Reduce-by-key layout) vs
+//!      greedy nnz-balanced — straggler skew and ALB's interaction with it.
+//!   3. ALB quorum κ sweep under an injected straggler.
+//!   4. λ-path warm start vs cold starts (solver::path, the §8.2 protocol).
+//!
+//!     cargo bench --bench ablations
+
+use dglmnet::cluster::allreduce::AllReduceAlgo;
+use dglmnet::coordinator::{fit_distributed, DistributedConfig};
+use dglmnet::data::{synth, Corpus, SynthConfig};
+use dglmnet::glm::loss::LossKind;
+use dglmnet::glm::regularizer::ElasticNet;
+use dglmnet::solver::compute::NativeCompute;
+use dglmnet::solver::dglmnet::DGlmnetConfig;
+use dglmnet::solver::path;
+use dglmnet::sparse::FeaturePartition;
+use dglmnet::util::bench::Table;
+use std::time::{Duration, Instant};
+
+fn main() {
+    allreduce_ablation();
+    partition_ablation();
+    kappa_ablation();
+    warmstart_ablation();
+}
+
+fn allreduce_ablation() {
+    println!("=== Ablation 1: ring vs naive AllReduce (end-to-end, M=8) ===");
+    let ds = synth::webspam_like(
+        &SynthConfig {
+            n: 4000,
+            p: 10_000,
+            seed: 31,
+        },
+        80,
+    );
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::l1_only(1.0);
+    let mut t = Table::new(&["allreduce", "wall (s)", "total MiB", "hottest-node MiB"]);
+    for algo in [AllReduceAlgo::Naive, AllReduceAlgo::Ring] {
+        let cfg = DistributedConfig {
+            nodes: 8,
+            max_iters: 10,
+            tol: 0.0,
+            eval_every: 0,
+            allreduce: algo,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let fit = fit_distributed(&ds, None, &compute, &pen, &cfg);
+        t.row(&[
+            format!("{algo:?}"),
+            format!("{:.3}", t0.elapsed().as_secs_f64()),
+            format!("{:.2}", fit.comm_bytes as f64 / (1024.0 * 1024.0)),
+            "(see Table 2 bench)".into(),
+        ]);
+    }
+    t.print();
+}
+
+fn partition_ablation() {
+    println!("\n=== Ablation 2: hashed vs nnz-balanced feature partition ===");
+    // Power-law columns make hashing unbalanced.
+    let ds = synth::webspam_like(
+        &SynthConfig {
+            n: 3000,
+            p: 8_000,
+            seed: 32,
+        },
+        100,
+    );
+    let x = ds.to_csc();
+    let mut t = Table::new(&["partition", "nnz skew (max/mean)"]);
+    let hashed = FeaturePartition::hashed(x.ncols, 8, 1);
+    let balanced = FeaturePartition::nnz_balanced(&x, 8);
+    t.row(&["hashed (paper)".into(), format!("{:.3}", hashed.skew(&x))]);
+    t.row(&["nnz-balanced (LPT)".into(), format!("{:.3}", balanced.skew(&x))]);
+    t.print();
+    println!("(hash skew is the intrinsic straggler source ALB §7 addresses)");
+}
+
+fn kappa_ablation() {
+    println!("\n=== Ablation 3: ALB quorum κ under a 60 ms/pass straggler (M=4) ===");
+    let ds = synth::webspam_like(
+        &SynthConfig {
+            n: 1200,
+            p: 4_000,
+            seed: 33,
+        },
+        60,
+    );
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::l1_only(0.5);
+    let mut delays = vec![Duration::ZERO; 4];
+    delays[2] = Duration::from_millis(60);
+    let mut t = Table::new(&["kappa", "wall (s)", "final objective"]);
+    for kappa in [None, Some(0.5), Some(0.75), Some(1.0)] {
+        let cfg = DistributedConfig {
+            nodes: 4,
+            alb_kappa: kappa,
+            max_iters: 8,
+            tol: 0.0,
+            eval_every: 0,
+            straggler_delays: delays.clone(),
+            chunk: 8,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let fit = fit_distributed(&ds, None, &compute, &pen, &cfg);
+        t.row(&[
+            kappa
+                .map(|k| format!("{k}"))
+                .unwrap_or_else(|| "BSP (no ALB)".into()),
+            format!("{:.3}", t0.elapsed().as_secs_f64()),
+            format!("{:.4}", fit.objective),
+        ]);
+    }
+    t.print();
+    println!("(κ=1.0 waits for everyone ≈ BSP; smaller κ trades per-iteration progress for straggler immunity)");
+}
+
+fn warmstart_ablation() {
+    println!("\n=== Ablation 4: λ-path warm starts vs cold starts (§8.2 protocol) ===");
+    let splits = Corpus::webspam_like(0.15, 34);
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let lmax = path::lambda_max(&splits.train, LossKind::Logistic);
+    let lambdas: Vec<f64> = (0..6).map(|k| lmax * 0.5f64.powi(k + 1)).collect();
+    let cfg = DGlmnetConfig {
+        nodes: 4,
+        max_iters: 200,
+        tol: 1e-9,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let warm = path::l1_path(&splits, &compute, &lambdas, 0.0, &cfg);
+    let warm_time = t0.elapsed().as_secs_f64();
+    let warm_iters: usize = warm.points.iter().map(|p| p.iters).sum();
+
+    let t1 = Instant::now();
+    let mut cold_iters = 0;
+    for &l1 in &lambdas {
+        let f = dglmnet::solver::dglmnet::fit(
+            &splits.train,
+            &compute,
+            &ElasticNet::l1_only(l1),
+            &cfg,
+            None,
+        );
+        cold_iters += f.iters;
+    }
+    let cold_time = t1.elapsed().as_secs_f64();
+
+    let mut t = Table::new(&["strategy", "total iters", "wall (s)"]);
+    t.row(&["warm-started path".into(), warm_iters.to_string(), format!("{warm_time:.3}")]);
+    t.row(&["cold starts".into(), cold_iters.to_string(), format!("{cold_time:.3}")]);
+    t.print();
+    let best = warm.best_point();
+    println!(
+        "validation-best λ1 = {:.4} (auPRC {:.4}, nnz {}) — the §8.2 selection",
+        best.lambda1, best.val_auprc, best.nnz
+    );
+}

@@ -1,0 +1,99 @@
+//! Figure 1 — constant μ = 1 vs adaptive μ (L1 regularization).
+//!
+//! Regenerates the paper's three panels (relative objective suboptimality,
+//! testing quality, number of non-zero weights — all vs time) on the
+//! conflict-heavy correlated-dense dataset, where the block-diagonal
+//! Hessian approximation is poor and the line search backtracks.
+//!
+//!     cargo bench --bench fig1_mu_adaptive
+
+use dglmnet::cluster::allreduce::AllReduceAlgo;
+use dglmnet::coordinator::{fit_distributed, DistributedConfig};
+use dglmnet::data::{synth, SynthConfig};
+use dglmnet::glm::loss::LossKind;
+use dglmnet::glm::regularizer::ElasticNet;
+use dglmnet::harness;
+use dglmnet::solver::compute::NativeCompute;
+
+fn main() {
+    let scale = std::env::var("DGLMNET_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let n = (3000.0 * scale) as usize;
+    let splits = synth::correlated_dense(
+        &SynthConfig {
+            n,
+            p: 400,
+            seed: 13,
+        },
+        0.6,
+    )
+    .split(n / 10, n / 10);
+    let kind = LossKind::Logistic;
+    let pen = ElasticNet::l1_only(10.0);
+    let compute = NativeCompute::new(kind);
+    let f_star = harness::reference_optimum(&splits, kind, &pen);
+    println!(
+        "=== Figure 1: constant vs adaptive μ (correlated_dense n={} p=400, L1) ===",
+        splits.train.n()
+    );
+
+    let base = DistributedConfig {
+        nodes: 16,
+        max_iters: 40,
+        eval_every: 1,
+        tol: 0.0,
+        allreduce: AllReduceAlgo::Ring,
+        ..Default::default()
+    };
+    let adaptive = fit_distributed(
+        &splits.train,
+        Some(&splits.test),
+        &compute,
+        &pen,
+        &DistributedConfig {
+            adaptive_mu: true,
+            ..base.clone()
+        },
+    );
+    let constant = fit_distributed(
+        &splits.train,
+        Some(&splits.test),
+        &compute,
+        &pen,
+        &DistributedConfig {
+            adaptive_mu: false,
+            ..base
+        },
+    );
+
+    let mut at = adaptive.trace.clone();
+    at.algorithm = "adaptive-mu".into();
+    let mut ct = constant.trace.clone();
+    ct.algorithm = "constant-mu(1)".into();
+    harness::print_convergence("Fig 1 (subopt / auPRC / nnz vs time)", &[&at, &ct], f_star);
+
+    let full_steps = |t: &dglmnet::solver::trace::Trace| {
+        t.points.iter().filter(|p| p.alpha >= 1.0).count()
+    };
+    let max_mu = |t: &dglmnet::solver::trace::Trace| {
+        t.points.iter().map(|p| p.mu).fold(1.0f64, f64::max)
+    };
+    println!(
+        "\nline-search full steps: adaptive {}/{} (max μ {:.0}), constant {}/{}",
+        full_steps(&at),
+        at.points.len(),
+        max_mu(&at),
+        full_steps(&ct),
+        ct.points.len()
+    );
+    println!(
+        "paper's Fig 1 claim: adaptive μ slightly improves convergence/accuracy, dramatically improves sparsity.\n\
+         measured: final nnz adaptive {} vs constant {}; final subopt {:.2e} vs {:.2e}",
+        at.points.last().unwrap().nnz,
+        ct.points.last().unwrap().nnz,
+        (at.final_objective() - f_star) / f_star,
+        (ct.final_objective() - f_star) / f_star,
+    );
+}

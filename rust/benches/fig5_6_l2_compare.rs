@@ -1,0 +1,68 @@
+//! Figures 5, 6 — L2 regularization comparison.
+//!
+//! For each corpus, runs d-GLMNET (constant μ = 1, per the paper), its ALB
+//! variant, ADMM and online-warmstarted L-BFGS, printing
+//!   Fig 5: relative objective suboptimality vs time
+//!   Fig 6: testing quality (auPRC) vs time
+//!
+//!     cargo bench --bench fig5_6_l2_compare
+
+use dglmnet::glm::loss::LossKind;
+use dglmnet::harness::{self, RunConfig};
+use dglmnet::solver::compute::NativeCompute;
+use dglmnet::util::bench::Table;
+
+fn main() {
+    let scale = std::env::var("DGLMNET_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.5);
+    let iters = std::env::var("DGLMNET_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+    println!("=== Figures 5-6: L2 comparison (scale {scale}, {iters} iterations, M=8) ===");
+
+    let mut summary = Table::new(&[
+        "dataset",
+        "algorithm",
+        "final subopt",
+        "best auPRC",
+        "time-to-2.5% (s)",
+    ]);
+
+    for (name, splits) in harness::corpora(scale, 17) {
+        let rc = RunConfig {
+            kind: LossKind::Logistic,
+            pen: harness::default_lambda(name, false),
+            nodes: 8,
+            max_iters: iters,
+            eval_every: 1,
+            seed: 19,
+        };
+        let compute = NativeCompute::new(rc.kind);
+        let f_star = harness::reference_optimum(&splits, rc.kind, &rc.pen);
+
+        let d = harness::run_dglmnet(&splits, &rc, &compute, None);
+        let dalb = harness::run_dglmnet(&splits, &rc, &compute, Some(0.75));
+        let admm = harness::run_admm(&splits, &rc, 1.0);
+        let lbfgs = harness::run_lbfgs(&splits, &rc);
+
+        let traces = [&d.trace, &dalb.trace, &admm, &lbfgs];
+        harness::print_convergence(name, &traces, f_star);
+        for tr in traces {
+            summary.row(&[
+                name.to_string(),
+                tr.algorithm.clone(),
+                format!("{:.2e}", (tr.final_objective() - f_star) / f_star),
+                format!("{:.4}", harness::best_auprc(tr).unwrap_or(f64::NAN)),
+                tr.time_to_suboptimality(f_star, 0.025)
+                    .map(|t| format!("{t:.3}"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+
+    println!("\n=== summary (paper shape: d-GLMNET wins on sparse high-p corpora; online+L-BFGS wins on dense epsilon) ===");
+    summary.print();
+}

@@ -1,0 +1,56 @@
+//! Table 1 — dataset summary.
+//!
+//! Regenerates the paper's Table 1 (size, #examples train/test/validation,
+//! #features, nnz, avg nonzeros) for the three synthetic stand-in corpora,
+//! plus generation throughput. Scale via DGLMNET_SCALE (default 0.5).
+//!
+//!     cargo bench --bench table1_datasets
+
+use dglmnet::harness;
+use dglmnet::util::bench::{bench, Table};
+
+fn scale() -> f64 {
+    std::env::var("DGLMNET_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.5)
+}
+
+fn main() {
+    let scale = scale();
+    println!("=== Table 1: dataset summary (scale {scale}) ===\n");
+    let corpora = harness::corpora(scale, 1);
+    let mut t = Table::new(&[
+        "dataset",
+        "size",
+        "#examples (train/test/validation)",
+        "#features",
+        "nnz",
+        "avg nonzeros",
+    ]);
+    for (_, splits) in &corpora {
+        let s = splits.summary();
+        t.row(&[
+            s.name.clone(),
+            format!("{:.1} MiB", s.bytes as f64 / (1024.0 * 1024.0)),
+            format!("{} / {} / {}", s.n_train, s.n_test, s.n_validation),
+            s.p.to_string(),
+            format!("{:.2e}", s.nnz as f64),
+            format!("{:.0}", s.avg_nonzeros),
+        ]);
+    }
+    t.print();
+
+    println!("\npaper (Table 1, full scale): epsilon 12 GB, 0.4e6/0.05e6/0.05e6, 2000 features, 8.0e8 nnz, 2000 avg");
+    println!("                             webspam 21 GB, 0.315e6/17.5e3/17.5e3, 16.6e6 features, 1.2e9 nnz, 3727 avg");
+    println!("                             yandex_ad 56 GB, 57e6/2.35e6/2.35e6, 35e6 features, 5.7e9 nnz, 100 avg");
+    println!("shape check: dense-low-p (epsilon) vs sparse-high-p (webspam) vs very-sparse-imbalanced (clickstream) preserved.\n");
+
+    println!("=== generation + layout conversion throughput ===");
+    for (name, splits) in &corpora {
+        let train = splits.train.clone();
+        bench(&format!("{name}: csr->csc conversion"), 1, 5, || {
+            std::hint::black_box(train.to_csc());
+        });
+    }
+}

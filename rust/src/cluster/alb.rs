@@ -1,0 +1,154 @@
+//! Asynchronous Load Balancing (Section 7) — the paper's answer to the
+//! slow-node problem.
+//!
+//! Every node reports when it has finished one full pass over its block
+//! S^m. As soon as at least ⌈κ·M⌉ nodes have reported, the controller raises
+//! a stop flag that the coordinate-descent inner loop polls between updates:
+//! stragglers cut their pass short, fast nodes stop their extra cycles, and
+//! everyone proceeds to the AllReduce. Because updates are cyclic with a
+//! persistent cursor, a straggler resumes exactly where it stopped on the
+//! next iteration — no weight is starved (paper: "on the next iteration a
+//! node resumes optimization starting from the next weight in S^m").
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+pub struct AlbController {
+    nodes: usize,
+    /// Minimum full-pass reports before cutting off the iteration.
+    threshold: usize,
+    done: AtomicUsize,
+    stop: AtomicBool,
+}
+
+impl AlbController {
+    /// κ is the fraction of nodes that must complete a full pass
+    /// (paper uses κ = 0.75).
+    pub fn new(nodes: usize, kappa: f64) -> AlbController {
+        assert!(nodes > 0);
+        assert!(kappa > 0.0 && kappa <= 1.0);
+        let threshold = ((kappa * nodes as f64).ceil() as usize).clamp(1, nodes);
+        AlbController {
+            nodes,
+            threshold,
+            done: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    /// A node reports completion of one full pass over its block.
+    pub fn report_full_pass(&self) {
+        let now = self.done.fetch_add(1, Ordering::AcqRel) + 1;
+        if now >= self.threshold {
+            self.stop.store(true, Ordering::Release);
+        }
+    }
+
+    /// The stop flag polled by `cd_cycle`.
+    pub fn stop_flag(&self) -> &AtomicBool {
+        &self.stop
+    }
+
+    pub fn should_stop(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+
+    /// Reset for the next outer iteration (call after the barrier, once all
+    /// workers have stopped reading the flag).
+    pub fn reset(&self) {
+        self.done.store(0, Ordering::Release);
+        self.stop.store(false, Ordering::Release);
+    }
+
+    pub fn threshold(&self) -> usize {
+        self.threshold
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn threshold_rounding() {
+        assert_eq!(AlbController::new(16, 0.75).threshold(), 12);
+        assert_eq!(AlbController::new(4, 0.75).threshold(), 3);
+        assert_eq!(AlbController::new(3, 0.75).threshold(), 3); // ceil(2.25)
+        assert_eq!(AlbController::new(1, 0.75).threshold(), 1);
+        assert_eq!(AlbController::new(8, 1.0).threshold(), 8);
+    }
+
+    #[test]
+    fn stop_fires_exactly_at_threshold() {
+        let c = AlbController::new(4, 0.75); // threshold 3
+        assert!(!c.should_stop());
+        c.report_full_pass();
+        c.report_full_pass();
+        assert!(!c.should_stop());
+        c.report_full_pass();
+        assert!(c.should_stop());
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let c = AlbController::new(2, 0.5);
+        c.report_full_pass();
+        assert!(c.should_stop());
+        c.reset();
+        assert!(!c.should_stop());
+        c.report_full_pass();
+        assert!(c.should_stop());
+    }
+
+    #[test]
+    fn concurrent_reports_fire_once_threshold_met() {
+        let c = Arc::new(AlbController::new(8, 0.75));
+        let mut handles = Vec::new();
+        for _ in 0..6 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || c.report_full_pass()));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(c.should_stop());
+    }
+
+    #[test]
+    fn straggler_cut_off_in_cd_cycle() {
+        // Integration with the subproblem budget: a pre-raised flag limits a
+        // big block to a single update.
+        use crate::glm::regularizer::ElasticNet;
+        use crate::solver::subproblem::{cd_cycle, CycleBudget, SubproblemState};
+        use crate::sparse::Csc;
+        let x = Csc::from_triplets(
+            4,
+            10,
+            (0..10).map(|j| (j % 4, j, 1.0)).collect::<Vec<_>>(),
+        );
+        let c = AlbController::new(2, 0.5);
+        c.report_full_pass(); // the other node finished: threshold met
+        let pen = ElasticNet::new(0.01, 0.0);
+        let mut st = SubproblemState::new(10, 4);
+        let out = cd_cycle(
+            &x,
+            &vec![0.0; 10],
+            &vec![1.0; 4],
+            &vec![1.0; 4],
+            1.0,
+            1e-6,
+            &pen,
+            &mut st,
+            CycleBudget {
+                max_updates: 10,
+                stop: Some(c.stop_flag()),
+            },
+        );
+        assert_eq!(out.updates, 1);
+        assert_eq!(st.cursor, 1); // resumes at weight 1 next iteration
+    }
+}

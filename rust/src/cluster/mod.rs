@@ -1,0 +1,15 @@
+//! Simulated cluster substrate: message fabric with byte accounting and a
+//! network cost model, AllReduce collectives (naive + ring), a reusable
+//! instrumented barrier, and the ALB slow-node controller. This is the
+//! stand-in for the paper's 16-node MPI cluster — see DESIGN.md
+//! §Substitutions for why the replacement preserves algorithm behaviour.
+
+pub mod alb;
+pub mod allreduce;
+pub mod barrier;
+pub mod fabric;
+
+pub use alb::AlbController;
+pub use allreduce::{allreduce_scalar, allreduce_sum, AllReduceAlgo, TAG_STRIDE};
+pub use barrier::Barrier;
+pub use fabric::{fabric, Endpoint, FabricStats, NetworkModel};

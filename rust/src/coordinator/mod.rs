@@ -1,0 +1,9 @@
+//! The distributed d-GLMNET coordinator (L3) — Algorithm 4 running SPMD over
+//! the simulated cluster substrate: one OS thread per node, feature-sharded
+//! data, AllReduce of `XΔβ`, redundant global line search on every node, and
+//! optional ALB straggler cut-off.
+
+pub mod driver;
+pub mod worker;
+
+pub use driver::{fit_distributed, ClusterFitResult, DistributedConfig};

@@ -1,0 +1,399 @@
+//! Per-node worker: owns one feature shard X^m (CSC), the local weights β^m
+//! and Δβ^m, and a synchronized copy of the margin vector Xβ — exactly the
+//! paper's per-node state (memory footprint O(n) vectors + 2|S^m| weights,
+//! Algorithm 4 note 2).
+//!
+//! The worker executes Algorithm 4 steps SPMD-style: every node runs the
+//! same code, the only communication is AllReduce (XΔβ, regularizer partial
+//! sums, test-margin partial sums), and control decisions (line-search α,
+//! convergence) are re-derived identically on every node from the reduced
+//! values — no master.
+
+use crate::cluster::alb::AlbController;
+use crate::cluster::allreduce::{allreduce_max, allreduce_sum, AllReduceAlgo, TAG_STRIDE};
+use crate::cluster::barrier::Barrier;
+use crate::cluster::fabric::Endpoint;
+use crate::glm::regularizer::Penalty1D;
+use crate::metrics;
+use crate::solver::compute::GlmCompute;
+use crate::solver::linesearch::{line_search, LineSearchConfig};
+use crate::solver::subproblem::{cd_cycle, CycleBudget, SubproblemState};
+use crate::solver::trace::{Trace, TracePoint};
+use crate::sparse::Csc;
+use std::cell::{Cell, RefCell};
+use std::time::{Duration, Instant};
+
+/// Immutable per-run parameters shared by all workers.
+pub struct WorkerShared<'a> {
+    pub compute: &'a dyn GlmCompute,
+    pub penalty: &'a dyn Penalty1D,
+    pub y: &'a [f64],
+    pub test_y: Option<&'a [f64]>,
+    pub barrier: &'a Barrier,
+    pub alb: Option<&'a AlbController>,
+    pub cfg: &'a WorkerConfig,
+    /// Total node count M (for SPMD-uniform per-node traffic estimates).
+    pub nodes: usize,
+}
+
+impl WorkerShared<'_> {
+    fn cfg_nodes(&self) -> f64 {
+        self.nodes.max(1) as f64
+    }
+}
+
+/// Algorithm parameters (the distributed mirror of `DGlmnetConfig`).
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    pub adaptive_mu: bool,
+    pub mu0: f64,
+    pub eta1: f64,
+    pub eta2: f64,
+    pub nu: f64,
+    pub max_iters: usize,
+    pub tol: f64,
+    pub patience: usize,
+    pub linesearch: LineSearchConfig,
+    pub eval_every: usize,
+    pub allreduce: AllReduceAlgo,
+    /// Under ALB, cap on full passes a fast node may run per iteration
+    /// ("two or more updates of each weight", paper §7).
+    pub max_passes: usize,
+    /// Coordinates between stop-flag polls / straggler sleeps.
+    pub chunk: usize,
+    /// Injected per-pass compute delay for this node (slow-node simulation).
+    pub straggler_delay: Duration,
+    /// Virtual cluster clock (see util::cputime): trace timestamps become
+    /// max-over-nodes per-thread CPU time (× slow_factor) plus modeled wire
+    /// time, instead of host wall-clock. Essential when the host has fewer
+    /// cores than simulated nodes.
+    pub virtual_time: bool,
+    /// Compute-speed multiplier for this node under the virtual clock
+    /// (2.0 = half speed).
+    pub slow_factor: f64,
+    /// Wire model used to charge communication under the virtual clock.
+    pub network: crate::cluster::fabric::NetworkModel,
+}
+
+/// The result each worker returns to the driver.
+pub struct WorkerOutput {
+    pub rank: usize,
+    /// Final local weights β^m (indexed like the shard's columns).
+    pub beta_local: Vec<f64>,
+    /// Only rank 0 fills the trace.
+    pub trace: Option<Trace>,
+    pub iters: usize,
+}
+
+/// Run the full training loop for one node. `x` is the node's shard X^m;
+/// `test_x` the same feature block of the test matrix (for auPRC traces).
+pub fn run_worker(
+    rank: usize,
+    x: &Csc,
+    test_x: Option<&Csc>,
+    mut ep: Endpoint,
+    shared: &WorkerShared<'_>,
+) -> WorkerOutput {
+    let cfg = shared.cfg;
+    let n = x.nrows;
+    let p_local = x.ncols;
+    let y = shared.y;
+    debug_assert_eq!(y.len(), n);
+
+    let mut beta = vec![0.0; p_local];
+    let mut margins = vec![0.0; n];
+    let mut w = vec![0.0; n];
+    let mut z = vec![0.0; n];
+    let mut mu = cfg.mu0;
+    let mut state = SubproblemState::new(p_local, n);
+    let started = Instant::now();
+    // Virtual cluster clock state.
+    let mut sim_clock = 0.0f64;
+    let mut cpu_mark = crate::util::cputime::thread_cpu_secs();
+    let mut bytes_mark = 0u64;
+    let mut msgs_mark = 0u64;
+
+    // Tag allocator: SPMD-deterministic (every rank performs the identical
+    // sequence of collectives).
+    let tag = Cell::new(0u64);
+    let next_tag = || {
+        let t = tag.get();
+        tag.set(t + TAG_STRIDE);
+        t
+    };
+
+    let ep_cell = RefCell::new(&mut ep);
+
+    // --- initial objective ---
+    let mut loss = shared.compute.stats(y, &margins, &mut w, &mut z);
+    let mut reg = {
+        let mut r = [shared.penalty.value(&beta)];
+        allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut r, AllReduceAlgo::Naive);
+        r[0]
+    };
+    let mut f_cur = loss + reg;
+
+    let mut trace = (rank == 0).then(|| Trace::new("d-glmnet-dist", "distributed"));
+    record_point(
+        &mut trace,
+        &started,
+        None,
+        0,
+        f_cur,
+        &beta,
+        1.0,
+        mu,
+        &ep_cell,
+        &next_tag,
+        test_x,
+        shared,
+    );
+
+    let mut stall = 0usize;
+    let mut iters = 0usize;
+    for it in 1..=cfg.max_iters {
+        iters = it;
+        // ---- Algorithm 4 step 4: local subproblem (with optional ALB) ----
+        state.reset();
+        if p_local > 0 {
+            match shared.alb {
+                None => {
+                    // BSP: exactly one full pass.
+                    inject_delay(cfg, p_local, p_local);
+                    cd_cycle(
+                        x,
+                        &beta,
+                        &w,
+                        &z,
+                        mu,
+                        cfg.nu,
+                        shared.penalty,
+                        &mut state,
+                        CycleBudget::full_cycle(p_local),
+                    );
+                }
+                Some(alb) => {
+                    let mut updates_done = 0usize;
+                    let mut reported = false;
+                    let max_updates = cfg.max_passes * p_local;
+                    while updates_done < max_updates && !alb.should_stop() {
+                        let chunk = cfg.chunk.min(max_updates - updates_done);
+                        inject_delay(cfg, chunk, p_local);
+                        let out = cd_cycle(
+                            x,
+                            &beta,
+                            &w,
+                            &z,
+                            mu,
+                            cfg.nu,
+                            shared.penalty,
+                            &mut state,
+                            CycleBudget {
+                                max_updates: chunk,
+                                stop: Some(alb.stop_flag()),
+                            },
+                        );
+                        updates_done += out.updates;
+                        if !reported && updates_done >= p_local {
+                            alb.report_full_pass();
+                            reported = true;
+                        }
+                        if out.updates < chunk {
+                            break; // stop flag fired mid-chunk
+                        }
+                    }
+                    if !reported {
+                        // Straggler: still counts as "participated" but does
+                        // not contribute to the κ quorum (paper semantics:
+                        // quorum counts nodes that FINISHED their pass).
+                    }
+                }
+            }
+        }
+
+        // ---- step 6: AllReduce XΔβ ----
+        let mut dmargins = state.t.clone();
+        allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut dmargins, cfg.allreduce);
+
+        // ---- step 7: global line search (redundant on every node) ----
+        // ∇L(β)ᵀΔβ from the cached working set: g_i = −w_i z_i exactly
+        // (z = −g/w with the same floored w), so no extra stats pass.
+        let mut grad_dot = 0.0;
+        for i in 0..n {
+            grad_dot += -w[i] * z[i] * dmargins[i];
+        }
+        let reg_ray = |alphas: &[f64]| -> Vec<f64> {
+            let mut out = vec![0.0; alphas.len()];
+            for (local, d) in state.delta_beta.iter().enumerate() {
+                let b = beta[local];
+                for (k, &a) in alphas.iter().enumerate() {
+                    out[k] += shared.penalty.value_1d(b + a * d);
+                }
+            }
+            allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut out, AllReduceAlgo::Naive);
+            out
+        };
+        let ls = line_search(
+            shared.compute,
+            &cfg.linesearch,
+            y,
+            &margins,
+            &dmargins,
+            f_cur,
+            reg,
+            grad_dot,
+            &reg_ray,
+        );
+
+        // ---- steps 8-9: apply the step ----
+        if ls.alpha > 0.0 {
+            for (b, d) in beta.iter_mut().zip(state.delta_beta.iter()) {
+                *b += ls.alpha * d;
+            }
+            for (mi, di) in margins.iter_mut().zip(dmargins.iter()) {
+                *mi += ls.alpha * di;
+            }
+        }
+        if cfg.adaptive_mu {
+            if ls.alpha < 1.0 {
+                mu *= cfg.eta1;
+            } else {
+                mu = (mu / cfg.eta2).max(1.0);
+            }
+        }
+
+        // ---- bookkeeping: new stats + objective (SPMD-identical) ----
+        loss = shared.compute.stats(y, &margins, &mut w, &mut z);
+        reg = {
+            let mut r = [shared.penalty.value(&beta)];
+            allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut r, AllReduceAlgo::Naive);
+            r[0]
+        };
+        let f_new = loss + reg;
+        let rel_drop = (f_cur - f_new) / f_cur.abs().max(1e-12);
+        f_cur = f_new;
+
+        // ---- virtual clock: slowest node's compute + modeled wire ----
+        let t_override = if cfg.virtual_time {
+            let cpu_now = crate::util::cputime::thread_cpu_secs();
+            let my_compute = (cpu_now - cpu_mark) * cfg.slow_factor;
+            cpu_mark = cpu_now;
+            let slowest = allreduce_max(*ep_cell.borrow_mut(), next_tag(), my_compute);
+            // Per-node wire traffic this iteration (SPMD-uniform): global
+            // fabric delta divided by M; each node's sends are sequential.
+            let stats = ep_cell.borrow().stats().clone();
+            let (b_now, m_now) = (stats.total_bytes(), stats.total_msgs());
+            let db = (b_now - bytes_mark) as f64 / shared.cfg_nodes() as f64;
+            let dm = (m_now - msgs_mark) as f64 / shared.cfg_nodes() as f64;
+            bytes_mark = b_now;
+            msgs_mark = m_now;
+            let wire = cfg.network.ns_per_byte * 1e-9 * db
+                + cfg.network.latency_us_per_msg * 1e-6 * dm;
+            sim_clock += slowest + wire;
+            Some(sim_clock)
+        } else {
+            None
+        };
+
+        record_point(
+            &mut trace,
+            &started,
+            t_override,
+            it,
+            f_cur,
+            &beta,
+            ls.alpha,
+            mu,
+            &ep_cell,
+            &next_tag,
+            test_x,
+            shared,
+        );
+
+        // ---- ALB generation reset: leader resets between barriers ----
+        if shared.alb.is_some() {
+            if shared.barrier.wait() {
+                shared.alb.unwrap().reset();
+            }
+            shared.barrier.wait();
+        }
+
+        // ---- convergence (identical decision on every node) ----
+        if rel_drop.abs() < cfg.tol {
+            stall += 1;
+            if stall >= cfg.patience {
+                break;
+            }
+        } else {
+            stall = 0;
+        }
+    }
+
+    WorkerOutput {
+        rank,
+        beta_local: beta,
+        trace,
+        iters,
+    }
+}
+
+/// Injected straggler sleep, prorated to the fraction of a pass executed.
+fn inject_delay(cfg: &WorkerConfig, updates: usize, p_local: usize) {
+    if cfg.straggler_delay != Duration::ZERO && p_local > 0 {
+        let frac = updates as f64 / p_local as f64;
+        std::thread::sleep(Duration::from_secs_f64(
+            cfg.straggler_delay.as_secs_f64() * frac,
+        ));
+    }
+}
+
+/// Record a trace point on rank 0; all ranks join the nnz / test-margin
+/// collectives so the communication pattern stays SPMD-uniform.
+#[allow(clippy::too_many_arguments)]
+fn record_point(
+    trace: &mut Option<Trace>,
+    started: &Instant,
+    t_override: Option<f64>,
+    iter: usize,
+    objective: f64,
+    beta_local: &[f64],
+    alpha: f64,
+    mu: f64,
+    ep_cell: &RefCell<&mut Endpoint>,
+    next_tag: &dyn Fn() -> u64,
+    test_x: Option<&Csc>,
+    shared: &WorkerShared<'_>,
+) {
+    // Global nnz: allreduce the local count.
+    let mut nnz = [metrics::nnz_weights(beta_local) as f64];
+    allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut nnz, AllReduceAlgo::Naive);
+
+    // Test scores: allreduce partial margins X_test^m β^m.
+    let auprc = match (test_x, shared.test_y) {
+        (Some(tx), Some(ty))
+            if shared.cfg.eval_every > 0 && iter % shared.cfg.eval_every == 0 =>
+        {
+            let mut scores = tx.mul_vec(beta_local);
+            allreduce_sum(
+                *ep_cell.borrow_mut(),
+                next_tag(),
+                &mut scores,
+                shared.cfg.allreduce,
+            );
+            Some(metrics::auprc(ty, &scores))
+        }
+        _ => None,
+    };
+
+    if let Some(t) = trace.as_mut() {
+        t.push(TracePoint {
+            t_sec: t_override.unwrap_or_else(|| started.elapsed().as_secs_f64()),
+            iter,
+            objective,
+            nnz: nnz[0] as usize,
+            alpha,
+            mu,
+            auprc,
+        });
+    }
+}

@@ -1,0 +1,168 @@
+//! In-memory dataset with train/test/validation splits and the Table-1 style
+//! summary used throughout the evaluation harness.
+
+use crate::sparse::{Csc, Csr};
+
+/// A labeled dataset in both layouts. CSR is the generation/storage layout;
+/// CSC is materialized on demand for feature-sharded training.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Csr,
+    /// Labels: {-1,+1} for classification, reals for regression.
+    pub y: Vec<f64>,
+}
+
+/// Train/test/validation split of a dataset (paper §8.2 splits the public
+/// test sets into new test + validation halves).
+#[derive(Clone, Debug)]
+pub struct Splits {
+    pub train: Dataset,
+    pub test: Dataset,
+    pub validation: Dataset,
+}
+
+/// The row of Table 1 for one dataset.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub name: String,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub n_validation: usize,
+    pub p: usize,
+    pub nnz: usize,
+    pub avg_nonzeros: f64,
+    /// Approximate in-memory size in bytes (CSR payload), the analogue of
+    /// the paper's on-disk size column.
+    pub bytes: usize,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: Csr, y: Vec<f64>) -> Dataset {
+        assert_eq!(x.nrows, y.len(), "label/example count mismatch");
+        Dataset {
+            name: name.into(),
+            x,
+            y,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.nrows
+    }
+
+    pub fn p(&self) -> usize {
+        self.x.ncols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.x.nnz()
+    }
+
+    /// Feature-major copy for vertical sharding.
+    pub fn to_csc(&self) -> Csc {
+        self.x.to_csc()
+    }
+
+    /// Fraction of positive labels (classification).
+    pub fn positive_rate(&self) -> f64 {
+        if self.y.is_empty() {
+            return 0.0;
+        }
+        self.y.iter().filter(|&&v| v > 0.0).count() as f64 / self.y.len() as f64
+    }
+
+    /// Split by example counts, in order (generators already randomize row
+    /// order, so sequential splitting is an unbiased split).
+    pub fn split(self, n_test: usize, n_validation: usize) -> Splits {
+        let n = self.n();
+        assert!(n_test + n_validation < n, "splits exhaust the dataset");
+        let n_train = n - n_test - n_validation;
+        let idx: Vec<usize> = (0..n).collect();
+        let (train_idx, rest) = idx.split_at(n_train);
+        let (test_idx, val_idx) = rest.split_at(n_test);
+        let take = |ids: &[usize], tag: &str| {
+            Dataset::new(
+                format!("{}-{tag}", self.name),
+                self.x.select_rows(ids),
+                ids.iter().map(|&i| self.y[i]).collect(),
+            )
+        };
+        Splits {
+            train: take(train_idx, "train"),
+            test: take(test_idx, "test"),
+            validation: take(val_idx, "validation"),
+        }
+    }
+}
+
+impl Splits {
+    pub fn summary(&self) -> Summary {
+        let t = &self.train;
+        Summary {
+            name: t
+                .name
+                .strip_suffix("-train")
+                .unwrap_or(&t.name)
+                .to_string(),
+            n_train: t.n(),
+            n_test: self.test.n(),
+            n_validation: self.validation.n(),
+            p: t.p(),
+            nnz: t.nnz(),
+            avg_nonzeros: t.nnz() as f64 / t.n().max(1) as f64,
+            bytes: t.x.storage_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::csr::Csr;
+
+    fn toy(n: usize) -> Dataset {
+        let rows: Vec<Vec<(usize, f64)>> = (0..n).map(|i| vec![(i % 3, 1.0 + i as f64)]).collect();
+        let y: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        Dataset::new("toy", Csr::from_rows(3, &rows), y)
+    }
+
+    #[test]
+    fn split_sizes_and_disjointness() {
+        let s = toy(10).split(2, 3);
+        assert_eq!(s.train.n(), 5);
+        assert_eq!(s.test.n(), 2);
+        assert_eq!(s.validation.n(), 3);
+        // Train rows are the first five originals.
+        assert_eq!(s.train.x.row(0).collect::<Vec<_>>(), vec![(0, 1.0)]);
+        assert_eq!(s.test.x.row(0).collect::<Vec<_>>(), vec![(2, 6.0)]);
+    }
+
+    #[test]
+    fn summary_counts() {
+        let s = toy(10).split(2, 2);
+        let sum = s.summary();
+        assert_eq!(sum.name, "toy");
+        assert_eq!(sum.n_train, 6);
+        assert_eq!(sum.p, 3);
+        assert_eq!(sum.nnz, 6);
+        assert!((sum.avg_nonzeros - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn positive_rate() {
+        assert!((toy(10).positive_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "exhaust")]
+    fn split_guards_overflow() {
+        toy(5).split(3, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn label_count_checked() {
+        Dataset::new("bad", Csr::from_rows(1, &[vec![(0, 1.0)]]), vec![1.0, -1.0]);
+    }
+}

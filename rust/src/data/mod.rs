@@ -1,0 +1,11 @@
+//! Datasets: in-memory container + splits (Table 1 summaries) and synthetic
+//! generators standing in for the paper's corpora (see DESIGN.md
+//! §Substitutions).
+
+pub mod dataset;
+pub mod preprocess;
+pub mod synth;
+
+pub use dataset::{Dataset, Splits, Summary};
+pub use preprocess::{with_intercept, NoPenalty, Standardizer};
+pub use synth::{clickstream, epsilon_like, webspam_like, Corpus, SynthConfig};

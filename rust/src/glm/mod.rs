@@ -1,0 +1,11 @@
+//! Generalized linear model core: loss families (margin derivatives +
+//! Appendix-B Hessian bounds) and separable regularizers with their 1-D
+//! penalized-quadratic solves.
+
+pub mod loss;
+pub mod model;
+pub mod regularizer;
+
+pub use loss::{total_loss, LossKind};
+pub use model::GlmModel;
+pub use regularizer::{soft_threshold, Bridge, ElasticNet, Penalty1D, Scad};

@@ -1,0 +1,243 @@
+//! Trained-model container with JSON persistence and prediction — the
+//! deployment half of the launcher (`dglmnet predict`).
+//!
+//! Weights are stored sparsely (index/value pairs) so an L1 model over 10⁷
+//! features serializes at the size of its support, matching how the paper's
+//! C++ implementation ships models.
+
+use crate::glm::loss::LossKind;
+use crate::sparse::Csr;
+use crate::util::json::{self, Json};
+
+/// A trained GLM: loss family (defines the inverse link for probabilities)
+/// plus the weight vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GlmModel {
+    pub kind: LossKind,
+    pub p: usize,
+    pub beta: Vec<f64>,
+    /// Provenance metadata (dataset, λ, nodes, …) — free-form.
+    pub meta: Vec<(String, String)>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ModelError {
+    #[error("json: {0}")]
+    Json(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("malformed model: {0}")]
+    Malformed(String),
+}
+
+impl GlmModel {
+    pub fn new(kind: LossKind, beta: Vec<f64>) -> GlmModel {
+        GlmModel {
+            kind,
+            p: beta.len(),
+            beta,
+            meta: Vec::new(),
+        }
+    }
+
+    pub fn with_meta(mut self, key: &str, value: impl ToString) -> GlmModel {
+        self.meta.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Margins ŷ = Xβ for a batch of examples.
+    pub fn margins(&self, x: &Csr) -> Vec<f64> {
+        assert!(
+            x.ncols <= self.p,
+            "feature space {} wider than model {}",
+            x.ncols,
+            self.p
+        );
+        (0..x.nrows).map(|i| x.dot_row(i, &self.beta)).collect()
+    }
+
+    /// Positive-class probabilities through the model's inverse link.
+    pub fn predict_proba(&self, x: &Csr) -> Vec<f64> {
+        self.margins(x)
+            .into_iter()
+            .map(|m| self.kind.prob(m))
+            .collect()
+    }
+
+    pub fn nnz(&self) -> usize {
+        crate::metrics::nnz_weights(&self.beta)
+    }
+
+    /// Serialize to JSON (sparse weight encoding).
+    pub fn to_json(&self) -> Json {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (j, &b) in self.beta.iter().enumerate() {
+            if b != 0.0 {
+                idx.push(j as f64);
+                val.push(b);
+            }
+        }
+        let mut meta = Json::obj();
+        for (k, v) in &self.meta {
+            meta.set(k, v.as_str());
+        }
+        let mut o = Json::obj();
+        o.set("format", "dglmnet-model-v1")
+            .set("loss", self.kind.name())
+            .set("p", self.p)
+            .set("indices", idx)
+            .set("values", val)
+            .set("meta", meta);
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<GlmModel, ModelError> {
+        let get = |k: &str| {
+            j.get(k)
+                .ok_or_else(|| ModelError::Malformed(format!("missing field '{k}'")))
+        };
+        let fmt = get("format")?
+            .as_str()
+            .ok_or_else(|| ModelError::Malformed("format not a string".into()))?;
+        if fmt != "dglmnet-model-v1" {
+            return Err(ModelError::Malformed(format!("unknown format '{fmt}'")));
+        }
+        let kind = get("loss")?
+            .as_str()
+            .and_then(LossKind::parse)
+            .ok_or_else(|| ModelError::Malformed("bad loss kind".into()))?;
+        let p = get("p")?
+            .as_f64()
+            .ok_or_else(|| ModelError::Malformed("bad p".into()))? as usize;
+        let arr = |k: &str| -> Result<Vec<f64>, ModelError> {
+            match get(k)? {
+                Json::Arr(xs) => xs
+                    .iter()
+                    .map(|x| {
+                        x.as_f64()
+                            .ok_or_else(|| ModelError::Malformed(format!("non-number in {k}")))
+                    })
+                    .collect(),
+                _ => Err(ModelError::Malformed(format!("{k} not an array"))),
+            }
+        };
+        let idx = arr("indices")?;
+        let val = arr("values")?;
+        if idx.len() != val.len() {
+            return Err(ModelError::Malformed("indices/values length mismatch".into()));
+        }
+        let mut beta = vec![0.0; p];
+        for (i, v) in idx.iter().zip(val.iter()) {
+            let j = *i as usize;
+            if j >= p {
+                return Err(ModelError::Malformed(format!("index {j} out of range {p}")));
+            }
+            beta[j] = *v;
+        }
+        let mut meta = Vec::new();
+        if let Some(Json::Obj(m)) = j.get("meta") {
+            for (k, v) in m {
+                if let Some(s) = v.as_str() {
+                    meta.push((k.clone(), s.to_string()));
+                }
+            }
+        }
+        Ok(GlmModel {
+            kind,
+            p,
+            beta,
+            meta,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<(), ModelError> {
+        Ok(std::fs::write(path, self.to_json().dump())?)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<GlmModel, ModelError> {
+        let text = std::fs::read_to_string(path)?;
+        let j = json::parse(&text).map_err(ModelError::Json)?;
+        GlmModel::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Csr;
+
+    fn model() -> GlmModel {
+        let mut beta = vec![0.0; 10];
+        beta[2] = 1.5;
+        beta[7] = -0.25;
+        GlmModel::new(LossKind::Logistic, beta)
+            .with_meta("dataset", "toy")
+            .with_meta("l1", 0.5)
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = model();
+        let j = m.to_json();
+        let back = GlmModel::from_json(&j).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let m = model();
+        let path = std::env::temp_dir().join(format!("dglmnet_model_{}.json", std::process::id()));
+        m.save(&path).unwrap();
+        let back = GlmModel::load(&path).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sparse_encoding_size() {
+        // Only the support is serialized.
+        let m = model();
+        let s = m.to_json().dump();
+        assert!(s.contains("[2,7]"), "{s}");
+    }
+
+    #[test]
+    fn predict_proba_monotone_in_margin() {
+        let m = model();
+        let x = Csr::from_rows(10, &[vec![(2, 1.0)], vec![(2, 2.0)], vec![(7, 4.0)]]);
+        let p = m.predict_proba(&x);
+        assert!(p[1] > p[0]); // larger positive margin
+        assert!(p[2] < 0.5); // negative margin
+        assert!(p.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn malformed_inputs_rejected() {
+        let cases = [
+            r#"{"format":"wrong"}"#,
+            r#"{"format":"dglmnet-model-v1","loss":"bogus","p":1,"indices":[],"values":[]}"#,
+            r#"{"format":"dglmnet-model-v1","loss":"logistic","p":1,"indices":[5],"values":[1.0]}"#,
+            r#"{"format":"dglmnet-model-v1","loss":"logistic","p":1,"indices":[0],"values":[]}"#,
+        ];
+        for c in cases {
+            let j = crate::util::json::parse(c).unwrap();
+            assert!(GlmModel::from_json(&j).is_err(), "accepted: {c}");
+        }
+    }
+
+    #[test]
+    fn narrower_feature_space_accepted() {
+        let m = model();
+        let x = Csr::from_rows(3, &[vec![(2, 1.0)]]);
+        assert_eq!(m.margins(&x), vec![1.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "wider")]
+    fn wider_feature_space_rejected() {
+        let m = model();
+        let x = Csr::from_rows(20, &[vec![(15, 1.0)]]);
+        m.margins(&x);
+    }
+}

@@ -1,0 +1,30 @@
+//! # d-GLMNET — distributed coordinate descent for regularized GLMs
+//!
+//! Reproduction of Trofimov & Genkin (2016), "Distributed Coordinate Descent
+//! for Generalized Linear Models with Regularization", as a three-layer
+//! Rust + JAX/Pallas system:
+//!
+//! - **L3** (this crate): the coordination contribution — feature-sharded
+//!   workers, block coordinate descent, AllReduce of `XΔβ`, global line
+//!   search, adaptive trust-region `μ`, and Asynchronous Load Balancing —
+//!   plus the paper's baselines (ADMM with sharing, online truncated
+//!   gradient, L-BFGS) and a simulated cluster substrate.
+//! - **L2/L1** (python/, build-time only): GLM per-example statistics and
+//!   batched line-search objectives as JAX graphs wrapping Pallas kernels,
+//!   AOT-lowered to HLO text in `artifacts/`.
+//! - **runtime**: PJRT CPU client that loads and executes the artifacts from
+//!   the Rust hot path — Python is never on the request path.
+//!
+//! See DESIGN.md for the system inventory and experiment index, and
+//! EXPERIMENTS.md for measured results.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod solver;
+pub mod glm;
+pub mod harness;
+pub mod metrics;
+pub mod runtime;
+pub mod sparse;
+pub mod util;

@@ -1,0 +1,340 @@
+//! `dglmnet` — the launcher.
+//!
+//! Subcommands:
+//!   train     train a regularized GLM on a synthetic corpus or libsvm file
+//!   summary   print the Table-1 style dataset summary
+//!
+//! Example (the end-to-end driver the README shows):
+//!   dglmnet train --dataset clickstream --scale 0.5 --loss logistic \
+//!       --l1 1.0 --nodes 8 --alb --engine xla --max-iters 30 --trace out.json
+
+use dglmnet::cluster::allreduce::AllReduceAlgo;
+use dglmnet::coordinator::{fit_distributed, DistributedConfig};
+use dglmnet::data::{Corpus, Dataset, Splits};
+use dglmnet::glm::loss::LossKind;
+use dglmnet::glm::regularizer::ElasticNet;
+use dglmnet::harness;
+use dglmnet::metrics;
+use dglmnet::runtime::{Runtime, XlaCompute};
+use dglmnet::solver::compute::NativeCompute;
+use dglmnet::sparse::libsvm;
+use dglmnet::util::bench::Table;
+use dglmnet::util::cli::{Cli, CliError};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            usage();
+            std::process::exit(2);
+        }
+    };
+    let code = match cmd {
+        "train" => cmd_train(&rest),
+        "predict" => cmd_predict(&rest),
+        "summary" => cmd_summary(&rest),
+        "--help" | "-h" | "help" => {
+            usage();
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'");
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!(
+        "dglmnet — distributed coordinate descent for regularized GLMs\n\n\
+         Subcommands:\n  \
+         train    train a model (see `dglmnet train --help`)\n  \
+         predict  score a libsvm file with a saved model\n  \
+         summary  print dataset summaries (Table 1)\n"
+    );
+}
+
+fn train_cli() -> Cli {
+    Cli::new(
+        "dglmnet train",
+        "train a regularized GLM with distributed coordinate descent",
+    )
+    .flag("dataset", "clickstream", "epsilon_like | webspam_like | clickstream | path to .libsvm")
+    .flag("scale", "0.25", "synthetic corpus scale factor")
+    .flag("loss", "logistic", "logistic | squared | probit")
+    .flag("l1", "1.0", "L1 penalty λ1")
+    .flag("l2", "0.0", "L2 penalty λ2")
+    .flag("nodes", "8", "number of simulated cluster nodes M")
+    .switch("alb", "enable Asynchronous Load Balancing (κ = 0.75)")
+    .flag("kappa", "0.75", "ALB quorum fraction")
+    .flag("engine", "native", "compute engine: native | xla (needs artifacts/)")
+    .flag("artifacts", "artifacts", "artifacts directory for --engine xla")
+    .flag("max-iters", "50", "outer iteration budget")
+    .flag("mu0", "1.0", "initial trust-region μ")
+    .switch("no-adaptive-mu", "freeze μ at --mu0 (Fig 1 ablation)")
+    .flag("seed", "1", "random seed")
+    .flag("trace", "", "write the convergence trace JSON to this path")
+    .flag("save-model", "", "write the trained model JSON to this path")
+    .flag("eval-every", "1", "test-metric cadence (0 = never)")
+}
+
+fn cmd_train(argv: &[String]) -> i32 {
+    let cli = train_cli();
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(CliError::HelpRequested) => {
+            println!("{}", cli.help_text());
+            return 0;
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli.help_text());
+            return 2;
+        }
+    };
+
+    let kind = match LossKind::parse(args.get("loss")) {
+        Some(k) => k,
+        None => {
+            eprintln!("unknown loss '{}'", args.get("loss"));
+            return 2;
+        }
+    };
+    let scale = args.get_f64("scale");
+    let seed = args.get_u64("seed");
+    let splits = match load_splits(args.get("dataset"), scale, seed) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("dataset error: {e}");
+            return 2;
+        }
+    };
+    let pen = ElasticNet::new(args.get_f64("l1"), args.get_f64("l2"));
+    let cfg = DistributedConfig {
+        nodes: args.get_usize("nodes"),
+        alb_kappa: args.get_bool("alb").then(|| args.get_f64("kappa")),
+        adaptive_mu: !args.get_bool("no-adaptive-mu"),
+        mu0: args.get_f64("mu0"),
+        max_iters: args.get_usize("max-iters"),
+        eval_every: args.get_usize("eval-every"),
+        seed,
+        allreduce: AllReduceAlgo::Ring,
+        ..Default::default()
+    };
+
+    println!(
+        "train: dataset={} n={} p={} nnz={} | loss={} λ1={} λ2={} | M={} alb={} engine={}",
+        splits.train.name,
+        splits.train.n(),
+        splits.train.p(),
+        splits.train.nnz(),
+        kind.name(),
+        pen.l1,
+        pen.l2,
+        cfg.nodes,
+        cfg.alb_kappa.is_some(),
+        args.get("engine"),
+    );
+
+    // Engine selection: the XLA runtime executes the AOT Pallas artifacts on
+    // the hot path; native is the pure-Rust oracle.
+    let result = match args.get("engine") {
+        "xla" => {
+            let rt = match Runtime::start(args.get("artifacts")) {
+                Ok(rt) => rt,
+                Err(e) => {
+                    eprintln!(
+                        "failed to start XLA runtime: {e}\n(build artifacts with `make artifacts`)"
+                    );
+                    return 1;
+                }
+            };
+            let compute = XlaCompute::new(rt.handle(), kind);
+            fit_distributed(&splits.train, Some(&splits.test), &compute, &pen, &cfg)
+        }
+        "native" => {
+            let compute = NativeCompute::new(kind);
+            fit_distributed(&splits.train, Some(&splits.test), &compute, &pen, &cfg)
+        }
+        other => {
+            eprintln!("unknown engine '{other}'");
+            return 2;
+        }
+    };
+
+    let scores = splits.test.x.mul_vec(&result.beta);
+    let auprc = metrics::auprc(&splits.test.y, &scores);
+    let auc = metrics::roc_auc(&splits.test.y, &scores);
+    println!(
+        "\ndone: iters={} objective={:.6} nnz={}/{} test auPRC={:.4} ROC-AUC={:.4}",
+        result.iters,
+        result.objective,
+        metrics::nnz_weights(&result.beta),
+        result.beta.len(),
+        auprc,
+        auc
+    );
+    println!(
+        "comm: {:.2} MiB in {} messages (modeled wire time {:.3}s) | barrier wait {:.3}s | peak node mem {:.1} MiB",
+        result.comm_bytes as f64 / (1024.0 * 1024.0),
+        result.comm_msgs,
+        result.sim_wire_secs,
+        result.barrier_wait_secs,
+        result.peak_node_f64_slots as f64 * 8.0 / (1024.0 * 1024.0),
+    );
+    harness::print_convergence(
+        &splits.train.name,
+        &[&result.trace],
+        result.trace.best_objective(),
+    );
+
+    let trace_path = args.get("trace");
+    if !trace_path.is_empty() {
+        if let Err(e) = std::fs::write(trace_path, result.trace.to_json().dump()) {
+            eprintln!("failed to write trace: {e}");
+            return 1;
+        }
+        println!("trace written to {trace_path}");
+    }
+    let model_path = args.get("save-model");
+    if !model_path.is_empty() {
+        let model = dglmnet::glm::GlmModel::new(kind, result.beta.clone())
+            .with_meta("dataset", &splits.train.name)
+            .with_meta("l1", pen.l1)
+            .with_meta("l2", pen.l2)
+            .with_meta("nodes", cfg.nodes);
+        if let Err(e) = model.save(model_path) {
+            eprintln!("failed to save model: {e}");
+            return 1;
+        }
+        println!("model written to {model_path} ({} non-zero weights)", model.nnz());
+    }
+    0
+}
+
+fn cmd_predict(argv: &[String]) -> i32 {
+    let cli = Cli::new("dglmnet predict", "score a libsvm file with a saved model")
+        .required("model", "path to a model JSON written by `train --save-model`")
+        .required("data", "path to a libsvm file")
+        .flag("out", "", "write probabilities here (default: stdout)")
+        .switch("metrics", "labels are present: also print auPRC / ROC-AUC / logloss");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(CliError::HelpRequested) => {
+            println!("{}", cli.help_text());
+            return 0;
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli.help_text());
+            return 2;
+        }
+    };
+    let model = match dglmnet::glm::GlmModel::load(args.get("model")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("failed to load model: {e}");
+            return 1;
+        }
+    };
+    let data = match libsvm::read_file(args.get("data")) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("failed to read data: {e}");
+            return 1;
+        }
+    };
+    // Align feature space: re-read with the model width as a hint would be
+    // cleaner, but padding the matrix is equivalent for prediction.
+    if data.x.ncols > model.p {
+        eprintln!(
+            "data has {} features but model only {} — refusing to truncate",
+            data.x.ncols, model.p
+        );
+        return 1;
+    }
+    let probs = model.predict_proba(&data.x);
+    let out_path = args.get("out");
+    let mut body = String::new();
+    for p in &probs {
+        body.push_str(&format!("{p}\n"));
+    }
+    if out_path.is_empty() {
+        print!("{body}");
+    } else if let Err(e) = std::fs::write(out_path, body) {
+        eprintln!("failed to write predictions: {e}");
+        return 1;
+    }
+    if args.get_bool("metrics") {
+        println!(
+            "auPRC {:.4}  ROC-AUC {:.4}  logloss {:.4}  (n = {})",
+            metrics::auprc(&data.y, &probs),
+            metrics::roc_auc(&data.y, &probs),
+            metrics::logloss(&data.y, &probs),
+            probs.len()
+        );
+    }
+    0
+}
+
+fn cmd_summary(argv: &[String]) -> i32 {
+    let cli = Cli::new("dglmnet summary", "Table 1: dataset summaries")
+        .flag("scale", "0.25", "synthetic corpus scale factor")
+        .flag("seed", "1", "random seed");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(CliError::HelpRequested) => {
+            println!("{}", cli.help_text());
+            return 0;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let mut t = Table::new(&[
+        "dataset",
+        "size",
+        "#examples (train/test/validation)",
+        "#features",
+        "nnz",
+        "avg nonzeros",
+    ]);
+    for (_, splits) in harness::corpora(args.get_f64("scale"), args.get_u64("seed")) {
+        let s = splits.summary();
+        t.row(&[
+            s.name.clone(),
+            format!("{:.1} MiB", s.bytes as f64 / (1024.0 * 1024.0)),
+            format!("{} / {} / {}", s.n_train, s.n_test, s.n_validation),
+            s.p.to_string(),
+            format!("{:.2e}", s.nnz as f64),
+            format!("{:.0}", s.avg_nonzeros),
+        ]);
+    }
+    t.print();
+    0
+}
+
+/// Load a named synthetic corpus or a libsvm file (90/5/5 split).
+fn load_splits(name: &str, scale: f64, seed: u64) -> anyhow::Result<Splits> {
+    match name {
+        "epsilon_like" => Ok(Corpus::epsilon_like(scale, seed)),
+        "webspam_like" => Ok(Corpus::webspam_like(scale, seed)),
+        "clickstream" => Ok(Corpus::clickstream(scale, seed)),
+        path => {
+            let data = libsvm::read_file(path)?;
+            let n = data.y.len();
+            let ds = Dataset::new(
+                std::path::Path::new(path)
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().to_string())
+                    .unwrap_or_else(|| "libsvm".into()),
+                data.x,
+                data.y,
+            );
+            let tenth = (n / 20).max(1);
+            Ok(ds.split(tenth, tenth))
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Classification quality metrics.
+//!
+//! The paper's headline quality measure is area under the precision-recall
+//! curve (Appendix C) — chosen over ROC AUC because the click datasets are
+//! heavily imbalanced. We implement auPRC exactly as defined there (sweep
+//! the threshold over predicted scores), plus ROC AUC, log-loss and accuracy
+//! for cross-checks.
+
+/// Area under the precision-recall curve (Appendix C definition), estimated
+/// as average precision: Σ_k (R_k − R_{k−1}) · P_k over the distinct-score
+/// PR points. Step-wise (not trapezoid-from-(0,1)) so a constant classifier
+/// scores exactly the positive base rate — the robust estimator Davis &
+/// Goadrich (2006), the paper's reference [32], recommend.
+pub fn auprc(labels: &[f64], scores: &[f64]) -> f64 {
+    assert_eq!(labels.len(), scores.len());
+    let total_pos = labels.iter().filter(|&&y| y > 0.0).count();
+    if total_pos == 0 || total_pos == labels.len() {
+        return if total_pos == 0 { 0.0 } else { 1.0 };
+    }
+    let mut order: Vec<usize> = (0..labels.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+
+    let mut tp = 0usize;
+    let mut fp = 0usize;
+    let mut area = 0.0;
+    let mut prev_recall = 0.0;
+    let mut i = 0;
+    while i < order.len() {
+        // Consume the whole tie group before emitting a PR point.
+        let s = scores[order[i]];
+        while i < order.len() && scores[order[i]] == s {
+            if labels[order[i]] > 0.0 {
+                tp += 1;
+            } else {
+                fp += 1;
+            }
+            i += 1;
+        }
+        let recall = tp as f64 / total_pos as f64;
+        let precision = tp as f64 / (tp + fp) as f64;
+        area += (recall - prev_recall) * precision;
+        prev_recall = recall;
+    }
+    area
+}
+
+/// ROC AUC via the rank-sum (Mann–Whitney) formulation with tie correction.
+pub fn roc_auc(labels: &[f64], scores: &[f64]) -> f64 {
+    assert_eq!(labels.len(), scores.len());
+    let n_pos = labels.iter().filter(|&&y| y > 0.0).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let mut order: Vec<usize> = (0..labels.len()).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // Average ranks over tie groups.
+    let mut rank_sum_pos = 0.0;
+    let mut i = 0;
+    while i < order.len() {
+        let s = scores[order[i]];
+        let start = i;
+        while i < order.len() && scores[order[i]] == s {
+            i += 1;
+        }
+        let avg_rank = (start + 1 + i) as f64 / 2.0; // ranks are 1-based
+        for &k in &order[start..i] {
+            if labels[k] > 0.0 {
+                rank_sum_pos += avg_rank;
+            }
+        }
+    }
+    (rank_sum_pos - n_pos as f64 * (n_pos as f64 + 1.0) / 2.0) / (n_pos as f64 * n_neg as f64)
+}
+
+/// Mean logistic log-loss for labels in {-1,+1} and probability scores.
+pub fn logloss(labels: &[f64], probs: &[f64]) -> f64 {
+    assert_eq!(labels.len(), probs.len());
+    let eps = 1e-15;
+    let mut acc = 0.0;
+    for (&y, &p) in labels.iter().zip(probs.iter()) {
+        let p = p.clamp(eps, 1.0 - eps);
+        acc -= if y > 0.0 { p.ln() } else { (1.0 - p).ln() };
+    }
+    acc / labels.len().max(1) as f64
+}
+
+/// Accuracy at threshold 0.5 on probabilities (or 0.0 on margins).
+pub fn accuracy(labels: &[f64], scores: &[f64], threshold: f64) -> f64 {
+    assert_eq!(labels.len(), scores.len());
+    let correct = labels
+        .iter()
+        .zip(scores.iter())
+        .filter(|(&y, &s)| (s >= threshold) == (y > 0.0))
+        .count();
+    correct as f64 / labels.len().max(1) as f64
+}
+
+/// Number of non-zero weights — the paper's sparsity axis (Fig. 4).
+pub fn nnz_weights(beta: &[f64]) -> usize {
+    beta.iter().filter(|&&b| b != 0.0).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn auprc_perfect_ranking() {
+        let y = [1.0, 1.0, -1.0, -1.0];
+        let s = [0.9, 0.8, 0.2, 0.1];
+        assert!((auprc(&y, &s) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auprc_worst_ranking() {
+        let y = [-1.0, -1.0, 1.0, 1.0];
+        let s = [0.9, 0.8, 0.2, 0.1];
+        // PR points: recall 0.5 @ prec 1/3, recall 1.0 @ prec 0.5
+        let got = auprc(&y, &s);
+        assert!(got < 0.5, "got {got}");
+    }
+
+    #[test]
+    fn auprc_known_value() {
+        // 3 examples: scores .9(+), .5(-), .3(+)
+        // AP = 0.5·1 (first pos) + 0.5·(2/3) (second pos) = 5/6.
+        let y = [1.0, -1.0, 1.0];
+        let s = [0.9, 0.5, 0.3];
+        let want = 0.5 * 1.0 + 0.5 * (2.0 / 3.0);
+        assert!((auprc(&y, &s) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auprc_ties_handled_as_group() {
+        // All scores equal: single PR point (recall 1, precision = base
+        // rate) — a constant classifier must score exactly the base rate.
+        let y = [1.0, -1.0, 1.0, -1.0];
+        let s = [0.5, 0.5, 0.5, 0.5];
+        assert!((auprc(&y, &s) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roc_auc_known() {
+        let y = [1.0, -1.0, 1.0, -1.0];
+        let s = [0.9, 0.8, 0.7, 0.1];
+        // pairs: (p1,n1): .9>.8 ✓, (p1,n2): .9>.1 ✓, (p2,n1): .7<.8 ✗, (p2,n2): ✓
+        assert!((roc_auc(&y, &s) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roc_auc_ties_half_credit() {
+        let y = [1.0, -1.0];
+        let s = [0.5, 0.5];
+        assert!((roc_auc(&y, &s) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_auc_invariant_to_monotone_transform() {
+        prop::check("auc invariant under monotone map", 50, |rng| {
+            let n = 5 + rng.below(50);
+            let y: Vec<f64> = (0..n)
+                .map(|_| if rng.bernoulli(0.4) { 1.0 } else { -1.0 })
+                .collect();
+            let s: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let s2: Vec<f64> = s.iter().map(|&v| (3.0 * v - 1.0).exp()).collect();
+            prop::close(roc_auc(&y, &s), roc_auc(&y, &s2), 1e-12)?;
+            prop::close(auprc(&y, &s), auprc(&y, &s2), 1e-12)
+        });
+    }
+
+    #[test]
+    fn prop_auprc_in_unit_interval() {
+        prop::check("auprc in [0,1]", 100, |rng| {
+            let n = 2 + rng.below(40);
+            let y: Vec<f64> = (0..n)
+                .map(|_| if rng.bernoulli(0.3) { 1.0 } else { -1.0 })
+                .collect();
+            let s: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let a = auprc(&y, &s);
+            if (0.0..=1.0 + 1e-12).contains(&a) {
+                Ok(())
+            } else {
+                Err(format!("auprc {a}"))
+            }
+        });
+    }
+
+    #[test]
+    fn logloss_perfect_and_uninformed() {
+        let y = [1.0, -1.0];
+        assert!(logloss(&y, &[1.0, 0.0]) < 1e-10);
+        let half = logloss(&y, &[0.5, 0.5]);
+        assert!((half - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_threshold() {
+        let y = [1.0, -1.0, 1.0];
+        assert!((accuracy(&y, &[0.9, 0.1, 0.2], 0.5) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nnz_counts() {
+        assert_eq!(nnz_weights(&[0.0, 1.0, -0.5, 0.0]), 2);
+    }
+
+    #[test]
+    fn degenerate_label_sets() {
+        assert_eq!(auprc(&[1.0, 1.0], &[0.5, 0.4]), 1.0);
+        assert_eq!(auprc(&[-1.0, -1.0], &[0.5, 0.4]), 0.0);
+        assert_eq!(roc_auc(&[1.0, 1.0], &[0.5, 0.4]), 0.5);
+    }
+}

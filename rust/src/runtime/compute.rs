@@ -1,0 +1,277 @@
+//! [`XlaCompute`] — the [`GlmCompute`] implementation backed by the
+//! AOT-compiled Pallas artifacts, used on the coordinator's hot path.
+//!
+//! Handles padding to the fixed artifact block sizes (mask = 0 on pad
+//! lanes), chunking when n exceeds the largest compiled block, and chunking
+//! of the candidate-α axis to the artifacts' K. Numerics match
+//! `NativeCompute` to ~1e-9 (verified by the parity tests below and by the
+//! python kernel-vs-ref suite).
+
+use crate::glm::loss::LossKind;
+use crate::runtime::service::RuntimeHandle;
+use crate::solver::compute::GlmCompute;
+
+pub struct XlaCompute {
+    handle: RuntimeHandle,
+    kind: LossKind,
+}
+
+impl XlaCompute {
+    pub fn new(handle: RuntimeHandle, kind: LossKind) -> XlaCompute {
+        XlaCompute { handle, kind }
+    }
+
+    /// Iterate over (start, len, block) chunks covering n examples.
+    fn chunks(&self, n: usize) -> Vec<(usize, usize, usize)> {
+        let manifest = self.handle.manifest();
+        let max_block = *manifest.blocks.last().unwrap();
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < n {
+            let len = (n - start).min(max_block);
+            out.push((start, len, manifest.pick_block(len)));
+            start += len;
+        }
+        if out.is_empty() {
+            out.push((0, 0, manifest.pick_block(1)));
+        }
+        out
+    }
+
+    fn pad(src: &[f64], block: usize) -> Vec<f64> {
+        let mut v = Vec::with_capacity(block);
+        v.extend_from_slice(src);
+        v.resize(block, 0.0);
+        v
+    }
+
+    fn mask(len: usize, block: usize) -> Vec<f64> {
+        let mut m = vec![1.0; len];
+        m.resize(block, 0.0);
+        m
+    }
+}
+
+impl GlmCompute for XlaCompute {
+    fn kind(&self) -> LossKind {
+        self.kind
+    }
+
+    fn stats(&self, y: &[f64], margins: &[f64], w: &mut [f64], z: &mut [f64]) -> f64 {
+        let n = y.len();
+        let mut total = 0.0;
+        for (start, len, block) in self.chunks(n) {
+            let (wb, zb, lsum) = self
+                .handle
+                .stats_block(
+                    self.kind,
+                    Self::pad(&margins[start..start + len], block),
+                    Self::pad(&y[start..start + len], block),
+                    Self::mask(len, block),
+                )
+                .expect("xla stats execution failed");
+            w[start..start + len].copy_from_slice(&wb[..len]);
+            z[start..start + len].copy_from_slice(&zb[..len]);
+            total += lsum;
+        }
+        // Pad lanes were masked to w = 0; restore the floor semantics for
+        // the *valid* lanes only (the kernel already floors them) — nothing
+        // to do: mask multiplies w by 1 on valid lanes.
+        total
+    }
+
+    fn loss_at_alphas(
+        &self,
+        y: &[f64],
+        margins: &[f64],
+        dmargins: &[f64],
+        alphas: &[f64],
+    ) -> Vec<f64> {
+        let n = y.len();
+        let k_max = self.handle.manifest().k_alphas;
+        let mut out = vec![0.0; alphas.len()];
+        for a_chunk_start in (0..alphas.len()).step_by(k_max) {
+            let a_len = (alphas.len() - a_chunk_start).min(k_max);
+            let mut a_pad = alphas[a_chunk_start..a_chunk_start + a_len].to_vec();
+            a_pad.resize(k_max, 0.0);
+            for (start, len, block) in self.chunks(n) {
+                let losses = self
+                    .handle
+                    .linesearch_block(
+                        self.kind,
+                        Self::pad(&margins[start..start + len], block),
+                        Self::pad(&dmargins[start..start + len], block),
+                        Self::pad(&y[start..start + len], block),
+                        Self::mask(len, block),
+                        a_pad.clone(),
+                    )
+                    .expect("xla linesearch execution failed");
+                for k in 0..a_len {
+                    out[a_chunk_start + k] += losses[k];
+                }
+            }
+        }
+        out
+    }
+
+    fn grad_dot(&self, y: &[f64], margins: &[f64], dmargins: &[f64]) -> f64 {
+        // g_i = -w_i z_i exactly (z = -g/w with the same floored w), so one
+        // stats execution gives the gradient dot product.
+        let n = y.len();
+        let mut w = vec![0.0; n];
+        let mut z = vec![0.0; n];
+        self.stats(y, margins, &mut w, &mut z);
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += -w[i] * z[i] * dmargins[i];
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::service::Runtime;
+    use crate::solver::compute::NativeCompute;
+    use crate::util::prop::{self, all_close, close};
+    use crate::util::rng::Rng;
+    use std::sync::OnceLock;
+
+    /// Shared runtime for all tests in this module (PJRT client startup is
+    /// expensive; artifacts must have been built by `make artifacts`).
+    fn runtime() -> Option<&'static Runtime> {
+        static RT: OnceLock<Option<Runtime>> = OnceLock::new();
+        RT.get_or_init(|| {
+            let dir = artifacts_dir()?;
+            match Runtime::start(&dir) {
+                Ok(rt) => Some(rt),
+                Err(e) => {
+                    eprintln!("skipping xla tests: {e}");
+                    None
+                }
+            }
+        })
+        .as_ref()
+    }
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let candidates = [
+            std::env::var("DGLMNET_ARTIFACTS").unwrap_or_default(),
+            "artifacts".to_string(),
+            concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string(),
+        ];
+        candidates
+            .iter()
+            .filter(|c| !c.is_empty())
+            .map(std::path::PathBuf::from)
+            .find(|p| p.join("manifest.json").exists())
+    }
+
+    const KINDS: [LossKind; 3] = [LossKind::Logistic, LossKind::Squared, LossKind::Probit];
+
+    #[test]
+    fn stats_matches_native() {
+        let Some(rt) = runtime() else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        let mut rng = Rng::new(1);
+        for kind in KINDS {
+            let xc = XlaCompute::new(rt.handle(), kind);
+            let nc = NativeCompute::new(kind);
+            for n in [1usize, 100, 1024, 3000] {
+                let margins = prop::dense_vec(&mut rng, n, 3.0);
+                let y: Vec<f64> = (0..n)
+                    .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                    .collect();
+                let (mut w1, mut z1) = (vec![0.0; n], vec![0.0; n]);
+                let (mut w2, mut z2) = (vec![0.0; n], vec![0.0; n]);
+                let l1 = xc.stats(&y, &margins, &mut w1, &mut z1);
+                let l2 = nc.stats(&y, &margins, &mut w2, &mut z2);
+                close(l1, l2, 1e-9).unwrap_or_else(|e| panic!("{kind:?} n={n} loss: {e}"));
+                all_close(&w1, &w2, 1e-9).unwrap_or_else(|e| panic!("{kind:?} n={n} w: {e}"));
+                all_close(&z1, &z2, 1e-8).unwrap_or_else(|e| panic!("{kind:?} n={n} z: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn linesearch_matches_native() {
+        let Some(rt) = runtime() else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        let mut rng = Rng::new(2);
+        for kind in KINDS {
+            let xc = XlaCompute::new(rt.handle(), kind);
+            let nc = NativeCompute::new(kind);
+            let n = 2500;
+            let margins = prop::dense_vec(&mut rng, n, 2.0);
+            let dmargins = prop::dense_vec(&mut rng, n, 1.0);
+            let y: Vec<f64> = (0..n)
+                .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                .collect();
+            // More alphas than K forces alpha-axis chunking.
+            let alphas: Vec<f64> = (0..100).map(|k| k as f64 / 100.0).collect();
+            let got = xc.loss_at_alphas(&y, &margins, &dmargins, &alphas);
+            let want = nc.loss_at_alphas(&y, &margins, &dmargins, &alphas);
+            all_close(&got, &want, 1e-9).unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn grad_dot_matches_native() {
+        let Some(rt) = runtime() else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        let mut rng = Rng::new(3);
+        for kind in KINDS {
+            let xc = XlaCompute::new(rt.handle(), kind);
+            let nc = NativeCompute::new(kind);
+            let n = 700;
+            let margins = prop::dense_vec(&mut rng, n, 2.0);
+            let dmargins = prop::dense_vec(&mut rng, n, 1.0);
+            let y: Vec<f64> = (0..n)
+                .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                .collect();
+            close(
+                xc.grad_dot(&y, &margins, &dmargins),
+                nc.grad_dot(&y, &margins, &dmargins),
+                1e-8,
+            )
+            .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn concurrent_workers_share_runtime() {
+        let Some(rt) = runtime() else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        let handle = rt.handle();
+        crossbeam_utils::thread::scope(|s| {
+            for t in 0..4 {
+                let h = handle.clone();
+                s.spawn(move |_| {
+                    let xc = XlaCompute::new(h, LossKind::Logistic);
+                    let nc = NativeCompute::new(LossKind::Logistic);
+                    let mut rng = Rng::new(100 + t);
+                    let n = 512;
+                    let margins = prop::dense_vec(&mut rng, n, 2.0);
+                    let y: Vec<f64> = (0..n)
+                        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                        .collect();
+                    let (mut w1, mut z1) = (vec![0.0; n], vec![0.0; n]);
+                    let (mut w2, mut z2) = (vec![0.0; n], vec![0.0; n]);
+                    let l1 = xc.stats(&y, &margins, &mut w1, &mut z1);
+                    let l2 = nc.stats(&y, &margins, &mut w2, &mut z2);
+                    close(l1, l2, 1e-9).unwrap();
+                });
+            }
+        })
+        .unwrap();
+    }
+}

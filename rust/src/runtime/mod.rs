@@ -1,0 +1,13 @@
+//! XLA/PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` (L2 JAX graphs wrapping L1 Pallas kernels),
+//! compiles them once on a dedicated service thread, and exposes them to the
+//! coordinator through the same [`GlmCompute`] trait the native Rust
+//! implementation uses. Python is never on this path.
+//!
+//! [`GlmCompute`]: crate::solver::compute::GlmCompute
+
+pub mod compute;
+pub mod service;
+
+pub use compute::XlaCompute;
+pub use service::{Manifest, Runtime, RuntimeHandle};

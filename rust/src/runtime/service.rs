@@ -1,0 +1,327 @@
+//! The XLA runtime service — owns the PJRT CPU client and every compiled
+//! executable, serving compute requests from the worker threads.
+//!
+//! The `xla` crate's wrapper types hold raw pointers and are neither `Send`
+//! nor `Sync`, so the client lives on a dedicated service thread; workers
+//! talk to it through a cloneable [`RuntimeHandle`] (mpsc request/reply).
+//! PJRT's CPU backend parallelizes a single execution internally, so
+//! serialized dispatch does not idle the cores.
+//!
+//! Artifacts are the HLO-text files `python/compile/aot.py` emits; each is
+//! compiled once on first use and cached for the rest of the process
+//! lifetime (Python never runs on this path).
+
+use crate::glm::loss::LossKind;
+use crate::util::json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+
+/// Static description of the artifact set, parsed from manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    /// Available example-axis block sizes, ascending.
+    pub blocks: Vec<usize>,
+    /// Line-search candidate count K baked into the linesearch artifacts.
+    pub k_alphas: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let v = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let k_alphas = v
+            .get("k_alphas")
+            .and_then(|j| j.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing k_alphas"))? as usize;
+        let mut blocks: Vec<usize> = match v.get("artifacts") {
+            Some(json::Json::Arr(arts)) => arts
+                .iter()
+                .filter_map(|a| a.get("block").and_then(|b| b.as_f64()).map(|b| b as usize))
+                .collect(),
+            _ => return Err(anyhow::anyhow!("manifest missing artifacts")),
+        };
+        blocks.sort_unstable();
+        blocks.dedup();
+        if blocks.is_empty() {
+            return Err(anyhow::anyhow!("manifest lists no artifacts"));
+        }
+        Ok(Manifest {
+            dir,
+            blocks,
+            k_alphas,
+        })
+    }
+
+    /// Smallest block ≥ n, or the largest block (caller chunks) if none fit.
+    pub fn pick_block(&self, n: usize) -> usize {
+        *self
+            .blocks
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or_else(|| self.blocks.last().unwrap())
+    }
+
+    pub fn artifact_path(&self, model: &str, kind: LossKind, block: usize) -> PathBuf {
+        self.dir
+            .join(format!("{model}_{}_{block}.hlo.txt", kind.name()))
+    }
+}
+
+/// A stats request: (margins, y) → (w, z, loss_sum). Vectors are pre-padded
+/// to `block` by the caller-side handle.
+enum Request {
+    Stats {
+        kind: LossKind,
+        block: usize,
+        margins: Vec<f64>,
+        y: Vec<f64>,
+        mask: Vec<f64>,
+        reply: Sender<anyhow::Result<(Vec<f64>, Vec<f64>, f64)>>,
+    },
+    LineSearch {
+        kind: LossKind,
+        block: usize,
+        margins: Vec<f64>,
+        dmargins: Vec<f64>,
+        y: Vec<f64>,
+        mask: Vec<f64>,
+        alphas: Vec<f64>,
+        reply: Sender<anyhow::Result<Vec<f64>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the runtime service thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Request>,
+    manifest: Manifest,
+}
+
+// The Sender is Send; handing handles to worker threads is the whole point.
+unsafe impl Sync for RuntimeHandle {}
+
+/// The service thread plus its handle. Dropping `Runtime` shuts the thread
+/// down.
+pub struct Runtime {
+    handle: RuntimeHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Runtime {
+    /// Start the service: loads the manifest eagerly, compiles executables
+    /// lazily (first use per (model, kind, block)).
+    pub fn start(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let (tx, rx) = channel::<Request>();
+        let m2 = manifest.clone();
+        let join = std::thread::Builder::new()
+            .name("xla-runtime".into())
+            .spawn(move || service_loop(m2, rx))
+            .expect("spawn xla-runtime thread");
+        Ok(Runtime {
+            handle: RuntimeHandle { tx, manifest },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.handle.manifest
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl RuntimeHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute the stats graph on (already padded) block vectors.
+    pub fn stats_block(
+        &self,
+        kind: LossKind,
+        margins: Vec<f64>,
+        y: Vec<f64>,
+        mask: Vec<f64>,
+    ) -> anyhow::Result<(Vec<f64>, Vec<f64>, f64)> {
+        let block = margins.len();
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Stats {
+                kind,
+                block,
+                margins,
+                y,
+                mask,
+                reply: rtx,
+            })
+            .map_err(|_| anyhow::anyhow!("xla runtime thread is gone"))?;
+        rrx.recv()
+            .map_err(|_| anyhow::anyhow!("xla runtime dropped reply"))?
+    }
+
+    /// Execute the linesearch graph on (already padded) block vectors.
+    #[allow(clippy::too_many_arguments)]
+    pub fn linesearch_block(
+        &self,
+        kind: LossKind,
+        margins: Vec<f64>,
+        dmargins: Vec<f64>,
+        y: Vec<f64>,
+        mask: Vec<f64>,
+        alphas: Vec<f64>,
+    ) -> anyhow::Result<Vec<f64>> {
+        let block = margins.len();
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::LineSearch {
+                kind,
+                block,
+                margins,
+                dmargins,
+                y,
+                mask,
+                alphas,
+                reply: rtx,
+            })
+            .map_err(|_| anyhow::anyhow!("xla runtime thread is gone"))?;
+        rrx.recv()
+            .map_err(|_| anyhow::anyhow!("xla runtime dropped reply"))?
+    }
+}
+
+/// Executable cache key.
+type Key = (&'static str, LossKind, usize);
+
+fn service_loop(manifest: Manifest, rx: std::sync::mpsc::Receiver<Request>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with a clear message.
+            for req in rx {
+                match req {
+                    Request::Stats { reply, .. } => {
+                        let _ = reply.send(Err(anyhow::anyhow!("PJRT client failed: {e}")));
+                    }
+                    Request::LineSearch { reply, .. } => {
+                        let _ = reply.send(Err(anyhow::anyhow!("PJRT client failed: {e}")));
+                    }
+                    Request::Shutdown => return,
+                }
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<Key, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    let compile = |cache: &mut HashMap<Key, xla::PjRtLoadedExecutable>,
+                   model: &'static str,
+                   kind: LossKind,
+                   block: usize|
+     -> anyhow::Result<()> {
+        if cache.contains_key(&(model, kind, block)) {
+            return Ok(());
+        }
+        let path = manifest.artifact_path(model, kind, block);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("load {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e}"))?;
+        cache.insert((model, kind, block), exe);
+        Ok(())
+    };
+
+    for req in rx {
+        match req {
+            Request::Shutdown => break,
+            Request::Stats {
+                kind,
+                block,
+                margins,
+                y,
+                mask,
+                reply,
+            } => {
+                let res = (|| -> anyhow::Result<(Vec<f64>, Vec<f64>, f64)> {
+                    compile(&mut cache, "stats", kind, block)?;
+                    let exe = &cache[&("stats", kind, block)];
+                    let args = [
+                        xla::Literal::vec1(&margins),
+                        xla::Literal::vec1(&y),
+                        xla::Literal::vec1(&mask),
+                    ];
+                    let out = exe
+                        .execute::<xla::Literal>(&args)
+                        .map_err(|e| anyhow::anyhow!("execute stats: {e}"))?[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow::anyhow!("fetch stats: {e}"))?;
+                    let (w, z, lsum) = out
+                        .to_tuple3()
+                        .map_err(|e| anyhow::anyhow!("stats tuple: {e}"))?;
+                    Ok((
+                        w.to_vec::<f64>()
+                            .map_err(|e| anyhow::anyhow!("w vec: {e}"))?,
+                        z.to_vec::<f64>()
+                            .map_err(|e| anyhow::anyhow!("z vec: {e}"))?,
+                        lsum.to_vec::<f64>()
+                            .map_err(|e| anyhow::anyhow!("loss vec: {e}"))?[0],
+                    ))
+                })();
+                let _ = reply.send(res);
+            }
+            Request::LineSearch {
+                kind,
+                block,
+                margins,
+                dmargins,
+                y,
+                mask,
+                alphas,
+                reply,
+            } => {
+                let res = (|| -> anyhow::Result<Vec<f64>> {
+                    compile(&mut cache, "linesearch", kind, block)?;
+                    let exe = &cache[&("linesearch", kind, block)];
+                    let args = [
+                        xla::Literal::vec1(&margins),
+                        xla::Literal::vec1(&dmargins),
+                        xla::Literal::vec1(&y),
+                        xla::Literal::vec1(&mask),
+                        xla::Literal::vec1(&alphas),
+                    ];
+                    let out = exe
+                        .execute::<xla::Literal>(&args)
+                        .map_err(|e| anyhow::anyhow!("execute linesearch: {e}"))?[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow::anyhow!("fetch linesearch: {e}"))?;
+                    let losses = out
+                        .to_tuple1()
+                        .map_err(|e| anyhow::anyhow!("ls tuple: {e}"))?;
+                    losses
+                        .to_vec::<f64>()
+                        .map_err(|e| anyhow::anyhow!("ls vec: {e}"))
+                })();
+                let _ = reply.send(res);
+            }
+        }
+    }
+}

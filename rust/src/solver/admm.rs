@@ -1,0 +1,366 @@
+//! ADMM with sharing — the paper's first baseline (Section 8.1; Boyd et al.
+//! 2011 §7.3, §8.3.1/8.3.3).
+//!
+//! The design matrix is split by features into M blocks (same vertical
+//! sharding as d-GLMNET). Sharing ADMM alternates:
+//!
+//!   β^m ← argmin  λ₁‖β^m‖₁ + (λ₂/2)‖β^m‖² + (ρ/2)‖X^m β^m − v^m‖²
+//!           (a LASSO solved by Shooting, warm-started; in parallel over m)
+//!   z̄  ← argmin  Σᵢ ℓ(yᵢ, M z̄ᵢ) + (Mρ/2)‖z̄ − u − x̄‖²
+//!           (n independent 1-D problems, damped Newton — the paper's
+//!            footnote 3 fix: the coefficient is ρM/2, not ρ/2)
+//!   u  ← u + x̄ − z̄
+//!
+//! where x̄ = (1/M) Σ X^m β^m. Like the paper's implementation, weights live
+//! distributed per block and x-updates run concurrently (one thread per
+//! block, mirroring the node parallelism).
+
+use crate::data::Dataset;
+use crate::glm::loss::LossKind;
+use crate::metrics;
+use crate::solver::shooting::{shooting, ShootingConfig};
+use crate::solver::trace::{Trace, TracePoint};
+use crate::sparse::{Csc, FeaturePartition};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct AdmmConfig {
+    pub kind: LossKind,
+    pub l1: f64,
+    pub l2: f64,
+    pub rho: f64,
+    pub nodes: usize,
+    pub max_iters: usize,
+    /// Shooting passes per x-update (warm-started, few passes suffice).
+    pub shooting_passes: usize,
+    pub newton_iters: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for AdmmConfig {
+    fn default() -> Self {
+        AdmmConfig {
+            kind: LossKind::Logistic,
+            l1: 1.0,
+            l2: 0.0,
+            rho: 1.0,
+            nodes: 8,
+            max_iters: 100,
+            shooting_passes: 5,
+            newton_iters: 25,
+            eval_every: 1,
+            seed: 0x5EED,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct AdmmResult {
+    pub beta: Vec<f64>,
+    pub objective: f64,
+    pub iters: usize,
+    pub trace: Trace,
+}
+
+/// One-dimensional z-update: argmin_z ℓ(y, M z) + (Mρ/2)(z − c)², damped
+/// Newton from z = c (the objective is strongly convex, ℓ convex smooth).
+fn z_update_1d(kind: LossKind, y: f64, m: f64, rho: f64, c: f64, iters: usize) -> f64 {
+    let mut z = c;
+    for _ in 0..iters {
+        let g = m * kind.d1(y, m * z) + m * rho * (z - c);
+        let h = m * m * kind.d2(y, m * z) + m * rho;
+        let step = g / h;
+        z -= step;
+        if step.abs() < 1e-13 * (1.0 + z.abs()) {
+            break;
+        }
+    }
+    z
+}
+
+/// Fit a regularized GLM with sharing ADMM over `cfg.nodes` feature blocks.
+pub fn fit_admm(train: &Dataset, test: Option<&Dataset>, cfg: &AdmmConfig) -> AdmmResult {
+    let n = train.n();
+    let p = train.p();
+    let m_nodes = cfg.nodes;
+    let partition = FeaturePartition::hashed(p, m_nodes, cfg.seed);
+    let x_csc = train.to_csc();
+    let shards: Vec<Csc> = (0..m_nodes).map(|m| partition.shard(&x_csc, m)).collect();
+
+    // Per-block weights and predictions X^m β^m.
+    let mut betas: Vec<Vec<f64>> = partition.blocks.iter().map(|b| vec![0.0; b.len()]).collect();
+    let mut preds: Vec<Vec<f64>> = (0..m_nodes).map(|_| vec![0.0; n]).collect();
+    let mut zbar = vec![0.0; n];
+    let mut u = vec![0.0; n];
+
+    let mut trace = Trace::new("admm", &train.name);
+    let started = Instant::now();
+    let mf = m_nodes as f64;
+
+    let objective = |betas: &[Vec<f64>], preds: &[Vec<f64>]| -> f64 {
+        let mut margins = vec![0.0; n];
+        for pr in preds {
+            for (mi, pi) in margins.iter_mut().zip(pr.iter()) {
+                *mi += pi;
+            }
+        }
+        let mut loss = 0.0;
+        for i in 0..n {
+            loss += cfg.kind.value(train.y[i], margins[i]);
+        }
+        let mut l1 = 0.0;
+        let mut l2 = 0.0;
+        for b in betas {
+            for w in b {
+                l1 += w.abs();
+                l2 += w * w;
+            }
+        }
+        loss + cfg.l1 * l1 + 0.5 * cfg.l2 * l2
+    };
+
+    let record = |trace: &mut Trace,
+                  started: &Instant,
+                  iter: usize,
+                  f: f64,
+                  betas: &[Vec<f64>]| {
+        let nnz: usize = betas.iter().map(|b| metrics::nnz_weights(b)).sum();
+        let auprc = test.and_then(|t| {
+            (cfg.eval_every > 0 && iter % cfg.eval_every == 0).then(|| {
+                let beta = partition.unshard_weights(&betas.to_vec());
+                let scores = t.x.mul_vec(&beta);
+                metrics::auprc(&t.y, &scores)
+            })
+        });
+        trace.push(TracePoint {
+            t_sec: started.elapsed().as_secs_f64(),
+            iter,
+            objective: f,
+            nnz,
+            alpha: 1.0,
+            mu: 1.0,
+            auprc,
+        });
+    };
+
+    let mut f_cur = objective(&betas, &preds);
+    record(&mut trace, &started, 0, f_cur, &betas);
+
+    let mut iters = 0;
+    for it in 1..=cfg.max_iters {
+        iters = it;
+        // x̄ = average of block predictions.
+        let mut xbar = vec![0.0; n];
+        for pr in &preds {
+            for (xi, pi) in xbar.iter_mut().zip(pr.iter()) {
+                *xi += pi;
+            }
+        }
+        for xi in xbar.iter_mut() {
+            *xi /= mf;
+        }
+
+        // ---- x-update: parallel shooting per block ----
+        let sh_cfg = ShootingConfig {
+            rho: cfg.rho,
+            l1: cfg.l1,
+            l2: cfg.l2,
+            max_passes: cfg.shooting_passes,
+            tol: 1e-10,
+        };
+        crossbeam_utils::thread::scope(|scope| {
+            for ((beta_m, pred_m), shard) in
+                betas.iter_mut().zip(preds.iter_mut()).zip(shards.iter())
+            {
+                let (xbar, zbar, u) = (&xbar, &zbar, &u);
+                let sh_cfg = sh_cfg;
+                scope.spawn(move |_| {
+                    // v^m = X^m β^m + z̄ − x̄ − u
+                    let mut v = vec![0.0; pred_m.len()];
+                    for i in 0..v.len() {
+                        v[i] = pred_m[i] + zbar[i] - xbar[i] - u[i];
+                    }
+                    shooting(shard, &v, beta_m, &sh_cfg);
+                    *pred_m = shard.mul_vec(beta_m);
+                });
+            }
+        })
+        .expect("admm x-update scope");
+
+        // Recompute x̄ with the new predictions.
+        let mut xbar = vec![0.0; n];
+        for pr in &preds {
+            for (xi, pi) in xbar.iter_mut().zip(pr.iter()) {
+                *xi += pi;
+            }
+        }
+        for xi in xbar.iter_mut() {
+            *xi /= mf;
+        }
+
+        // ---- z-update: n independent 1-D Newton solves ----
+        for i in 0..n {
+            let c = u[i] + xbar[i];
+            zbar[i] = z_update_1d(cfg.kind, train.y[i], mf, cfg.rho, c, cfg.newton_iters);
+        }
+
+        // ---- dual update ----
+        for i in 0..n {
+            u[i] += xbar[i] - zbar[i];
+        }
+
+        f_cur = objective(&betas, &preds);
+        record(&mut trace, &started, it, f_cur, &betas);
+    }
+
+    let beta = partition.unshard_weights(&betas);
+    AdmmResult {
+        beta,
+        objective: f_cur,
+        iters,
+        trace,
+    }
+}
+
+/// The paper's ρ selection: try ρ ∈ {4⁻³ … 4³}, run `probe_iters`
+/// iterations, keep the ρ with the best objective.
+pub fn select_rho(train: &Dataset, cfg: &AdmmConfig, probe_iters: usize) -> f64 {
+    let mut best = (f64::INFINITY, cfg.rho);
+    for e in -3..=3 {
+        let rho = 4f64.powi(e);
+        let probe_cfg = AdmmConfig {
+            rho,
+            max_iters: probe_iters,
+            eval_every: 0,
+            ..cfg.clone()
+        };
+        let res = fit_admm(train, None, &probe_cfg);
+        if res.objective < best.0 {
+            best = (res.objective, rho);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::glm::regularizer::ElasticNet;
+    use crate::solver::compute::NativeCompute;
+    use crate::solver::dglmnet::{self, DGlmnetConfig};
+
+    #[test]
+    fn z_update_solves_first_order_condition() {
+        for kind in [LossKind::Logistic, LossKind::Squared] {
+            for &(y, c) in &[(1.0, 0.3), (-1.0, -0.2), (1.0, -1.0)] {
+                let (m, rho) = (4.0, 0.7);
+                let z = z_update_1d(kind, y, m, rho, c, 50);
+                let g = m * kind.d1(y, m * z) + m * rho * (z - c);
+                assert!(g.abs() < 1e-9, "{kind:?} FOC residual {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn admm_reaches_dglmnet_objective() {
+        let ds = synth::epsilon_like(&synth::SynthConfig {
+            n: 150,
+            p: 10,
+            seed: 21,
+        });
+        let (l1, l2) = (0.5, 0.1);
+        let admm_cfg = AdmmConfig {
+            kind: LossKind::Logistic,
+            l1,
+            l2,
+            rho: 1.0,
+            nodes: 3,
+            max_iters: 300,
+            shooting_passes: 10,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let admm = fit_admm(&ds, None, &admm_cfg);
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let pen = ElasticNet::new(l1, l2);
+        let dg = dglmnet::fit(
+            &ds,
+            &compute,
+            &pen,
+            &DGlmnetConfig {
+                nodes: 3,
+                max_iters: 300,
+                tol: 1e-12,
+                patience: 3,
+                eval_every: 0,
+                ..Default::default()
+            },
+            None,
+        );
+        let gap = (admm.objective - dg.objective).abs() / dg.objective;
+        assert!(
+            gap < 0.01,
+            "admm {} vs dglmnet {} (gap {gap})",
+            admm.objective,
+            dg.objective
+        );
+    }
+
+    #[test]
+    fn admm_objective_trends_down() {
+        let ds = synth::epsilon_like(&synth::SynthConfig {
+            n: 100,
+            p: 8,
+            seed: 22,
+        });
+        let cfg = AdmmConfig {
+            max_iters: 40,
+            nodes: 2,
+            l1: 0.3,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let res = fit_admm(&ds, None, &cfg);
+        let first = res.trace.points.first().unwrap().objective;
+        let last = res.trace.points.last().unwrap().objective;
+        assert!(last < first * 0.9, "no real progress: {first} -> {last}");
+    }
+
+    #[test]
+    fn l1_yields_sparsity() {
+        let ds = synth::epsilon_like(&synth::SynthConfig {
+            n: 200,
+            p: 30,
+            seed: 23,
+        });
+        let cfg = AdmmConfig {
+            l1: 4.0,
+            l2: 0.0,
+            max_iters: 80,
+            nodes: 4,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let res = fit_admm(&ds, None, &cfg);
+        let nnz = metrics::nnz_weights(&res.beta);
+        assert!(nnz < 30, "no sparsity: nnz = {nnz}");
+    }
+
+    #[test]
+    fn select_rho_returns_candidate() {
+        let ds = synth::epsilon_like(&synth::SynthConfig {
+            n: 60,
+            p: 6,
+            seed: 24,
+        });
+        let cfg = AdmmConfig {
+            nodes: 2,
+            l1: 0.2,
+            ..Default::default()
+        };
+        let rho = select_rho(&ds, &cfg, 5);
+        assert!((0.015..=64.01).contains(&rho));
+    }
+}

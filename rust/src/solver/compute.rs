@@ -1,0 +1,155 @@
+//! The per-example GLM compute interface — the seam between the Rust
+//! coordinator (L3) and the AOT-compiled XLA artifacts (L2/L1).
+//!
+//! Everything the d-GLMNET outer loop needs from the loss is:
+//!   1. `stats`      — working weights/responses (w, z) + total loss at the
+//!                     current margins (one call per outer iteration),
+//!   2. `loss_at_alphas` — L(Xβ + α·XΔβ) for a batch of step sizes (one call
+//!                     per line search),
+//!   3. `grad_dot`   — ∇L(β)ᵀΔβ = Σ g_i (XΔβ)_i for the Armijo decrease D.
+//!
+//! `NativeCompute` is the pure-Rust implementation (also the correctness
+//! oracle); `runtime::XlaCompute` implements the same trait by executing the
+//! Pallas-kernel artifacts through PJRT.
+
+use crate::glm::loss::{LossKind, W_FLOOR};
+
+/// Per-example statistics + batched line-search losses for one loss family.
+pub trait GlmCompute: Send + Sync {
+    fn kind(&self) -> LossKind;
+
+    /// Fill `w` and `z` from margins; return total loss Σ ℓ(y_i, m_i).
+    fn stats(&self, y: &[f64], margins: &[f64], w: &mut [f64], z: &mut [f64]) -> f64;
+
+    /// Return Σ_i ℓ(y_i, m_i + α d_i) for each α in `alphas`.
+    fn loss_at_alphas(
+        &self,
+        y: &[f64],
+        margins: &[f64],
+        dmargins: &[f64],
+        alphas: &[f64],
+    ) -> Vec<f64>;
+
+    /// ∇L(β)ᵀΔβ computed through the margin space: Σ_i ℓ'(y_i, m_i) d_i.
+    fn grad_dot(&self, y: &[f64], margins: &[f64], dmargins: &[f64]) -> f64;
+
+    /// Total loss at the current margins (default: via `loss_at_alphas`).
+    fn total_loss(&self, y: &[f64], margins: &[f64]) -> f64 {
+        let zeros = vec![0.0; margins.len()];
+        self.loss_at_alphas(y, margins, &zeros, &[0.0])[0]
+    }
+}
+
+/// Pure-Rust reference implementation of [`GlmCompute`].
+#[derive(Clone, Copy, Debug)]
+pub struct NativeCompute {
+    pub kind: LossKind,
+}
+
+impl NativeCompute {
+    pub fn new(kind: LossKind) -> Self {
+        NativeCompute { kind }
+    }
+}
+
+impl GlmCompute for NativeCompute {
+    fn kind(&self) -> LossKind {
+        self.kind
+    }
+
+    fn stats(&self, y: &[f64], margins: &[f64], w: &mut [f64], z: &mut [f64]) -> f64 {
+        debug_assert_eq!(y.len(), margins.len());
+        debug_assert_eq!(y.len(), w.len());
+        debug_assert_eq!(y.len(), z.len());
+        let mut loss = 0.0;
+        for i in 0..y.len() {
+            let (yi, mi) = (y[i], margins[i]);
+            loss += self.kind.value(yi, mi);
+            let g = self.kind.d1(yi, mi);
+            let wi = self.kind.d2(yi, mi).max(W_FLOOR);
+            w[i] = wi;
+            z[i] = -g / wi;
+        }
+        loss
+    }
+
+    fn loss_at_alphas(
+        &self,
+        y: &[f64],
+        margins: &[f64],
+        dmargins: &[f64],
+        alphas: &[f64],
+    ) -> Vec<f64> {
+        debug_assert_eq!(y.len(), margins.len());
+        debug_assert_eq!(y.len(), dmargins.len());
+        let mut out = vec![0.0; alphas.len()];
+        for i in 0..y.len() {
+            let (yi, mi, di) = (y[i], margins[i], dmargins[i]);
+            for (k, &a) in alphas.iter().enumerate() {
+                out[k] += self.kind.value(yi, mi + a * di);
+            }
+        }
+        out
+    }
+
+    fn grad_dot(&self, y: &[f64], margins: &[f64], dmargins: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..y.len() {
+            acc += self.kind.d1(y[i], margins[i]) * dmargins[i];
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, close};
+
+    #[test]
+    fn stats_matches_loss_pieces() {
+        let c = NativeCompute::new(LossKind::Logistic);
+        let y = [1.0, -1.0, 1.0];
+        let m = [0.5, -0.25, 2.0];
+        let mut w = [0.0; 3];
+        let mut z = [0.0; 3];
+        let loss = c.stats(&y, &m, &mut w, &mut z);
+        let want: f64 = (0..3).map(|i| LossKind::Logistic.value(y[i], m[i])).sum();
+        assert!((loss - want).abs() < 1e-12);
+        for i in 0..3 {
+            let (wi, zi) = LossKind::Logistic.working_response(y[i], m[i]);
+            assert_eq!(w[i], wi);
+            assert_eq!(z[i], zi);
+        }
+    }
+
+    #[test]
+    fn loss_at_alphas_zero_alpha_is_total_loss() {
+        let c = NativeCompute::new(LossKind::Probit);
+        let y = [1.0, -1.0];
+        let m = [0.3, 0.4];
+        let d = [1.0, -2.0];
+        let at0 = c.loss_at_alphas(&y, &m, &d, &[0.0])[0];
+        assert!((at0 - c.total_loss(&y, &m)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_grad_dot_is_directional_derivative() {
+        prop::check("grad_dot = d/dα loss(α)|₀", 100, |rng| {
+            for kind in [LossKind::Logistic, LossKind::Squared, LossKind::Probit] {
+                let c = NativeCompute::new(kind);
+                let n = 1 + rng.below(20);
+                let y: Vec<f64> = (0..n)
+                    .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                    .collect();
+                let m = prop::dense_vec(rng, n, 2.0);
+                let d = prop::dense_vec(rng, n, 1.0);
+                let h = 1e-6;
+                let ls = c.loss_at_alphas(&y, &m, &d, &[h, -h]);
+                let fd = (ls[0] - ls[1]) / (2.0 * h);
+                close(c.grad_dot(&y, &m, &d), fd, 1e-4)?;
+            }
+            Ok(())
+        });
+    }
+}

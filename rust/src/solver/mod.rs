@@ -1,0 +1,22 @@
+//! Optimization algorithms: the paper's d-GLMNET (Algorithms 1–3) plus the
+//! three baselines it is evaluated against (ADMM with sharing, online
+//! learning via truncated gradient, L-BFGS with online warmstart).
+
+pub mod admm;
+pub mod compute;
+pub mod dglmnet;
+pub mod lbfgs;
+pub mod linesearch;
+pub mod online;
+pub mod path;
+pub mod shooting;
+pub mod subproblem;
+pub mod trace;
+
+pub use admm::{fit_admm, select_rho, AdmmConfig, AdmmResult};
+pub use compute::{GlmCompute, NativeCompute};
+pub use lbfgs::{fit_lbfgs, LbfgsConfig, LbfgsResult};
+pub use online::{fit_online, OnlineConfig, OnlineResult};
+pub use dglmnet::{fit, DGlmnetConfig, FitResult, TestEval};
+pub use linesearch::{line_search, LineSearchConfig, LineSearchResult};
+pub use trace::{Trace, TracePoint};

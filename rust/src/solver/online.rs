@@ -1,0 +1,344 @@
+//! Distributed online learning — the paper's second baseline.
+//!
+//! "Online learning via truncated gradient" (Langford, Li & Zhang 2009) for
+//! L1, plain online gradient descent for L2, with the distributed recipe of
+//! Agarwal et al. 2014 / Zinkevich et al. 2010: the training set is split
+//! *by examples* over M nodes, each node runs one sequential online epoch
+//! over its shard, the M weight vectors are averaged, and the average
+//! warm-starts the next epoch. Epochs run on real threads (one per shard).
+//!
+//! Truncated gradient (the sparsity-inducing part): every `trunc_period`
+//! steps, weights are pulled toward zero by `period · η · λ₁` and clipped at
+//! zero — the online analogue of the L1 prox.
+
+use crate::data::Dataset;
+use crate::glm::loss::LossKind;
+use crate::metrics;
+use crate::solver::trace::{Trace, TracePoint};
+use crate::sparse::{Csr, ExamplePartition};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct OnlineConfig {
+    pub kind: LossKind,
+    pub l1: f64,
+    pub l2: f64,
+    pub nodes: usize,
+    pub epochs: usize,
+    /// Base learning rate η₀ (paper sweeps 0.1–0.5).
+    pub rate: f64,
+    /// Learning-rate decay power p: η_t = η₀ / t^p (paper sweeps 0.5–0.9).
+    pub power: f64,
+    /// Truncation period K of Langford et al. (gravity applied every K
+    /// steps). 0 disables truncation (the L2 configuration).
+    pub trunc_period: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        OnlineConfig {
+            kind: LossKind::Logistic,
+            l1: 0.0,
+            l2: 0.0,
+            nodes: 8,
+            epochs: 20,
+            rate: 0.3,
+            power: 0.6,
+            trunc_period: 10,
+            eval_every: 1,
+            seed: 0x5EED,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct OnlineResult {
+    pub beta: Vec<f64>,
+    pub objective: f64,
+    pub trace: Trace,
+}
+
+/// One sequential online pass over a shard, starting from `beta` (owned).
+/// `t0` is the global step count so the learning-rate schedule continues
+/// across epochs; `n_total` is the full training-set size — the objective is
+/// Σℓ + λ‖β‖, so the per-example stochastic regularizer weight is λ/n.
+/// λ₁ via truncation (Langford et al.), λ₂ via weight decay on touched
+/// coordinates (lazy, sparse-update-friendly).
+fn online_epoch(
+    x: &Csr,
+    y: &[f64],
+    mut beta: Vec<f64>,
+    cfg: &OnlineConfig,
+    t0: usize,
+    n_total: usize,
+) -> Vec<f64> {
+    let n = x.nrows;
+    let l1_per_example = cfg.l1 / n_total.max(1) as f64;
+    let l2_per_example = cfg.l2 / n_total.max(1) as f64;
+    let gravity = cfg.trunc_period.max(1) as f64 * l1_per_example;
+    let mut steps_since_trunc = 0usize;
+    for i in 0..n {
+        let t = t0 + i + 1;
+        let eta = cfg.rate / (t as f64).powf(cfg.power);
+        let margin = x.dot_row(i, &beta);
+        let g = cfg.kind.d1(y[i], margin);
+        // Gradient step on the touched coordinates.
+        let (cols, vals) = x.row_raw(i);
+        for (c, v) in cols.iter().zip(vals.iter()) {
+            let j = *c as usize;
+            // L2 term: weight decay folded into the sparse step.
+            let grad_j = g * v + l2_per_example * beta[j];
+            beta[j] -= eta * grad_j;
+        }
+        steps_since_trunc += 1;
+        if cfg.trunc_period > 0 && steps_since_trunc >= cfg.trunc_period && cfg.l1 > 0.0 {
+            // Truncation: pull every weight toward 0 by η·gravity, clip at 0.
+            let pull = eta * gravity;
+            for b in beta.iter_mut() {
+                if *b > 0.0 {
+                    *b = (*b - pull).max(0.0);
+                } else if *b < 0.0 {
+                    *b = (*b + pull).min(0.0);
+                }
+            }
+            steps_since_trunc = 0;
+        }
+    }
+    // Final (possibly partial-period) truncation so the epoch ends on the
+    // prox step — otherwise the trailing gradient updates leave every
+    // touched coordinate infinitesimally non-zero and averaging destroys
+    // sparsity entirely.
+    if cfg.trunc_period > 0 && cfg.l1 > 0.0 && steps_since_trunc > 0 {
+        let t = t0 + n;
+        let eta = cfg.rate / (t.max(1) as f64).powf(cfg.power);
+        let pull = eta * steps_since_trunc as f64 * l1_per_example;
+        for b in beta.iter_mut() {
+            if *b > 0.0 {
+                *b = (*b - pull).max(0.0);
+            } else if *b < 0.0 {
+                *b = (*b + pull).min(0.0);
+            }
+        }
+    }
+    beta
+}
+
+/// Train with distributed online learning: per-epoch shard passes in
+/// parallel, average, repeat.
+pub fn fit_online(train: &Dataset, test: Option<&Dataset>, cfg: &OnlineConfig) -> OnlineResult {
+    let p = train.p();
+    let parts = ExamplePartition::hashed(train.n(), cfg.nodes, cfg.seed);
+    let shards: Vec<Csr> = (0..cfg.nodes).map(|m| parts.shard(&train.x, m)).collect();
+    let labels: Vec<Vec<f64>> = (0..cfg.nodes)
+        .map(|m| parts.shard_labels(&train.y, m))
+        .collect();
+
+    let mut beta = vec![0.0; p];
+    let mut trace = Trace::new("online-tg", &train.name);
+    let started = Instant::now();
+
+    let objective = |beta: &[f64]| -> f64 {
+        let margins = train.x.mul_vec(beta);
+        let mut loss = 0.0;
+        for i in 0..train.n() {
+            loss += cfg.kind.value(train.y[i], margins[i]);
+        }
+        let l1: f64 = beta.iter().map(|b| b.abs()).sum();
+        let l2: f64 = beta.iter().map(|b| b * b).sum();
+        loss + cfg.l1 * l1 + 0.5 * cfg.l2 * l2
+    };
+
+    let record = |trace: &mut Trace, started: &Instant, iter: usize, f: f64, beta: &[f64]| {
+        let auprc = test.and_then(|t| {
+            (cfg.eval_every > 0 && iter % cfg.eval_every == 0).then(|| {
+                let scores = t.x.mul_vec(beta);
+                metrics::auprc(&t.y, &scores)
+            })
+        });
+        trace.push(TracePoint {
+            t_sec: started.elapsed().as_secs_f64(),
+            iter,
+            objective: f,
+            nnz: metrics::nnz_weights(beta),
+            alpha: 1.0,
+            mu: 1.0,
+            auprc,
+        });
+    };
+
+    record(&mut trace, &started, 0, objective(&beta), &beta);
+
+    let mut t_global = 0usize;
+    for epoch in 1..=cfg.epochs {
+        let mut results: Vec<Option<Vec<f64>>> = vec![None; cfg.nodes];
+        crossbeam_utils::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for m in 0..cfg.nodes {
+                let beta0 = beta.clone();
+                let (shard, ys) = (&shards[m], &labels[m]);
+                let cfg_ref = &*cfg;
+                let n_total = train.n();
+                handles.push((
+                    m,
+                    scope.spawn(move |_| {
+                        online_epoch(shard, ys, beta0, cfg_ref, t_global, n_total)
+                    }),
+                ));
+            }
+            for (m, h) in handles {
+                results[m] = Some(h.join().expect("online worker panicked"));
+            }
+        })
+        .expect("online scope");
+        // Average the shard models (uniform — shards are balanced).
+        let mut avg = vec![0.0; p];
+        for r in results.iter().flatten() {
+            for (a, b) in avg.iter_mut().zip(r.iter()) {
+                *a += b;
+            }
+        }
+        let inv = 1.0 / cfg.nodes as f64;
+        for a in avg.iter_mut() {
+            *a *= inv;
+        }
+        beta = avg;
+        t_global += shards.iter().map(|s| s.nrows).max().unwrap_or(0);
+        record(&mut trace, &started, epoch, objective(&beta), &beta);
+    }
+
+    OnlineResult {
+        objective: objective(&beta),
+        beta,
+        trace,
+    }
+}
+
+/// The paper's hyperparameter sweep: jointly tune rate ∈ {0.1..0.5} and
+/// power ∈ {0.5..0.9}, pick the best objective after `probe_epochs`.
+pub fn select_hyperparams(train: &Dataset, cfg: &OnlineConfig, probe_epochs: usize) -> (f64, f64) {
+    let mut best = (f64::INFINITY, cfg.rate, cfg.power);
+    for rate in [0.1, 0.2, 0.3, 0.4, 0.5] {
+        for power in [0.5, 0.6, 0.7, 0.8, 0.9] {
+            let probe = OnlineConfig {
+                rate,
+                power,
+                epochs: probe_epochs,
+                eval_every: 0,
+                ..cfg.clone()
+            };
+            let res = fit_online(train, None, &probe);
+            if res.objective < best.0 {
+                best = (res.objective, rate, power);
+            }
+        }
+    }
+    (best.1, best.2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn ds(n: usize, p: usize, seed: u64) -> Dataset {
+        synth::epsilon_like(&synth::SynthConfig { n, p, seed })
+    }
+
+    #[test]
+    fn online_learns_signal() {
+        let train = ds(2000, 10, 31);
+        let cfg = OnlineConfig {
+            nodes: 4,
+            epochs: 10,
+            l1: 0.0,
+            l2: 0.01,
+            trunc_period: 0,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let res = fit_online(&train, None, &cfg);
+        let scores = train.x.mul_vec(&res.beta);
+        let auc = metrics::roc_auc(&train.y, &scores);
+        assert!(auc > 0.65, "train AUC {auc}");
+    }
+
+    #[test]
+    fn objective_improves_over_epochs() {
+        let train = ds(1500, 8, 32);
+        let cfg = OnlineConfig {
+            nodes: 4,
+            epochs: 8,
+            l2: 0.01,
+            trunc_period: 0,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let res = fit_online(&train, None, &cfg);
+        let first = res.trace.points.first().unwrap().objective;
+        let last = res.trace.points.last().unwrap().objective;
+        assert!(last < first, "no progress {first} -> {last}");
+    }
+
+    #[test]
+    fn truncation_produces_sparsity() {
+        // Sparse text-like data: truncation zeroes the rarely-touched tail.
+        let train = synth::webspam_like(
+            &synth::SynthConfig {
+                n: 1200,
+                p: 400,
+                seed: 33,
+            },
+            20,
+        );
+        let dense_cfg = OnlineConfig {
+            nodes: 2,
+            epochs: 6,
+            l1: 0.0,
+            trunc_period: 0,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let sparse_cfg = OnlineConfig {
+            l1: 150.0, // total-objective λ1; per-example gravity is λ1/n
+            trunc_period: 5,
+            ..dense_cfg.clone()
+        };
+        let dense = fit_online(&train, None, &dense_cfg);
+        let sparse = fit_online(&train, None, &sparse_cfg);
+        let nnz_d = metrics::nnz_weights(&dense.beta);
+        let nnz_s = metrics::nnz_weights(&sparse.beta);
+        assert!(
+            nnz_s < nnz_d,
+            "truncated nnz {nnz_s} should be < plain {nnz_d}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let train = ds(300, 6, 34);
+        let cfg = OnlineConfig {
+            nodes: 3,
+            epochs: 3,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let a = fit_online(&train, None, &cfg);
+        let b = fit_online(&train, None, &cfg);
+        assert_eq!(a.beta, b.beta);
+    }
+
+    #[test]
+    fn hyperparam_sweep_returns_grid_point() {
+        let train = ds(200, 5, 35);
+        let cfg = OnlineConfig {
+            nodes: 2,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let (rate, power) = select_hyperparams(&train, &cfg, 2);
+        assert!([0.1, 0.2, 0.3, 0.4, 0.5].contains(&rate));
+        assert!([0.5, 0.6, 0.7, 0.8, 0.9].contains(&power));
+    }
+}

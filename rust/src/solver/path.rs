@@ -1,0 +1,314 @@
+//! Regularization path and validation-based λ selection.
+//!
+//! The paper's experimental protocol (§8.2): "For each dataset we selected
+//! L1 and L2 regularization coefficients from the range {2⁻⁶, …, 2⁶}
+//! yielding the best classification quality on the validation set." This
+//! module implements exactly that sweep, with the warm-starting trick that
+//! makes GLMNET-family path computation cheap: solutions are computed from
+//! the largest λ down, each fit starting from the previous solution.
+//!
+//! Also provides `lambda_max` — the smallest λ1 for which β = 0 is optimal
+//! (the classical KKT bound max_j |∇L_j(0)|), the natural top of the path.
+
+use crate::data::{Dataset, Splits};
+use crate::glm::loss::LossKind;
+use crate::glm::regularizer::{ElasticNet, Penalty1D};
+use crate::metrics;
+use crate::solver::compute::GlmCompute;
+use crate::solver::dglmnet::DGlmnetConfig;
+use crate::solver::linesearch::line_search;
+use crate::solver::subproblem::{cd_cycle, CycleBudget, SubproblemState};
+use crate::sparse::{Csc, FeaturePartition};
+
+/// λ1 at which the all-zeros solution is optimal: max_j |Σ_i ℓ'(y_i, 0) x_ij|.
+pub fn lambda_max(train: &Dataset, kind: LossKind) -> f64 {
+    let n = train.n();
+    let g0: Vec<f64> = (0..n).map(|i| kind.d1(train.y[i], 0.0)).collect();
+    let grad = train.x.tmul_vec(&g0);
+    grad.iter().fold(0.0f64, |m, g| m.max(g.abs()))
+}
+
+/// A single point on the path.
+#[derive(Clone, Debug)]
+pub struct PathPoint {
+    pub lambda1: f64,
+    pub lambda2: f64,
+    pub beta: Vec<f64>,
+    pub objective: f64,
+    pub nnz: usize,
+    /// Validation auPRC (classification) — the paper's selection criterion.
+    pub val_auprc: f64,
+    pub iters: usize,
+}
+
+/// Result of a path sweep.
+#[derive(Clone, Debug)]
+pub struct PathResult {
+    pub points: Vec<PathPoint>,
+    /// Index of the validation-best point.
+    pub best: usize,
+}
+
+impl PathResult {
+    pub fn best_point(&self) -> &PathPoint {
+        &self.points[self.best]
+    }
+}
+
+/// Warm-started fit at one (λ1, λ2), reusing the partition/shards and
+/// starting from `beta` (the previous path point). A slimmed copy of
+/// `dglmnet::fit` that threads an initial β through; kept separate so the
+/// cold-start reference implementation stays simple.
+#[allow(clippy::too_many_arguments)]
+fn warm_fit(
+    train: &Dataset,
+    shards: &[Csc],
+    partition: &FeaturePartition,
+    compute: &dyn GlmCompute,
+    pen: &ElasticNet,
+    cfg: &DGlmnetConfig,
+    beta: &mut Vec<f64>,
+) -> (f64, usize) {
+    let n = train.n();
+    let mut margins = train.x.mul_vec(beta);
+    let mut w = vec![0.0; n];
+    let mut z = vec![0.0; n];
+    let mut mu = cfg.mu0;
+    let mut states: Vec<SubproblemState> = partition
+        .blocks
+        .iter()
+        .map(|b| SubproblemState::new(b.len(), n))
+        .collect();
+    let mut loss = compute.stats(&train.y, &margins, &mut w, &mut z);
+    let mut reg = pen.value(beta);
+    let mut f_cur = loss + reg;
+    let mut stall = 0;
+    let mut iters = 0;
+    for it in 1..=cfg.max_iters {
+        iters = it;
+        let mut dmargins = vec![0.0; n];
+        for (m, block) in partition.blocks.iter().enumerate() {
+            if block.is_empty() {
+                continue;
+            }
+            let local_beta: Vec<f64> = block.iter().map(|&j| beta[j]).collect();
+            let st = &mut states[m];
+            st.reset();
+            cd_cycle(
+                &shards[m],
+                &local_beta,
+                &w,
+                &z,
+                mu,
+                cfg.nu,
+                pen,
+                st,
+                CycleBudget::full_cycle(block.len()),
+            );
+            for i in 0..n {
+                dmargins[i] += st.t[i];
+            }
+        }
+        // ∇L(β)ᵀΔβ from the cached working set: g_i = −w_i z_i exactly
+        // (z = −g/w with the same floored w), so no extra stats pass.
+        let mut grad_dot = 0.0;
+        for i in 0..n {
+            grad_dot += -w[i] * z[i] * dmargins[i];
+        }
+        let reg_ray = |alphas: &[f64]| -> Vec<f64> {
+            let mut out = vec![0.0; alphas.len()];
+            for (m, block) in partition.blocks.iter().enumerate() {
+                let st = &states[m];
+                for (local, &j) in block.iter().enumerate() {
+                    let (b, d) = (beta[j], st.delta_beta[local]);
+                    for (k, &a) in alphas.iter().enumerate() {
+                        out[k] += pen.value_1d(b + a * d);
+                    }
+                }
+            }
+            out
+        };
+        let ls = line_search(
+            compute,
+            &cfg.linesearch,
+            &train.y,
+            &margins,
+            &dmargins,
+            f_cur,
+            reg,
+            grad_dot,
+            &reg_ray,
+        );
+        if ls.alpha > 0.0 {
+            for (m, block) in partition.blocks.iter().enumerate() {
+                let st = &states[m];
+                for (local, &j) in block.iter().enumerate() {
+                    beta[j] += ls.alpha * st.delta_beta[local];
+                }
+            }
+            for i in 0..n {
+                margins[i] += ls.alpha * dmargins[i];
+            }
+        }
+        if cfg.adaptive_mu {
+            if ls.alpha < 1.0 {
+                mu *= cfg.eta1;
+            } else {
+                mu = (mu / cfg.eta2).max(1.0);
+            }
+        }
+        loss = compute.stats(&train.y, &margins, &mut w, &mut z);
+        reg = pen.value(beta);
+        let f_new = loss + reg;
+        let rel = (f_cur - f_new) / f_cur.abs().max(1e-12);
+        f_cur = f_new;
+        if rel.abs() < cfg.tol {
+            stall += 1;
+            if stall >= cfg.patience {
+                break;
+            }
+        } else {
+            stall = 0;
+        }
+    }
+    (f_cur, iters)
+}
+
+/// Sweep an L1 path over `lambdas` (fit in the given order — pass them
+/// descending for warm starts to pay off), selecting by validation auPRC.
+/// `l2` is held fixed.
+pub fn l1_path(
+    splits: &Splits,
+    compute: &dyn GlmCompute,
+    lambdas: &[f64],
+    l2: f64,
+    cfg: &DGlmnetConfig,
+) -> PathResult {
+    let train = &splits.train;
+    let partition = FeaturePartition::hashed(train.p(), cfg.nodes, cfg.seed);
+    let x_csc = train.to_csc();
+    let shards: Vec<Csc> = (0..cfg.nodes).map(|m| partition.shard(&x_csc, m)).collect();
+
+    let mut beta = vec![0.0; train.p()];
+    let mut points = Vec::with_capacity(lambdas.len());
+    for &l1 in lambdas {
+        let pen = ElasticNet::new(l1, l2);
+        let (objective, iters) =
+            warm_fit(train, &shards, &partition, compute, &pen, cfg, &mut beta);
+        let scores = splits.validation.x.mul_vec(&beta);
+        let val_auprc = metrics::auprc(&splits.validation.y, &scores);
+        points.push(PathPoint {
+            lambda1: l1,
+            lambda2: l2,
+            beta: beta.clone(),
+            objective,
+            nnz: metrics::nnz_weights(&beta),
+            val_auprc,
+            iters,
+        });
+    }
+    let best = points
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.val_auprc.partial_cmp(&b.1.val_auprc).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    PathResult { points, best }
+}
+
+/// The paper's §8.2 grid: {2⁻⁶, …, 2⁶}, descending for warm starts.
+pub fn paper_lambda_grid() -> Vec<f64> {
+    (-6..=6).rev().map(|e| 2f64.powi(e)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Corpus;
+    use crate::solver::compute::NativeCompute;
+    use crate::solver::dglmnet;
+
+    fn cfg() -> DGlmnetConfig {
+        DGlmnetConfig {
+            nodes: 3,
+            max_iters: 60,
+            tol: 1e-9,
+            eval_every: 0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn lambda_max_kills_all_weights() {
+        let splits = Corpus::webspam_like(0.05, 2);
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let lmax = lambda_max(&splits.train, LossKind::Logistic);
+        // At λ1 slightly above λ_max the fit must stay at zero.
+        let res = l1_path(&splits, &compute, &[lmax * 1.01], 0.0, &cfg());
+        assert_eq!(res.points[0].nnz, 0, "β should be all-zero above λ_max");
+        // Slightly below, some weight enters.
+        let res2 = l1_path(&splits, &compute, &[lmax * 0.9], 0.0, &cfg());
+        assert!(res2.points[0].nnz > 0, "β should activate below λ_max");
+    }
+
+    #[test]
+    fn path_nnz_monotone_descending_lambda() {
+        let splits = Corpus::webspam_like(0.05, 3);
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let lmax = lambda_max(&splits.train, LossKind::Logistic);
+        let lambdas: Vec<f64> = (0..5).map(|k| lmax * 0.7f64.powi(k + 1)).collect();
+        let res = l1_path(&splits, &compute, &lambdas, 0.0, &cfg());
+        for w in res.points.windows(2) {
+            assert!(
+                w[1].nnz + 2 >= w[0].nnz, // allow tiny non-monotonicity
+                "nnz dropped along decreasing λ: {} -> {}",
+                w[0].nnz,
+                w[1].nnz
+            );
+        }
+    }
+
+    #[test]
+    fn warm_fit_matches_cold_fit_objective() {
+        let splits = Corpus::epsilon_like(0.04, 4);
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let c = DGlmnetConfig {
+            max_iters: 300,
+            tol: 1e-12,
+            patience: 3,
+            ..cfg()
+        };
+        let res = l1_path(&splits, &compute, &[0.5], 0.1, &c);
+        let cold = dglmnet::fit(
+            &splits.train,
+            &compute,
+            &ElasticNet::new(0.5, 0.1),
+            &c,
+            None,
+        );
+        let gap = (res.points[0].objective - cold.objective).abs() / cold.objective;
+        assert!(gap < 1e-6, "warm path point {} vs cold {}", res.points[0].objective, cold.objective);
+    }
+
+    #[test]
+    fn best_point_maximizes_validation_auprc() {
+        let splits = Corpus::clickstream(0.05, 5);
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let res = l1_path(&splits, &compute, &[4.0, 1.0, 0.25], 0.0, &cfg());
+        let best = res.best_point().val_auprc;
+        for p in &res.points {
+            assert!(p.val_auprc <= best + 1e-12);
+        }
+    }
+
+    #[test]
+    fn paper_grid_shape() {
+        let g = paper_lambda_grid();
+        assert_eq!(g.len(), 13);
+        assert_eq!(g[0], 64.0);
+        assert_eq!(g[12], 1.0 / 64.0);
+        for w in g.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+}

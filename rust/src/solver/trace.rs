@@ -1,0 +1,169 @@
+//! Per-iteration training telemetry.
+//!
+//! The paper's evaluation plots everything against wall-clock time: relative
+//! objective suboptimality (Fig 2, 5), test auPRC (Fig 3, 6), number of
+//! non-zero weights (Fig 4). A `Trace` collects exactly those series, plus
+//! the line-search/μ internals used in the Fig 1 ablation, and serializes to
+//! JSON for the bench harnesses.
+
+use crate::util::json::Json;
+
+/// One point of the convergence profile.
+#[derive(Clone, Debug)]
+pub struct TracePoint {
+    /// Seconds since training start.
+    pub t_sec: f64,
+    /// Outer iteration number (0 = before the first update).
+    pub iter: usize,
+    /// Objective f(β) = L(β) + R(β).
+    pub objective: f64,
+    /// Number of non-zero weights.
+    pub nnz: usize,
+    /// Accepted line-search step (1.0 when the full step passed).
+    pub alpha: f64,
+    /// Trust-region multiplier μ after adaptation.
+    pub mu: f64,
+    /// Test auPRC if a test set was attached.
+    pub auprc: Option<f64>,
+}
+
+/// Convergence profile of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub algorithm: String,
+    pub dataset: String,
+    pub points: Vec<TracePoint>,
+    /// Total bytes moved through the cluster fabric (0 for single-process).
+    pub comm_bytes: u64,
+}
+
+impl Trace {
+    pub fn new(algorithm: &str, dataset: &str) -> Trace {
+        Trace {
+            algorithm: algorithm.to_string(),
+            dataset: dataset.to_string(),
+            points: Vec::new(),
+            comm_bytes: 0,
+        }
+    }
+
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    pub fn final_objective(&self) -> f64 {
+        self.points.last().map(|p| p.objective).unwrap_or(f64::NAN)
+    }
+
+    pub fn best_objective(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|p| p.objective)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Relative suboptimality series (f − f*)/f* against a reference optimum.
+    pub fn suboptimality(&self, f_star: f64) -> Vec<(f64, f64)> {
+        self.points
+            .iter()
+            .map(|p| (p.t_sec, (p.objective - f_star) / f_star))
+            .collect()
+    }
+
+    /// First time the trace came within `frac` (e.g. 0.025) of f* — the
+    /// paper's Fig 7/8 "time to 2.5%" measurement. None if never reached.
+    pub fn time_to_suboptimality(&self, f_star: f64, frac: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| (p.objective - f_star) / f_star <= frac)
+            .map(|p| p.t_sec)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("algorithm", self.algorithm.as_str())
+            .set("dataset", self.dataset.as_str())
+            .set("comm_bytes", self.comm_bytes)
+            .set(
+                "t_sec",
+                self.points.iter().map(|p| p.t_sec).collect::<Vec<_>>(),
+            )
+            .set(
+                "objective",
+                self.points.iter().map(|p| p.objective).collect::<Vec<_>>(),
+            )
+            .set(
+                "nnz",
+                self.points.iter().map(|p| p.nnz as f64).collect::<Vec<_>>(),
+            )
+            .set(
+                "alpha",
+                self.points.iter().map(|p| p.alpha).collect::<Vec<_>>(),
+            )
+            .set("mu", self.points.iter().map(|p| p.mu).collect::<Vec<_>>())
+            .set(
+                "auprc",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| p.auprc.map(Json::Num).unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            );
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace::new("d-glmnet", "toy");
+        for (i, f) in [10.0, 5.0, 2.0, 1.05, 1.01].iter().enumerate() {
+            t.push(TracePoint {
+                t_sec: i as f64,
+                iter: i,
+                objective: *f,
+                nnz: 10 - i,
+                alpha: 1.0,
+                mu: 1.0,
+                auprc: if i % 2 == 0 { Some(0.5 + i as f64 / 10.0) } else { None },
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn suboptimality_series() {
+        let t = sample_trace();
+        let s = t.suboptimality(1.0);
+        assert_eq!(s.len(), 5);
+        assert!((s[0].1 - 9.0).abs() < 1e-12);
+        assert!((s[4].1 - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_to_threshold() {
+        let t = sample_trace();
+        // 6% of f*=1.0 first reached at t=3 (1.05).
+        assert_eq!(t.time_to_suboptimality(1.0, 0.06), Some(3.0));
+        assert_eq!(t.time_to_suboptimality(1.0, 1e-6), None);
+    }
+
+    #[test]
+    fn json_has_all_series() {
+        let j = sample_trace().to_json();
+        let s = j.dump();
+        for key in ["algorithm", "objective", "nnz", "alpha", "mu", "auprc"] {
+            assert!(s.contains(key), "missing {key} in {s}");
+        }
+    }
+
+    #[test]
+    fn final_and_best() {
+        let t = sample_trace();
+        assert_eq!(t.final_objective(), 1.01);
+        assert_eq!(t.best_objective(), 1.01);
+    }
+}

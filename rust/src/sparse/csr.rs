@@ -1,0 +1,267 @@
+//! Compressed sparse row matrix — the example-major layout.
+//!
+//! Baselines that shard *by example* (online truncated gradient, L-BFGS with
+//! distributed gradient sums; Agarwal et al. 2014) stream examples, so they
+//! use CSR. `Csr::select_rows` builds each node's example shard.
+
+use crate::sparse::csc::Csc;
+
+/// CSR sparse matrix with f64 values and u32 column indices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Row pointer array, length nrows + 1.
+    pub rowptr: Vec<usize>,
+    /// Column index of each stored entry.
+    pub colidx: Vec<u32>,
+    /// Value of each stored entry.
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from per-row (col, value) lists.
+    pub fn from_rows(ncols: usize, rows: &[Vec<(usize, f64)>]) -> Csr {
+        let mut rowptr = Vec::with_capacity(rows.len() + 1);
+        let mut colidx = Vec::new();
+        let mut values = Vec::new();
+        rowptr.push(0);
+        for row in rows {
+            let mut sorted: Vec<(usize, f64)> = row.clone();
+            sorted.sort_unstable_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < sorted.len() {
+                let (c, mut v) = sorted[i];
+                assert!(c < ncols, "column {c} out of bounds");
+                let mut j = i + 1;
+                while j < sorted.len() && sorted[j].0 == c {
+                    v += sorted[j].1;
+                    j += 1;
+                }
+                if v != 0.0 {
+                    colidx.push(c as u32);
+                    values.push(v);
+                }
+                i = j;
+            }
+            rowptr.push(colidx.len());
+        }
+        Csr {
+            nrows: rows.len(),
+            ncols,
+            rowptr,
+            colidx,
+            values,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Iterate over (col, value) of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let (lo, hi) = (self.rowptr[i], self.rowptr[i + 1]);
+        self.colidx[lo..hi]
+            .iter()
+            .zip(self.values[lo..hi].iter())
+            .map(|(&c, &v)| (c as usize, v))
+    }
+
+    /// Raw slices of row i.
+    #[inline]
+    pub fn row_raw(&self, i: usize) -> (&[u32], &[f64]) {
+        let (lo, hi) = (self.rowptr[i], self.rowptr[i + 1]);
+        (&self.colidx[lo..hi], &self.values[lo..hi])
+    }
+
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.rowptr[i + 1] - self.rowptr[i]
+    }
+
+    /// Dot product of row i with a dense weight vector.
+    #[inline]
+    pub fn dot_row(&self, i: usize, beta: &[f64]) -> f64 {
+        let (cols, vals) = self.row_raw(i);
+        let mut acc = 0.0;
+        for (c, v) in cols.iter().zip(vals.iter()) {
+            acc += beta[*c as usize] * v;
+        }
+        acc
+    }
+
+    /// Dense product y = X * beta.
+    pub fn mul_vec(&self, beta: &[f64]) -> Vec<f64> {
+        assert_eq!(beta.len(), self.ncols);
+        (0..self.nrows).map(|i| self.dot_row(i, beta)).collect()
+    }
+
+    /// g += coef_i * x_i for row i (gradient scatter).
+    #[inline]
+    pub fn axpy_row(&self, i: usize, coef: f64, g: &mut [f64]) {
+        let (cols, vals) = self.row_raw(i);
+        for (c, v) in cols.iter().zip(vals.iter()) {
+            g[*c as usize] += coef * v;
+        }
+    }
+
+    /// Transpose product g = Xᵀ v.
+    pub fn tmul_vec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.nrows);
+        let mut g = vec![0.0; self.ncols];
+        for i in 0..self.nrows {
+            if v[i] != 0.0 {
+                self.axpy_row(i, v[i], &mut g);
+            }
+        }
+        g
+    }
+
+    /// Select a subset of rows (in order) into a new matrix — the example
+    /// shard for node m in by-example splitting.
+    pub fn select_rows(&self, rows: &[usize]) -> Csr {
+        let mut rowptr = Vec::with_capacity(rows.len() + 1);
+        let nnz: usize = rows.iter().map(|&i| self.row_nnz(i)).sum();
+        let mut colidx = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        rowptr.push(0);
+        for &i in rows {
+            let (cols, vals) = self.row_raw(i);
+            colidx.extend_from_slice(cols);
+            values.extend_from_slice(vals);
+            rowptr.push(colidx.len());
+        }
+        Csr {
+            nrows: rows.len(),
+            ncols: self.ncols,
+            rowptr,
+            colidx,
+            values,
+        }
+    }
+
+    /// Convert to CSC (feature-major) layout.
+    pub fn to_csc(&self) -> Csc {
+        let mut colcnt = vec![0usize; self.ncols];
+        for &c in &self.colidx {
+            colcnt[c as usize] += 1;
+        }
+        let mut colptr = Vec::with_capacity(self.ncols + 1);
+        colptr.push(0usize);
+        for c in &colcnt {
+            colptr.push(colptr.last().unwrap() + c);
+        }
+        let mut rowidx = vec![0u32; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        let mut next = colptr.clone();
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row_raw(i);
+            for (c, v) in cols.iter().zip(vals.iter()) {
+                let slot = next[*c as usize];
+                rowidx[slot] = i as u32;
+                values[slot] = *v;
+                next[*c as usize] += 1;
+            }
+        }
+        Csc {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            colptr,
+            rowidx,
+            values,
+        }
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.rowptr.len() * std::mem::size_of::<usize>()
+            + self.colidx.len() * std::mem::size_of::<u32>()
+            + self.values.len() * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn small() -> Csr {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        Csr::from_rows(
+            3,
+            &[
+                vec![(0, 1.0), (2, 2.0)],
+                vec![(1, 3.0)],
+                vec![(0, 4.0), (2, 5.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn layout_and_row_access() {
+        let m = small();
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.row(0).collect::<Vec<_>>(), vec![(0, 1.0), (2, 2.0)]);
+        assert_eq!(m.row_nnz(1), 1);
+    }
+
+    #[test]
+    fn dot_and_mul() {
+        let m = small();
+        assert_eq!(m.dot_row(0, &[1.0, 2.0, 3.0]), 7.0);
+        assert_eq!(m.mul_vec(&[1.0, 2.0, 3.0]), vec![7.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn tmul_known() {
+        let m = small();
+        assert_eq!(m.tmul_vec(&[1.0, 2.0, 3.0]), vec![13.0, 6.0, 17.0]);
+    }
+
+    #[test]
+    fn select_rows_shard() {
+        let m = small();
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.nrows, 2);
+        assert_eq!(s.row(0).collect::<Vec<_>>(), vec![(0, 4.0), (2, 5.0)]);
+    }
+
+    #[test]
+    fn csc_csr_roundtrip() {
+        let m = small();
+        let back = m.to_csc().to_csr();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn prop_roundtrip_csr_csc() {
+        prop::check("csr->csc->csr identity", 40, |rng| {
+            let (nr, nc) = (1 + rng.below(12), 1 + rng.below(12));
+            let rows: Vec<Vec<(usize, f64)>> = (0..nr)
+                .map(|_| {
+                    prop::sparse_vec(rng, nc, 6, 2.0)
+                })
+                .collect();
+            let m = Csr::from_rows(nc, &rows);
+            if m.to_csc().to_csr() == m {
+                Ok(())
+            } else {
+                Err("roundtrip mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    fn prop_tmul_agrees_with_csc() {
+        prop::check("csr tmul = csc tmul", 40, |rng| {
+            let (nr, nc) = (1 + rng.below(12), 1 + rng.below(12));
+            let rows: Vec<Vec<(usize, f64)>> =
+                (0..nr).map(|_| prop::sparse_vec(rng, nc, 6, 2.0)).collect();
+            let m = Csr::from_rows(nc, &rows);
+            let v = prop::dense_vec(rng, nr, 1.5);
+            prop::all_close(&m.tmul_vec(&v), &m.to_csc().tmul_vec(&v), 1e-12)
+        });
+    }
+}

@@ -1,0 +1,185 @@
+//! libsvm / svmlight format reader and writer.
+//!
+//! Format: one example per line, `label idx:val idx:val ...` with 1-based
+//! feature indices (we also accept 0-based via `IndexBase::Zero`). Reading is
+//! streaming (BufRead) so real Pascal-challenge files (epsilon, webspam) can
+//! be swapped in for the synthetic generators without loading twice.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use crate::sparse::csr::Csr;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexBase {
+    Zero,
+    One,
+}
+
+/// A labeled sparse dataset in example-major order.
+#[derive(Clone, Debug)]
+pub struct LibsvmData {
+    pub x: Csr,
+    /// Labels in {-1, +1} for classification, arbitrary reals for regression.
+    pub y: Vec<f64>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum LibsvmError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+}
+
+/// Parse from any reader. `ncols_hint` may extend the feature space (useful
+/// to keep train/test aligned); the actual width is max(hint, max index + 1).
+pub fn read<R: Read>(
+    reader: R,
+    base: IndexBase,
+    ncols_hint: usize,
+) -> Result<LibsvmData, LibsvmError> {
+    let buf = BufReader::new(reader);
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut y = Vec::new();
+    let mut max_col = 0usize;
+    for (lineno, line) in buf.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .map_err(|e| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("bad label: {e}"),
+            })?;
+        let mut row = Vec::new();
+        for tok in parts {
+            if tok.starts_with('#') {
+                break;
+            }
+            let (is, vs) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("expected idx:val, got '{tok}'"),
+            })?;
+            let idx: usize = is.parse().map_err(|e| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("bad index '{is}': {e}"),
+            })?;
+            let idx = match base {
+                IndexBase::Zero => idx,
+                IndexBase::One => {
+                    if idx == 0 {
+                        return Err(LibsvmError::Parse {
+                            line: lineno + 1,
+                            msg: "index 0 in 1-based file".into(),
+                        });
+                    }
+                    idx - 1
+                }
+            };
+            let val: f64 = vs.parse().map_err(|e| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("bad value '{vs}': {e}"),
+            })?;
+            max_col = max_col.max(idx + 1);
+            row.push((idx, val));
+        }
+        rows.push(row);
+        y.push(label);
+    }
+    let ncols = max_col.max(ncols_hint);
+    Ok(LibsvmData {
+        x: Csr::from_rows(ncols, &rows),
+        y,
+    })
+}
+
+/// Read from a file path (1-based indices, the standard convention).
+pub fn read_file(path: impl AsRef<Path>) -> Result<LibsvmData, LibsvmError> {
+    let f = std::fs::File::open(path)?;
+    read(f, IndexBase::One, 0)
+}
+
+/// Write in 1-based libsvm format.
+pub fn write<W: Write>(w: &mut W, data: &LibsvmData) -> std::io::Result<()> {
+    for i in 0..data.x.nrows {
+        let label = data.y[i];
+        if label == label.trunc() {
+            write!(w, "{}", label as i64)?;
+        } else {
+            write!(w, "{label}")?;
+        }
+        for (c, v) in data.x.row(i) {
+            write!(w, " {}:{}", c + 1, v)?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+pub fn write_file(path: impl AsRef<Path>, data: &LibsvmData) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write(&mut f, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
++1 1:0.5 3:1.25
+-1 2:2
+# comment line
++1 1:-1 2:0.125 3:3
+";
+
+    #[test]
+    fn parse_sample() {
+        let d = read(SAMPLE.as_bytes(), IndexBase::One, 0).unwrap();
+        assert_eq!(d.x.nrows, 3);
+        assert_eq!(d.x.ncols, 3);
+        assert_eq!(d.y, vec![1.0, -1.0, 1.0]);
+        assert_eq!(d.x.row(0).collect::<Vec<_>>(), vec![(0, 0.5), (2, 1.25)]);
+        assert_eq!(d.x.row(1).collect::<Vec<_>>(), vec![(1, 2.0)]);
+    }
+
+    #[test]
+    fn ncols_hint_extends() {
+        let d = read(SAMPLE.as_bytes(), IndexBase::One, 10).unwrap();
+        assert_eq!(d.x.ncols, 10);
+    }
+
+    #[test]
+    fn zero_based_mode() {
+        let d = read("1 0:1.5 2:2.5\n".as_bytes(), IndexBase::Zero, 0).unwrap();
+        assert_eq!(d.x.ncols, 3);
+        assert_eq!(d.x.row(0).collect::<Vec<_>>(), vec![(0, 1.5), (2, 2.5)]);
+    }
+
+    #[test]
+    fn rejects_zero_index_in_one_based() {
+        assert!(read("1 0:1.5\n".as_bytes(), IndexBase::One, 0).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_pair() {
+        assert!(read("1 15\n".as_bytes(), IndexBase::One, 0).is_err());
+        assert!(read("1 a:b\n".as_bytes(), IndexBase::One, 0).is_err());
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let d = read(SAMPLE.as_bytes(), IndexBase::One, 0).unwrap();
+        let mut buf = Vec::new();
+        write(&mut buf, &d).unwrap();
+        let d2 = read(buf.as_slice(), IndexBase::One, 0).unwrap();
+        assert_eq!(d.x, d2.x);
+        assert_eq!(d.y, d2.y);
+    }
+}

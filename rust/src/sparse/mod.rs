@@ -1,0 +1,12 @@
+//! Sparse linear-algebra substrate: CSC/CSR matrices, libsvm IO, and the
+//! feature/example partitioners that implement the paper's "vertical" and
+//! "horizontal" data splits.
+
+pub mod csc;
+pub mod csr;
+pub mod libsvm;
+pub mod partition;
+
+pub use csc::Csc;
+pub use csr::Csr;
+pub use partition::{ExamplePartition, FeaturePartition};

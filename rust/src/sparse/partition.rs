@@ -1,0 +1,308 @@
+//! Data partitioning across computational nodes.
+//!
+//! The paper shards features pseudo-randomly: the Map/Reduce repartition
+//! assigns feature j to node hash(j) mod M (Reduce-by-key). `FeaturePartition`
+//! reproduces that layout and also offers a balanced variant that equalizes
+//! per-node nnz (useful for the ALB ablation: hash splitting is what makes
+//! stragglers appear in the first place).
+//!
+//! `ExamplePartition` is the "horizontal" split used by the online-learning
+//! and L-BFGS baselines (Agarwal et al. 2014).
+
+use crate::sparse::csc::Csc;
+use crate::sparse::csr::Csr;
+
+/// Assignment of features to M nodes: S^1 ∪ ... ∪ S^M = {0..p}, disjoint.
+#[derive(Clone, Debug)]
+pub struct FeaturePartition {
+    /// blocks[m] = sorted global feature ids owned by node m (S^m).
+    pub blocks: Vec<Vec<usize>>,
+    /// owner[j] = node owning feature j.
+    pub owner: Vec<usize>,
+}
+
+/// 64-bit finalizer hash (same family as SplitMix64's mixer); deterministic
+/// stand-in for the Reduce-by-key hash in the paper's repartition job.
+#[inline]
+pub fn hash64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+impl FeaturePartition {
+    /// Pseudo-random hash partition (the paper's layout).
+    pub fn hashed(p: usize, m: usize, seed: u64) -> FeaturePartition {
+        assert!(m > 0);
+        let mut blocks = vec![Vec::new(); m];
+        let mut owner = Vec::with_capacity(p);
+        for j in 0..p {
+            let node = (hash64(j as u64 ^ seed) % m as u64) as usize;
+            blocks[node].push(j);
+            owner.push(node);
+        }
+        FeaturePartition { blocks, owner }
+    }
+
+    /// Contiguous partition (for tests / worst-case correlation layout).
+    pub fn contiguous(p: usize, m: usize) -> FeaturePartition {
+        assert!(m > 0);
+        let mut blocks = vec![Vec::new(); m];
+        let mut owner = Vec::with_capacity(p);
+        let chunk = p.div_ceil(m);
+        for j in 0..p {
+            let node = (j / chunk).min(m - 1);
+            blocks[node].push(j);
+            owner.push(node);
+        }
+        FeaturePartition { blocks, owner }
+    }
+
+    /// Greedy nnz-balanced partition: features sorted by column nnz
+    /// descending, each assigned to the currently lightest node (LPT
+    /// scheduling). Minimizes per-iteration compute skew.
+    pub fn nnz_balanced(x: &Csc, m: usize) -> FeaturePartition {
+        assert!(m > 0);
+        let p = x.ncols;
+        let mut order: Vec<usize> = (0..p).collect();
+        order.sort_unstable_by_key(|&j| std::cmp::Reverse(x.col_nnz(j)));
+        let mut load = vec![0usize; m];
+        let mut blocks = vec![Vec::new(); m];
+        let mut owner = vec![0usize; p];
+        for j in order {
+            let node = (0..m).min_by_key(|&k| load[k]).unwrap();
+            load[node] += x.col_nnz(j).max(1);
+            blocks[node].push(j);
+            owner[j] = node;
+        }
+        for b in blocks.iter_mut() {
+            b.sort_unstable();
+        }
+        FeaturePartition { blocks, owner }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Materialize node m's column block X^m from the global matrix.
+    pub fn shard(&self, x: &Csc, m: usize) -> Csc {
+        x.select_cols(&self.blocks[m])
+    }
+
+    /// Per-node nnz loads (skew diagnostics; drives slow-node experiments).
+    pub fn nnz_loads(&self, x: &Csc) -> Vec<usize> {
+        self.blocks
+            .iter()
+            .map(|b| b.iter().map(|&j| x.col_nnz(j)).sum())
+            .collect()
+    }
+
+    /// max/mean nnz load ratio — 1.0 is perfectly balanced.
+    pub fn skew(&self, x: &Csc) -> f64 {
+        let loads = self.nnz_loads(x);
+        let max = *loads.iter().max().unwrap_or(&0) as f64;
+        let mean = loads.iter().sum::<usize>() as f64 / loads.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Scatter a concatenation of per-block weight vectors back to global
+    /// feature order. `block_weights[m]` is indexed like `blocks[m]`.
+    pub fn unshard_weights(&self, block_weights: &[Vec<f64>]) -> Vec<f64> {
+        let mut beta = vec![0.0; self.num_features()];
+        for (m, block) in self.blocks.iter().enumerate() {
+            assert_eq!(block.len(), block_weights[m].len());
+            for (local, &j) in block.iter().enumerate() {
+                beta[j] = block_weights[m][local];
+            }
+        }
+        beta
+    }
+}
+
+/// Assignment of examples to M nodes (round-robin or hashed).
+#[derive(Clone, Debug)]
+pub struct ExamplePartition {
+    pub blocks: Vec<Vec<usize>>,
+}
+
+impl ExamplePartition {
+    pub fn round_robin(n: usize, m: usize) -> ExamplePartition {
+        assert!(m > 0);
+        let mut blocks = vec![Vec::new(); m];
+        for i in 0..n {
+            blocks[i % m].push(i);
+        }
+        ExamplePartition { blocks }
+    }
+
+    pub fn hashed(n: usize, m: usize, seed: u64) -> ExamplePartition {
+        assert!(m > 0);
+        let mut blocks = vec![Vec::new(); m];
+        for i in 0..n {
+            blocks[(hash64(i as u64 ^ seed) % m as u64) as usize].push(i);
+        }
+        ExamplePartition { blocks }
+    }
+
+    pub fn shard(&self, x: &Csr, m: usize) -> Csr {
+        x.select_rows(&self.blocks[m])
+    }
+
+    pub fn shard_labels(&self, y: &[f64], m: usize) -> Vec<f64> {
+        self.blocks[m].iter().map(|&i| y[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn check_is_partition(fp: &FeaturePartition, p: usize) -> Result<(), String> {
+        let mut seen = vec![false; p];
+        for (m, block) in fp.blocks.iter().enumerate() {
+            for &j in block {
+                if j >= p {
+                    return Err(format!("feature {j} out of range"));
+                }
+                if seen[j] {
+                    return Err(format!("feature {j} assigned twice"));
+                }
+                seen[j] = true;
+                if fp.owner[j] != m {
+                    return Err(format!("owner[{j}] inconsistent"));
+                }
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("not all features assigned".into());
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn prop_hashed_is_partition() {
+        prop::check("hashed partition disjoint+complete", 50, |rng| {
+            let p = 1 + rng.below(200);
+            let m = 1 + rng.below(16);
+            let fp = FeaturePartition::hashed(p, m, rng.next_u64());
+            check_is_partition(&fp, p)
+        });
+    }
+
+    #[test]
+    fn prop_contiguous_is_partition() {
+        prop::check("contiguous partition disjoint+complete", 50, |rng| {
+            let p = 1 + rng.below(200);
+            let m = 1 + rng.below(16);
+            check_is_partition(&FeaturePartition::contiguous(p, m), p)
+        });
+    }
+
+    #[test]
+    fn hashed_deterministic_per_seed() {
+        let a = FeaturePartition::hashed(100, 4, 7);
+        let b = FeaturePartition::hashed(100, 4, 7);
+        assert_eq!(a.owner, b.owner);
+        let c = FeaturePartition::hashed(100, 4, 8);
+        assert_ne!(a.owner, c.owner);
+    }
+
+    #[test]
+    fn hashed_roughly_balanced() {
+        let fp = FeaturePartition::hashed(10_000, 8, 1);
+        for b in &fp.blocks {
+            let frac = b.len() as f64 / 10_000.0;
+            assert!((frac - 0.125).abs() < 0.02, "block frac {frac}");
+        }
+    }
+
+    #[test]
+    fn nnz_balanced_beats_hash_on_skewed_data() {
+        // Power-law columns: column j has ~1000/(j+1) entries.
+        let mut trips = Vec::new();
+        for j in 0..50usize {
+            let cnt = (1000 / (j + 1)).max(1);
+            for i in 0..cnt {
+                trips.push((i % 500, j, 1.0));
+            }
+        }
+        let x = Csc::from_triplets(500, 50, trips);
+        let hash_skew = FeaturePartition::hashed(50, 4, 3).skew(&x);
+        let bal_skew = FeaturePartition::nnz_balanced(&x, 4).skew(&x);
+        assert!(
+            bal_skew <= hash_skew + 1e-9,
+            "balanced {bal_skew} vs hashed {hash_skew}"
+        );
+        assert!(bal_skew < 1.2, "balanced skew too high: {bal_skew}");
+    }
+
+    #[test]
+    fn shard_and_unshard_roundtrip() {
+        let x = Csc::from_triplets(
+            4,
+            6,
+            vec![
+                (0, 0, 1.0),
+                (1, 1, 2.0),
+                (2, 2, 3.0),
+                (3, 3, 4.0),
+                (0, 4, 5.0),
+                (1, 5, 6.0),
+            ],
+        );
+        let fp = FeaturePartition::hashed(6, 3, 42);
+        // per-block weights = global feature id as value
+        let block_weights: Vec<Vec<f64>> = fp
+            .blocks
+            .iter()
+            .map(|b| b.iter().map(|&j| j as f64).collect())
+            .collect();
+        let beta = fp.unshard_weights(&block_weights);
+        assert_eq!(beta, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        // shard column count matches block size
+        for m in 0..3 {
+            assert_eq!(fp.shard(&x, m).ncols, fp.blocks[m].len());
+        }
+    }
+
+    #[test]
+    fn example_partition_covers_all() {
+        for m in [1, 3, 8] {
+            let ep = ExamplePartition::round_robin(100, m);
+            let total: usize = ep.blocks.iter().map(|b| b.len()).sum();
+            assert_eq!(total, 100);
+            let mut all: Vec<usize> = ep.blocks.concat();
+            all.sort_unstable();
+            assert_eq!(all, (0..100).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn example_shard_labels_align() {
+        let x = Csr::from_rows(
+            2,
+            &[
+                vec![(0, 1.0)],
+                vec![(1, 2.0)],
+                vec![(0, 3.0)],
+                vec![(1, 4.0)],
+            ],
+        );
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let ep = ExamplePartition::round_robin(4, 2);
+        let s0 = ep.shard(&x, 0);
+        let y0 = ep.shard_labels(&y, 0);
+        assert_eq!(s0.nrows, 2);
+        assert_eq!(y0, vec![1.0, 1.0]);
+    }
+}

@@ -1,0 +1,178 @@
+//! Measurement harness for `harness = false` benches (no `criterion` in the
+//! offline env). Provides warmup + sampled timing with median/p95 reporting,
+//! and a table printer for paper-style output rows.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Timing summary over the collected samples (seconds).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+    pub fn p95(&self) -> f64 {
+        stats::percentile(&self.samples, 95.0)
+    }
+    pub fn min(&self) -> f64 {
+        stats::min(&self.samples)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} median {:>10}  mean {:>10}  p95 {:>10}  min {:>10}  (n={})",
+            self.name,
+            fmt_dur(self.median()),
+            fmt_dur(self.mean()),
+            fmt_dur(self.p95()),
+            fmt_dur(self.min()),
+            self.samples.len(),
+        )
+    }
+}
+
+/// Human format for a duration in seconds.
+pub fn fmt_dur(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+/// Run `f` with `warmup` unrecorded calls then `samples` timed calls.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let s = Summary {
+        name: name.to_string(),
+        samples: times,
+    };
+    println!("{}", s.report());
+    s
+}
+
+/// Run `f` repeatedly for at least `budget`, at least 3 samples.
+pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Summary {
+    // One calibration call.
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().as_secs_f64();
+    let mut times = vec![first];
+    let deadline = Instant::now() + budget;
+    while Instant::now() < deadline || times.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        if times.len() > 10_000 {
+            break;
+        }
+    }
+    let s = Summary {
+        name: name.to_string(),
+        samples: times,
+    };
+    println!("{}", s.report());
+    s
+}
+
+/// Paper-style fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let s = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.samples.len(), 5);
+        assert!(s.median() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(5e-9).ends_with("ns"));
+        assert!(fmt_dur(5e-6).ends_with("µs"));
+        assert!(fmt_dur(5e-3).ends_with("ms"));
+        assert!(fmt_dur(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn table_prints_aligned() {
+        let mut t = Table::new(&["dataset", "n"]);
+        t.row(&["webspam_like".to_string(), "30000".to_string()]);
+        t.print(); // smoke: no panic
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".to_string()]);
+    }
+}

@@ -1,0 +1,250 @@
+//! Declarative command-line flag parsing (no `clap` in the offline env).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and generates `--help` text from registered specs.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Parsed arguments plus the specs used for help/validation.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+/// Builder-style CLI definition.
+pub struct Cli {
+    program: String,
+    about: String,
+    specs: Vec<FlagSpec>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} requires a value")]
+    MissingValue(String),
+    #[error("help requested")]
+    HelpRequested,
+    #[error("invalid value for --{flag}: {value} ({reason})")]
+    InvalidValue {
+        flag: String,
+        value: String,
+        reason: String,
+    },
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli {
+            program: program.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+        }
+    }
+
+    /// Register a value flag with a default.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Register a required value flag (no default).
+    pub fn required(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Register a boolean switch (defaults to false).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some("false".to_string()),
+            is_bool: true,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nFlags:\n", self.program, self.about);
+        for spec in &self.specs {
+            let default = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_else(|| " [required]".to_string());
+            s.push_str(&format!("  --{:<24} {}{}\n", spec.name, spec.help, default));
+        }
+        s
+    }
+
+    /// Parse an argv slice (excluding program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                args.values.insert(spec.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError::UnknownFlag(name.clone()))?;
+                let value = if spec.is_bool {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                };
+                args.values.insert(name, value);
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Check required flags.
+        for spec in &self.specs {
+            if spec.default.is_none() && !args.values.contains_key(&spec.name) {
+                return Err(CliError::MissingValue(spec.name.clone()));
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not registered"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an unsigned integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an unsigned integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), "true" | "1" | "yes" | "on")
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .flag("nodes", "8", "number of nodes")
+            .flag("l1", "0.5", "l1 penalty")
+            .switch("alb", "enable ALB")
+            .required("dataset", "dataset name")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli()
+            .parse(&argv(&["--dataset", "webspam", "--nodes=16"]))
+            .unwrap();
+        assert_eq!(a.get_usize("nodes"), 16);
+        assert_eq!(a.get_f64("l1"), 0.5);
+        assert!(!a.get_bool("alb"));
+        assert_eq!(a.get("dataset"), "webspam");
+    }
+
+    #[test]
+    fn boolean_switch() {
+        let a = cli()
+            .parse(&argv(&["--dataset", "d", "--alb"]))
+            .unwrap();
+        assert!(a.get_bool("alb"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(matches!(
+            cli().parse(&argv(&["--nodes", "2"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(matches!(
+            cli().parse(&argv(&["--dataset", "d", "--bogus", "1"])),
+            Err(CliError::UnknownFlag(_))
+        ));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cli().parse(&argv(&["--dataset", "d", "pos1", "pos2"])).unwrap();
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn help_text_lists_flags() {
+        let h = cli().help_text();
+        assert!(h.contains("--nodes"));
+        assert!(h.contains("[default: 8]"));
+        assert!(h.contains("[required]"));
+    }
+}

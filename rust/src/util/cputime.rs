@@ -1,0 +1,61 @@
+//! Per-thread CPU time — the measurement basis of the virtual cluster clock.
+//!
+//! The simulation host may have fewer cores than simulated nodes (this box
+//! has one), so wall-clock time under thread oversubscription says nothing
+//! about the parallel algorithm. CLOCK_THREAD_CPUTIME_ID counts only the
+//! cycles this thread actually executed, which is exactly the per-node
+//! compute cost an M-node cluster would see; the coordinator maxes it over
+//! nodes per iteration and adds the modeled wire time (DESIGN.md
+//! §Substitutions).
+
+/// CPU seconds consumed by the calling thread.
+pub fn thread_cpu_secs() -> f64 {
+    let mut ts = libc::timespec {
+        tv_sec: 0,
+        tv_nsec: 0,
+    };
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    debug_assert_eq!(rc, 0);
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_and_advances_under_load() {
+        let t0 = thread_cpu_secs();
+        // Busy work.
+        let mut acc = 0u64;
+        for i in 0..5_000_000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        std::hint::black_box(acc);
+        let t1 = thread_cpu_secs();
+        assert!(t1 > t0, "cpu clock did not advance");
+    }
+
+    #[test]
+    fn sleep_consumes_no_cpu_time() {
+        let t0 = thread_cpu_secs();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let t1 = thread_cpu_secs();
+        assert!(t1 - t0 < 0.02, "sleep burned {:.3}s CPU", t1 - t0);
+    }
+
+    #[test]
+    fn other_threads_do_not_count() {
+        let h = std::thread::spawn(|| {
+            let mut acc = 0u64;
+            for i in 0..20_000_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+        });
+        let t0 = thread_cpu_secs();
+        h.join().unwrap();
+        let t1 = thread_cpu_secs();
+        assert!(t1 - t0 < 0.05, "other thread's work leaked in: {:.3}s", t1 - t0);
+    }
+}

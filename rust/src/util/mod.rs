@@ -1,0 +1,11 @@
+//! Environment substrates: PRNG, CLI, JSON, property testing, benchmarking,
+//! numeric helpers. These replace crates unavailable in the offline build
+//! (`rand`, `clap`, `serde`, `proptest`, `criterion`) — see DESIGN.md.
+
+pub mod bench;
+pub mod cli;
+pub mod cputime;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

