@@ -1,0 +1,84 @@
+//! The end-to-end train → promote → serve story: train a model through the
+//! public API, save it the way `train --save-model` does, serve it over TCP,
+//! score requests over the socket, then hot-swap in a retrained model
+//! without dropping the connection.
+//!
+//!     cargo run --release --example serving
+
+use std::sync::Arc;
+
+use dglmnet::coordinator::{fit_distributed, DistributedConfig};
+use dglmnet::data::Corpus;
+use dglmnet::glm::loss::LossKind;
+use dglmnet::glm::regularizer::ElasticNet;
+use dglmnet::glm::GlmModel;
+use dglmnet::serve::{serve, ModelRegistry, NativeFactory, Scorer, ServeClient, ServerConfig};
+use dglmnet::solver::compute::NativeCompute;
+
+fn train(l1: f64) -> GlmModel {
+    let splits = Corpus::clickstream(0.05, 42);
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let cfg = DistributedConfig {
+        nodes: 4,
+        max_iters: 15,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let fit = fit_distributed(&splits.train, None, &compute, &ElasticNet::l1_only(l1), &cfg);
+    GlmModel::new(LossKind::Logistic, fit.beta)
+        .with_meta("dataset", &splits.train.name)
+        .with_meta("l1", l1)
+}
+
+fn main() {
+    // 1. Train and save — exactly what `dglmnet train --save-model` writes.
+    let dir = std::env::temp_dir().join(format!("dglmnet_serving_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model_path = dir.join("model.json");
+    let model = train(0.5);
+    model.save(&model_path).unwrap();
+    println!(
+        "trained: {} non-zero of {} features -> {}",
+        model.nnz(),
+        model.p,
+        model_path.display()
+    );
+
+    // 2. Promote into a registry and serve (ephemeral port for the demo;
+    //    production would pass --addr 0.0.0.0:7878 to `dglmnet serve`).
+    let registry = Arc::new(ModelRegistry::new());
+    registry.load_path(&model_path).unwrap();
+    let scorer = Arc::new(Scorer::new(Arc::clone(&registry), Box::new(NativeFactory)));
+    let mut server = serve(
+        scorer,
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    println!("serving on {}", server.addr());
+
+    // 3. Score requests over the socket, like an online CTR caller would.
+    let mut client = ServeClient::connect(server.addr()).unwrap();
+    let rows = vec![
+        vec![(0u32, 1.0), (7, 0.5)],
+        vec![(3, 2.0)],
+        vec![], // empty row scores the intercept-free margin 0 -> p = 0.5
+    ];
+    let (version, probs) = client.predict(&rows).unwrap();
+    println!("v{version} probabilities: {probs:?}");
+
+    // 4. A retrain lands at the same path; promote it with zero downtime.
+    train(2.0).save(&model_path).unwrap();
+    let v2 = client.swap_model(None).unwrap(); // reload from the same path
+    let (version, probs) = client.predict(&rows).unwrap();
+    assert_eq!(version, v2);
+    println!("after hot-swap: v{version} probabilities: {probs:?}");
+
+    let health = client.health().unwrap();
+    println!("health: {}", health.dump());
+
+    server.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}

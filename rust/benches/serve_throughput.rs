@@ -1,0 +1,101 @@
+//! Serving throughput and latency — the load numbers behind the ROADMAP
+//! north star ("serve heavy traffic ... as fast as the hardware allows").
+//!
+//! Spins an in-process `serve` endpoint over a synthetic sparse model and
+//! drives it closed-loop with the `bench-serve` load generator, sweeping
+//! client fan-in and micro-batch linger. Reports QPS, rows/s and p50/p99
+//! per configuration, plus the server-side view (batch coalescing factor).
+//!
+//!     cargo bench --bench serve_throughput
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dglmnet::serve::{
+    run_loadgen, serve, synthetic_model, BatcherConfig, LoadgenConfig, ModelRegistry,
+    NativeFactory, Scorer, ServerConfig,
+};
+use dglmnet::util::bench::Table;
+
+const P: usize = 1 << 18;
+
+fn run_config(
+    threads: usize,
+    max_wait: Duration,
+    max_batch_rows: usize,
+    table: &mut Table,
+) {
+    // ~1% support, like a converged L1 click model.
+    let registry = Arc::new(ModelRegistry::with_model(synthetic_model(P, P / 100, 1)));
+    let scorer = Arc::new(Scorer::new(registry, Box::new(NativeFactory)));
+    let mut server = serve(
+        scorer,
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            io_threads: threads + 2,
+            batcher: BatcherConfig {
+                max_batch_rows,
+                max_wait,
+                workers: 2,
+            },
+        },
+    )
+    .expect("bind");
+    let report = run_loadgen(
+        server.addr(),
+        LoadgenConfig {
+            threads,
+            requests_per_thread: 2_000,
+            rows_per_request: 4,
+            nnz_per_row: 32,
+            p: P,
+            seed: 7,
+        },
+    )
+    .expect("loadgen");
+    let server_lat = server.latency();
+    table.row(&[
+        threads.to_string(),
+        format!("{}µs", max_wait.as_micros()),
+        max_batch_rows.to_string(),
+        format!("{:.0}", report.qps()),
+        format!("{:.0}", report.rows_per_sec()),
+        format!("{:.3}", report.hist.quantile_ns(0.50) as f64 / 1e6),
+        format!("{:.3}", report.hist.quantile_ns(0.99) as f64 / 1e6),
+        format!("{:.3}", server_lat.quantile_ns(0.50) as f64 / 1e6),
+    ]);
+    server.stop();
+}
+
+fn main() {
+    println!("=== serve throughput: client fan-in sweep (linger 200µs) ===");
+    let headers = [
+        "clients",
+        "linger",
+        "max batch",
+        "qps",
+        "rows/s",
+        "p50 ms",
+        "p99 ms",
+        "srv p50 ms",
+    ];
+    let mut t = Table::new(&headers);
+    for threads in [1, 2, 4, 8] {
+        run_config(threads, Duration::from_micros(200), 256, &mut t);
+    }
+    t.print();
+
+    println!("\n=== serve throughput: micro-batch linger sweep (4 clients) ===");
+    let mut t = Table::new(&headers);
+    for wait_us in [0u64, 50, 200, 1_000] {
+        run_config(4, Duration::from_micros(wait_us), 256, &mut t);
+    }
+    t.print();
+
+    println!("\n=== serve throughput: batch-size cap sweep (8 clients) ===");
+    let mut t = Table::new(&headers);
+    for cap in [1usize, 16, 256, 4_096] {
+        run_config(8, Duration::from_micros(200), cap, &mut t);
+    }
+    t.print();
+}

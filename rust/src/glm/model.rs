@@ -68,6 +68,43 @@ impl GlmModel {
         crate::metrics::nnz_weights(&self.beta)
     }
 
+    /// The sparse support: (feature, weight) pairs for the non-zero β —
+    /// the serialized form, and the unit the registry reports.
+    pub fn support(&self) -> Vec<(u32, f64)> {
+        self.beta
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b != 0.0)
+            .map(|(j, &b)| (j as u32, b))
+            .collect()
+    }
+
+    /// Densify β into a scoring weight vector of at least `width` slots
+    /// (zero-padded past `p`). The serving scorer builds this once per
+    /// model version so every request is a gather against dense weights.
+    pub fn dense_weights(&self, width: usize) -> Vec<f64> {
+        let mut w = self.beta.clone();
+        if width > w.len() {
+            w.resize(width, 0.0);
+        }
+        w
+    }
+
+    /// Margin for a single sparse row of (feature, value) pairs.
+    ///
+    /// Panics if a feature index is ≥ `p` — this is the trusted-input
+    /// helper; request-path callers should go through `serve::Scorer`,
+    /// which reports `ScoreError::FeatureOutOfRange` instead.
+    pub fn margin_sparse(&self, feats: &[(u32, f64)]) -> f64 {
+        feats
+            .iter()
+            .map(|&(j, v)| {
+                assert!((j as usize) < self.p, "feature {j} outside model space {}", self.p);
+                self.beta[j as usize] * v
+            })
+            .sum()
+    }
+
     /// Serialize to JSON (sparse weight encoding).
     pub fn to_json(&self) -> Json {
         let mut idx = Vec::new();
@@ -128,10 +165,19 @@ impl GlmModel {
             return Err(ModelError::Malformed("indices/values length mismatch".into()));
         }
         let mut beta = vec![0.0; p];
+        let mut seen = std::collections::HashSet::with_capacity(idx.len());
         for (i, v) in idx.iter().zip(val.iter()) {
+            // `as usize` saturates (negative → 0), so validate before casting
+            // or a corrupt index silently lands on another feature's weight.
+            if *i < 0.0 || i.fract() != 0.0 || !i.is_finite() {
+                return Err(ModelError::Malformed(format!("bad index {i}")));
+            }
             let j = *i as usize;
             if j >= p {
                 return Err(ModelError::Malformed(format!("index {j} out of range {p}")));
+            }
+            if !seen.insert(j) {
+                return Err(ModelError::Malformed(format!("duplicate index {j}")));
             }
             beta[j] = *v;
         }
@@ -219,11 +265,36 @@ mod tests {
             r#"{"format":"dglmnet-model-v1","loss":"bogus","p":1,"indices":[],"values":[]}"#,
             r#"{"format":"dglmnet-model-v1","loss":"logistic","p":1,"indices":[5],"values":[1.0]}"#,
             r#"{"format":"dglmnet-model-v1","loss":"logistic","p":1,"indices":[0],"values":[]}"#,
+            r#"{"format":"dglmnet-model-v1","loss":"logistic","p":4,"indices":[-1],"values":[1.0]}"#,
+            r#"{"format":"dglmnet-model-v1","loss":"logistic","p":4,"indices":[1.5],"values":[1.0]}"#,
+            r#"{"format":"dglmnet-model-v1","loss":"logistic","p":4,"indices":[2,2],"values":[1.0,2.0]}"#,
         ];
         for c in cases {
             let j = crate::util::json::parse(c).unwrap();
             assert!(GlmModel::from_json(&j).is_err(), "accepted: {c}");
         }
+    }
+
+    #[test]
+    fn support_and_dense_weights() {
+        let m = model();
+        assert_eq!(m.support(), vec![(2, 1.5), (7, -0.25)]);
+        // Densify wider than p: zero-padded serving space.
+        let w = m.dense_weights(16);
+        assert_eq!(w.len(), 16);
+        assert_eq!(&w[..10], m.beta.as_slice());
+        assert!(w[10..].iter().all(|&v| v == 0.0));
+        // Never narrower than p.
+        assert_eq!(m.dense_weights(3).len(), 10);
+        assert_eq!(m.margin_sparse(&[(2, 2.0), (7, 4.0)]), 3.0 - 1.0);
+    }
+
+    #[test]
+    fn roundtrip_preserves_sparse_support() {
+        let m = model();
+        let back = GlmModel::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.support(), m.support());
+        assert_eq!(back.beta, m.beta);
     }
 
     #[test]

@@ -14,9 +14,13 @@
 //!   AOT-lowered to HLO text in `artifacts/`.
 //! - **runtime**: PJRT CPU client that loads and executes the artifacts from
 //!   the Rust hot path — Python is never on the request path.
+//! - **serve**: the online path — a versioned model registry with lock-free
+//!   hot-swap, a micro-batched scoring engine behind the same compute seam,
+//!   and a newline-delimited-JSON TCP endpoint (`dglmnet serve`), so a model
+//!   trained with `train --save-model` can be promoted and scored against
+//!   live traffic without a restart.
 //!
-//! See DESIGN.md for the system inventory and experiment index, and
-//! EXPERIMENTS.md for measured results.
+//! See DESIGN.md for the system inventory and experiment index.
 
 pub mod cluster;
 pub mod coordinator;
@@ -26,5 +30,6 @@ pub mod glm;
 pub mod harness;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod sparse;
 pub mod util;

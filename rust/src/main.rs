@@ -1,12 +1,19 @@
 //! `dglmnet` — the launcher.
 //!
 //! Subcommands:
-//!   train     train a regularized GLM on a synthetic corpus or libsvm file
-//!   summary   print the Table-1 style dataset summary
+//!   train        train a regularized GLM on a synthetic corpus or libsvm file
+//!   predict      score a libsvm file with a saved model (batch/offline)
+//!   serve        online scoring endpoint with micro-batching and hot-swap
+//!   bench-serve  load-generate against a serve endpoint (QPS, p50/p99)
+//!   summary      print the Table-1 style dataset summary
 //!
-//! Example (the end-to-end driver the README shows):
+//! Example (the end-to-end train → promote → serve story):
 //!   dglmnet train --dataset clickstream --scale 0.5 --loss logistic \
-//!       --l1 1.0 --nodes 8 --alb --engine xla --max-iters 30 --trace out.json
+//!       --l1 1.0 --nodes 8 --alb --max-iters 30 --save-model model.json
+//!   dglmnet serve --model model.json --addr 127.0.0.1:7878
+//!   dglmnet bench-serve --addr 127.0.0.1:7878 --threads 8
+
+use std::sync::Arc;
 
 use dglmnet::cluster::allreduce::AllReduceAlgo;
 use dglmnet::coordinator::{fit_distributed, DistributedConfig};
@@ -15,8 +22,13 @@ use dglmnet::glm::loss::LossKind;
 use dglmnet::glm::regularizer::ElasticNet;
 use dglmnet::harness;
 use dglmnet::metrics;
-use dglmnet::runtime::{Runtime, XlaCompute};
-use dglmnet::solver::compute::NativeCompute;
+use dglmnet::glm::GlmModel;
+use dglmnet::runtime::{Runtime, RuntimeHandle, XlaCompute};
+use dglmnet::serve::{
+    run_loadgen, serve, synthetic_model, BatcherConfig, ComputeFactory, LoadgenConfig,
+    ModelRegistry, NativeFactory, Scorer, ServerConfig,
+};
+use dglmnet::solver::compute::{GlmCompute, NativeCompute};
 use dglmnet::sparse::libsvm;
 use dglmnet::util::bench::Table;
 use dglmnet::util::cli::{Cli, CliError};
@@ -33,6 +45,8 @@ fn main() {
     let code = match cmd {
         "train" => cmd_train(&rest),
         "predict" => cmd_predict(&rest),
+        "serve" => cmd_serve(&rest),
+        "bench-serve" => cmd_bench_serve(&rest),
         "summary" => cmd_summary(&rest),
         "--help" | "-h" | "help" => {
             usage();
@@ -51,9 +65,11 @@ fn usage() {
     eprintln!(
         "dglmnet — distributed coordinate descent for regularized GLMs\n\n\
          Subcommands:\n  \
-         train    train a model (see `dglmnet train --help`)\n  \
-         predict  score a libsvm file with a saved model\n  \
-         summary  print dataset summaries (Table 1)\n"
+         train        train a model (see `dglmnet train --help`)\n  \
+         predict      score a libsvm file with a saved model\n  \
+         serve        online scoring endpoint (micro-batched, hot-swappable)\n  \
+         bench-serve  load-generate against a serve endpoint\n  \
+         summary      print dataset summaries (Table 1)\n"
     );
 }
 
@@ -274,6 +290,223 @@ fn cmd_predict(argv: &[String]) -> i32 {
             metrics::logloss(&data.y, &probs),
             probs.len()
         );
+    }
+    0
+}
+
+/// `--engine xla` face of the serve-side compute split: builds an
+/// [`XlaCompute`] per model version over one shared runtime.
+struct XlaFactory {
+    handle: RuntimeHandle,
+}
+
+impl ComputeFactory for XlaFactory {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+    fn build(&self, kind: LossKind) -> Box<dyn GlmCompute> {
+        Box::new(XlaCompute::new(self.handle.clone(), kind))
+    }
+}
+
+fn factory_for(engine: &str, artifacts: &str) -> Result<Box<dyn ComputeFactory>, String> {
+    match engine {
+        "native" => Ok(Box::new(NativeFactory)),
+        "xla" => {
+            let rt = Runtime::start(artifacts)
+                .map_err(|e| format!("failed to start XLA runtime: {e}"))?;
+            let handle = rt.handle();
+            // Keep the runtime's service thread alive for the process.
+            std::mem::forget(rt);
+            Ok(Box::new(XlaFactory { handle }))
+        }
+        other => Err(format!("unknown engine '{other}'")),
+    }
+}
+
+fn serve_cli() -> Cli {
+    Cli::new(
+        "dglmnet serve",
+        "serve a saved model over TCP (newline-delimited JSON)",
+    )
+    .required("model", "path to a model JSON written by `train --save-model`")
+    .flag("addr", "127.0.0.1:7878", "listen address (port 0 = ephemeral)")
+    .flag("engine", "native", "compute engine: native | xla (needs artifacts/)")
+    .flag("artifacts", "artifacts", "artifacts directory for --engine xla")
+    .flag("io-threads", "8", "connection-handling threads")
+    .flag("batch-workers", "2", "micro-batch scoring threads")
+    .flag("max-batch", "256", "max rows coalesced per micro-batch")
+    .flag("max-wait-us", "200", "micro-batch linger in microseconds")
+}
+
+fn cmd_serve(argv: &[String]) -> i32 {
+    let cli = serve_cli();
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(CliError::HelpRequested) => {
+            println!("{}", cli.help_text());
+            return 0;
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli.help_text());
+            return 2;
+        }
+    };
+    let registry = Arc::new(ModelRegistry::new());
+    let version = match registry.load_path(args.get("model")) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("failed to load model: {e}");
+            return 1;
+        }
+    };
+    let factory = match factory_for(args.get("engine"), args.get("artifacts")) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let snap = registry.get(version).expect("just loaded");
+    let scorer = Arc::new(Scorer::new(Arc::clone(&registry), factory));
+    let cfg = ServerConfig {
+        addr: args.get("addr").to_string(),
+        io_threads: args.get_usize("io-threads"),
+        batcher: BatcherConfig {
+            max_batch_rows: args.get_usize("max-batch"),
+            max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us")),
+            workers: args.get_usize("batch-workers"),
+        },
+    };
+    let handle = match serve(scorer, cfg) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("failed to bind: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "serving {} v{} (loss={}, {} non-zero of {} features) on {} | engine={} | \
+         swap with {{\"op\":\"swap-model\"}}",
+        args.get("model"),
+        version,
+        snap.model.kind.name(),
+        snap.model.nnz(),
+        snap.model.p,
+        handle.addr(),
+        args.get("engine"),
+    );
+    // Serve until the process is killed.
+    loop {
+        std::thread::park();
+    }
+}
+
+fn bench_serve_cli() -> Cli {
+    Cli::new(
+        "dglmnet bench-serve",
+        "closed-loop load generator: QPS + p50/p99 latency",
+    )
+    .flag("addr", "", "target server (empty: spawn an in-process server)")
+    .flag("model", "", "model for the in-process server (empty: synthetic)")
+    .flag("engine", "native", "in-process server engine: native | xla")
+    .flag("artifacts", "artifacts", "artifacts directory for --engine xla")
+    .flag("threads", "4", "client threads (acceptance bar: ≥ 4)")
+    .flag("requests", "2000", "requests per client thread")
+    .flag("rows", "4", "rows per request")
+    .flag("nnz", "32", "non-zeros per row")
+    .flag("p", "65536", "feature-space width for synthetic rows/model")
+    .flag("seed", "1", "random seed")
+}
+
+fn cmd_bench_serve(argv: &[String]) -> i32 {
+    let cli = bench_serve_cli();
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(CliError::HelpRequested) => {
+            println!("{}", cli.help_text());
+            return 0;
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli.help_text());
+            return 2;
+        }
+    };
+    let cfg = LoadgenConfig {
+        threads: args.get_usize("threads"),
+        requests_per_thread: args.get_usize("requests"),
+        rows_per_request: args.get_usize("rows"),
+        nnz_per_row: args.get_usize("nnz"),
+        p: args.get_usize("p"),
+        seed: args.get_u64("seed"),
+    };
+    // Spawn an in-process server unless an external address was given.
+    let mut local = None;
+    let addr = if args.get("addr").is_empty() {
+        let model = if args.get("model").is_empty() {
+            synthetic_model(cfg.p, (cfg.p / 100).max(16), cfg.seed)
+        } else {
+            match GlmModel::load(args.get("model")) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("failed to load model: {e}");
+                    return 1;
+                }
+            }
+        };
+        let factory = match factory_for(args.get("engine"), args.get("artifacts")) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        };
+        let registry = Arc::new(ModelRegistry::with_model(model));
+        let scorer = Arc::new(Scorer::new(registry, factory));
+        let handle = match serve(
+            scorer,
+            ServerConfig {
+                addr: "127.0.0.1:0".to_string(),
+                io_threads: cfg.threads + 2,
+                ..Default::default()
+            },
+        ) {
+            Ok(h) => h,
+            Err(e) => {
+                eprintln!("failed to start in-process server: {e}");
+                return 1;
+            }
+        };
+        let addr = handle.addr().to_string();
+        local = Some(handle);
+        addr
+    } else {
+        args.get("addr").to_string()
+    };
+    println!(
+        "bench-serve: target {addr} | {} threads × {} requests, {} rows/req × {} nnz",
+        cfg.threads, cfg.requests_per_thread, cfg.rows_per_request, cfg.nnz_per_row
+    );
+    let report = match run_loadgen(addr.as_str(), cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("loadgen failed: {e}");
+            return 1;
+        }
+    };
+    report.print();
+    let mut t = Table::new(&["threads", "qps", "rows/s", "p50 ms", "p99 ms", "max ms"]);
+    t.row(&[
+        report.threads.to_string(),
+        format!("{:.0}", report.qps()),
+        format!("{:.0}", report.rows_per_sec()),
+        format!("{:.3}", report.hist.quantile_ns(0.50) as f64 / 1e6),
+        format!("{:.3}", report.hist.quantile_ns(0.99) as f64 / 1e6),
+        format!("{:.3}", report.hist.max_ns() as f64 / 1e6),
+    ]);
+    t.print();
+    if let Some(mut h) = local {
+        h.stop();
     }
     0
 }

@@ -1,0 +1,260 @@
+//! Lock-free latency histogram for the serving path (p50/p99/QPS reports).
+//!
+//! HdrHistogram-style log-linear buckets over nanoseconds: 8 sub-buckets per
+//! power of two, so quantiles carry ≤ 12.5% relative bucket error — plenty
+//! for latency reporting — while `record` is two relaxed atomic adds and
+//! never allocates or locks, which is what the request hot path needs.
+//! Concurrent recorders share one histogram; reads are racy-but-consistent
+//! snapshots (counters may lag each other by in-flight records).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+const SUB_BITS: u32 = 3;
+const SUB: usize = 1 << SUB_BITS; // 8 sub-buckets per octave
+/// Values 0..8 ns map 1:1; octaves 3..=63 get 8 buckets each, so the top
+/// index is exactly BUCKETS - 1 (keeps `bucket_floor` shift-safe).
+const BUCKETS: usize = SUB + (61 << SUB_BITS); // 496, covers all u64
+
+#[inline]
+fn bucket_index(ns: u64) -> usize {
+    if ns < SUB as u64 {
+        return ns as usize;
+    }
+    let octave = 63 - ns.leading_zeros(); // >= SUB_BITS
+    let sub = ((ns >> (octave - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    ((octave - SUB_BITS + 1) as usize) * SUB + sub
+}
+
+/// Lower edge of bucket `idx` (inverse of `bucket_index`).
+#[inline]
+fn bucket_floor(idx: usize) -> u64 {
+    if idx < SUB {
+        return idx as u64;
+    }
+    let octave = (idx / SUB) as u32 + SUB_BITS - 1;
+    let sub = (idx % SUB) as u64;
+    (1u64 << octave) + (sub << (octave - SUB_BITS))
+}
+
+/// Thread-safe log-linear histogram of durations; see module docs.
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// The q-quantile (q in [0,1]) in nanoseconds: the midpoint of the
+    /// bucket holding the ⌈q·n⌉-th observation, clamped to the recorded max.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                let lo = bucket_floor(idx);
+                let hi = if idx + 1 < BUCKETS {
+                    bucket_floor(idx + 1)
+                } else {
+                    u64::MAX
+                };
+                return (lo + (hi - lo) / 2).min(self.max_ns());
+            }
+        }
+        self.max_ns()
+    }
+
+    pub fn p50(&self) -> Duration {
+        Duration::from_nanos(self.quantile_ns(0.50))
+    }
+
+    pub fn p99(&self) -> Duration {
+        Duration::from_nanos(self.quantile_ns(0.99))
+    }
+
+    /// Fold another histogram's counts into this one.
+    pub fn merge(&self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = b.load(Ordering::Relaxed);
+            if v > 0 {
+                a.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_ns
+            .fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_ns
+            .fetch_max(other.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Summary as JSON (milliseconds, the unit health endpoints report).
+    pub fn to_json(&self) -> Json {
+        let ms = |ns: u64| ns as f64 / 1e6;
+        let mut o = Json::obj();
+        o.set("count", self.count())
+            .set("mean_ms", self.mean_ns() / 1e6)
+            .set("p50_ms", ms(self.quantile_ns(0.50)))
+            .set("p90_ms", ms(self.quantile_ns(0.90)))
+            .set("p99_ms", ms(self.quantile_ns(0.99)))
+            .set("max_ms", ms(self.max_ns()));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_monotone_and_invertible() {
+        let mut last = 0usize;
+        for ns in [0u64, 1, 7, 8, 9, 15, 16, 100, 1_000, 65_535, 1 << 30, u64::MAX] {
+            let idx = bucket_index(ns);
+            assert!(idx >= last, "index not monotone at {ns}");
+            assert!(idx < BUCKETS, "index {idx} out of range for {ns}");
+            assert!(bucket_floor(idx) <= ns, "floor above value at {ns}");
+            if idx + 1 < BUCKETS {
+                assert!(bucket_floor(idx + 1) > ns, "value past bucket at {ns}");
+            }
+            last = idx;
+        }
+    }
+
+    #[test]
+    fn exact_below_eight_ns() {
+        for ns in 0..8u64 {
+            let h = LatencyHistogram::new();
+            h.record_ns(ns);
+            assert_eq!(h.quantile_ns(1.0), ns);
+        }
+    }
+
+    #[test]
+    fn quantiles_of_known_distribution() {
+        let h = LatencyHistogram::new();
+        // 99 fast observations at ~1µs, one slow at ~1s.
+        for _ in 0..99 {
+            h.record_ns(1_000);
+        }
+        h.record_ns(1_000_000_000);
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_ns(0.50);
+        assert!((900..=1_200).contains(&p50), "p50 {p50}");
+        let p99 = h.quantile_ns(0.99);
+        assert!(p99 <= 1_200, "p99 must still be fast, got {p99}");
+        let p100 = h.quantile_ns(1.0);
+        assert!(p100 >= 900_000_000, "max quantile {p100}");
+        assert_eq!(h.max_ns(), 1_000_000_000);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        for ns in [100u64, 5_000, 123_456, 10_000_000, 3_000_000_000] {
+            let h = LatencyHistogram::new();
+            h.record_ns(ns);
+            let got = h.quantile_ns(0.5) as f64;
+            let err = (got - ns as f64).abs() / ns as f64;
+            assert!(err <= 0.125 + 1e-9, "err {err} at {ns}");
+        }
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        for i in 1..=50u64 {
+            a.record_ns(i * 1_000);
+            b.record_ns(i * 2_000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        assert_eq!(a.max_ns(), 100_000);
+        assert!(a.mean_ns() > 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ns(0.99), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = std::sync::Arc::clone(&h);
+                s.spawn(move || {
+                    for i in 0..1_000u64 {
+                        h.record_ns((t + 1) * 1_000 + i);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4_000);
+        assert!(h.quantile_ns(0.5) >= 1_000);
+    }
+
+    #[test]
+    fn json_summary_shape() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(250));
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_f64(), Some(1.0));
+        assert!(j.get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

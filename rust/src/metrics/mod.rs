@@ -1,10 +1,15 @@
-//! Classification quality metrics.
+//! Classification quality metrics, plus serving latency instrumentation.
 //!
 //! The paper's headline quality measure is area under the precision-recall
 //! curve (Appendix C) — chosen over ROC AUC because the click datasets are
 //! heavily imbalanced. We implement auPRC exactly as defined there (sweep
 //! the threshold over predicted scores), plus ROC AUC, log-loss and accuracy
-//! for cross-checks.
+//! for cross-checks. The [`latency`] submodule holds the lock-free p50/p99
+//! histogram the serve subsystem reports through.
+
+pub mod latency;
+
+pub use latency::LatencyHistogram;
 
 /// Area under the precision-recall curve (Appendix C definition), estimated
 /// as average precision: Σ_k (R_k − R_{k−1}) · P_k over the distinct-score

@@ -1,0 +1,367 @@
+//! Micro-batching queue between the request threads and the scorer.
+//!
+//! Online traffic arrives one small request at a time, but the scorer's
+//! throughput comes from scoring blocks (one plan lookup, one dense-weight
+//! pass, one batched link application). The batcher coalesces concurrent
+//! requests: the first request to arrive opens a batch, the worker lingers
+//! up to `max_wait` for more rows (up to `max_batch_rows`), then scores the
+//! whole block once and routes each slice of results back to its caller.
+//! Under light load a request pays at most the linger; under heavy load
+//! batches fill instantly and throughput scales with cores, not with
+//! request count.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::serve::scorer::{ScoreError, ScoredBatch, Scorer, SparseRow};
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Row budget per micro-batch; a batch may exceed it by at most one
+    /// request (requests are never split).
+    pub max_batch_rows: usize,
+    /// How long a non-full batch lingers waiting for company.
+    pub max_wait: Duration,
+    /// Scoring worker threads draining the queue.
+    pub workers: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch_rows: 256,
+            max_wait: Duration::from_micros(200),
+            workers: 2,
+        }
+    }
+}
+
+/// Running counters, all relaxed — approximate under concurrency, exact
+/// once quiescent.
+#[derive(Default)]
+pub struct BatcherStats {
+    pub batches: AtomicU64,
+    pub requests: AtomicU64,
+    pub rows: AtomicU64,
+}
+
+impl BatcherStats {
+    pub fn to_json(&self) -> Json {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let requests = self.requests.load(Ordering::Relaxed);
+        let rows = self.rows.load(Ordering::Relaxed);
+        let mut o = Json::obj();
+        o.set("batches", batches)
+            .set("requests", requests)
+            .set("rows", rows)
+            .set(
+                "avg_batch_rows",
+                if batches == 0 {
+                    0.0
+                } else {
+                    rows as f64 / batches as f64
+                },
+            );
+        o
+    }
+}
+
+struct Job {
+    rows: Vec<SparseRow>,
+    reply: mpsc::Sender<Result<ScoredBatch, ScoreError>>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    nonempty: Condvar,
+    stop: AtomicBool,
+    scorer: Arc<Scorer>,
+    stats: BatcherStats,
+}
+
+/// The micro-batching queue; see module docs. Dropping it stops and joins
+/// the workers (pending jobs are answered first).
+pub struct Batcher {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn start(scorer: Arc<Scorer>, cfg: BatcherConfig) -> Batcher {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            nonempty: Condvar::new(),
+            stop: AtomicBool::new(false),
+            scorer,
+            stats: BatcherStats::default(),
+        });
+        let workers = (0..cfg.workers.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared, &cfg))
+            })
+            .collect();
+        Batcher { shared, workers }
+    }
+
+    /// Enqueue rows for scoring; the receiver yields exactly one result
+    /// whose `margins`/`probs` are parallel to `rows`.
+    pub fn submit(&self, rows: Vec<SparseRow>) -> mpsc::Receiver<Result<ScoredBatch, ScoreError>> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Job { rows, reply: tx });
+        }
+        self.shared.nonempty.notify_one();
+        rx
+    }
+
+    /// Convenience: submit and block for the result.
+    pub fn score(&self, rows: Vec<SparseRow>) -> Result<ScoredBatch, ScoreError> {
+        self.submit(rows)
+            .recv()
+            .expect("batcher worker dropped reply")
+    }
+
+    pub fn stats(&self) -> &BatcherStats {
+        &self.shared.stats
+    }
+
+    pub fn scorer(&self) -> &Arc<Scorer> {
+        &self.shared.scorer
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.nonempty.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, cfg: &BatcherConfig) {
+    loop {
+        // Wait for the first job of the next batch.
+        let first = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                // Bounded wait so a stop() without traffic is noticed even
+                // if the notify raced ahead of this wait.
+                let (guard, _) = shared
+                    .nonempty
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap();
+                q = guard;
+            }
+        };
+        let mut batch = vec![first];
+        let mut total_rows = batch[0].rows.len();
+        let deadline = Instant::now() + cfg.max_wait;
+
+        // Linger: top the batch up until the row budget or the deadline.
+        while total_rows < cfg.max_batch_rows {
+            let mut q = shared.queue.lock().unwrap();
+            if let Some(job) = q.pop_front() {
+                total_rows += job.rows.len();
+                batch.push(job);
+                continue;
+            }
+            let now = Instant::now();
+            if now >= deadline || shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let (_guard, timeout) = shared
+                .nonempty
+                .wait_timeout(q, deadline - now)
+                .unwrap();
+            if timeout.timed_out() {
+                break;
+            }
+        }
+
+        // Move the rows out of the jobs into one contiguous block (no row
+        // clones on the hot path), remembering each job's span for routing
+        // results back. Then score the coalesced block once, outside every
+        // lock.
+        let mut all: Vec<SparseRow> = Vec::with_capacity(total_rows);
+        let mut spans = Vec::with_capacity(batch.len());
+        for job in &mut batch {
+            let rows = std::mem::take(&mut job.rows);
+            spans.push((all.len(), rows.len()));
+            all.extend(rows);
+        }
+        let result = shared.scorer.score(&all);
+        shared.stats.batches.fetch_add(1, Ordering::Relaxed);
+        shared
+            .stats
+            .requests
+            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        shared
+            .stats
+            .rows
+            .fetch_add(total_rows as u64, Ordering::Relaxed);
+
+        // Split results back per request (send fails only if the caller
+        // gave up waiting — not an error for the batch).
+        match result {
+            Ok(scored) => {
+                for (job, (off, n)) in batch.into_iter().zip(spans) {
+                    let slice = ScoredBatch {
+                        version: scored.version,
+                        margins: scored.margins[off..off + n].to_vec(),
+                        probs: scored.probs[off..off + n].to_vec(),
+                    };
+                    let _ = job.reply.send(Ok(slice));
+                }
+            }
+            Err(_) => {
+                // One bad row must not poison its batch-mates: fall back to
+                // scoring each request alone, so only the offender sees the
+                // error (and with a request-relative row index).
+                for (job, (off, n)) in batch.into_iter().zip(spans) {
+                    let _ = job.reply.send(shared.scorer.score(&all[off..off + n]));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glm::loss::LossKind;
+    use crate::glm::model::GlmModel;
+    use crate::serve::registry::ModelRegistry;
+    use crate::serve::scorer::NativeFactory;
+
+    fn batcher(cfg: BatcherConfig) -> (Arc<ModelRegistry>, Batcher) {
+        let mut beta = vec![0.0; 16];
+        for (j, b) in beta.iter_mut().enumerate() {
+            *b = j as f64;
+        }
+        let reg = Arc::new(ModelRegistry::with_model(GlmModel::new(
+            LossKind::Logistic,
+            beta,
+        )));
+        let scorer = Arc::new(Scorer::new(Arc::clone(&reg), Box::new(NativeFactory)));
+        (reg, Batcher::start(scorer, cfg))
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let (_, b) = batcher(BatcherConfig::default());
+        let got = b.score(vec![vec![(2, 1.0)], vec![(3, 2.0)]]).unwrap();
+        assert_eq!(got.margins, vec![2.0, 6.0]);
+        assert_eq!(got.probs.len(), 2);
+    }
+
+    #[test]
+    fn error_propagates_to_caller() {
+        let (_, b) = batcher(BatcherConfig::default());
+        let err = b.score(vec![vec![(99, 1.0)]]).unwrap_err();
+        assert!(matches!(err, ScoreError::FeatureOutOfRange { .. }));
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce_and_route_correctly() {
+        // One slow-draining worker + a generous linger forces coalescing;
+        // every caller must still get exactly its own rows back.
+        let (_, b) = batcher(BatcherConfig {
+            max_batch_rows: 64,
+            max_wait: Duration::from_millis(20),
+            workers: 1,
+        });
+        let b = &b;
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..16u32 {
+                handles.push(s.spawn(move || {
+                    let got = b.score(vec![vec![(t % 16, 1.0)]]).unwrap();
+                    assert_eq!(got.margins, vec![(t % 16) as f64], "thread {t}");
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        let stats = b.stats();
+        let batches = stats.batches.load(Ordering::Relaxed);
+        let requests = stats.requests.load(Ordering::Relaxed);
+        assert_eq!(requests, 16);
+        assert!(batches < 16, "expected coalescing, got {batches} batches");
+    }
+
+    #[test]
+    fn row_budget_bounds_batches() {
+        let (_, b) = batcher(BatcherConfig {
+            max_batch_rows: 4,
+            max_wait: Duration::from_millis(10),
+            workers: 1,
+        });
+        let pending: Vec<_> = (0..12)
+            .map(|_| b.submit(vec![vec![(1, 1.0)], vec![(2, 1.0)]]))
+            .collect();
+        for rx in pending {
+            let got = rx.recv().unwrap().unwrap();
+            assert_eq!(got.margins, vec![1.0, 2.0]);
+        }
+        // 12 requests × 2 rows with a 4-row budget ⇒ at least 5 batches
+        // (each batch holds ≤ 2 requests: budget may overshoot by one job).
+        let batches = b.stats().batches.load(Ordering::Relaxed);
+        assert!(batches >= 5, "batches {batches}");
+    }
+
+    #[test]
+    fn bad_request_does_not_poison_batchmates() {
+        // Generous linger + single worker so the two requests coalesce;
+        // the valid one must still succeed when its batch-mate errors.
+        let (_, b) = batcher(BatcherConfig {
+            max_batch_rows: 64,
+            max_wait: Duration::from_millis(20),
+            workers: 1,
+        });
+        let b = &b;
+        std::thread::scope(|s| {
+            let good = s.spawn(move || b.score(vec![vec![(1, 1.0)]]));
+            let bad = s.spawn(move || b.score(vec![vec![(999, 1.0)]]));
+            assert_eq!(good.join().unwrap().unwrap().margins, vec![1.0]);
+            let err = bad.join().unwrap().unwrap_err();
+            // Row index is request-relative, not batch-global.
+            assert_eq!(
+                err,
+                ScoreError::FeatureOutOfRange {
+                    row: 0,
+                    feature: 999,
+                    p: 16
+                }
+            );
+        });
+    }
+
+    #[test]
+    fn empty_rows_request_is_fine() {
+        let (_, b) = batcher(BatcherConfig::default());
+        let got = b.score(Vec::new()).unwrap();
+        assert!(got.margins.is_empty() && got.probs.is_empty());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let (_, b) = batcher(BatcherConfig::default());
+        b.score(vec![vec![(1, 1.0)]]).unwrap();
+        drop(b); // must not hang
+    }
+}

@@ -1,0 +1,216 @@
+//! Load generator for a running serve endpoint (`dglmnet bench-serve`,
+//! `benches/serve_throughput.rs`).
+//!
+//! N client threads each open their own connection and fire a fixed number
+//! of synchronous `predict` requests with synthetic sparse rows (Zipf-free
+//! uniform features — the scorer cost is nnz-bound, not skew-bound).
+//! Per-request wall latency lands in a per-thread [`LatencyHistogram`];
+//! the report merges them and derives QPS from total requests over the
+//! longest thread's wall time (the honest aggregate for closed-loop load).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::glm::loss::LossKind;
+use crate::glm::model::GlmModel;
+use crate::metrics::latency::LatencyHistogram;
+use crate::serve::scorer::SparseRow;
+use crate::serve::server::ServeClient;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// A synthetic L1-style model: `nnz` normal weights planted in a zero β
+/// over `p` features — the shape `bench-serve`, the throughput bench and
+/// the tests all load-test against, defined once.
+pub fn synthetic_model(p: usize, nnz: usize, seed: u64) -> GlmModel {
+    let mut rng = Rng::new(seed);
+    let mut beta = vec![0.0; p];
+    for _ in 0..nnz {
+        beta[rng.below(p)] = rng.normal();
+    }
+    GlmModel::new(LossKind::Logistic, beta)
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct LoadgenConfig {
+    /// Concurrent closed-loop clients (the acceptance bar is ≥ 4).
+    pub threads: usize,
+    pub requests_per_thread: usize,
+    pub rows_per_request: usize,
+    pub nnz_per_row: usize,
+    /// Feature-space width to draw indices from (≤ the model's p).
+    pub p: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            threads: 4,
+            requests_per_thread: 1_000,
+            rows_per_request: 4,
+            nnz_per_row: 32,
+            p: 1 << 16,
+            seed: 1,
+        }
+    }
+}
+
+pub struct LoadgenReport {
+    pub threads: usize,
+    pub total_requests: u64,
+    pub total_rows: u64,
+    /// Wall-clock of the slowest client thread, seconds.
+    pub wall_secs: f64,
+    pub hist: LatencyHistogram,
+}
+
+impl LoadgenReport {
+    pub fn qps(&self) -> f64 {
+        self.total_requests as f64 / self.wall_secs.max(1e-12)
+    }
+
+    pub fn rows_per_sec(&self) -> f64 {
+        self.total_rows as f64 / self.wall_secs.max(1e-12)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("threads", self.threads)
+            .set("requests", self.total_requests)
+            .set("rows", self.total_rows)
+            .set("wall_secs", self.wall_secs)
+            .set("qps", self.qps())
+            .set("rows_per_sec", self.rows_per_sec())
+            .set("latency", self.hist.to_json());
+        o
+    }
+
+    pub fn print(&self) {
+        println!(
+            "bench-serve: {} threads × {} req | {:.0} req/s, {:.0} rows/s | \
+             latency p50 {:.3}ms p99 {:.3}ms max {:.3}ms",
+            self.threads,
+            self.total_requests / self.threads.max(1) as u64,
+            self.qps(),
+            self.rows_per_sec(),
+            self.hist.quantile_ns(0.50) as f64 / 1e6,
+            self.hist.quantile_ns(0.99) as f64 / 1e6,
+            self.hist.max_ns() as f64 / 1e6,
+        );
+    }
+}
+
+fn synth_rows(rng: &mut Rng, cfg: &LoadgenConfig) -> Vec<SparseRow> {
+    (0..cfg.rows_per_request)
+        .map(|_| {
+            (0..cfg.nnz_per_row)
+                .map(|_| (rng.below(cfg.p) as u32, rng.range_f64(-1.0, 1.0)))
+                .collect()
+        })
+        .collect()
+}
+
+/// Drive `addr` with `cfg`; blocks until every client thread finishes.
+pub fn run_loadgen(
+    addr: impl std::net::ToSocketAddrs + Clone + Send + Sync,
+    cfg: LoadgenConfig,
+) -> Result<LoadgenReport, String> {
+    let merged = Arc::new(LatencyHistogram::new());
+    let mut wall_secs = 0.0f64;
+    let mut total_rows = 0u64;
+    let results: Vec<Result<(f64, u64), String>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.threads.max(1))
+            .map(|t| {
+                let addr = addr.clone();
+                let merged = Arc::clone(&merged);
+                s.spawn(move || -> Result<(f64, u64), String> {
+                    let mut client =
+                        ServeClient::connect(addr).map_err(|e| format!("connect: {e}"))?;
+                    let mut rng = Rng::new(cfg.seed ^ (t as u64).wrapping_mul(0x9E37_79B9));
+                    let hist = LatencyHistogram::new();
+                    let mut rows_sent = 0u64;
+                    let t0 = Instant::now();
+                    for _ in 0..cfg.requests_per_thread {
+                        let rows = synth_rows(&mut rng, &cfg);
+                        rows_sent += rows.len() as u64;
+                        let r0 = Instant::now();
+                        let (_, probs) = client.predict(&rows)?;
+                        hist.record(r0.elapsed());
+                        if probs.len() != cfg.rows_per_request {
+                            return Err(format!(
+                                "reply arity {} != {}",
+                                probs.len(),
+                                cfg.rows_per_request
+                            ));
+                        }
+                    }
+                    let wall = t0.elapsed().as_secs_f64();
+                    merged.merge(&hist);
+                    Ok((wall, rows_sent))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|_| "client thread panicked".to_string())?)
+            .collect()
+    });
+    for r in results {
+        let (wall, rows) = r?;
+        wall_secs = wall_secs.max(wall);
+        total_rows += rows;
+    }
+    let total_requests = (cfg.threads.max(1) * cfg.requests_per_thread) as u64;
+    let hist = LatencyHistogram::new();
+    hist.merge(&merged);
+    Ok(LoadgenReport {
+        threads: cfg.threads.max(1),
+        total_requests,
+        total_rows,
+        wall_secs,
+        hist,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::registry::ModelRegistry;
+    use crate::serve::scorer::{NativeFactory, Scorer};
+    use crate::serve::server::{serve, ServerConfig};
+
+    #[test]
+    fn loadgen_against_in_process_server() {
+        let p = 1 << 10;
+        let reg = Arc::new(ModelRegistry::with_model(synthetic_model(p, 64, 7)));
+        let scorer = Arc::new(Scorer::new(reg, Box::new(NativeFactory)));
+        let mut h = serve(
+            scorer,
+            ServerConfig {
+                addr: "127.0.0.1:0".to_string(),
+                io_threads: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let report = run_loadgen(
+            h.addr(),
+            LoadgenConfig {
+                threads: 4,
+                requests_per_thread: 25,
+                rows_per_request: 3,
+                nnz_per_row: 8,
+                p,
+                seed: 42,
+            },
+        )
+        .unwrap();
+        assert_eq!(report.total_requests, 100);
+        assert_eq!(report.total_rows, 300);
+        assert_eq!(report.hist.count(), 100);
+        assert!(report.qps() > 0.0);
+        assert!(report.hist.quantile_ns(0.99) >= report.hist.quantile_ns(0.50));
+        h.stop();
+    }
+}

@@ -1,0 +1,38 @@
+//! Online model serving — the deployment layer the paper's CTR framing
+//! implies: a trained model's whole purpose is to be scored against live
+//! traffic (Trofimov & Genkin 2016 §1; 2014 §5).
+//!
+//! The subsystem is four pieces, composed by `dglmnet serve`:
+//!
+//! - [`registry`] — versioned [`GlmModel`] snapshots with lock-free-read
+//!   hot-swap, so a freshly trained model (`train --save-model`) can be
+//!   promoted under load without restarting or stalling readers.
+//! - [`scorer`] — turns the registry's current snapshot into a dense
+//!   scoring plan (sparse β densified once per version) and scores sparse
+//!   rows through the same `NativeCompute`/`XlaCompute` seam the trainer
+//!   uses ([`GlmCompute`]).
+//! - [`batcher`] — a micro-batching queue that coalesces concurrent
+//!   requests into blocks before they hit the scorer, so throughput scales
+//!   with cores instead of with request count.
+//! - [`server`] — a minimal thread-pool TCP front speaking newline-delimited
+//!   JSON (`predict` / `health` / `swap-model`), reusing `util::json`.
+//!
+//! [`loadgen`] drives a running server from N client threads and reports
+//! QPS plus p50/p99 latency through [`metrics::latency::LatencyHistogram`]
+//! (`dglmnet bench-serve`, `benches/serve_throughput.rs`).
+//!
+//! [`GlmModel`]: crate::glm::GlmModel
+//! [`GlmCompute`]: crate::solver::compute::GlmCompute
+//! [`metrics::latency::LatencyHistogram`]: crate::metrics::latency::LatencyHistogram
+
+pub mod batcher;
+pub mod loadgen;
+pub mod registry;
+pub mod scorer;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig, BatcherStats};
+pub use loadgen::{run_loadgen, synthetic_model, LoadgenConfig, LoadgenReport};
+pub use registry::{ModelRegistry, Snapshot};
+pub use scorer::{ComputeFactory, NativeFactory, ScoreError, ScoredBatch, Scorer, SparseRow};
+pub use server::{serve, ServeClient, ServerConfig, ServerHandle};

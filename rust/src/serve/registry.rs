@@ -1,0 +1,274 @@
+//! Versioned model registry with lock-free-read hot-swap.
+//!
+//! Serving threads call [`ModelRegistry::current`] on every request, so the
+//! read path must never contend with a promotion. The registry keeps the
+//! live snapshot behind an `AtomicPtr`; readers do one atomic load plus one
+//! refcount increment — no lock, no waiting on a writer. Writers (promotions
+//! are rare: one per training run) serialize on a mutex that also owns the
+//! version history.
+//!
+//! Safety of the raw-pointer read: every snapshot ever published is retained
+//! in the history vector for the registry's lifetime, so a pointer observed
+//! in `current` is always backed by at least one strong reference and
+//! `Arc::increment_strong_count` can never race with deallocation. The cost
+//! is that old versions are kept alive until the registry drops — each
+//! holding the model's **dense** weight vector (8·p bytes), bounded by the
+//! number of *distinct* promotions: `load_path`/`reload` compare against the
+//! live model and return the current version without publishing when the
+//! file content is unchanged, so a periodic swap-model cron does not grow
+//! memory. Genuinely new models accumulate by design (rollback/debugging);
+//! a server promoting truly distinct models at high frequency should be
+//! restarted occasionally or taught pruning first.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicPtr, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::glm::model::{GlmModel, ModelError};
+
+/// One immutable published model version.
+#[derive(Debug)]
+pub struct Snapshot {
+    /// Monotonically increasing, starting at 1.
+    pub version: u64,
+    pub model: GlmModel,
+    /// Where the model was loaded from, if it came from disk.
+    pub source: Option<PathBuf>,
+    /// When this version was promoted (relative to registry creation).
+    pub promoted_at: Instant,
+}
+
+struct WriterState {
+    /// Every snapshot ever published (see module docs for why nothing is
+    /// ever pruned).
+    history: Vec<Arc<Snapshot>>,
+    /// Default path for `reload()` — the most recent disk source.
+    source: Option<PathBuf>,
+}
+
+/// Versioned registry of [`GlmModel`] snapshots; see module docs.
+pub struct ModelRegistry {
+    current: AtomicPtr<Snapshot>,
+    writer: Mutex<WriterState>,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelRegistry {
+    /// An empty registry; `current()` returns `None` until a first publish.
+    pub fn new() -> ModelRegistry {
+        ModelRegistry {
+            current: AtomicPtr::new(std::ptr::null_mut()),
+            writer: Mutex::new(WriterState {
+                history: Vec::new(),
+                source: None,
+            }),
+        }
+    }
+
+    /// Registry seeded with an initial model (version 1).
+    pub fn with_model(model: GlmModel) -> ModelRegistry {
+        let reg = ModelRegistry::new();
+        reg.publish(model);
+        reg
+    }
+
+    /// Promote a model as the new current version. Returns its version.
+    pub fn publish(&self, model: GlmModel) -> u64 {
+        self.publish_inner(model, None)
+    }
+
+    fn publish_inner(&self, model: GlmModel, source: Option<PathBuf>) -> u64 {
+        let mut w = self.writer.lock().unwrap();
+        let version = w.history.len() as u64 + 1;
+        let snap = Arc::new(Snapshot {
+            version,
+            model,
+            source: source.clone(),
+            promoted_at: Instant::now(),
+        });
+        // Retain the strong reference *before* exposing the pointer so a
+        // concurrent reader can never observe an unanchored snapshot.
+        w.history.push(Arc::clone(&snap));
+        if source.is_some() {
+            w.source = source;
+        }
+        self.current
+            .store(Arc::as_ptr(&snap) as *mut Snapshot, Ordering::Release);
+        version
+    }
+
+    /// Load a model JSON written by `train --save-model` and promote it.
+    /// The path is remembered for [`ModelRegistry::reload`]. If the loaded
+    /// model is identical to the live one, no new version is published
+    /// (keeps periodic reloads from growing the history) and the current
+    /// version is returned.
+    pub fn load_path(&self, path: impl AsRef<Path>) -> Result<u64, ModelError> {
+        let path = path.as_ref().to_path_buf();
+        let model = GlmModel::load(&path)?;
+        if let Some(cur) = self.current() {
+            if cur.model == model {
+                self.writer.lock().unwrap().source = Some(path);
+                return Ok(cur.version);
+            }
+        }
+        Ok(self.publish_inner(model, Some(path)))
+    }
+
+    /// Re-read the most recent disk source and promote the result — the
+    /// "a new model landed at the same path" promotion.
+    pub fn reload(&self) -> Result<u64, ModelError> {
+        let path = {
+            let w = self.writer.lock().unwrap();
+            w.source.clone().ok_or_else(|| {
+                ModelError::Malformed("registry has no disk source to reload".into())
+            })?
+        };
+        self.load_path(path)
+    }
+
+    /// The live snapshot, or `None` before the first publish. Lock-free:
+    /// one `Acquire` load and one refcount increment.
+    pub fn current(&self) -> Option<Arc<Snapshot>> {
+        let p = self.current.load(Ordering::Acquire);
+        if p.is_null() {
+            return None;
+        }
+        // SAFETY: `p` was produced by `Arc::as_ptr` on a snapshot whose Arc
+        // is held in `writer.history` for the lifetime of `self`, so the
+        // allocation is live and its strong count is ≥ 1 for the whole call.
+        unsafe {
+            Arc::increment_strong_count(p);
+            Some(Arc::from_raw(p))
+        }
+    }
+
+    /// Version of the live snapshot (0 = nothing published yet).
+    pub fn current_version(&self) -> u64 {
+        self.current().map(|s| s.version).unwrap_or(0)
+    }
+
+    /// Number of versions ever published.
+    pub fn versions(&self) -> u64 {
+        self.writer.lock().unwrap().history.len() as u64
+    }
+
+    /// Fetch a historical snapshot by version (1-based).
+    pub fn get(&self, version: u64) -> Option<Arc<Snapshot>> {
+        let w = self.writer.lock().unwrap();
+        w.history.get(version.checked_sub(1)? as usize).cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glm::loss::LossKind;
+    use std::sync::atomic::AtomicBool;
+
+    fn model(tag: f64) -> GlmModel {
+        let mut beta = vec![0.0; 8];
+        beta[0] = tag;
+        beta[5] = -tag;
+        GlmModel::new(LossKind::Logistic, beta)
+    }
+
+    #[test]
+    fn empty_registry_has_no_current() {
+        let reg = ModelRegistry::new();
+        assert!(reg.current().is_none());
+        assert_eq!(reg.current_version(), 0);
+        assert!(reg.reload().is_err());
+    }
+
+    #[test]
+    fn publish_bumps_version_and_swaps_current() {
+        let reg = ModelRegistry::new();
+        assert_eq!(reg.publish(model(1.0)), 1);
+        assert_eq!(reg.publish(model(2.0)), 2);
+        let cur = reg.current().unwrap();
+        assert_eq!(cur.version, 2);
+        assert_eq!(cur.model.beta[0], 2.0);
+        // History keeps the old version addressable.
+        assert_eq!(reg.get(1).unwrap().model.beta[0], 1.0);
+        assert_eq!(reg.versions(), 2);
+    }
+
+    #[test]
+    fn load_and_reload_from_disk() {
+        let dir = std::env::temp_dir().join(format!("dglmnet_reg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        model(1.0).save(&path).unwrap();
+        let reg = ModelRegistry::new();
+        assert_eq!(reg.load_path(&path).unwrap(), 1);
+        assert_eq!(reg.current_version(), 1);
+        // Reload with the file unchanged: no new version, no history growth.
+        assert_eq!(reg.reload().unwrap(), 1);
+        assert_eq!(reg.versions(), 1);
+        // A retrain lands at the same path; reload() promotes it.
+        model(3.0).save(&path).unwrap();
+        assert_eq!(reg.reload().unwrap(), 2);
+        assert_eq!(reg.current().unwrap().model.beta[0], 3.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_malformed_file() {
+        let dir = std::env::temp_dir().join(format!("dglmnet_regbad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, "{\"format\":\"wrong\"}").unwrap();
+        let reg = ModelRegistry::new();
+        assert!(reg.load_path(&path).is_err());
+        assert_eq!(reg.current_version(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The satellite requirement: hot-swap under concurrent readers. Readers
+    /// hammer `current()` while a writer publishes versions; every observed
+    /// snapshot must be internally consistent (version tag matches the
+    /// weights planted for that version) and versions must be monotone per
+    /// reader.
+    #[test]
+    fn hot_swap_under_concurrent_readers() {
+        let reg = Arc::new(ModelRegistry::with_model(model(1.0)));
+        let stop = Arc::new(AtomicBool::new(false));
+        let n_writes = 200u64;
+        std::thread::scope(|s| {
+            let mut readers = Vec::new();
+            for _ in 0..4 {
+                let reg = Arc::clone(&reg);
+                let stop = Arc::clone(&stop);
+                readers.push(s.spawn(move || {
+                    let mut last = 0u64;
+                    let mut seen = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let snap = reg.current().expect("published");
+                        assert!(snap.version >= last, "version went backwards");
+                        // Consistency: weights carry the version they were
+                        // published with.
+                        assert_eq!(snap.model.beta[0], snap.version as f64);
+                        assert_eq!(snap.model.beta[5], -(snap.version as f64));
+                        last = snap.version;
+                        seen += 1;
+                    }
+                    seen
+                }));
+            }
+            for v in 2..=n_writes {
+                reg.publish(model(v as f64));
+            }
+            stop.store(true, Ordering::Relaxed);
+            for r in readers {
+                assert!(r.join().unwrap() > 0);
+            }
+        });
+        assert_eq!(reg.current_version(), n_writes);
+    }
+}

@@ -1,0 +1,256 @@
+//! Scoring engine: registry snapshot → dense scoring plan → probabilities.
+//!
+//! Serving scores a handful of sparse rows per request against a *fixed*
+//! model, so the profitable layout is the opposite of training: densify the
+//! model's sparse β once per version ([`GlmModel::dense_weights`]) and make
+//! each row a gather against that dense vector. The inverse link runs
+//! through the same [`GlmCompute`] seam the trainer uses — `--engine native`
+//! builds [`NativeCompute`], `--engine xla` plugs the PJRT-backed
+//! `XlaCompute` in behind the identical trait — so serving honors the
+//! crate's compute split instead of inventing a parallel one.
+//!
+//! [`NativeCompute`]: crate::solver::compute::NativeCompute
+
+use std::sync::{Arc, RwLock};
+
+use crate::glm::loss::LossKind;
+use crate::glm::model::GlmModel;
+use crate::serve::registry::ModelRegistry;
+use crate::solver::compute::{GlmCompute, NativeCompute};
+use crate::sparse::Csr;
+
+/// One example to score: sparse (feature, value) pairs, any order.
+pub type SparseRow = Vec<(u32, f64)>;
+
+/// Pluggable compute construction — the serve-side face of the
+/// `NativeCompute`/`XlaCompute` engine split. Built once per model version
+/// (the loss family can change across promotions).
+pub trait ComputeFactory: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn build(&self, kind: LossKind) -> Box<dyn GlmCompute>;
+}
+
+/// Pure-Rust engine (the default, and the correctness oracle).
+pub struct NativeFactory;
+
+impl ComputeFactory for NativeFactory {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+    fn build(&self, kind: LossKind) -> Box<dyn GlmCompute> {
+        Box::new(NativeCompute::new(kind))
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum ScoreError {
+    #[error("no model published yet")]
+    NoModel,
+    #[error("row {row}: feature {feature} outside model space ({p} features)")]
+    FeatureOutOfRange { row: usize, feature: u32, p: usize },
+}
+
+/// Immutable per-version scoring state: dense weights + compute engine.
+pub struct ScorePlan {
+    pub version: u64,
+    pub kind: LossKind,
+    /// β densified over the model's full feature space, built once per
+    /// version.
+    pub weights: Vec<f64>,
+    pub nnz: usize,
+    compute: Box<dyn GlmCompute>,
+}
+
+/// Scores from one batch, tagged with the model version that produced them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScoredBatch {
+    pub version: u64,
+    pub margins: Vec<f64>,
+    pub probs: Vec<f64>,
+}
+
+/// The scoring engine; see module docs.
+pub struct Scorer {
+    registry: Arc<ModelRegistry>,
+    factory: Box<dyn ComputeFactory>,
+    plan: RwLock<Option<Arc<ScorePlan>>>,
+}
+
+impl Scorer {
+    pub fn new(registry: Arc<ModelRegistry>, factory: Box<dyn ComputeFactory>) -> Scorer {
+        Scorer {
+            registry,
+            factory,
+            plan: RwLock::new(None),
+        }
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        self.factory.name()
+    }
+
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// The plan for the registry's *current* version, rebuilding (densify +
+    /// compute construction) only when the version changed since the last
+    /// call. The fast path is a read lock and a version compare.
+    pub fn plan(&self) -> Result<Arc<ScorePlan>, ScoreError> {
+        let live = self.registry.current().ok_or(ScoreError::NoModel)?;
+        if let Some(p) = self.plan.read().unwrap().as_ref() {
+            if p.version == live.version {
+                return Ok(Arc::clone(p));
+            }
+        }
+        let mut slot = self.plan.write().unwrap();
+        // Re-fetch under the write lock: a swap may have landed since the
+        // first read, and a thread holding a stale `live` must not clobber
+        // a newer cached plan with an older one (versions are monotone, so
+        // building against the re-fetched snapshot is always current).
+        let live = self.registry.current().ok_or(ScoreError::NoModel)?;
+        if let Some(p) = slot.as_ref() {
+            if p.version == live.version {
+                return Ok(Arc::clone(p));
+            }
+        }
+        let built = Arc::new(self.build_plan(&live.model, live.version));
+        *slot = Some(Arc::clone(&built));
+        Ok(built)
+    }
+
+    fn build_plan(&self, model: &GlmModel, version: u64) -> ScorePlan {
+        ScorePlan {
+            version,
+            kind: model.kind,
+            weights: model.dense_weights(model.p),
+            nnz: model.nnz(),
+            compute: self.factory.build(model.kind),
+        }
+    }
+
+    /// Score a block of sparse rows. One plan lookup, one margin gather per
+    /// row, one batched inverse-link application through the compute seam.
+    pub fn score(&self, rows: &[SparseRow]) -> Result<ScoredBatch, ScoreError> {
+        let plan = self.plan()?;
+        let p = plan.weights.len();
+        let mut margins = Vec::with_capacity(rows.len());
+        for (ri, row) in rows.iter().enumerate() {
+            let mut m = 0.0;
+            for &(j, v) in row {
+                let j = j as usize;
+                if j >= p {
+                    return Err(ScoreError::FeatureOutOfRange {
+                        row: ri,
+                        feature: j as u32,
+                        p,
+                    });
+                }
+                m += plan.weights[j] * v;
+            }
+            margins.push(m);
+        }
+        let probs = plan.compute.predict_probs(&margins);
+        Ok(ScoredBatch {
+            version: plan.version,
+            margins,
+            probs,
+        })
+    }
+
+    /// Score an already-assembled CSR block (batch `predict` over a file).
+    pub fn score_csr(&self, x: &Csr) -> Result<ScoredBatch, ScoreError> {
+        let plan = self.plan()?;
+        let p = plan.weights.len();
+        if x.ncols > p {
+            return Err(ScoreError::FeatureOutOfRange {
+                row: 0,
+                feature: x.ncols as u32 - 1,
+                p,
+            });
+        }
+        let margins: Vec<f64> = (0..x.nrows).map(|i| x.dot_row(i, &plan.weights)).collect();
+        let probs = plan.compute.predict_probs(&margins);
+        Ok(ScoredBatch {
+            version: plan.version,
+            margins,
+            probs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glm::loss::LossKind;
+
+    fn scorer_with(beta: Vec<f64>) -> (Arc<ModelRegistry>, Scorer) {
+        let reg = Arc::new(ModelRegistry::with_model(GlmModel::new(
+            LossKind::Logistic,
+            beta,
+        )));
+        let sc = Scorer::new(Arc::clone(&reg), Box::new(NativeFactory));
+        (reg, sc)
+    }
+
+    #[test]
+    fn score_matches_model_predict() {
+        let mut beta = vec![0.0; 6];
+        beta[1] = 2.0;
+        beta[4] = -1.0;
+        let (_, sc) = scorer_with(beta.clone());
+        let rows: Vec<SparseRow> = vec![vec![(1, 1.0)], vec![(4, 2.0), (1, 0.5)], vec![]];
+        let got = sc.score(&rows).unwrap();
+        assert_eq!(got.version, 1);
+        assert_eq!(got.margins, vec![2.0, -1.0, 0.0]);
+        let model = GlmModel::new(LossKind::Logistic, beta);
+        let x = Csr::from_rows(6, &[vec![(1, 1.0)], vec![(4, 2.0), (1, 0.5)], vec![]]);
+        assert_eq!(got.probs, model.predict_proba(&x));
+        // CSR path agrees with the row path.
+        assert_eq!(sc.score_csr(&x).unwrap(), got);
+    }
+
+    #[test]
+    fn out_of_range_feature_rejected() {
+        let (_, sc) = scorer_with(vec![0.5; 4]);
+        let err = sc.score(&[vec![(9, 1.0)]]).unwrap_err();
+        assert_eq!(
+            err,
+            ScoreError::FeatureOutOfRange {
+                row: 0,
+                feature: 9,
+                p: 4
+            }
+        );
+    }
+
+    #[test]
+    fn empty_registry_errors() {
+        let reg = Arc::new(ModelRegistry::new());
+        let sc = Scorer::new(reg, Box::new(NativeFactory));
+        assert_eq!(sc.score(&[vec![]]).unwrap_err(), ScoreError::NoModel);
+    }
+
+    #[test]
+    fn plan_rebuilds_only_on_version_change() {
+        let (reg, sc) = scorer_with(vec![1.0, 0.0, 3.0]);
+        let p1 = sc.plan().unwrap();
+        assert!(Arc::ptr_eq(&p1, &sc.plan().unwrap()), "plan must be cached");
+        assert_eq!(p1.nnz, 2);
+        reg.publish(GlmModel::new(LossKind::Probit, vec![0.0, 5.0]));
+        let p2 = sc.plan().unwrap();
+        assert_eq!(p2.version, 2);
+        assert_eq!(p2.kind, LossKind::Probit);
+        assert_eq!(p2.weights, vec![0.0, 5.0]);
+    }
+
+    #[test]
+    fn swap_is_visible_to_scoring() {
+        let (reg, sc) = scorer_with(vec![1.0]);
+        assert_eq!(sc.score(&[vec![(0, 1.0)]]).unwrap().margins, vec![1.0]);
+        reg.publish(GlmModel::new(LossKind::Logistic, vec![-4.0]));
+        let after = sc.score(&[vec![(0, 1.0)]]).unwrap();
+        assert_eq!(after.version, 2);
+        assert_eq!(after.margins, vec![-4.0]);
+    }
+}

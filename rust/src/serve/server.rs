@@ -1,0 +1,606 @@
+//! Thread-pool TCP server speaking newline-delimited JSON.
+//!
+//! Protocol (one JSON object per line, one reply line per request):
+//!
+//! ```text
+//! → {"op":"predict","rows":[[[0,1.5],[3,-0.2]],[[2,1.0]]]}
+//! ← {"ok":true,"version":1,"probs":[0.62,0.31],"margins":[0.5,-0.8]}
+//! → {"op":"health"}
+//! ← {"ok":true,"version":1,"engine":"native","requests":…,"latency":{…},"batcher":{…}}
+//! → {"op":"swap-model","path":"new_model.json"}     ("path" optional: reload)
+//! ← {"ok":true,"version":2,"nnz":1234}
+//! ```
+//!
+//! Rows are arrays of `[feature, value]` pairs. Errors come back as
+//! `{"ok":false,"error":"…"}` on the same line; the connection stays up.
+//!
+//! The accept thread hands connections to a fixed pool of I/O workers (one
+//! connection per worker at a time — size the pool to the expected client
+//! fan-in; a connection beyond the pool is refused with an error line
+//! instead of queueing silently). `predict` latency (parse to scored) is
+//! recorded into a [`LatencyHistogram`]; scoring itself is delegated to the
+//! [`Batcher`] so concurrent connections coalesce into micro-batches.
+//!
+//! **Trust model:** the protocol has no authentication, and `swap-model`
+//! reads any server-side path and replaces the live model. Bind to
+//! loopback or a trusted network segment; an internet-facing deployment
+//! needs a fronting proxy that terminates auth and blocks admin ops.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::metrics::latency::LatencyHistogram;
+use crate::serve::batcher::{Batcher, BatcherConfig};
+use crate::serve::scorer::{Scorer, SparseRow};
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Listen address; port 0 picks a free port (see `ServerHandle::addr`).
+    pub addr: String,
+    /// Connection-handling threads = max concurrent connections; excess
+    /// connections get `{"ok":false,"error":"server at capacity…"}` and are
+    /// dropped rather than queued silently.
+    pub io_threads: usize,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            io_threads: 8,
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+struct ServerShared {
+    batcher: Batcher,
+    stop: AtomicBool,
+    /// `predict` latency only — admin/health ops would pollute the p99.
+    latency: LatencyHistogram,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    swaps: AtomicU64,
+    /// Connections currently admitted (admission-controlled in accept).
+    conns: AtomicUsize,
+    started: Instant,
+    engine: &'static str,
+}
+
+/// A running server. `stop()` (or drop) shuts it down and joins all threads.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<ServerShared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Bind, spawn the accept loop and I/O pool, and return immediately.
+pub fn serve(scorer: Arc<Scorer>, cfg: ServerConfig) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let engine = scorer.engine_name();
+    let shared = Arc::new(ServerShared {
+        batcher: Batcher::start(scorer, cfg.batcher),
+        stop: AtomicBool::new(false),
+        latency: LatencyHistogram::new(),
+        requests: AtomicU64::new(0),
+        errors: AtomicU64::new(0),
+        swaps: AtomicU64::new(0),
+        conns: AtomicUsize::new(0),
+        started: Instant::now(),
+        engine,
+    });
+
+    let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+    let workers = (0..cfg.io_threads.max(1))
+        .map(|_| {
+            let rx = Arc::clone(&conn_rx);
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || loop {
+                let stream = match rx.lock().unwrap().recv() {
+                    Ok(s) => s,
+                    Err(_) => return, // accept loop gone
+                };
+                handle_connection(stream, &shared);
+                shared.conns.fetch_sub(1, Ordering::Relaxed);
+            })
+        })
+        .collect();
+
+    let accept = {
+        let shared = Arc::clone(&shared);
+        let max_conns = cfg.io_threads.max(1);
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return; // conn_tx drops; workers drain and exit
+                }
+                match stream {
+                    Ok(mut s) => {
+                        // Admission control: refuse loudly instead of
+                        // queueing a connection no worker will reach.
+                        if shared.conns.load(Ordering::Relaxed) >= max_conns {
+                            shared.errors.fetch_add(1, Ordering::Relaxed);
+                            let mut out = err_json(format!(
+                                "server at capacity ({max_conns} connections)"
+                            ))
+                            .dump();
+                            out.push('\n');
+                            let _ = s.write_all(out.as_bytes());
+                            continue; // drop the socket
+                        }
+                        shared.conns.fetch_add(1, Ordering::Relaxed);
+                        if conn_tx.send(s).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => continue,
+                }
+            }
+        })
+    };
+
+    Ok(ServerHandle {
+        addr,
+        shared,
+        accept: Some(accept),
+        workers,
+    })
+}
+
+impl ServerHandle {
+    /// The actual bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.shared.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn latency(&self) -> &LatencyHistogram {
+        &self.shared.latency
+    }
+
+    /// Signal shutdown and join every thread. Idempotent.
+    pub fn stop(&mut self) {
+        if self.shared.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Wake the blocking accept() so it observes the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Serve one connection until the peer closes, errors, or the server stops.
+/// Reads are chunked into an accumulator (never through a line reader, so a
+/// read timeout mid-line loses nothing) and complete lines are answered in
+/// arrival order.
+fn handle_connection(mut stream: TcpStream, shared: &ServerShared) {
+    /// A single request line may not exceed this; past it the connection is
+    /// answered with an error and dropped, so a peer streaming bytes with
+    /// no newline cannot grow the accumulator without bound.
+    const MAX_LINE_BYTES: usize = 4 << 20;
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let _ = stream.set_nodelay(true);
+    let mut acc: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        while let Some(pos) = acc.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = acc.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&line[..line.len() - 1]).into_owned();
+            if line.trim().is_empty() {
+                continue;
+            }
+            let reply = handle_request(line.trim(), shared);
+            shared.requests.fetch_add(1, Ordering::Relaxed);
+            let mut out = reply.dump();
+            out.push('\n');
+            if stream.write_all(out.as_bytes()).is_err() {
+                return;
+            }
+        }
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return, // peer closed
+            Ok(n) => {
+                acc.extend_from_slice(&chunk[..n]);
+                if acc.len() > MAX_LINE_BYTES && !acc.contains(&b'\n') {
+                    let mut out = err_json("request line exceeds 4 MiB").dump();
+                    out.push('\n');
+                    let _ = stream.write_all(out.as_bytes());
+                    return;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // timeout tick: re-check the stop flag
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn err_json(msg: impl std::fmt::Display) -> Json {
+    let mut o = Json::obj();
+    o.set("ok", false).set("error", msg.to_string());
+    o
+}
+
+fn handle_request(line: &str, shared: &ServerShared) -> Json {
+    let req = match json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            shared.errors.fetch_add(1, Ordering::Relaxed);
+            return err_json(format!("bad json: {e}"));
+        }
+    };
+    let op = req.get("op").and_then(|o| o.as_str()).unwrap_or("");
+    let reply = match op {
+        "predict" => {
+            // Only the serving path feeds the latency histogram — a
+            // swap-model's disk load would otherwise pollute the p99.
+            let t0 = Instant::now();
+            let r = op_predict(&req, shared);
+            shared.latency.record(t0.elapsed());
+            r
+        }
+        "health" => Ok(op_health(shared)),
+        "swap-model" => op_swap(&req, shared),
+        "" => Err("missing op".to_string()),
+        other => Err(format!("unknown op '{other}'")),
+    };
+    reply.unwrap_or_else(|e| {
+        shared.errors.fetch_add(1, Ordering::Relaxed);
+        err_json(e)
+    })
+}
+
+/// Decode `"rows":[[[idx,val],…],…]` into sparse rows.
+fn parse_rows(req: &Json) -> Result<Vec<SparseRow>, String> {
+    let rows = match req.get("rows") {
+        Some(Json::Arr(rows)) => rows,
+        _ => return Err("predict needs a 'rows' array".to_string()),
+    };
+    let mut out = Vec::with_capacity(rows.len());
+    for (ri, row) in rows.iter().enumerate() {
+        let pairs = match row {
+            Json::Arr(pairs) => pairs,
+            _ => return Err(format!("row {ri} is not an array")),
+        };
+        let mut feats: SparseRow = Vec::with_capacity(pairs.len());
+        for pair in pairs {
+            let (j, v) = match pair {
+                Json::Arr(p) if p.len() == 2 => {
+                    match (p[0].as_f64(), p[1].as_f64()) {
+                        (Some(j), Some(v)) => (j, v),
+                        _ => return Err(format!("row {ri}: non-numeric pair")),
+                    }
+                }
+                _ => return Err(format!("row {ri}: entries must be [feature,value] pairs")),
+            };
+            if j < 0.0 || j.fract() != 0.0 || j > u32::MAX as f64 {
+                return Err(format!("row {ri}: bad feature index {j}"));
+            }
+            feats.push((j as u32, v));
+        }
+        out.push(feats);
+    }
+    Ok(out)
+}
+
+fn op_predict(req: &Json, shared: &ServerShared) -> Result<Json, String> {
+    let rows = parse_rows(req)?;
+    let scored = shared
+        .batcher
+        .score(rows)
+        .map_err(|e| e.to_string())?;
+    let mut o = Json::obj();
+    o.set("ok", true)
+        .set("version", scored.version)
+        .set("probs", scored.probs)
+        .set("margins", scored.margins);
+    Ok(o)
+}
+
+fn op_health(shared: &ServerShared) -> Json {
+    let reg = shared.batcher.scorer().registry();
+    let (version, nnz, p) = match reg.current() {
+        Some(s) => (s.version, s.model.nnz(), s.model.p),
+        None => (0, 0, 0),
+    };
+    let mut o = Json::obj();
+    o.set("ok", true)
+        .set("version", version)
+        .set("model_nnz", nnz)
+        .set("model_p", p)
+        .set("engine", shared.engine)
+        .set("uptime_s", shared.started.elapsed().as_secs_f64())
+        .set("requests", shared.requests.load(Ordering::Relaxed))
+        .set("errors", shared.errors.load(Ordering::Relaxed))
+        .set("swaps", shared.swaps.load(Ordering::Relaxed))
+        .set("connections", shared.conns.load(Ordering::Relaxed))
+        .set("latency", shared.latency.to_json())
+        .set("batcher", shared.batcher.stats().to_json());
+    o
+}
+
+fn op_swap(req: &Json, shared: &ServerShared) -> Result<Json, String> {
+    let reg = shared.batcher.scorer().registry();
+    let version = match req.get("path").and_then(|p| p.as_str()) {
+        Some(path) => reg.load_path(path).map_err(|e| e.to_string())?,
+        None => reg.reload().map_err(|e| e.to_string())?,
+    };
+    shared.swaps.fetch_add(1, Ordering::Relaxed);
+    let snap = reg.get(version).expect("just published");
+    let mut o = Json::obj();
+    o.set("ok", true)
+        .set("version", version)
+        .set("nnz", snap.model.nnz())
+        .set("p", snap.model.p);
+    Ok(o)
+}
+
+/// Blocking line-protocol client — the shape the examples, the load
+/// generator and the tests talk to the server with.
+pub struct ServeClient {
+    stream: TcpStream,
+    acc: Vec<u8>,
+}
+
+impl ServeClient {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> std::io::Result<ServeClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(ServeClient {
+            stream,
+            acc: Vec::new(),
+        })
+    }
+
+    /// Send one request line and block for its reply line.
+    pub fn roundtrip(&mut self, req: &Json) -> Result<Json, String> {
+        let mut line = req.dump();
+        line.push('\n');
+        self.stream
+            .write_all(line.as_bytes())
+            .map_err(|e| format!("send: {e}"))?;
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            if let Some(pos) = self.acc.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = self.acc.drain(..=pos).collect();
+                let text = String::from_utf8_lossy(&line[..line.len() - 1]).into_owned();
+                return json::parse(&text).map_err(|e| format!("bad reply: {e}"));
+            }
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Err("server closed connection".to_string()),
+                Ok(n) => self.acc.extend_from_slice(&chunk[..n]),
+                Err(e) => return Err(format!("recv: {e}")),
+            }
+        }
+    }
+
+    /// Score rows; returns (model version, probabilities).
+    pub fn predict(&mut self, rows: &[SparseRow]) -> Result<(u64, Vec<f64>), String> {
+        let rows_json: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                Json::Arr(
+                    r.iter()
+                        .map(|&(j, v)| Json::Arr(vec![Json::Num(j as f64), Json::Num(v)]))
+                        .collect(),
+                )
+            })
+            .collect();
+        let mut req = Json::obj();
+        req.set("op", "predict").set("rows", Json::Arr(rows_json));
+        let reply = self.roundtrip(&req)?;
+        expect_ok(&reply)?;
+        let version = reply
+            .get("version")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as u64;
+        let probs = match reply.get("probs") {
+            Some(Json::Arr(ps)) => ps.iter().filter_map(|p| p.as_f64()).collect(),
+            _ => return Err("reply missing probs".to_string()),
+        };
+        Ok((version, probs))
+    }
+
+    pub fn health(&mut self) -> Result<Json, String> {
+        let mut req = Json::obj();
+        req.set("op", "health");
+        let reply = self.roundtrip(&req)?;
+        expect_ok(&reply)?;
+        Ok(reply)
+    }
+
+    /// Promote a model: from `path`, or re-read the server's current source.
+    pub fn swap_model(&mut self, path: Option<&str>) -> Result<u64, String> {
+        let mut req = Json::obj();
+        req.set("op", "swap-model");
+        if let Some(p) = path {
+            req.set("path", p);
+        }
+        let reply = self.roundtrip(&req)?;
+        expect_ok(&reply)?;
+        Ok(reply.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64)
+    }
+}
+
+fn expect_ok(reply: &Json) -> Result<(), String> {
+    match reply.get("ok") {
+        Some(Json::Bool(true)) => Ok(()),
+        _ => Err(reply
+            .get("error")
+            .and_then(|e| e.as_str())
+            .unwrap_or("request failed")
+            .to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glm::loss::LossKind;
+    use crate::glm::model::GlmModel;
+    use crate::serve::registry::ModelRegistry;
+    use crate::serve::scorer::NativeFactory;
+
+    fn start_with(beta: Vec<f64>, io_threads: usize) -> (Arc<ModelRegistry>, ServerHandle) {
+        let reg = Arc::new(ModelRegistry::with_model(GlmModel::new(
+            LossKind::Logistic,
+            beta,
+        )));
+        let scorer = Arc::new(Scorer::new(Arc::clone(&reg), Box::new(NativeFactory)));
+        let handle = serve(
+            scorer,
+            ServerConfig {
+                addr: "127.0.0.1:0".to_string(),
+                io_threads,
+                batcher: BatcherConfig::default(),
+            },
+        )
+        .unwrap();
+        (reg, handle)
+    }
+
+    fn start(beta: Vec<f64>) -> (Arc<ModelRegistry>, ServerHandle) {
+        start_with(beta, 4)
+    }
+
+    #[test]
+    fn predict_health_roundtrip() {
+        let (_, mut h) = start(vec![0.0, 1.0, -2.0]);
+        let mut c = ServeClient::connect(h.addr()).unwrap();
+        let (version, probs) = c.predict(&[vec![(1, 1.0)], vec![(2, 1.0)]]).unwrap();
+        assert_eq!(version, 1);
+        assert_eq!(probs.len(), 2);
+        assert!(probs[0] > 0.5 && probs[1] < 0.5);
+        let health = c.health().unwrap();
+        assert_eq!(health.get("version").unwrap().as_f64(), Some(1.0));
+        assert!(health.get("requests").unwrap().as_f64().unwrap() >= 1.0);
+        h.stop();
+    }
+
+    #[test]
+    fn malformed_lines_keep_connection_alive() {
+        let (_, mut h) = start(vec![1.0]);
+        let mut c = ServeClient::connect(h.addr()).unwrap();
+        for bad in [
+            "not json at all",
+            "{\"op\":\"bogus\"}",
+            "{\"no\":\"op\"}",
+            "{\"op\":\"predict\"}",
+            "{\"op\":\"predict\",\"rows\":[[[\"x\",1]]]}",
+            "{\"op\":\"predict\",\"rows\":[[[-3,1.0]]]}",
+        ] {
+            c.stream
+                .write_all(format!("{bad}\n").as_bytes())
+                .unwrap();
+            let mut chunk = [0u8; 4096];
+            let reply = loop {
+                if let Some(pos) = c.acc.iter().position(|&b| b == b'\n') {
+                    let line: Vec<u8> = c.acc.drain(..=pos).collect();
+                    break String::from_utf8_lossy(&line[..line.len() - 1]).into_owned();
+                }
+                let n = c.stream.read(&mut chunk).unwrap();
+                assert!(n > 0, "server closed on malformed input");
+                c.acc.extend_from_slice(&chunk[..n]);
+            };
+            let j = json::parse(&reply).unwrap();
+            assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "input: {bad}");
+        }
+        // Still serving after the garbage.
+        let (_, probs) = c.predict(&[vec![(0, 1.0)]]).unwrap();
+        assert_eq!(probs.len(), 1);
+        h.stop();
+    }
+
+    #[test]
+    fn swap_model_over_socket() {
+        let dir = std::env::temp_dir().join(format!("dglmnet_srv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m2.json");
+        GlmModel::new(LossKind::Logistic, vec![5.0]).save(&path).unwrap();
+        let (_, mut h) = start(vec![-5.0]);
+        let mut c = ServeClient::connect(h.addr()).unwrap();
+        let (v1, p1) = c.predict(&[vec![(0, 1.0)]]).unwrap();
+        assert_eq!(v1, 1);
+        assert!(p1[0] < 0.5);
+        let v2 = c.swap_model(Some(path.to_str().unwrap())).unwrap();
+        assert_eq!(v2, 2);
+        let (v, p2) = c.predict(&[vec![(0, 1.0)]]).unwrap();
+        assert_eq!(v, 2);
+        assert!(p2[0] > 0.5, "new model must be live");
+        // Swap to a bad path fails but the old model keeps serving.
+        assert!(c.swap_model(Some("/nonexistent/model.json")).is_err());
+        let (v, _) = c.predict(&[vec![(0, 1.0)]]).unwrap();
+        assert_eq!(v, 2);
+        std::fs::remove_dir_all(&dir).ok();
+        h.stop();
+    }
+
+    #[test]
+    fn excess_connections_refused_loudly() {
+        let (_, mut h) = start_with(vec![1.0], 1);
+        let mut c1 = ServeClient::connect(h.addr()).unwrap();
+        // A successful request proves c1 was admitted (conns = 1).
+        c1.predict(&[vec![(0, 1.0)]]).unwrap();
+        // The refusal line arrives unsolicited; read without writing so the
+        // server-side close can't RST our request away first.
+        let mut c2 = ServeClient::connect(h.addr()).unwrap();
+        let mut buf = [0u8; 4096];
+        while !c2.acc.contains(&b'\n') {
+            let n = c2.stream.read(&mut buf).unwrap();
+            assert!(n > 0, "connection closed before the refusal line");
+            c2.acc.extend_from_slice(&buf[..n]);
+        }
+        let line = String::from_utf8_lossy(&c2.acc);
+        assert!(line.contains("capacity"), "{line}");
+        // The admitted connection keeps working.
+        c1.predict(&[vec![(0, 1.0)]]).unwrap();
+        h.stop();
+    }
+
+    #[test]
+    fn stop_is_clean_and_idempotent() {
+        let (_, mut h) = start(vec![1.0]);
+        let addr = h.addr();
+        h.stop();
+        h.stop();
+        assert!(ServeClient::connect(addr)
+            .and_then(|mut c| {
+                c.stream.write_all(b"{\"op\":\"health\"}\n")?;
+                let mut buf = [0u8; 16];
+                let n = c.stream.read(&mut buf)?;
+                Ok(n)
+            })
+            .map(|n| n == 0)
+            .unwrap_or(true));
+    }
+}

@@ -38,6 +38,14 @@ pub trait GlmCompute: Send + Sync {
         let zeros = vec![0.0; margins.len()];
         self.loss_at_alphas(y, margins, &zeros, &[0.0])[0]
     }
+
+    /// Inverse-link probabilities for a margin block — the serving path
+    /// (`serve::Scorer`). Default goes through the loss family's scalar
+    /// link; engine implementations may batch it.
+    fn predict_probs(&self, margins: &[f64]) -> Vec<f64> {
+        let kind = self.kind();
+        margins.iter().map(|&m| kind.prob(m)).collect()
+    }
 }
 
 /// Pure-Rust reference implementation of [`GlmCompute`].

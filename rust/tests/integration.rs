@@ -321,3 +321,93 @@ fn regularization_path_monotone_sparsity() {
     }
     assert!(prev_nnz < 1500);
 }
+
+/// The full production story: train, save, serve over TCP, score from
+/// concurrent clients, hot-swap a retrained model mid-traffic, and verify
+/// the endpoint's answers match offline `predict_proba` for both versions.
+#[test]
+fn serve_end_to_end_with_hot_swap() {
+    use dglmnet::glm::GlmModel;
+    use dglmnet::serve::{serve, ModelRegistry, NativeFactory, Scorer, ServeClient, ServerConfig};
+    use std::sync::Arc;
+
+    let splits = Corpus::clickstream(0.05, 11);
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let cfg = DistributedConfig {
+        nodes: 4,
+        max_iters: 10,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let fit_v1 = fit_distributed(&splits.train, None, &compute, &ElasticNet::l1_only(0.5), &cfg);
+    let fit_v2 = fit_distributed(&splits.train, None, &compute, &ElasticNet::l1_only(2.0), &cfg);
+    let m1 = GlmModel::new(LossKind::Logistic, fit_v1.beta);
+    let m2 = GlmModel::new(LossKind::Logistic, fit_v2.beta);
+
+    let dir = std::env::temp_dir().join(format!("dglmnet_serve_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.json");
+    m1.save(&path).unwrap();
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.load_path(&path).unwrap();
+    let scorer = Arc::new(Scorer::new(Arc::clone(&registry), Box::new(NativeFactory)));
+    let mut server = serve(
+        scorer,
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            io_threads: 6,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+
+    // Expected probabilities for the first few test rows under each model.
+    let x = &splits.test.x;
+    let n_rows = 8.min(x.nrows);
+    let rows: Vec<Vec<(u32, f64)>> = (0..n_rows)
+        .map(|i| x.row(i).map(|(c, v)| (c as u32, v)).collect())
+        .collect();
+    let expect = |m: &GlmModel| -> Vec<f64> {
+        rows.iter().map(|r| m.kind.prob(m.margin_sparse(r))).collect()
+    };
+    let want_v1 = expect(&m1);
+    let want_v2 = expect(&m2);
+
+    // 4 concurrent clients each score repeatedly; answers must match one of
+    // the two published versions, consistently with the version tag.
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let rows = rows.clone();
+            let want_v1 = want_v1.clone();
+            let want_v2 = want_v2.clone();
+            handles.push(s.spawn(move || {
+                let mut c = ServeClient::connect(addr).unwrap();
+                for _ in 0..30 {
+                    let (version, probs) = c.predict(&rows).unwrap();
+                    let want = if version == 1 { &want_v1 } else { &want_v2 };
+                    assert!(version == 1 || version == 2, "version {version}");
+                    for (got, want) in probs.iter().zip(want.iter()) {
+                        assert!((got - want).abs() < 1e-12, "got {got} want {want}");
+                    }
+                }
+            }));
+        }
+        // Mid-traffic promotion: retrained model lands at the same path.
+        m2.save(&path).unwrap();
+        let mut admin = ServeClient::connect(addr).unwrap();
+        assert_eq!(admin.swap_model(None).unwrap(), 2);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let health = admin.health().unwrap();
+        assert_eq!(health.get("version").unwrap().as_f64(), Some(2.0));
+        assert!(health.get("requests").unwrap().as_f64().unwrap() >= 121.0);
+        assert_eq!(health.get("swaps").unwrap().as_f64(), Some(1.0));
+    });
+
+    server.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
