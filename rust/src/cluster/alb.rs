@@ -10,8 +10,12 @@
 //! next iteration — no weight is starved (paper: "on the next iteration a
 //! node resumes optimization starting from the next weight in S^m").
 
+use crate::cluster::transport::Transport;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
+/// Shared-memory ALB controller — used when all nodes are threads in one
+/// process (the fabric backend). For separate OS processes, the same quorum
+/// decision is carried by tiny pass-done broadcasts: see [`RemoteQuorum`].
 pub struct AlbController {
     nodes: usize,
     /// Minimum full-pass reports before cutting off the iteration.
@@ -68,6 +72,70 @@ impl AlbController {
     }
 }
 
+/// Transport-level ALB quorum: the distributed analogue of
+/// [`AlbController`], built only on [`Transport`] so it works across OS
+/// processes. A node that finishes a full pass broadcasts an empty
+/// pass-done frame to every peer on the iteration's ALB tag; `should_stop`
+/// polls (non-blocking) for peers' frames and raises once ⌈κ·M⌉ reports —
+/// own pass included — have been seen.
+///
+/// One `RemoteQuorum` serves one outer iteration: construct it with a fresh
+/// tag per iteration (a single tag from the worker's `TAG_STRIDE` allocator
+/// suffices, since pass-done frames are the only traffic on it). Late
+/// frames from stragglers that report after the quorum fired simply park in
+/// the transport's pending map for that retired tag — a few empty frames
+/// per iteration, never replayed into a later quorum.
+pub struct RemoteQuorum {
+    tag: u64,
+    threshold: usize,
+    /// seen[r] = rank r's pass-done frame observed (or r == self after
+    /// `report_full_pass`).
+    seen: Vec<bool>,
+    reports: usize,
+}
+
+impl RemoteQuorum {
+    pub fn new(nodes: usize, kappa: f64, tag: u64) -> RemoteQuorum {
+        assert!(nodes > 0);
+        assert!(kappa > 0.0 && kappa <= 1.0);
+        let threshold = ((kappa * nodes as f64).ceil() as usize).clamp(1, nodes);
+        RemoteQuorum {
+            tag,
+            threshold,
+            seen: vec![false; nodes],
+            reports: 0,
+        }
+    }
+
+    /// This node finished one full pass over its block: broadcast it.
+    pub fn report_full_pass(&mut self, t: &mut dyn Transport) {
+        let me = t.rank();
+        if !self.seen[me] {
+            self.seen[me] = true;
+            self.reports += 1;
+            for to in (0..t.size()).filter(|&r| r != me) {
+                t.send(to, self.tag, Vec::new());
+            }
+        }
+    }
+
+    /// Poll peers' pass-done frames; true once the κ quorum is met.
+    pub fn should_stop(&mut self, t: &mut dyn Transport) -> bool {
+        let me = t.rank();
+        for from in (0..t.size()).filter(|&r| r != me) {
+            while !self.seen[from] && t.try_recv_from(from, self.tag).is_some() {
+                self.seen[from] = true;
+                self.reports += 1;
+            }
+        }
+        self.reports >= self.threshold
+    }
+
+    pub fn threshold(&self) -> usize {
+        self.threshold
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,6 +184,38 @@ mod tests {
             h.join().unwrap();
         }
         assert!(c.should_stop());
+    }
+
+    #[test]
+    fn remote_quorum_fires_at_threshold_over_fabric() {
+        use crate::cluster::fabric::{fabric, NetworkModel};
+        use crate::cluster::transport::Transport as _;
+        let m = 4; // κ = 0.75 → threshold 3
+        let (eps, _) = fabric(m, NetworkModel::default());
+        let mut handles = Vec::new();
+        for ep in eps {
+            handles.push(std::thread::spawn(move || {
+                let mut ep = ep;
+                let rank = ep.rank();
+                let mut q = RemoteQuorum::new(m, 0.75, 77);
+                assert_eq!(q.threshold(), 3);
+                if rank < 3 {
+                    // Three fast nodes report; each must observe the quorum.
+                    q.report_full_pass(&mut ep);
+                    while !q.should_stop(&mut ep) {
+                        std::thread::yield_now();
+                    }
+                } else {
+                    // The straggler never reports but still sees the stop.
+                    while !q.should_stop(&mut ep) {
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

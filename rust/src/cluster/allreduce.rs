@@ -13,7 +13,7 @@
 //! must use distinct bases per logical collective (the coordinator derives
 //! them from the iteration counter).
 
-use crate::cluster::fabric::Endpoint;
+use crate::cluster::transport::Transport;
 
 /// Which collective algorithm to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,82 +22,107 @@ pub enum AllReduceAlgo {
     Ring,
 }
 
+impl AllReduceAlgo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllReduceAlgo::Naive => "naive",
+            AllReduceAlgo::Ring => "ring",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AllReduceAlgo> {
+        match s {
+            "naive" => Some(AllReduceAlgo::Naive),
+            "ring" => Some(AllReduceAlgo::Ring),
+            _ => None,
+        }
+    }
+}
+
 /// In-place allreduce-sum of `data` across all endpoints (SPMD: every rank
 /// calls this with its local contribution; all ranks return the global sum).
-pub fn allreduce_sum(ep: &mut Endpoint, tag_base: u64, data: &mut [f64], algo: AllReduceAlgo) {
+pub fn allreduce_sum(t: &mut dyn Transport, tag_base: u64, data: &mut [f64], algo: AllReduceAlgo) {
     match algo {
-        AllReduceAlgo::Naive => naive(ep, tag_base, data),
-        AllReduceAlgo::Ring => ring(ep, tag_base, data),
+        AllReduceAlgo::Naive => naive(t, tag_base, data),
+        AllReduceAlgo::Ring => ring(t, tag_base, data),
     }
 }
 
 /// Convenience: allreduce a single scalar.
-pub fn allreduce_scalar(ep: &mut Endpoint, tag_base: u64, x: f64) -> f64 {
+///
+/// Deliberately takes no `algo`: a 1-element reduction is below ring's
+/// chunking threshold on every cluster size, so the result (and the wire
+/// traffic) must be identical no matter which algorithm a caller would have
+/// picked. Routing through [`allreduce_sum`] rather than a private helper
+/// keeps that contract pinned to the public entry point — the
+/// `scalar_matches_one_element_vector_under_both_algos` regression test
+/// checks it against both algorithms.
+pub fn allreduce_scalar(t: &mut dyn Transport, tag_base: u64, x: f64) -> f64 {
     let mut v = [x];
-    naive(ep, tag_base, &mut v);
+    allreduce_sum(t, tag_base, &mut v, AllReduceAlgo::Naive);
     v[0]
 }
 
 /// AllReduce with max instead of sum (used for the virtual cluster clock:
 /// the slowest node's compute time bounds the iteration).
-pub fn allreduce_max(ep: &mut Endpoint, tag_base: u64, x: f64) -> f64 {
-    let m = ep.nodes;
+pub fn allreduce_max(t: &mut dyn Transport, tag_base: u64, x: f64) -> f64 {
+    let m = t.size();
     if m == 1 {
         return x;
     }
-    if ep.rank == 0 {
+    if t.rank() == 0 {
         let mut best = x;
         for from in 1..m {
-            let part = ep.recv_from(from, tag_base);
+            let part = t.recv_from(from, tag_base);
             best = best.max(part[0]);
         }
         for to in 1..m {
-            ep.send(to, tag_base + 1, vec![best]);
+            t.send(to, tag_base + 1, vec![best]);
         }
         best
     } else {
-        ep.send(0, tag_base, vec![x]);
-        ep.recv_from(0, tag_base + 1)[0]
+        t.send(0, tag_base, vec![x]);
+        t.recv_from(0, tag_base + 1)[0]
     }
 }
 
-fn naive(ep: &mut Endpoint, tag_base: u64, data: &mut [f64]) {
-    let m = ep.nodes;
+fn naive(t: &mut dyn Transport, tag_base: u64, data: &mut [f64]) {
+    let m = t.size();
     if m == 1 {
         return;
     }
-    if ep.rank == 0 {
+    if t.rank() == 0 {
         for from in 1..m {
-            let part = ep.recv_from(from, tag_base);
+            let part = t.recv_from(from, tag_base);
             debug_assert_eq!(part.len(), data.len());
             for (d, p) in data.iter_mut().zip(part.iter()) {
                 *d += p;
             }
         }
         for to in 1..m {
-            ep.send(to, tag_base + 1, data.to_vec());
+            t.send(to, tag_base + 1, data.to_vec());
         }
     } else {
-        ep.send(0, tag_base, data.to_vec());
-        let total = ep.recv_from(0, tag_base + 1);
+        t.send(0, tag_base, data.to_vec());
+        let total = t.recv_from(0, tag_base + 1);
         data.copy_from_slice(&total);
     }
 }
 
 /// Ring allreduce: reduce-scatter then allgather. Chunk c ends up fully
 /// reduced at rank (c + 1) mod M after M−1 reduce steps, then circulates.
-fn ring(ep: &mut Endpoint, tag_base: u64, data: &mut [f64]) {
-    let m = ep.nodes;
+fn ring(t: &mut dyn Transport, tag_base: u64, data: &mut [f64]) {
+    let m = t.size();
     if m == 1 {
         return;
     }
     let n = data.len();
     if n < m {
         // Degenerate chunking — fall back to naive.
-        naive(ep, tag_base, data);
+        naive(t, tag_base, data);
         return;
     }
-    let rank = ep.rank;
+    let rank = t.rank();
     let next = (rank + 1) % m;
     let prev = (rank + m - 1) % m;
     let bounds = |c: usize| -> (usize, usize) {
@@ -111,8 +136,8 @@ fn ring(ep: &mut Endpoint, tag_base: u64, data: &mut [f64]) {
         let send_c = (rank + m - s) % m;
         let recv_c = (rank + m - s - 1) % m;
         let (slo, shi) = bounds(send_c);
-        ep.send(next, tag_base + s as u64, data[slo..shi].to_vec());
-        let part = ep.recv_from(prev, tag_base + s as u64);
+        t.send(next, tag_base + s as u64, data[slo..shi].to_vec());
+        let part = t.recv_from(prev, tag_base + s as u64);
         let (rlo, rhi) = bounds(recv_c);
         debug_assert_eq!(part.len(), rhi - rlo);
         for (d, p) in data[rlo..rhi].iter_mut().zip(part.iter()) {
@@ -124,8 +149,8 @@ fn ring(ep: &mut Endpoint, tag_base: u64, data: &mut [f64]) {
         let send_c = (rank + 1 + m - s) % m;
         let recv_c = (rank + m - s) % m;
         let (slo, shi) = bounds(send_c);
-        ep.send(next, tag_base + (m + s) as u64, data[slo..shi].to_vec());
-        let part = ep.recv_from(prev, tag_base + (m + s) as u64);
+        t.send(next, tag_base + (m + s) as u64, data[slo..shi].to_vec());
+        let part = t.recv_from(prev, tag_base + (m + s) as u64);
         let (rlo, rhi) = bounds(recv_c);
         data[rlo..rhi].copy_from_slice(&part);
     }
@@ -252,6 +277,35 @@ mod tests {
         );
         // Totals are the same order (both Θ(Mn)).
         assert!(ring_total < naive_total * 2);
+    }
+
+    #[test]
+    fn scalar_matches_one_element_vector_under_both_algos() {
+        // Regression for the allreduce_scalar contract: the algo-less scalar
+        // reduction must agree exactly with a 1-element allreduce_sum under
+        // BOTH algorithms (ring degenerates to naive below the chunking
+        // threshold, so all three paths are the same reduction tree).
+        for m in [1, 2, 3, 5] {
+            let (eps, _) = fabric(m, NetworkModel::default());
+            thread::scope(|s| {
+                for ep in eps {
+                    s.spawn(move |_| {
+                        let mut ep = ep;
+                        let x = (ep.rank as f64 + 1.0) * 0.25;
+                        let scalar = allreduce_scalar(&mut ep, 0, x);
+                        let mut v_naive = [x];
+                        allreduce_sum(&mut ep, TAG_STRIDE, &mut v_naive, AllReduceAlgo::Naive);
+                        let mut v_ring = [x];
+                        allreduce_sum(&mut ep, 2 * TAG_STRIDE, &mut v_ring, AllReduceAlgo::Ring);
+                        assert_eq!(scalar, v_naive[0], "scalar vs naive, m={m}");
+                        assert_eq!(scalar, v_ring[0], "scalar vs ring, m={m}");
+                        let want: f64 = (1..=m).map(|r| r as f64 * 0.25).sum();
+                        assert!((scalar - want).abs() < 1e-12, "sum wrong: {scalar} vs {want}");
+                    });
+                }
+            })
+            .unwrap();
+        }
     }
 
     #[test]

@@ -1,13 +1,40 @@
-//! Sense-reversing barrier for the BSP phases of the simulated cluster.
+//! Barriers for the BSP phases of the cluster.
 //!
-//! Reusable across iterations without re-allocation; built on
-//! Mutex + Condvar (std's `Barrier` would do, but owning the implementation
-//! lets the coordinator instrument wait time — the "slow node" diagnosis in
-//! the ALB experiments).
+//! Two implementations:
+//! * [`Barrier`] — shared-memory sense-reversing barrier (Mutex + Condvar)
+//!   for the in-process fabric. Owning the implementation (rather than
+//!   std's `Barrier`) lets the coordinator instrument wait time — the
+//!   "slow node" diagnosis in the ALB experiments.
+//! * [`transport_barrier`] — message-based barrier over any [`Transport`],
+//!   the only kind available once nodes are separate OS processes. Gather
+//!   to rank 0 then broadcast: 2(M−1) empty frames.
 
+use crate::cluster::transport::Transport;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
+
+/// Message-based barrier over a [`Transport`]: every rank blocks until all
+/// M ranks have entered. Consumes tags `tag_base` and `tag_base + 1`;
+/// callers must space distinct barriers by at least 2 tags (the coordinator
+/// uses the shared `TAG_STRIDE` allocator, which leaves plenty of room).
+pub fn transport_barrier(t: &mut dyn Transport, tag_base: u64) {
+    let m = t.size();
+    if m == 1 {
+        return;
+    }
+    if t.rank() == 0 {
+        for from in 1..m {
+            t.recv_from(from, tag_base);
+        }
+        for to in 1..m {
+            t.send(to, tag_base + 1, Vec::new());
+        }
+    } else {
+        t.send(0, tag_base, Vec::new());
+        t.recv_from(0, tag_base + 1);
+    }
+}
 
 pub struct Barrier {
     lock: Mutex<BarrierState>,
@@ -116,6 +143,31 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(leaders.load(Ordering::SeqCst), generations);
+    }
+
+    #[test]
+    fn transport_barrier_synchronizes_fabric_ranks() {
+        use crate::cluster::fabric::{fabric, NetworkModel};
+        let m = 4;
+        let (eps, _) = fabric(m, NetworkModel::default());
+        let arrived = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for ep in eps {
+            let arrived = arrived.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut ep = ep;
+                // Stagger arrivals so the barrier actually has to hold.
+                std::thread::sleep(std::time::Duration::from_millis(5 * ep.rank as u64));
+                arrived.fetch_add(1, Ordering::SeqCst);
+                transport_barrier(&mut ep, 100);
+                assert_eq!(arrived.load(Ordering::SeqCst), m);
+                // Reusable: a second barrier on fresh tags also completes.
+                transport_barrier(&mut ep, 200);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

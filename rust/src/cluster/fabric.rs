@@ -83,6 +83,21 @@ impl FabricStats {
         self.bytes[from * self.nodes + to].load(Ordering::Relaxed)
     }
 
+    pub fn link_msgs(&self, from: usize, to: usize) -> u64 {
+        self.msgs[from * self.nodes + to].load(Ordering::Relaxed)
+    }
+
+    /// `(bytes, messages)` sent by one rank across all of its outgoing links.
+    pub fn sent_by(&self, from: usize) -> (u64, u64) {
+        let mut bytes = 0;
+        let mut msgs = 0;
+        for to in 0..self.nodes {
+            bytes += self.link_bytes(from, to);
+            msgs += self.link_msgs(from, to);
+        }
+        (bytes, msgs)
+    }
+
     /// Total modeled wire time (seconds).
     pub fn sim_wire_secs(&self) -> f64 {
         self.sim_wire_ns.load(Ordering::Relaxed) as f64 * 1e-9
@@ -139,10 +154,11 @@ pub fn fabric(nodes: usize, model: NetworkModel) -> (Vec<Endpoint>, Arc<FabricSt
 }
 
 impl Endpoint {
-    /// Send a tagged payload to `to`. Accounts bytes (8 per f64 + a fixed
-    /// 16-byte header, mirroring an MPI envelope).
+    /// Send a tagged payload to `to`. Accounts bytes under the shared
+    /// [`frame_bytes`](crate::cluster::transport::frame_bytes) formula
+    /// (8 per f64 + a fixed 16-byte header, mirroring an MPI envelope).
     pub fn send(&self, to: usize, tag: u64, data: Vec<f64>) {
-        let bytes = 16 + 8 * data.len();
+        let bytes = crate::cluster::transport::frame_bytes(data.len()) as usize;
         let idx = self.rank * self.nodes + to;
         self.stats.bytes[idx].fetch_add(bytes as u64, Ordering::Relaxed);
         self.stats.msgs[idx].fetch_add(1, Ordering::Relaxed);
@@ -162,18 +178,24 @@ impl Endpoint {
             .expect("fabric peer hung up");
     }
 
+    /// Pop the oldest parked message for `(from, tag)`, if any.
+    fn take_pending(&mut self, key: (usize, u64)) -> Option<Vec<f64>> {
+        let q = self.pending.get_mut(&key)?;
+        if q.is_empty() {
+            return None;
+        }
+        let msg = q.remove(0);
+        if q.is_empty() {
+            self.pending.remove(&key);
+        }
+        Some(msg.data)
+    }
+
     /// Blocking receive of the next message from `from` with tag `tag`;
     /// other messages arriving meanwhile are parked.
     pub fn recv_from(&mut self, from: usize, tag: u64) -> Vec<f64> {
-        let key = (from, tag);
-        if let Some(q) = self.pending.get_mut(&key) {
-            if !q.is_empty() {
-                let msg = q.remove(0);
-                if q.is_empty() {
-                    self.pending.remove(&key);
-                }
-                return msg.data;
-            }
+        if let Some(data) = self.take_pending((from, tag)) {
+            return data;
         }
         loop {
             let msg = self.receiver.recv().expect("fabric peer hung up");
@@ -187,8 +209,56 @@ impl Endpoint {
         }
     }
 
+    /// Non-blocking receive: drains the mailbox, parking mismatches, and
+    /// returns the first message matching `(from, tag)` if one has arrived.
+    pub fn try_recv_from(&mut self, from: usize, tag: u64) -> Option<Vec<f64>> {
+        if let Some(data) = self.take_pending((from, tag)) {
+            return Some(data);
+        }
+        while let Ok(msg) = self.receiver.try_recv() {
+            if msg.from == from && msg.tag == tag {
+                return Some(msg.data);
+            }
+            self.pending
+                .entry((msg.from, msg.tag))
+                .or_default()
+                .push(msg);
+        }
+        None
+    }
+
     pub fn stats(&self) -> &Arc<FabricStats> {
         &self.stats
+    }
+}
+
+impl crate::cluster::transport::Transport for Endpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.nodes
+    }
+
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) {
+        Endpoint::send(self, to, tag, data);
+    }
+
+    fn recv_from(&mut self, from: usize, tag: u64) -> Vec<f64> {
+        Endpoint::recv_from(self, from, tag)
+    }
+
+    fn try_recv_from(&mut self, from: usize, tag: u64) -> Option<Vec<f64>> {
+        Endpoint::try_recv_from(self, from, tag)
+    }
+
+    fn sent(&self) -> (u64, u64) {
+        self.stats.sent_by(self.rank)
+    }
+
+    fn global_traffic(&self) -> Option<(u64, u64)> {
+        Some((self.stats.total_bytes(), self.stats.total_msgs()))
     }
 }
 

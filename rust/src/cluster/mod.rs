@@ -1,15 +1,21 @@
-//! Simulated cluster substrate: message fabric with byte accounting and a
-//! network cost model, AllReduce collectives (naive + ring), a reusable
-//! instrumented barrier, and the ALB slow-node controller. This is the
-//! stand-in for the paper's 16-node MPI cluster — see DESIGN.md
-//! §Substitutions for why the replacement preserves algorithm behaviour.
+//! Cluster substrate behind the [`Transport`] seam: the in-process message
+//! fabric (byte accounting + network cost model) and the real-socket TCP
+//! mesh both implement the same trait, so collectives (naive + ring
+//! AllReduce), barriers, the ALB slow-node controller, and the coordinator
+//! run unchanged over simulated threads or separate OS processes. See
+//! DESIGN.md §Transport for the seam's accounting guarantees.
 
 pub mod alb;
 pub mod allreduce;
 pub mod barrier;
 pub mod fabric;
+pub mod process;
+pub mod tcp;
+pub mod transport;
 
-pub use alb::AlbController;
+pub use alb::{AlbController, RemoteQuorum};
 pub use allreduce::{allreduce_scalar, allreduce_sum, AllReduceAlgo, TAG_STRIDE};
-pub use barrier::Barrier;
+pub use barrier::{transport_barrier, Barrier};
 pub use fabric::{fabric, Endpoint, FabricStats, NetworkModel};
+pub use tcp::{bind_loopback, TcpOptions, TcpTransport};
+pub use transport::{frame_bytes, Transport};

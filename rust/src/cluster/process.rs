@@ -1,0 +1,564 @@
+//! Multi-process cluster runtime: one coordinator + M−1 worker *processes*
+//! running Algorithm 1 over the TCP transport — the operational shape of the
+//! paper's real d-GLMNET deployment (one JVM/MPI process per node), replacing
+//! the single-process thread simulation.
+//!
+//! Protocol (all over the worker's single listen socket):
+//!
+//! 1. **Control**: the coordinator dials each worker in rank order and sends
+//!    one newline-terminated JSON [`JobSpec`] — rank assignment, the full
+//!    cluster address list, dataset recipe, and solver hyper-parameters.
+//!    The worker acks with `{"ok":true,"rank":r}`. Dialing in rank order
+//!    guarantees the control connection is the first thing each worker's
+//!    listener sees (mesh dials from rank j to rank i < j can only start
+//!    after j received its spec, which the coordinator sent after dialing i).
+//! 2. **Mesh**: every process forms the [`TcpTransport`] full mesh through
+//!    the same listener (handshake-checked rank/size/protocol-version).
+//! 3. **Train**: each process materializes the *identical* dataset from the
+//!    spec's deterministic recipe, shards its own feature block S^m, and
+//!    runs the SPMD worker. The only training traffic is the AllReduce.
+//! 4. **Gather**: workers send β^m to rank 0 on a reserved tag; the
+//!    coordinator reassembles the global model. Each worker finally reports
+//!    its transport accounting on the control connection, so the
+//!    coordinator's Table-2 numbers cover all links.
+//!
+//! Datasets are recipes, not payloads: synthetic corpora are deterministic
+//! in `(name, scale, seed)`, and libsvm paths must be readable by every
+//! process. Engine is native-only here (the XLA runtime is per-process and
+//! orthogonal to the transport); ALB needs the in-process barrier and is
+//! rejected up front.
+
+use crate::cluster::allreduce::AllReduceAlgo;
+use crate::cluster::tcp::{dial_with_backoff, TcpOptions, TcpTransport, PROTOCOL_VERSION};
+use crate::cluster::transport::Transport;
+use crate::coordinator::driver::ClusterFitResult;
+use crate::coordinator::worker::{run_worker, WorkerConfig, WorkerOutput, WorkerShared};
+use crate::data::Splits;
+use crate::glm::loss::LossKind;
+use crate::glm::regularizer::ElasticNet;
+use crate::solver::compute::NativeCompute;
+use crate::solver::linesearch::LineSearchConfig;
+use crate::sparse::FeaturePartition;
+use crate::util::json::{self, Json};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// Reserved tag for the final β^m gather — far above anything the worker's
+/// `TAG_STRIDE` allocator can reach within a run.
+pub const GATHER_TAG: u64 = u64::MAX - 8;
+
+/// Mesh-formation budget for process clusters. Deliberately much larger
+/// than `TcpOptions::default()`: between the job ack and the first mesh
+/// dial every process materializes its dataset from the recipe, and a big
+/// libsvm load must not trip the accept/handshake deadline.
+fn mesh_options() -> TcpOptions {
+    TcpOptions {
+        connect_timeout: Duration::from_secs(600),
+        ..TcpOptions::default()
+    }
+}
+
+/// One training job, as shipped to every rank.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// This process's rank (0 = coordinator).
+    pub rank: usize,
+    /// Listen addresses of all ranks, index = rank.
+    pub cluster: Vec<String>,
+    /// Dataset recipe: corpus name or libsvm path (see `harness::load_splits`).
+    pub dataset: String,
+    pub scale: f64,
+    pub seed: u64,
+    pub loss: String,
+    pub l1: f64,
+    pub l2: f64,
+    pub max_iters: usize,
+    pub mu0: f64,
+    pub adaptive_mu: bool,
+    pub tol: f64,
+    pub patience: usize,
+    /// Test-metric cadence (0 = never; avoids shipping test margins).
+    pub eval_every: usize,
+    pub allreduce: AllReduceAlgo,
+}
+
+impl JobSpec {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("proto", PROTOCOL_VERSION as u64)
+            .set("rank", self.rank)
+            .set(
+                "cluster",
+                Json::Arr(self.cluster.iter().map(|a| Json::Str(a.clone())).collect()),
+            )
+            .set("dataset", self.dataset.as_str())
+            .set("scale", self.scale)
+            // As a string: JSON numbers are f64 here, and a seed above 2^53
+            // would silently round — a worker would then build a different
+            // dataset than the coordinator.
+            .set("seed", self.seed.to_string())
+            .set("loss", self.loss.as_str())
+            .set("l1", self.l1)
+            .set("l2", self.l2)
+            .set("max_iters", self.max_iters)
+            .set("mu0", self.mu0)
+            .set("adaptive_mu", self.adaptive_mu)
+            .set("tol", self.tol)
+            .set("patience", self.patience)
+            .set("eval_every", self.eval_every)
+            .set("allreduce", self.allreduce.name());
+        o
+    }
+
+    pub fn from_json(text: &str) -> Result<JobSpec, String> {
+        let v = json::parse(text.trim())?;
+        let num = |k: &str| -> Result<f64, String> {
+            v.get(k)
+                .and_then(|j| j.as_f64())
+                .ok_or_else(|| format!("job spec missing numeric '{k}'"))
+        };
+        let s = |k: &str| -> Result<String, String> {
+            v.get(k)
+                .and_then(|j| j.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| format!("job spec missing string '{k}'"))
+        };
+        let proto = num("proto")? as u32;
+        if proto != PROTOCOL_VERSION {
+            return Err(format!(
+                "job spec protocol version {proto} != {PROTOCOL_VERSION}"
+            ));
+        }
+        let cluster = match v.get("cluster") {
+            Some(Json::Arr(xs)) => xs
+                .iter()
+                .map(|x| {
+                    x.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| "non-string cluster entry".to_string())
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            _ => return Err("job spec missing 'cluster' list".into()),
+        };
+        if cluster.is_empty() {
+            return Err("job spec has an empty cluster".into());
+        }
+        let adaptive_mu = matches!(v.get("adaptive_mu"), Some(Json::Bool(true)));
+        let allreduce_name = s("allreduce")?;
+        let allreduce = AllReduceAlgo::parse(&allreduce_name)
+            .ok_or_else(|| format!("unknown allreduce algo '{allreduce_name}'"))?;
+        let seed_str = s("seed")?;
+        let seed: u64 = seed_str
+            .parse()
+            .map_err(|e| format!("bad seed '{seed_str}': {e}"))?;
+        let spec = JobSpec {
+            rank: num("rank")? as usize,
+            cluster,
+            dataset: s("dataset")?,
+            scale: num("scale")?,
+            seed,
+            loss: s("loss")?,
+            l1: num("l1")?,
+            l2: num("l2")?,
+            max_iters: num("max_iters")? as usize,
+            mu0: num("mu0")?,
+            adaptive_mu,
+            tol: num("tol")?,
+            patience: num("patience")? as usize,
+            eval_every: num("eval_every")? as usize,
+            allreduce,
+        };
+        if spec.rank >= spec.cluster.len() {
+            return Err(format!(
+                "rank {} out of range for cluster of {}",
+                spec.rank,
+                spec.cluster.len()
+            ));
+        }
+        Ok(spec)
+    }
+
+    fn worker_config(&self) -> WorkerConfig {
+        WorkerConfig {
+            adaptive_mu: self.adaptive_mu,
+            mu0: self.mu0,
+            eta1: 2.0,
+            eta2: 2.0,
+            nu: 1e-6,
+            max_iters: self.max_iters,
+            tol: self.tol,
+            patience: self.patience,
+            linesearch: LineSearchConfig::default(),
+            eval_every: self.eval_every,
+            allreduce: self.allreduce,
+            max_passes: 1, // BSP: ALB needs the in-process barrier
+            chunk: 64,
+            straggler_delay: Duration::ZERO,
+            virtual_time: false,
+            slow_factor: 1.0,
+            network: crate::cluster::fabric::NetworkModel::default(),
+        }
+    }
+}
+
+/// Everything one rank produces: the worker output, the still-open mesh (for
+/// the gather), and the partition (for assembly).
+struct RankRun {
+    output: WorkerOutput,
+    transport: TcpTransport,
+    partition: FeaturePartition,
+}
+
+/// Shard this rank's feature block and run the SPMD training loop over the
+/// mesh. `splits` must come from the spec's recipe (callers that already
+/// materialized it pass it in rather than loading a second copy).
+fn solve_rank(
+    spec: &JobSpec,
+    listener: TcpListener,
+    splits: &Splits,
+) -> anyhow::Result<RankRun> {
+    let m = spec.cluster.len();
+    let kind = LossKind::parse(&spec.loss)
+        .ok_or_else(|| anyhow::anyhow!("unknown loss '{}'", spec.loss))?;
+    let compute = NativeCompute::new(kind);
+    let penalty = ElasticNet::new(spec.l1, spec.l2);
+
+    let partition = FeaturePartition::hashed(splits.train.p(), m, spec.seed);
+    let x_csc = splits.train.to_csc();
+    let shard = partition.shard(&x_csc, spec.rank);
+    let (test_shard, test_y) = if spec.eval_every > 0 {
+        let tx = splits.test.to_csc();
+        (
+            Some(partition.shard(&tx, spec.rank)),
+            Some(splits.test.y.clone()),
+        )
+    } else {
+        (None, None)
+    };
+
+    let mut transport =
+        TcpTransport::with_listener(spec.rank, &spec.cluster, listener, mesh_options())?;
+    let wcfg = spec.worker_config();
+    let shared = WorkerShared {
+        compute: &compute,
+        penalty: &penalty,
+        y: &splits.train.y,
+        test_y: test_y.as_deref(),
+        barrier: None,
+        alb: None,
+        cfg: &wcfg,
+        nodes: m,
+    };
+    let output = run_worker(spec.rank, &shard, test_shard.as_ref(), &mut transport, &shared);
+    Ok(RankRun {
+        output,
+        transport,
+        partition,
+    })
+}
+
+fn write_line(s: &mut TcpStream, j: &Json) -> std::io::Result<()> {
+    s.write_all(j.dump().as_bytes())?;
+    s.write_all(b"\n")?;
+    s.flush()
+}
+
+/// `dglmnet worker --listen ADDR`: serve exactly one training job, then
+/// exit. Returns the job's rank on success.
+pub fn run_worker_process(listen: &str) -> anyhow::Result<usize> {
+    let listener = TcpListener::bind(listen)
+        .map_err(|e| anyhow::anyhow!("bind {listen}: {e}"))?;
+    run_worker_on(listener)
+}
+
+/// Serve one job on an already-bound listener (lets tests and embedders
+/// hold the port from the start instead of bind-drop-rebind racing).
+pub fn run_worker_on(listener: TcpListener) -> anyhow::Result<usize> {
+    // Printed (and flushed) before accepting so launchers can scrape the
+    // resolved port when listening on :0.
+    println!("worker: listening on {}", listener.local_addr()?);
+    std::io::stdout().flush().ok();
+
+    // Keep accepting until a valid job spec arrives: a stray connection
+    // (port scanner, health checker) must neither wedge the worker (reads
+    // are bounded — SO_RCVTIMEO is per socket, so setting it via the write
+    // half covers the reader clone) nor kill it.
+    let (spec, mut ctrl_w) = loop {
+        let (ctrl, peer) = listener.accept()?;
+        let mut ctrl_r = BufReader::new(ctrl.try_clone()?);
+        let ctrl_w = ctrl;
+        ctrl_w.set_read_timeout(Some(Duration::from_secs(60))).ok();
+        let mut line = String::new();
+        let parsed = ctrl_r
+            .read_line(&mut line)
+            .map_err(|e| format!("read failed: {e}"))
+            .and_then(|_| JobSpec::from_json(&line));
+        match parsed {
+            Ok(spec) if spec.rank != 0 => {
+                ctrl_w.set_read_timeout(None).ok();
+                break (spec, ctrl_w);
+            }
+            Ok(_) => eprintln!("worker: ignoring job from {peer}: assigned coordinator rank 0"),
+            Err(e) => eprintln!("worker: ignoring connection from {peer}: {e}"),
+        }
+    };
+    let mut ack = Json::obj();
+    ack.set("ok", true).set("rank", spec.rank);
+    write_line(&mut ctrl_w, &ack)?;
+    println!(
+        "worker: rank {}/{} | dataset={} scale={} loss={} λ1={} λ2={}",
+        spec.rank,
+        spec.cluster.len(),
+        spec.dataset,
+        spec.scale,
+        spec.loss,
+        spec.l1,
+        spec.l2
+    );
+
+    let splits = crate::harness::load_splits(&spec.dataset, spec.scale, spec.seed)?;
+    let run = solve_rank(&spec, listener, &splits)?;
+    let mut transport = run.transport;
+    transport.send(0, GATHER_TAG, run.output.beta_local.clone());
+    // Report traffic AFTER the gather send so the coordinator's totals
+    // really cover every frame this rank put on the wire.
+    let (sent_bytes, sent_msgs) = transport.sent();
+
+    let mut done = Json::obj();
+    done.set("ok", true)
+        .set("rank", spec.rank)
+        .set("iters", run.output.iters)
+        .set("sent_bytes", sent_bytes)
+        .set("sent_msgs", sent_msgs);
+    write_line(&mut ctrl_w, &done)?;
+    drop(transport); // joins the writer threads: the gather frame is flushed
+    println!("worker: rank {} done after {} iterations", spec.rank, run.output.iters);
+    Ok(spec.rank)
+}
+
+/// `dglmnet train --cluster A0,A1,...`: run as coordinator (rank 0, address
+/// `A0`), ship the job to the workers listening at `A1..`, train as one of
+/// the M nodes, and reassemble the global model. `preloaded` lets a caller
+/// that already materialized the spec's dataset recipe (the CLI does, for
+/// its banner and final test scoring) avoid a second full load.
+pub fn train_cluster(
+    spec0: &JobSpec,
+    preloaded: Option<&Splits>,
+) -> anyhow::Result<ClusterFitResult> {
+    anyhow::ensure!(spec0.rank == 0, "coordinator must be rank 0");
+    let owned_splits;
+    let splits = match preloaded {
+        Some(s) => s,
+        None => {
+            owned_splits =
+                crate::harness::load_splits(&spec0.dataset, spec0.scale, spec0.seed)?;
+            &owned_splits
+        }
+    };
+    let m = spec0.cluster.len();
+    let listener = TcpListener::bind(&spec0.cluster[0])
+        .map_err(|e| anyhow::anyhow!("bind {}: {e}", spec0.cluster[0]))?;
+    // Resolve :0 so workers can dial us back for the mesh.
+    let mut cluster = spec0.cluster.clone();
+    cluster[0] = listener.local_addr()?.to_string();
+    let opts = TcpOptions::default();
+
+    // Control phase — dial in rank order (the mesh-ordering invariant).
+    let mut ctrls = Vec::new();
+    for (r, addr) in cluster.iter().enumerate().skip(1) {
+        let mut s = dial_with_backoff(addr, &opts)?;
+        let spec_r = JobSpec {
+            rank: r,
+            cluster: cluster.clone(),
+            ..spec0.clone()
+        };
+        write_line(&mut s, &spec_r.to_json())?;
+        // Ack must arrive promptly; the later done-report read is unbounded
+        // (training takes as long as it takes), so clear the timeout after.
+        s.set_read_timeout(Some(opts.connect_timeout)).ok();
+        let mut br = BufReader::new(s);
+        let mut ack = String::new();
+        br.read_line(&mut ack)
+            .map_err(|e| anyhow::anyhow!("worker {addr} sent no ack: {e}"))?;
+        let ack = json::parse(ack.trim())
+            .map_err(|e| anyhow::anyhow!("worker {addr} sent a bad ack: {e}"))?;
+        anyhow::ensure!(
+            matches!(ack.get("ok"), Some(Json::Bool(true)))
+                && ack.get("rank").and_then(|j| j.as_f64()) == Some(r as f64),
+            "worker {addr} rejected the job: {}",
+            ack.dump()
+        );
+        br.get_ref().set_read_timeout(None).ok();
+        ctrls.push(br);
+    }
+
+    // Train as rank 0 of the mesh.
+    let spec = JobSpec {
+        rank: 0,
+        cluster,
+        ..spec0.clone()
+    };
+    let run = solve_rank(&spec, listener, splits)?;
+    let mut transport = run.transport;
+
+    // Gather β blocks.
+    let mut blocks: Vec<Vec<f64>> = Vec::with_capacity(m);
+    blocks.push(run.output.beta_local.clone());
+    for r in 1..m {
+        let block = transport.recv_from(r, GATHER_TAG);
+        anyhow::ensure!(
+            block.len() == run.partition.blocks[r].len(),
+            "rank {r} gathered {} weights, expected {}",
+            block.len(),
+            run.partition.blocks[r].len()
+        );
+        blocks.push(block);
+    }
+    let beta = run.partition.unshard_weights(&blocks);
+
+    // Collect accounting reports.
+    let mut comm_bytes = run.output.sent_bytes;
+    let mut comm_msgs = run.output.sent_msgs;
+    for br in ctrls.iter_mut() {
+        let mut line = String::new();
+        br.read_line(&mut line)?;
+        let done = json::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("worker sent a bad done report: {e}"))?;
+        comm_bytes += done.get("sent_bytes").and_then(|j| j.as_f64()).unwrap_or(0.0) as u64;
+        comm_msgs += done.get("sent_msgs").and_then(|j| j.as_f64()).unwrap_or(0.0) as u64;
+    }
+    drop(transport);
+
+    let mut trace = run.output.trace.expect("rank 0 produces the trace");
+    trace.dataset = splits.train.name.clone();
+    trace.comm_bytes = comm_bytes;
+    let n = splits.train.n();
+    let max_block = run
+        .partition
+        .blocks
+        .iter()
+        .map(|b| b.len())
+        .max()
+        .unwrap_or(0);
+    Ok(ClusterFitResult {
+        objective: trace.final_objective(),
+        iters: run.output.iters,
+        beta,
+        trace,
+        comm_bytes,
+        comm_msgs,
+        sim_wire_secs: 0.0,
+        barrier_wait_secs: 0.0,
+        peak_node_f64_slots: 4 * n + 2 * max_block,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            rank: 0,
+            cluster: vec!["127.0.0.1:0".into(), "127.0.0.1:7001".into()],
+            dataset: "epsilon_like".into(),
+            scale: 0.05,
+            seed: 3,
+            loss: "logistic".into(),
+            l1: 0.5,
+            l2: 0.1,
+            max_iters: 7,
+            mu0: 1.0,
+            adaptive_mu: true,
+            tol: 1e-7,
+            patience: 2,
+            eval_every: 0,
+            allreduce: AllReduceAlgo::Ring,
+        }
+    }
+
+    #[test]
+    fn job_spec_json_roundtrip() {
+        let s = spec();
+        let text = s.to_json().dump();
+        let back = JobSpec::from_json(&text).unwrap();
+        assert_eq!(back.rank, s.rank);
+        assert_eq!(back.cluster, s.cluster);
+        assert_eq!(back.dataset, s.dataset);
+        assert_eq!(back.scale, s.scale);
+        assert_eq!(back.seed, s.seed);
+        assert_eq!(back.loss, s.loss);
+        assert_eq!(back.l1, s.l1);
+        assert_eq!(back.l2, s.l2);
+        assert_eq!(back.max_iters, s.max_iters);
+        assert_eq!(back.adaptive_mu, s.adaptive_mu);
+        assert_eq!(back.tol, s.tol);
+        assert_eq!(back.patience, s.patience);
+        assert_eq!(back.eval_every, s.eval_every);
+        assert_eq!(back.allreduce, s.allreduce);
+    }
+
+    #[test]
+    fn job_spec_rejects_protocol_mismatch() {
+        let mut j = spec().to_json();
+        j.set("proto", 999u64);
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+    }
+
+    #[test]
+    fn job_spec_rejects_out_of_range_rank() {
+        let mut j = spec().to_json();
+        j.set("rank", 5usize);
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+    }
+
+    /// Full in-test cluster: 1 coordinator + 2 workers as threads of this
+    /// process, each running the real process entry points over loopback.
+    #[test]
+    fn coordinator_and_workers_complete_a_job() {
+        use std::net::TcpListener;
+        // Workers hold their ephemeral ports from the start — no
+        // bind-drop-rebind race against concurrently running tests.
+        let w1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let w2 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a1 = w1.local_addr().unwrap().to_string();
+        let a2 = w2.local_addr().unwrap().to_string();
+        let mut s = spec();
+        s.cluster = vec!["127.0.0.1:0".into(), a1, a2];
+
+        let h1 = std::thread::spawn(move || run_worker_on(w1).unwrap());
+        let h2 = std::thread::spawn(move || run_worker_on(w2).unwrap());
+        let fit = train_cluster(&s, None).unwrap();
+        assert_eq!(h1.join().unwrap(), 1);
+        assert_eq!(h2.join().unwrap(), 2);
+
+        assert!(fit.objective.is_finite());
+        assert!(fit.comm_bytes > 0, "three ranks must have talked");
+
+        // Oracle: identical math to the single-process reference.
+        let splits = crate::harness::load_splits("epsilon_like", 0.05, 3).unwrap();
+        assert_eq!(fit.beta.len(), splits.train.p());
+        let seq = crate::solver::dglmnet::fit(
+            &splits.train,
+            &NativeCompute::new(LossKind::Logistic),
+            &ElasticNet::new(0.5, 0.1),
+            &crate::solver::dglmnet::DGlmnetConfig {
+                nodes: 3,
+                max_iters: 7,
+                tol: 1e-7,
+                patience: 2,
+                seed: 3,
+                eval_every: 0,
+                ..Default::default()
+            },
+            None,
+        );
+        assert!(
+            (fit.objective - seq.objective).abs() / seq.objective.abs() < 1e-6,
+            "cluster {} vs reference {}",
+            fit.objective,
+            seq.objective
+        );
+    }
+}

@@ -1,0 +1,567 @@
+//! Real-socket [`Transport`] backend — the multi-process interconnect.
+//!
+//! One [`TcpTransport`] per rank, a full mesh of duplex TCP connections
+//! (rank i dials every j < i and accepts every j > i, so each pair shares
+//! exactly one connection). Dials retry with exponential backoff because
+//! peers start at different times. Every connection opens with a fixed
+//! 16-byte handshake — magic, protocol version, sender rank, cluster size —
+//! and both sides reject mismatches, so a worker from a differently-sized
+//! (or differently-versioned) job can never splice into a running cluster.
+//!
+//! Data frames are length-prefixed little-endian binary:
+//!
+//! ```text
+//! [tag: u64][len: u64][len × f64]
+//! ```
+//!
+//! i.e. exactly 16 + 8·len wire bytes — the same formula the in-process
+//! fabric charges, so per-link accounting (and the Table 2 reproduction) is
+//! backend-independent.
+//!
+//! Threading: each peer connection gets one reader thread (parses frames,
+//! pushes them into a shared mailbox) and one writer thread (drains an
+//! unbounded queue). Sends therefore never block the solver, which rules out
+//! the classic ring-allreduce deadlock where every rank's blocking send
+//! waits on a full socket buffer. Receive-side tag parking is identical to
+//! the fabric's.
+
+use crate::cluster::transport::{frame_bytes, Transport};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// Handshake magic ("dGLM" little-endian) — rejects strangers early.
+const MAGIC: u32 = 0x4D4C_4764;
+/// Bump on any wire-format change; both sides must agree.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Dial / handshake tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct TcpOptions {
+    /// Give up dialing a peer after this long.
+    pub connect_timeout: Duration,
+    /// First retry delay; doubles per attempt up to `max_backoff`.
+    pub backoff: Duration,
+    pub max_backoff: Duration,
+}
+
+impl Default for TcpOptions {
+    fn default() -> Self {
+        TcpOptions {
+            connect_timeout: Duration::from_secs(30),
+            backoff: Duration::from_millis(20),
+            max_backoff: Duration::from_millis(500),
+        }
+    }
+}
+
+struct Inbound {
+    from: usize,
+    tag: u64,
+    data: Vec<f64>,
+}
+
+/// Reserved tag a dying reader thread posts to the inbox so receivers can
+/// tell "peer gone" from "message not here yet". Never collides with user
+/// tags (the worker's allocator hands out multiples of `TAG_STRIDE`; the
+/// gather tag is `u64::MAX - 8`).
+const POISON_TAG: u64 = u64::MAX;
+
+/// One rank's attachment to the TCP mesh.
+pub struct TcpTransport {
+    rank: usize,
+    size: usize,
+    /// Per-peer writer queues (`None` at our own rank).
+    writers: Vec<Option<Sender<(u64, Vec<f64>)>>>,
+    inbox: Receiver<Inbound>,
+    pending: HashMap<(usize, u64), Vec<Inbound>>,
+    /// Peers whose reader thread has exited (connection closed or corrupt).
+    dead: Vec<bool>,
+    /// Per-destination sent accounting (bytes, msgs), index = peer rank.
+    sent_bytes: Vec<u64>,
+    sent_msgs: Vec<u64>,
+    /// Kept so Drop can shut the read halves down and wake the readers.
+    streams: Vec<Option<TcpStream>>,
+    reader_threads: Vec<std::thread::JoinHandle<()>>,
+    writer_threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Bind `m` loopback listeners on ephemeral ports; returns the resolved
+/// `host:port` list (index = rank) plus the listeners to hand to
+/// [`TcpTransport::with_listener`]. Test/demo helper.
+pub fn bind_loopback(m: usize) -> std::io::Result<(Vec<String>, Vec<TcpListener>)> {
+    let mut addrs = Vec::with_capacity(m);
+    let mut listeners = Vec::with_capacity(m);
+    for _ in 0..m {
+        let l = TcpListener::bind("127.0.0.1:0")?;
+        addrs.push(l.local_addr()?.to_string());
+        listeners.push(l);
+    }
+    Ok((addrs, listeners))
+}
+
+fn write_handshake(s: &mut TcpStream, rank: usize, size: usize) -> std::io::Result<()> {
+    let mut buf = [0u8; 16];
+    buf[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    buf[4..8].copy_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    buf[8..12].copy_from_slice(&(rank as u32).to_le_bytes());
+    buf[12..16].copy_from_slice(&(size as u32).to_le_bytes());
+    s.write_all(&buf)?;
+    s.flush()
+}
+
+/// Read and validate a peer handshake; returns the peer's rank.
+fn read_handshake(s: &mut TcpStream, size: usize) -> anyhow::Result<usize> {
+    let mut buf = [0u8; 16];
+    s.read_exact(&mut buf)?;
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    let rank = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    let peer_size = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
+    if magic != MAGIC {
+        anyhow::bail!("handshake: bad magic {magic:#x} (not a dglmnet peer)");
+    }
+    if version != PROTOCOL_VERSION {
+        anyhow::bail!(
+            "handshake: protocol version {version} != {PROTOCOL_VERSION}"
+        );
+    }
+    if peer_size != size {
+        anyhow::bail!("handshake: peer cluster size {peer_size} != ours {size}");
+    }
+    if rank >= size {
+        anyhow::bail!("handshake: peer rank {rank} out of range for size {size}");
+    }
+    Ok(rank)
+}
+
+/// Dial `addr`, retrying with exponential backoff until `connect_timeout`
+/// elapses — peers of a forming cluster come up at different times. Each
+/// attempt is itself bounded (`connect_timeout` is a hard overall budget:
+/// a SYN-dropping firewalled host must not stall us for the OS's
+/// minutes-long SYN retry cycle).
+pub fn dial_with_backoff(addr: &str, opts: &TcpOptions) -> anyhow::Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    let deadline = Instant::now() + opts.connect_timeout;
+    let mut backoff = opts.backoff;
+    loop {
+        let attempt = addr
+            .to_socket_addrs()
+            .map_err(anyhow::Error::from)
+            .and_then(|mut it| {
+                it.next()
+                    .ok_or_else(|| anyhow::anyhow!("'{addr}' resolves to no addresses"))
+            })
+            .and_then(|sa| {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                let per_attempt = remaining
+                    .min(Duration::from_secs(5))
+                    .max(Duration::from_millis(10));
+                TcpStream::connect_timeout(&sa, per_attempt).map_err(anyhow::Error::from)
+            });
+        match attempt {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() + backoff >= deadline {
+                    anyhow::bail!("dial {addr}: {e} (gave up after {:?})", opts.connect_timeout);
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(opts.max_backoff);
+            }
+        }
+    }
+}
+
+/// Accept one connection, giving up at `deadline` — a peer that died
+/// before dialing in must not hang mesh formation forever.
+fn accept_with_deadline(listener: &TcpListener, deadline: Instant) -> anyhow::Result<TcpStream> {
+    listener.set_nonblocking(true).ok();
+    let res = loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                // Some platforms hand the accepted socket down nonblocking.
+                s.set_nonblocking(false).ok();
+                break Ok(s);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    break Err(anyhow::anyhow!(
+                        "timed out waiting for a peer to dial in"
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => break Err(e.into()),
+        }
+    };
+    listener.set_nonblocking(false).ok();
+    res
+}
+
+impl TcpTransport {
+    /// Bind `addrs[rank]` and form the mesh. `addrs` must list every rank's
+    /// listen address, identically ordered on every process.
+    pub fn connect(rank: usize, addrs: &[String], opts: TcpOptions) -> anyhow::Result<TcpTransport> {
+        let listener = TcpListener::bind(&addrs[rank])
+            .map_err(|e| anyhow::anyhow!("bind {}: {e}", addrs[rank]))?;
+        Self::with_listener(rank, addrs, listener, opts)
+    }
+
+    /// Form the mesh over an already-bound listener (the worker runtime
+    /// reuses its control listener for mesh accepts).
+    pub fn with_listener(
+        rank: usize,
+        addrs: &[String],
+        listener: TcpListener,
+        opts: TcpOptions,
+    ) -> anyhow::Result<TcpTransport> {
+        let size = addrs.len();
+        assert!(rank < size, "rank {rank} out of range for {size} addrs");
+        let mut conns: Vec<Option<TcpStream>> = (0..size).map(|_| None).collect();
+
+        // Dial every lower rank (they are already listening or soon will
+        // be — hence the backoff), then accept every higher rank.
+        for peer in 0..rank {
+            let mut s = dial_with_backoff(&addrs[peer], &opts)?;
+            s.set_nodelay(true).ok();
+            // Bounded handshake: a dead peer must not hang mesh formation.
+            s.set_read_timeout(Some(opts.connect_timeout)).ok();
+            write_handshake(&mut s, rank, size)?;
+            let got = read_handshake(&mut s, size)?;
+            if got != peer {
+                anyhow::bail!("dialed {} expecting rank {peer}, got rank {got}", addrs[peer]);
+            }
+            s.set_read_timeout(None).ok();
+            conns[peer] = Some(s);
+        }
+        let accept_deadline = Instant::now() + opts.connect_timeout;
+        for _ in rank + 1..size {
+            let mut s = accept_with_deadline(&listener, accept_deadline)?;
+            s.set_nodelay(true).ok();
+            s.set_read_timeout(Some(opts.connect_timeout)).ok();
+            let peer = read_handshake(&mut s, size)?;
+            if peer <= rank {
+                anyhow::bail!("accepted unexpected dial from lower rank {peer}");
+            }
+            if conns[peer].is_some() {
+                anyhow::bail!("rank {peer} connected twice");
+            }
+            write_handshake(&mut s, rank, size)?;
+            s.set_read_timeout(None).ok();
+            conns[peer] = Some(s);
+        }
+
+        // Spawn one reader + one writer per peer connection.
+        let (inbox_tx, inbox_rx) = channel::<Inbound>();
+        let mut writers: Vec<Option<Sender<(u64, Vec<f64>)>>> =
+            (0..size).map(|_| None).collect();
+        let mut reader_threads = Vec::new();
+        let mut writer_threads = Vec::new();
+        let mut streams: Vec<Option<TcpStream>> = (0..size).map(|_| None).collect();
+        for (peer, conn) in conns.into_iter().enumerate() {
+            let Some(stream) = conn else { continue };
+            let read_half = stream.try_clone()?;
+            let write_half = stream.try_clone()?;
+            streams[peer] = Some(stream);
+
+            let tx = inbox_tx.clone();
+            reader_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("tcp-rx-{rank}-{peer}"))
+                    .spawn(move || reader_loop(read_half, peer, tx))?,
+            );
+
+            let (wtx, wrx) = channel::<(u64, Vec<f64>)>();
+            writers[peer] = Some(wtx);
+            writer_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("tcp-tx-{rank}-{peer}"))
+                    .spawn(move || writer_loop(write_half, wrx))?,
+            );
+        }
+        drop(inbox_tx);
+
+        Ok(TcpTransport {
+            rank,
+            size,
+            writers,
+            inbox: inbox_rx,
+            pending: HashMap::new(),
+            dead: vec![false; size],
+            sent_bytes: vec![0; size],
+            sent_msgs: vec![0; size],
+            streams,
+            reader_threads,
+            writer_threads,
+        })
+    }
+
+    /// Bytes this endpoint has sent to `to` (per-link accounting).
+    pub fn link_sent(&self, to: usize) -> (u64, u64) {
+        (self.sent_bytes[to], self.sent_msgs[to])
+    }
+
+    fn take_pending(&mut self, key: (usize, u64)) -> Option<Vec<f64>> {
+        if let Some(q) = self.pending.get_mut(&key) {
+            if !q.is_empty() {
+                let msg = q.remove(0);
+                if q.is_empty() {
+                    self.pending.remove(&key);
+                }
+                return Some(msg.data);
+            }
+        }
+        None
+    }
+}
+
+/// Upper bound on doubles per frame (1 GiB payload) — far above any XΔβ
+/// vector; a length beyond it can only be a corrupt or hostile header, and
+/// trusting it would mean a huge allocation or a desynced frame stream.
+const MAX_FRAME_DOUBLES: u64 = 1 << 27;
+
+fn reader_loop(mut s: TcpStream, from: usize, tx: Sender<Inbound>) {
+    let mut header = [0u8; 16];
+    loop {
+        if s.read_exact(&mut header).is_err() {
+            break; // peer closed (or our Drop shut the socket down)
+        }
+        let tag = u64::from_le_bytes(header[0..8].try_into().unwrap());
+        let len64 = u64::from_le_bytes(header[8..16].try_into().unwrap());
+        if len64 > MAX_FRAME_DOUBLES {
+            eprintln!("tcp: dropping link to rank {from}: corrupt frame length {len64}");
+            break;
+        }
+        let len = len64 as usize;
+        let mut payload = vec![0u8; 8 * len];
+        if s.read_exact(&mut payload).is_err() {
+            break;
+        }
+        let data: Vec<f64> = payload
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        if tx.send(Inbound { from, tag, data }).is_err() {
+            return; // transport dropped; no one left to poison
+        }
+    }
+    // Post a poison marker so a rank blocked on this peer fails loudly
+    // instead of waiting forever (the fabric backend panics likewise).
+    let _ = tx.send(Inbound {
+        from,
+        tag: POISON_TAG,
+        data: Vec::new(),
+    });
+}
+
+fn writer_loop(s: TcpStream, rx: Receiver<(u64, Vec<f64>)>) {
+    let mut out = std::io::BufWriter::new(s);
+    for (tag, data) in rx {
+        let mut header = [0u8; 16];
+        header[0..8].copy_from_slice(&tag.to_le_bytes());
+        header[8..16].copy_from_slice(&(data.len() as u64).to_le_bytes());
+        if out.write_all(&header).is_err() {
+            return;
+        }
+        for v in &data {
+            if out.write_all(&v.to_le_bytes()).is_err() {
+                return;
+            }
+        }
+        // Frames gate collectives, so latency beats batching: flush each.
+        if out.flush().is_err() {
+            return;
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) {
+        assert!(to != self.rank, "self-send over TCP");
+        self.sent_bytes[to] += frame_bytes(data.len());
+        self.sent_msgs[to] += 1;
+        self.writers[to]
+            .as_ref()
+            .expect("no connection to peer")
+            .send((tag, data))
+            .expect("tcp peer hung up");
+    }
+
+    fn recv_from(&mut self, from: usize, tag: u64) -> Vec<f64> {
+        if let Some(data) = self.take_pending((from, tag)) {
+            return data;
+        }
+        if self.dead[from] {
+            panic!("tcp peer {from} hung up");
+        }
+        loop {
+            let msg = self.inbox.recv().expect("all tcp peers hung up");
+            if msg.tag == POISON_TAG {
+                self.dead[msg.from] = true;
+                if msg.from == from {
+                    panic!("tcp peer {from} hung up");
+                }
+                continue;
+            }
+            if msg.from == from && msg.tag == tag {
+                return msg.data;
+            }
+            self.pending.entry((msg.from, msg.tag)).or_default().push(msg);
+        }
+    }
+
+    fn try_recv_from(&mut self, from: usize, tag: u64) -> Option<Vec<f64>> {
+        if let Some(data) = self.take_pending((from, tag)) {
+            return Some(data);
+        }
+        while let Ok(msg) = self.inbox.try_recv() {
+            if msg.tag == POISON_TAG {
+                self.dead[msg.from] = true;
+                continue;
+            }
+            if msg.from == from && msg.tag == tag {
+                return Some(msg.data);
+            }
+            self.pending.entry((msg.from, msg.tag)).or_default().push(msg);
+        }
+        None
+    }
+
+    fn sent(&self) -> (u64, u64) {
+        (
+            self.sent_bytes.iter().sum(),
+            self.sent_msgs.iter().sum(),
+        )
+    }
+
+    fn global_traffic(&self) -> Option<(u64, u64)> {
+        None // a TCP endpoint only observes its own links
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // 1. Close the writer queues and join the writers: they drain and
+        //    flush every queued frame before exiting, so messages already
+        //    sent (e.g. the final β gather) are guaranteed delivered before
+        //    the socket goes away.
+        for w in self.writers.iter_mut() {
+            w.take();
+        }
+        for h in self.writer_threads.drain(..) {
+            let _ = h.join();
+        }
+        // 2. Only now shut the sockets down — this wakes our blocking
+        //    readers and signals EOF to peers still reading.
+        for s in self.streams.iter().flatten() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        for h in self.reader_threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handshake_rejects_wrong_size() {
+        let (addrs, mut listeners) = bind_loopback(2).unwrap();
+        let l1 = listeners.pop().unwrap();
+        let l0 = listeners.pop().unwrap();
+        drop(l0);
+        // Rank 1 of a 2-cluster dials rank 0, but the "rank 0" answering
+        // believes the cluster has 3 nodes → both sides must fail.
+        let a1 = addrs[1].clone();
+        let h = std::thread::spawn(move || {
+            // fake rank-0 side with size 3 accepting on rank 1's slot
+            let (mut s, _) = l1.accept().unwrap();
+            let r = read_handshake(&mut s, 3);
+            assert!(r.is_err(), "size mismatch must be rejected: {r:?}");
+        });
+        let mut s = dial_with_backoff(&a1, &TcpOptions::default()).unwrap();
+        write_handshake(&mut s, 1, 2).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn handshake_rejects_bad_magic() {
+        let (addrs, mut listeners) = bind_loopback(1).unwrap();
+        let l0 = listeners.pop().unwrap();
+        let a0 = addrs[0].clone();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = l0.accept().unwrap();
+            assert!(read_handshake(&mut s, 2).is_err());
+        });
+        let mut s = TcpStream::connect(&a0).unwrap();
+        s.write_all(b"GET / HTTP/1.1\r\n").unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn two_rank_roundtrip_with_accounting() {
+        let (addrs, listeners) = bind_loopback(2).unwrap();
+        let mut ts: Vec<Option<TcpTransport>> = vec![None, None];
+        std::thread::scope(|sc| {
+            let mut handles = Vec::new();
+            for (rank, l) in listeners.into_iter().enumerate() {
+                let addrs = addrs.clone();
+                handles.push(sc.spawn(move || {
+                    TcpTransport::with_listener(rank, &addrs, l, TcpOptions::default()).unwrap()
+                }));
+            }
+            for (rank, h) in handles.into_iter().enumerate() {
+                ts[rank] = Some(h.join().unwrap());
+            }
+        });
+        let mut t1 = ts.pop().unwrap().unwrap();
+        let mut t0 = ts.pop().unwrap().unwrap();
+        std::thread::scope(|sc| {
+            sc.spawn(move || {
+                t1.send(0, 7, vec![1.0, 2.0, 3.0]);
+                let back = t1.recv_from(0, 8);
+                assert_eq!(back, vec![6.0]);
+                assert_eq!(t1.sent(), (16 + 24, 1));
+            });
+            let got = t0.recv_from(1, 7);
+            assert_eq!(got, vec![1.0, 2.0, 3.0]);
+            t0.send(1, 8, vec![got.iter().sum()]);
+            assert_eq!(t0.sent(), (16 + 8, 1));
+        });
+    }
+
+    #[test]
+    fn dial_backoff_waits_for_late_listener() {
+        // Bind rank 1's port, release it, and only re-bind after a delay;
+        // rank 1's dial of rank 0 must succeed thanks to backoff.
+        let (addrs, mut listeners) = bind_loopback(2).unwrap();
+        let l1 = listeners.pop().unwrap();
+        let l0 = listeners.pop().unwrap();
+        let addr0 = addrs[0].clone();
+        drop(l0); // rank 0 not listening yet
+        let addrs1 = addrs.clone();
+        let h1 = std::thread::spawn(move || {
+            TcpTransport::with_listener(1, &addrs1, l1, TcpOptions::default()).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(150));
+        let l0 = TcpListener::bind(&addr0).unwrap();
+        let t0 =
+            TcpTransport::with_listener(0, &addrs, l0, TcpOptions::default()).unwrap();
+        let mut t1 = h1.join().unwrap();
+        let mut t0 = t0;
+        t0.send(1, 1, vec![42.0]);
+        assert_eq!(t1.recv_from(0, 1), vec![42.0]);
+    }
+}

@@ -1,0 +1,71 @@
+//! The `Transport` seam — the interconnect abstraction every collective and
+//! coordinator call site is written against.
+//!
+//! d-GLMNET's communication needs are tiny (tagged point-to-point sends of
+//! f64 vectors; everything else — AllReduce, barriers, gathers — is built on
+//! top), so the trait is deliberately minimal. Two backends implement it:
+//!
+//! * [`fabric::Endpoint`](crate::cluster::fabric::Endpoint) — the in-process
+//!   mailbox fabric (one thread per simulated node, shared counters, optional
+//!   modeled wire time). This is the simulation substrate used by the bench
+//!   harness and by `fit_distributed`.
+//! * [`tcp::TcpTransport`](crate::cluster::tcp::TcpTransport) — real sockets:
+//!   a full mesh of per-peer TCP connections speaking length-prefixed binary
+//!   frames, used by the `dglmnet worker` / `dglmnet train --cluster`
+//!   multi-process runtime.
+//!
+//! Contract (verified by `rust/tests/transport_conformance.rs` against both
+//! backends):
+//!
+//! 1. **Ordered per (peer, tag)**: messages from one sender with one tag are
+//!    received in send order (FIFO).
+//! 2. **Tag isolation**: `recv_from(from, tag)` never returns a message with
+//!    a different `(from, tag)`; mismatching arrivals are parked, not lost.
+//! 3. **Accounting**: every `send` of `k` doubles adds exactly
+//!    `16 + 8·k` bytes and one message to this endpoint's [`sent`] counters
+//!    (16 bytes = the frame header: tag + length, mirroring an MPI
+//!    envelope). Both backends use the same formula, so the Table 2
+//!    communication numbers are backend-independent.
+//!
+//! [`sent`]: Transport::sent
+
+/// A cluster interconnect endpoint owned by one rank.
+///
+/// All methods take `&mut self`: backends keep per-endpoint receive state
+/// (the out-of-order parking map), and the SPMD solver never shares an
+/// endpoint between threads.
+pub trait Transport: Send {
+    /// This endpoint's rank in `0..size()`.
+    fn rank(&self) -> usize;
+
+    /// Number of endpoints in the cluster (the paper's M).
+    fn size(&self) -> usize;
+
+    /// Send a tagged payload to rank `to`. Must not deadlock against a peer
+    /// that is not currently receiving (backends buffer or queue).
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f64>);
+
+    /// Blocking receive of the next message from `from` with tag `tag`.
+    /// Messages with other `(from, tag)` keys arriving meanwhile are parked.
+    fn recv_from(&mut self, from: usize, tag: u64) -> Vec<f64>;
+
+    /// Non-blocking variant: returns `None` when no matching message has
+    /// arrived yet (used by the transport-level ALB quorum).
+    fn try_recv_from(&mut self, from: usize, tag: u64) -> Option<Vec<f64>>;
+
+    /// `(bytes, messages)` sent by this endpoint since creation, under the
+    /// shared 16 + 8·len accounting formula.
+    fn sent(&self) -> (u64, u64);
+
+    /// Cluster-wide `(bytes, messages)` across all links, when the backend
+    /// can observe them (the in-process fabric can; TCP endpoints only see
+    /// their own traffic and return `None`).
+    fn global_traffic(&self) -> Option<(u64, u64)>;
+}
+
+/// Wire-accounting cost of one payload: the shared 16-byte envelope plus
+/// 8 bytes per double. Single source of truth for both backends.
+#[inline]
+pub fn frame_bytes(len: usize) -> u64 {
+    16 + 8 * len as u64
+}

@@ -1,11 +1,19 @@
-//! Driver: builds the feature partition, shards the data, wires the fabric /
-//! barrier / ALB controller, spawns one worker thread per simulated node and
-//! assembles the global model from the per-node blocks.
+//! Driver: builds the feature partition, shards the data, wires the
+//! transport / barrier / ALB controller, spawns one worker thread per node
+//! and assembles the global model from the per-node blocks.
+//!
+//! Two entry points share all of the above through the [`Transport`] seam:
+//! [`fit_distributed`] (in-process fabric, the simulation substrate with
+//! modeled wire time and ALB) and [`fit_distributed_tcp`] (one thread per
+//! rank, each talking real length-prefixed TCP over loopback — the
+//! single-process proof of the socket backend; `dglmnet train --cluster`
+//! runs the same worker across separate OS processes).
 
 use crate::cluster::alb::AlbController;
 use crate::cluster::allreduce::AllReduceAlgo;
 use crate::cluster::barrier::Barrier;
 use crate::cluster::fabric::{fabric, NetworkModel};
+use crate::cluster::tcp::{bind_loopback, TcpOptions, TcpTransport};
 use crate::data::Dataset;
 use crate::glm::regularizer::Penalty1D;
 use crate::solver::compute::GlmCompute;
@@ -94,16 +102,19 @@ pub struct ClusterFitResult {
     pub peak_node_f64_slots: usize,
 }
 
-/// Train d-GLMNET (or d-GLMNET-ALB when `alb_kappa` is set) on a simulated
-/// cluster of `cfg.nodes` threads.
-pub fn fit_distributed(
+/// Shared prep: partition, shards, and the per-worker base config.
+struct ClusterPlan {
+    partition: FeaturePartition,
+    shards: Vec<Csc>,
+    test_shards: Option<Vec<Csc>>,
+    worker_cfg_base: WorkerConfig,
+}
+
+fn plan_cluster(
     train: &Dataset,
     test: Option<&Dataset>,
-    compute: &dyn GlmCompute,
-    penalty: &dyn Penalty1D,
     cfg: &DistributedConfig,
-) -> ClusterFitResult {
-    let n = train.n();
+) -> ClusterPlan {
     let p = train.p();
     let partition = FeaturePartition::hashed(p, cfg.nodes, cfg.seed);
     let x_csc = train.to_csc();
@@ -112,13 +123,6 @@ pub fn fit_distributed(
         let tx = t.to_csc();
         (0..cfg.nodes).map(|m| partition.shard(&tx, m)).collect()
     });
-
-    let (endpoints, stats) = fabric(cfg.nodes, cfg.network);
-    let barrier = Barrier::new(cfg.nodes);
-    let alb = cfg
-        .alb_kappa
-        .map(|kappa| AlbController::new(cfg.nodes, kappa));
-
     let worker_cfg_base = WorkerConfig {
         adaptive_mu: cfg.adaptive_mu,
         mu0: cfg.mu0,
@@ -142,6 +146,72 @@ pub fn fit_distributed(
         slow_factor: 1.0,
         network: cfg.network,
     };
+    ClusterPlan {
+        partition,
+        shards,
+        test_shards,
+        worker_cfg_base,
+    }
+}
+
+/// Assemble the per-node blocks into the global result. Communication
+/// totals come from the workers' transport accounting, so the numbers are
+/// identical across backends.
+fn assemble_result(
+    train: &Dataset,
+    partition: &FeaturePartition,
+    outputs: Vec<crate::coordinator::worker::WorkerOutput>,
+    sim_wire_secs: f64,
+    barrier_wait_secs: f64,
+) -> ClusterFitResult {
+    let n = train.n();
+    let block_weights: Vec<Vec<f64>> = outputs.iter().map(|o| o.beta_local.clone()).collect();
+    let beta = partition.unshard_weights(&block_weights);
+
+    let comm_bytes: u64 = outputs.iter().map(|o| o.sent_bytes).sum();
+    let comm_msgs: u64 = outputs.iter().map(|o| o.sent_msgs).sum();
+
+    let mut trace = outputs
+        .iter()
+        .find_map(|o| o.trace.clone())
+        .expect("rank 0 must produce a trace");
+    trace.dataset = train.name.clone();
+    trace.comm_bytes = comm_bytes;
+
+    // Peak per-node memory: 4 n-vectors (margins, dmargins, w, z) + 2 local
+    // weight vectors; the paper counts 3n + 2|S^m| (it streams w,z fused
+    // with the data pass — we hold them, +1n, see DESIGN.md).
+    let max_block = partition.blocks.iter().map(|b| b.len()).max().unwrap_or(0);
+    let peak = 4 * n + 2 * max_block;
+
+    ClusterFitResult {
+        objective: trace.final_objective(),
+        iters: outputs[0].iters,
+        beta,
+        trace,
+        comm_bytes,
+        comm_msgs,
+        sim_wire_secs,
+        barrier_wait_secs,
+        peak_node_f64_slots: peak,
+    }
+}
+
+/// Train d-GLMNET (or d-GLMNET-ALB when `alb_kappa` is set) on a simulated
+/// cluster of `cfg.nodes` threads over the in-process fabric.
+pub fn fit_distributed(
+    train: &Dataset,
+    test: Option<&Dataset>,
+    compute: &dyn GlmCompute,
+    penalty: &dyn Penalty1D,
+    cfg: &DistributedConfig,
+) -> ClusterFitResult {
+    let plan = plan_cluster(train, test, cfg);
+    let (endpoints, stats) = fabric(cfg.nodes, cfg.network);
+    let barrier = Barrier::new(cfg.nodes);
+    let alb = cfg
+        .alb_kappa
+        .map(|kappa| AlbController::new(cfg.nodes, kappa));
 
     let mut outputs: Vec<Option<crate::coordinator::worker::WorkerOutput>> =
         (0..cfg.nodes).map(|_| None).collect();
@@ -149,9 +219,9 @@ pub fn fit_distributed(
     crossbeam_utils::thread::scope(|scope| {
         let mut handles = Vec::new();
         for (rank, ep) in endpoints.into_iter().enumerate() {
-            let shard = &shards[rank];
-            let test_shard = test_shards.as_ref().map(|ts| &ts[rank]);
-            let mut wcfg = worker_cfg_base.clone();
+            let shard = &plan.shards[rank];
+            let test_shard = plan.test_shards.as_ref().map(|ts| &ts[rank]);
+            let mut wcfg = plan.worker_cfg_base.clone();
             if let Some(d) = cfg.straggler_delays.get(rank) {
                 wcfg.straggler_delay = *d;
             }
@@ -169,12 +239,13 @@ pub fn fit_distributed(
                     penalty,
                     y,
                     test_y,
-                    barrier: barrier_ref,
+                    barrier: Some(barrier_ref),
                     alb: alb_ref,
                     cfg: &wcfg,
                     nodes,
                 };
-                run_worker(rank, shard, test_shard, ep, &shared)
+                let mut ep = ep;
+                run_worker(rank, shard, test_shard, &mut ep, &shared)
             }));
         }
         for h in handles {
@@ -187,35 +258,86 @@ pub fn fit_distributed(
 
     let outputs: Vec<crate::coordinator::worker::WorkerOutput> =
         outputs.into_iter().map(|o| o.unwrap()).collect();
+    debug_assert_eq!(
+        outputs.iter().map(|o| o.sent_bytes).sum::<u64>(),
+        stats.total_bytes(),
+        "fabric global accounting must equal the sum of per-endpoint sends"
+    );
+    assemble_result(
+        train,
+        &plan.partition,
+        outputs,
+        stats.sim_wire_secs(),
+        barrier.total_wait_secs(),
+    )
+}
 
-    // Reassemble the global weight vector from the blocks.
-    let block_weights: Vec<Vec<f64>> = outputs.iter().map(|o| o.beta_local.clone()).collect();
-    let beta = partition.unshard_weights(&block_weights);
+/// Train d-GLMNET over real TCP sockets on loopback: one thread per rank,
+/// each owning a [`TcpTransport`] endpoint of a full mesh — the same worker
+/// code as [`fit_distributed`], exercising the wire protocol end to end.
+/// BSP only: ALB's generation reset needs a shared-memory barrier, which
+/// separate processes don't have (see `cluster::alb::RemoteQuorum` for the
+/// distributed quorum building block).
+pub fn fit_distributed_tcp(
+    train: &Dataset,
+    test: Option<&Dataset>,
+    compute: &dyn GlmCompute,
+    penalty: &dyn Penalty1D,
+    cfg: &DistributedConfig,
+) -> anyhow::Result<ClusterFitResult> {
+    anyhow::ensure!(
+        cfg.alb_kappa.is_none(),
+        "ALB requires the in-process fabric (shared-memory barrier)"
+    );
+    let plan = plan_cluster(train, test, cfg);
+    let (addrs, listeners) = bind_loopback(cfg.nodes)?;
 
-    let mut trace = outputs
-        .iter()
-        .find_map(|o| o.trace.clone())
-        .expect("rank 0 must produce a trace");
-    trace.dataset = train.name.clone();
-    trace.comm_bytes = stats.total_bytes();
+    let mut outputs: Vec<Option<crate::coordinator::worker::WorkerOutput>> =
+        (0..cfg.nodes).map(|_| None).collect();
 
-    // Peak per-node memory: 4 n-vectors (margins, dmargins, w, z) + 2 local
-    // weight vectors; the paper counts 3n + 2|S^m| (it streams w,z fused
-    // with the data pass — we hold them, +1n, see DESIGN.md).
-    let max_block = partition.blocks.iter().map(|b| b.len()).max().unwrap_or(0);
-    let peak = 4 * n + 2 * max_block;
+    crossbeam_utils::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (rank, listener) in listeners.into_iter().enumerate() {
+            let shard = &plan.shards[rank];
+            let test_shard = plan.test_shards.as_ref().map(|ts| &ts[rank]);
+            let mut wcfg = plan.worker_cfg_base.clone();
+            if let Some(d) = cfg.straggler_delays.get(rank) {
+                wcfg.straggler_delay = *d;
+            }
+            if let Some(f) = cfg.slow_factors.get(rank) {
+                wcfg.slow_factor = *f;
+            }
+            let y = train.y.as_slice();
+            let test_y = test.map(|t| t.y.as_slice());
+            let addrs = addrs.clone();
+            handles.push(scope.spawn(move |_| {
+                let mut t =
+                    TcpTransport::with_listener(rank, &addrs, listener, TcpOptions::default())
+                        .expect("tcp mesh formation failed");
+                let shared = WorkerShared {
+                    compute,
+                    penalty,
+                    y,
+                    test_y,
+                    barrier: None,
+                    alb: None,
+                    cfg: &wcfg,
+                    nodes: cfg.nodes,
+                };
+                run_worker(rank, shard, test_shard, &mut t, &shared)
+            }));
+        }
+        for h in handles {
+            let out = h.join().expect("worker panicked");
+            let rank = out.rank;
+            outputs[rank] = Some(out);
+        }
+    })
+    .expect("cluster scope failed");
 
-    ClusterFitResult {
-        objective: trace.final_objective(),
-        iters: outputs[0].iters,
-        beta,
-        trace,
-        comm_bytes: stats.total_bytes(),
-        comm_msgs: stats.total_msgs(),
-        sim_wire_secs: stats.sim_wire_secs(),
-        barrier_wait_secs: barrier.total_wait_secs(),
-        peak_node_f64_slots: peak,
-    }
+    let outputs: Vec<crate::coordinator::worker::WorkerOutput> =
+        outputs.into_iter().map(|o| o.unwrap()).collect();
+    Ok(assemble_result(train, &plan.partition, outputs, 0.0, 0.0))
 }
 
 #[cfg(test)]

@@ -6,4 +6,4 @@
 pub mod driver;
 pub mod worker;
 
-pub use driver::{fit_distributed, ClusterFitResult, DistributedConfig};
+pub use driver::{fit_distributed, fit_distributed_tcp, ClusterFitResult, DistributedConfig};

@@ -8,11 +8,15 @@
 //! sums, test-margin partial sums), and control decisions (line-search α,
 //! convergence) are re-derived identically on every node from the reduced
 //! values — no master.
+//!
+//! All communication goes through the [`Transport`] seam, so the identical
+//! worker drives both the in-process fabric (threads) and the TCP mesh
+//! (separate OS processes, `dglmnet worker`).
 
 use crate::cluster::alb::AlbController;
 use crate::cluster::allreduce::{allreduce_max, allreduce_sum, AllReduceAlgo, TAG_STRIDE};
 use crate::cluster::barrier::Barrier;
-use crate::cluster::fabric::Endpoint;
+use crate::cluster::transport::Transport;
 use crate::glm::regularizer::Penalty1D;
 use crate::metrics;
 use crate::solver::compute::GlmCompute;
@@ -29,7 +33,9 @@ pub struct WorkerShared<'a> {
     pub penalty: &'a dyn Penalty1D,
     pub y: &'a [f64],
     pub test_y: Option<&'a [f64]>,
-    pub barrier: &'a Barrier,
+    /// Shared-memory barrier — only available (and only needed, for the ALB
+    /// generation reset) when all nodes are threads in one process.
+    pub barrier: Option<&'a Barrier>,
     pub alb: Option<&'a AlbController>,
     pub cfg: &'a WorkerConfig,
     /// Total node count M (for SPMD-uniform per-node traffic estimates).
@@ -83,17 +89,23 @@ pub struct WorkerOutput {
     /// Only rank 0 fills the trace.
     pub trace: Option<Trace>,
     pub iters: usize,
+    /// This endpoint's sent traffic during the run (transport accounting).
+    pub sent_bytes: u64,
+    pub sent_msgs: u64,
 }
 
 /// Run the full training loop for one node. `x` is the node's shard X^m;
 /// `test_x` the same feature block of the test matrix (for auPRC traces).
+/// `transport` is the node's attachment to the cluster — fabric endpoint or
+/// TCP mesh, the worker cannot tell.
 pub fn run_worker(
     rank: usize,
     x: &Csc,
     test_x: Option<&Csc>,
-    mut ep: Endpoint,
+    transport: &mut dyn Transport,
     shared: &WorkerShared<'_>,
 ) -> WorkerOutput {
+    debug_assert_eq!(rank, transport.rank());
     let cfg = shared.cfg;
     let n = x.nrows;
     let p_local = x.ncols;
@@ -122,7 +134,7 @@ pub fn run_worker(
         t
     };
 
-    let ep_cell = RefCell::new(&mut ep);
+    let ep_cell = RefCell::new(transport);
 
     // --- initial objective ---
     let mut loss = shared.compute.stats(y, &margins, &mut w, &mut z);
@@ -279,12 +291,19 @@ pub fn run_worker(
             let my_compute = (cpu_now - cpu_mark) * cfg.slow_factor;
             cpu_mark = cpu_now;
             let slowest = allreduce_max(*ep_cell.borrow_mut(), next_tag(), my_compute);
-            // Per-node wire traffic this iteration (SPMD-uniform): global
-            // fabric delta divided by M; each node's sends are sequential.
-            let stats = ep_cell.borrow().stats().clone();
-            let (b_now, m_now) = (stats.total_bytes(), stats.total_msgs());
-            let db = (b_now - bytes_mark) as f64 / shared.cfg_nodes() as f64;
-            let dm = (m_now - msgs_mark) as f64 / shared.cfg_nodes() as f64;
+            // Per-node wire traffic this iteration. When the backend can
+            // observe all links (fabric), charge the SPMD-uniform share:
+            // global delta divided by M (each node's sends are sequential).
+            // Otherwise (TCP) fall back to this endpoint's own sends.
+            let ((b_now, m_now), share) = {
+                let t = ep_cell.borrow();
+                match t.global_traffic() {
+                    Some(g) => (g, shared.cfg_nodes()),
+                    None => (t.sent(), 1.0),
+                }
+            };
+            let db = (b_now - bytes_mark) as f64 / share;
+            let dm = (m_now - msgs_mark) as f64 / share;
             bytes_mark = b_now;
             msgs_mark = m_now;
             let wire = cfg.network.ns_per_byte * 1e-9 * db
@@ -311,11 +330,14 @@ pub fn run_worker(
         );
 
         // ---- ALB generation reset: leader resets between barriers ----
-        if shared.alb.is_some() {
-            if shared.barrier.wait() {
-                shared.alb.unwrap().reset();
+        if let Some(alb) = shared.alb {
+            let barrier = shared
+                .barrier
+                .expect("shared-memory ALB requires an in-process barrier");
+            if barrier.wait() {
+                alb.reset();
             }
-            shared.barrier.wait();
+            barrier.wait();
         }
 
         // ---- convergence (identical decision on every node) ----
@@ -329,11 +351,14 @@ pub fn run_worker(
         }
     }
 
+    let (sent_bytes, sent_msgs) = ep_cell.borrow().sent();
     WorkerOutput {
         rank,
         beta_local: beta,
         trace,
         iters,
+        sent_bytes,
+        sent_msgs,
     }
 }
 
@@ -359,7 +384,7 @@ fn record_point(
     beta_local: &[f64],
     alpha: f64,
     mu: f64,
-    ep_cell: &RefCell<&mut Endpoint>,
+    ep_cell: &RefCell<&mut dyn Transport>,
     next_tag: &dyn Fn() -> u64,
     test_x: Option<&Csc>,
     shared: &WorkerShared<'_>,

@@ -26,6 +26,32 @@ pub fn corpora(scale: f64, seed: u64) -> Vec<(&'static str, Splits)> {
     ]
 }
 
+/// Resolve a dataset argument: a named synthetic corpus or a path to a
+/// libsvm file (split 90/5/5). Deterministic in `(name, scale, seed)`, so
+/// every process of a multi-node cluster materializes the identical data —
+/// the cluster runtime (`cluster::process`) relies on this.
+pub fn load_splits(name: &str, scale: f64, seed: u64) -> anyhow::Result<Splits> {
+    match name {
+        "epsilon_like" => Ok(Corpus::epsilon_like(scale, seed)),
+        "webspam_like" => Ok(Corpus::webspam_like(scale, seed)),
+        "clickstream" => Ok(Corpus::clickstream(scale, seed)),
+        path => {
+            let data = crate::sparse::libsvm::read_file(path)?;
+            let n = data.y.len();
+            let ds = crate::data::Dataset::new(
+                std::path::Path::new(path)
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().to_string())
+                    .unwrap_or_else(|| "libsvm".into()),
+                data.x,
+                data.y,
+            );
+            let tenth = (n / 20).max(1);
+            Ok(ds.split(tenth, tenth))
+        }
+    }
+}
+
 /// Regularization strengths per corpus, playing the role of the paper's
 /// validation-set-tuned λ (kept fixed so runs are reproducible; the CLI
 /// exposes a sweep).

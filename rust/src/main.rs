@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train        train a regularized GLM on a synthetic corpus or libsvm file
+//!   worker       serve one rank of a multi-process TCP cluster, then exit
 //!   predict      score a libsvm file with a saved model (batch/offline)
 //!   serve        online scoring endpoint with micro-batching and hot-swap
 //!   bench-serve  load-generate against a serve endpoint (QPS, p50/p99)
@@ -12,12 +13,18 @@
 //!       --l1 1.0 --nodes 8 --alb --max-iters 30 --save-model model.json
 //!   dglmnet serve --model model.json --addr 127.0.0.1:7878
 //!   dglmnet bench-serve --addr 127.0.0.1:7878 --threads 8
+//!
+//! Multi-process cluster (real sockets instead of the thread simulation;
+//! start the workers first, then the coordinator):
+//!   dglmnet worker --listen 127.0.0.1:7101   # × M−1, one per node
+//!   dglmnet train --cluster 127.0.0.1:7100,127.0.0.1:7101,... \
+//!       --dataset epsilon_like --l1 1.0 --max-iters 30
 
 use std::sync::Arc;
 
 use dglmnet::cluster::allreduce::AllReduceAlgo;
+use dglmnet::cluster::process::{self, JobSpec};
 use dglmnet::coordinator::{fit_distributed, DistributedConfig};
-use dglmnet::data::{Corpus, Dataset, Splits};
 use dglmnet::glm::loss::LossKind;
 use dglmnet::glm::regularizer::ElasticNet;
 use dglmnet::harness;
@@ -44,6 +51,7 @@ fn main() {
     };
     let code = match cmd {
         "train" => cmd_train(&rest),
+        "worker" => cmd_worker(&rest),
         "predict" => cmd_predict(&rest),
         "serve" => cmd_serve(&rest),
         "bench-serve" => cmd_bench_serve(&rest),
@@ -66,6 +74,7 @@ fn usage() {
         "dglmnet — distributed coordinate descent for regularized GLMs\n\n\
          Subcommands:\n  \
          train        train a model (see `dglmnet train --help`)\n  \
+         worker       serve one rank of a multi-process TCP cluster\n  \
          predict      score a libsvm file with a saved model\n  \
          serve        online scoring endpoint (micro-batched, hot-swappable)\n  \
          bench-serve  load-generate against a serve endpoint\n  \
@@ -84,6 +93,13 @@ fn train_cli() -> Cli {
     .flag("l1", "1.0", "L1 penalty λ1")
     .flag("l2", "0.0", "L2 penalty λ2")
     .flag("nodes", "8", "number of simulated cluster nodes M")
+    .flag(
+        "cluster",
+        "",
+        "comma-separated host:port list for a real multi-process TCP cluster \
+         (entry 0 = this coordinator's listen address; others must be running \
+         `dglmnet worker`). Overrides --nodes; BSP only",
+    )
     .switch("alb", "enable Asynchronous Load Balancing (κ = 0.75)")
     .flag("kappa", "0.75", "ALB quorum fraction")
     .flag("engine", "native", "compute engine: native | xla (needs artifacts/)")
@@ -120,7 +136,7 @@ fn cmd_train(argv: &[String]) -> i32 {
     };
     let scale = args.get_f64("scale");
     let seed = args.get_u64("seed");
-    let splits = match load_splits(args.get("dataset"), scale, seed) {
+    let splits = match harness::load_splits(args.get("dataset"), scale, seed) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("dataset error: {e}");
@@ -128,8 +144,38 @@ fn cmd_train(argv: &[String]) -> i32 {
         }
     };
     let pen = ElasticNet::new(args.get_f64("l1"), args.get_f64("l2"));
+    let cluster: Vec<String> = if args.get("cluster").is_empty() {
+        Vec::new()
+    } else {
+        args.get("cluster")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .collect()
+    };
+    if !cluster.is_empty() {
+        if cluster.len() < 2 {
+            eprintln!("--cluster needs at least two addresses (coordinator first, then workers)");
+            return 2;
+        }
+        if cluster.iter().any(|a| a.is_empty()) {
+            eprintln!("--cluster contains an empty address (stray comma?)");
+            return 2;
+        }
+        if args.get_bool("alb") {
+            eprintln!("--alb needs the in-process fabric; a TCP cluster runs BSP (drop --alb)");
+            return 2;
+        }
+        if args.get("engine") != "native" {
+            eprintln!("--cluster currently supports --engine native only");
+            return 2;
+        }
+    }
     let cfg = DistributedConfig {
-        nodes: args.get_usize("nodes"),
+        nodes: if cluster.is_empty() {
+            args.get_usize("nodes")
+        } else {
+            cluster.len()
+        },
         alb_kappa: args.get_bool("alb").then(|| args.get_f64("kappa")),
         adaptive_mu: !args.get_bool("no-adaptive-mu"),
         mu0: args.get_f64("mu0"),
@@ -154,9 +200,37 @@ fn cmd_train(argv: &[String]) -> i32 {
         args.get("engine"),
     );
 
-    // Engine selection: the XLA runtime executes the AOT Pallas artifacts on
-    // the hot path; native is the pure-Rust oracle.
-    let result = match args.get("engine") {
+    // Backend selection: a real multi-process TCP cluster when --cluster is
+    // given; otherwise the in-process fabric with the chosen compute engine
+    // (the XLA runtime executes the AOT Pallas artifacts on the hot path;
+    // native is the pure-Rust oracle).
+    let result = if !cluster.is_empty() {
+        let spec = JobSpec {
+            rank: 0,
+            cluster,
+            dataset: args.get("dataset").to_string(),
+            scale,
+            seed,
+            loss: args.get("loss").to_string(),
+            l1: pen.l1,
+            l2: pen.l2,
+            max_iters: cfg.max_iters,
+            mu0: cfg.mu0,
+            adaptive_mu: cfg.adaptive_mu,
+            tol: cfg.tol,
+            patience: cfg.patience,
+            eval_every: cfg.eval_every,
+            allreduce: AllReduceAlgo::Ring,
+        };
+        match process::train_cluster(&spec, Some(&splits)) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("cluster training failed: {e}");
+                return 1;
+            }
+        }
+    } else {
+        match args.get("engine") {
         "xla" => {
             let rt = match Runtime::start(args.get("artifacts")) {
                 Ok(rt) => rt,
@@ -177,6 +251,7 @@ fn cmd_train(argv: &[String]) -> i32 {
         other => {
             eprintln!("unknown engine '{other}'");
             return 2;
+        }
         }
     };
 
@@ -228,6 +303,33 @@ fn cmd_train(argv: &[String]) -> i32 {
         println!("model written to {model_path} ({} non-zero weights)", model.nnz());
     }
     0
+}
+
+fn cmd_worker(argv: &[String]) -> i32 {
+    let cli = Cli::new(
+        "dglmnet worker",
+        "serve one rank of a multi-process TCP training cluster, then exit \
+         (rank, data recipe, and hyper-parameters arrive from the coordinator)",
+    )
+    .flag("listen", "127.0.0.1:0", "listen address for control + cluster mesh (port 0 = ephemeral, printed on startup)");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(CliError::HelpRequested) => {
+            println!("{}", cli.help_text());
+            return 0;
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli.help_text());
+            return 2;
+        }
+    };
+    match process::run_worker_process(args.get("listen")) {
+        Ok(_) => 0,
+        Err(e) => {
+            eprintln!("worker failed: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_predict(argv: &[String]) -> i32 {
@@ -549,25 +651,3 @@ fn cmd_summary(argv: &[String]) -> i32 {
     0
 }
 
-/// Load a named synthetic corpus or a libsvm file (90/5/5 split).
-fn load_splits(name: &str, scale: f64, seed: u64) -> anyhow::Result<Splits> {
-    match name {
-        "epsilon_like" => Ok(Corpus::epsilon_like(scale, seed)),
-        "webspam_like" => Ok(Corpus::webspam_like(scale, seed)),
-        "clickstream" => Ok(Corpus::clickstream(scale, seed)),
-        path => {
-            let data = libsvm::read_file(path)?;
-            let n = data.y.len();
-            let ds = Dataset::new(
-                std::path::Path::new(path)
-                    .file_stem()
-                    .map(|s| s.to_string_lossy().to_string())
-                    .unwrap_or_else(|| "libsvm".into()),
-                data.x,
-                data.y,
-            );
-            let tenth = (n / 20).max(1);
-            Ok(ds.split(tenth, tenth))
-        }
-    }
-}

@@ -8,6 +8,7 @@
 
 pub mod compute;
 pub mod service;
+pub mod xla_stub;
 
 pub use compute::XlaCompute;
 pub use service::{Manifest, Runtime, RuntimeHandle};

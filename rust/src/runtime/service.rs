@@ -12,6 +12,10 @@
 //! lifetime (Python never runs on this path).
 
 use crate::glm::loss::LossKind;
+// The PJRT bindings are aliased so the offline stub (`xla_stub`, which
+// fails at runtime with a clear message) and the real `xla` crate are
+// interchangeable here without touching the service code below.
+use crate::runtime::xla_stub as xla;
 use crate::util::json;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -333,6 +333,71 @@ mod tests {
     }
 
     #[test]
+    fn prop_from_triplets_sums_duplicates() {
+        // Dense-accumulator oracle: however many times (r, c) repeats in the
+        // triplet list, the stored entry is the sum — and exact-zero sums
+        // are dropped from the structure entirely.
+        prop::check("from_triplets duplicate summing", 60, |rng| {
+            let (nr, nc) = (1 + rng.below(8), 1 + rng.below(8));
+            let mut trips = Vec::new();
+            let mut dense = vec![vec![0.0; nc]; nr];
+            // Small index space + many triplets ⇒ duplicates are common;
+            // also inject guaranteed duplicates and a cancelling pair.
+            for _ in 0..20 + rng.below(40) {
+                let (r, c, v) = (rng.below(nr), rng.below(nc), rng.range_f64(-2.0, 2.0));
+                trips.push((r, c, v));
+                dense[r][c] += v;
+            }
+            let (r0, c0) = (rng.below(nr), rng.below(nc));
+            trips.push((r0, c0, 1.5));
+            trips.push((r0, c0, 1.5));
+            dense[r0][c0] += 3.0;
+            let (r1, c1) = (rng.below(nr), rng.below(nc));
+            trips.push((r1, c1, 2.0));
+            trips.push((r1, c1, -2.0));
+            let m = Csc::from_triplets(nr, nc, trips);
+            for j in 0..nc {
+                let col: std::collections::HashMap<usize, f64> = m.col(j).collect();
+                for (i, row) in dense.iter().enumerate() {
+                    let want = row[j];
+                    match col.get(&i) {
+                        Some(&got) => {
+                            prop::close(got, want, 1e-12)
+                                .map_err(|e| format!("entry ({i},{j}): {e}"))?;
+                            if got == 0.0 {
+                                return Err(format!("explicit zero stored at ({i},{j})"));
+                            }
+                        }
+                        None if want != 0.0 => {
+                            return Err(format!("missing entry ({i},{j}) = {want}"));
+                        }
+                        None => {}
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_csc_csr_csc_roundtrip() {
+        // Completes the layout round trip (csr.rs checks CSR→CSC→CSR).
+        prop::check("csc->csr->csc identity", 40, |rng| {
+            let (nr, nc) = (1 + rng.below(12), 1 + rng.below(12));
+            let mut trips = Vec::new();
+            for _ in 0..rng.below(50) {
+                trips.push((rng.below(nr), rng.below(nc), rng.range_f64(-2.0, 2.0)));
+            }
+            let m = Csc::from_triplets(nr, nc, trips);
+            if m.to_csr().to_csc() == m {
+                Ok(())
+            } else {
+                Err("roundtrip mismatch".into())
+            }
+        });
+    }
+
+    #[test]
     fn rng_helper_used() {
         // keep Rng import exercised even if props get pruned
         let mut r = Rng::new(1);

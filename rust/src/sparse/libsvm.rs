@@ -106,8 +106,24 @@ pub fn read_file(path: impl AsRef<Path>) -> Result<LibsvmData, LibsvmError> {
     read(f, IndexBase::One, 0)
 }
 
-/// Write in 1-based libsvm format.
+/// Write in 1-based libsvm format (the standard convention).
 pub fn write<W: Write>(w: &mut W, data: &LibsvmData) -> std::io::Result<()> {
+    write_with_base(w, data, IndexBase::One)
+}
+
+/// Write with an explicit index base, mirroring what [`read`] accepts. A
+/// write→read round trip under the same base reproduces the matrix exactly
+/// (up to trailing all-zero columns — pass the original width as
+/// `ncols_hint` when re-reading to preserve those).
+pub fn write_with_base<W: Write>(
+    w: &mut W,
+    data: &LibsvmData,
+    base: IndexBase,
+) -> std::io::Result<()> {
+    let offset = match base {
+        IndexBase::Zero => 0,
+        IndexBase::One => 1,
+    };
     for i in 0..data.x.nrows {
         let label = data.y[i];
         if label == label.trunc() {
@@ -116,7 +132,7 @@ pub fn write<W: Write>(w: &mut W, data: &LibsvmData) -> std::io::Result<()> {
             write!(w, "{label}")?;
         }
         for (c, v) in data.x.row(i) {
-            write!(w, " {}:{}", c + 1, v)?;
+            write!(w, " {}:{}", c + offset, v)?;
         }
         writeln!(w)?;
     }
@@ -181,5 +197,61 @@ mod tests {
         let d2 = read(buf.as_slice(), IndexBase::One, 0).unwrap();
         assert_eq!(d.x, d2.x);
         assert_eq!(d.y, d2.y);
+    }
+
+    #[test]
+    fn prop_write_read_roundtrip_both_bases() {
+        use crate::sparse::csr::Csr;
+        use crate::util::prop;
+        for base in [IndexBase::Zero, IndexBase::One] {
+            prop::check("libsvm write→read roundtrip", 60, |rng| {
+                let (nr, nc) = (1 + rng.below(12), 1 + rng.below(15));
+                let mut rows: Vec<Vec<(usize, f64)>> = (0..nr)
+                    .map(|_| prop::sparse_vec(rng, nc, 8, 4.0))
+                    .collect();
+                // Force an empty-feature row (label only, no idx:val pairs)
+                // into every case — the regression this prop pins down.
+                rows[0].clear();
+                let y: Vec<f64> = (0..nr)
+                    .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                    .collect();
+                let d = LibsvmData {
+                    x: Csr::from_rows(nc, &rows),
+                    y,
+                };
+                let mut buf = Vec::new();
+                write_with_base(&mut buf, &d, base)
+                    .map_err(|e| format!("write failed: {e}"))?;
+                // Re-read with the original width as hint: trailing all-zero
+                // columns are not representable in the text format itself.
+                let d2 = read(buf.as_slice(), base, nc)
+                    .map_err(|e| format!("read failed: {e}"))?;
+                if d2.x != d.x {
+                    return Err(format!("matrix mismatch under {base:?}"));
+                }
+                if d2.y != d.y {
+                    return Err(format!("label mismatch under {base:?}"));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn empty_feature_row_survives_roundtrip() {
+        use crate::sparse::csr::Csr;
+        // One row with features, one with none, one with none at the end.
+        let d = LibsvmData {
+            x: Csr::from_rows(3, &[vec![(1, 2.5)], vec![], vec![]]),
+            y: vec![1.0, -1.0, 1.0],
+        };
+        for base in [IndexBase::Zero, IndexBase::One] {
+            let mut buf = Vec::new();
+            write_with_base(&mut buf, &d, base).unwrap();
+            let d2 = read(buf.as_slice(), base, 3).unwrap();
+            assert_eq!(d2.x, d.x, "{base:?}");
+            assert_eq!(d2.y, d.y, "{base:?}");
+            assert_eq!(d2.x.row_nnz(1), 0);
+        }
     }
 }

@@ -1,0 +1,264 @@
+//! Oracle equivalence: the distributed coordinator — over BOTH transports,
+//! and even across real OS processes — must reproduce the single-process
+//! Algorithm 1 reference (`solver::dglmnet::fit`) exactly: the transport is
+//! plumbing, the math may not change.
+
+use dglmnet::coordinator::{fit_distributed, fit_distributed_tcp, DistributedConfig};
+use dglmnet::data::{synth, Dataset, SynthConfig};
+use dglmnet::glm::loss::LossKind;
+use dglmnet::glm::regularizer::ElasticNet;
+use dglmnet::metrics;
+use dglmnet::solver::compute::NativeCompute;
+use dglmnet::solver::dglmnet as dg;
+use dglmnet::solver::dglmnet::DGlmnetConfig;
+
+fn ds(n: usize, p: usize, seed: u64) -> Dataset {
+    synth::epsilon_like(&SynthConfig { n, p, seed })
+}
+
+fn dist_cfg(nodes: usize, max_iters: usize, seed: u64) -> DistributedConfig {
+    DistributedConfig {
+        nodes,
+        max_iters,
+        eval_every: 0,
+        tol: 0.0,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn ref_cfg(nodes: usize, max_iters: usize, seed: u64) -> DGlmnetConfig {
+    DGlmnetConfig {
+        nodes,
+        max_iters,
+        eval_every: 0,
+        tol: 0.0,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Both transports, M ∈ {1, 2, 4}: objective within 1e-6 of the reference
+/// (in practice bit-for-bit up to collective summation order).
+#[test]
+fn distributed_matches_reference_over_both_transports() {
+    let train = ds(150, 14, 21);
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::new(0.3, 0.1);
+    for m in [1, 2, 4] {
+        let seq = dg::fit(&train, &compute, &pen, &ref_cfg(m, 12, 21), None);
+        let fab = fit_distributed(&train, None, &compute, &pen, &dist_cfg(m, 12, 21));
+        let tcp = fit_distributed_tcp(&train, None, &compute, &pen, &dist_cfg(m, 12, 21))
+            .expect("tcp cluster");
+        for (name, got) in [("fabric", &fab.objective), ("tcp", &tcp.objective)] {
+            let gap = (got - seq.objective).abs() / seq.objective.abs().max(1e-12);
+            assert!(
+                gap < 1e-6,
+                "{name} M={m}: objective {} vs reference {} (gap {gap:.3e})",
+                got,
+                seq.objective
+            );
+        }
+        for (a, b) in fab.beta.iter().zip(seq.beta.iter()) {
+            assert!((a - b).abs() < 1e-8, "fabric M={m} beta: {a} vs {b}");
+        }
+        for (a, b) in tcp.beta.iter().zip(seq.beta.iter()) {
+            assert!((a - b).abs() < 1e-8, "tcp M={m} beta: {a} vs {b}");
+        }
+    }
+}
+
+/// The L1 run's support (which features are exactly zero) survives the
+/// distributed path on both transports.
+#[test]
+fn l1_sparsity_pattern_preserved() {
+    let train = ds(200, 40, 22);
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::l1_only(4.0);
+    let seq = dg::fit(&train, &compute, &pen, &ref_cfg(4, 20, 22), None);
+    let seq_nnz = metrics::nnz_weights(&seq.beta);
+    assert!(
+        seq_nnz < 40,
+        "reference must actually be sparse (nnz {seq_nnz})"
+    );
+    // Naive allreduce accumulates blocks in the same order as the
+    // sequential reference, keeping the soft-threshold inputs bit-aligned.
+    let mut cfg = dist_cfg(4, 20, 22);
+    cfg.allreduce = dglmnet::cluster::AllReduceAlgo::Naive;
+    let fab = fit_distributed(&train, None, &compute, &pen, &cfg);
+    let tcp = fit_distributed_tcp(&train, None, &compute, &pen, &cfg).expect("tcp");
+    for (name, beta) in [("fabric", &fab.beta), ("tcp", &tcp.beta)] {
+        assert_eq!(
+            metrics::nnz_weights(beta),
+            seq_nnz,
+            "{name}: nnz drifted from the reference"
+        );
+        for (j, (a, b)) in beta.iter().zip(seq.beta.iter()).enumerate() {
+            // Support must match: a weight the reference zeroed out stays
+            // zero on the distributed path (and vice versa).
+            if (*a == 0.0) != (*b == 0.0) {
+                panic!("{name}: support mismatch at feature {j} ({a} vs {b})");
+            }
+        }
+    }
+}
+
+/// Table 2: ring-allreduce traffic per iteration stays ≈ Mn doubles
+/// (2·8·n bytes out per node per XΔβ allreduce) on the TCP backend too.
+#[test]
+fn tcp_comm_bytes_per_iteration_close_to_mn_doubles() {
+    let n = 400;
+    let m = 4;
+    let iters = 5;
+    let train = ds(n, 30, 23);
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::new(0.2, 0.0);
+    let fit = fit_distributed_tcp(&train, None, &compute, &pen, &dist_cfg(m, iters, 23))
+        .expect("tcp cluster");
+    assert_eq!(fit.iters, iters);
+    let per_iter = fit.comm_bytes as f64 / iters as f64;
+    // Dominant term: the XΔβ ring allreduce, ~2n doubles out per node
+    // → 16·n·M bytes per iteration; headers, the scalar collectives and
+    // the line-search reg ray add a bounded overhead on top.
+    let expected = 16.0 * n as f64 * m as f64;
+    assert!(
+        per_iter > 0.5 * expected && per_iter < 3.0 * expected,
+        "per-iteration TCP traffic {per_iter:.0} B vs expected ≈{expected:.0} B"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// True multi-process end-to-end: 3 `dglmnet worker` processes + 1
+// coordinator process on loopback, checked against the in-process reference.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn multiprocess_cluster_end_to_end() {
+    use std::io::BufRead;
+    use std::process::{Child, Command, Stdio};
+
+    let bin = env!("CARGO_BIN_EXE_dglmnet");
+    let mut workers: Vec<Child> = Vec::new();
+    let mut addrs: Vec<String> = Vec::new();
+
+    // Belt-and-braces cleanup: kill leftover workers on any exit path.
+    struct Cleanup<'a>(&'a mut Vec<Child>);
+    impl Drop for Cleanup<'_> {
+        fn drop(&mut self) {
+            for c in self.0.iter_mut() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+
+    for _ in 0..3 {
+        let mut child = Command::new(bin)
+            .args(["worker", "--listen", "127.0.0.1:0"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn worker");
+        // The worker prints its resolved address before accepting.
+        let stdout = child.stdout.take().expect("worker stdout");
+        let mut reader = std::io::BufReader::new(stdout);
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("worker banner");
+        let addr = line
+            .trim()
+            .strip_prefix("worker: listening on ")
+            .unwrap_or_else(|| panic!("unexpected worker banner: {line:?}"))
+            .to_string();
+        addrs.push(addr);
+        // Keep draining the pipe so the worker never blocks on a full one.
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            loop {
+                sink.clear();
+                if reader.read_line(&mut sink).unwrap_or(0) == 0 {
+                    break;
+                }
+            }
+        });
+        workers.push(child);
+    }
+    let cleanup = Cleanup(&mut workers);
+
+    let trace_path = std::env::temp_dir().join(format!(
+        "dglmnet_cluster_e2e_{}.json",
+        std::process::id()
+    ));
+    let cluster = format!("127.0.0.1:0,{}", addrs.join(","));
+    let out = Command::new(bin)
+        .args([
+            "train",
+            "--cluster",
+            &cluster,
+            "--dataset",
+            "epsilon_like",
+            "--scale",
+            "0.05",
+            "--seed",
+            "1",
+            "--loss",
+            "logistic",
+            "--l1",
+            "0.5",
+            "--l2",
+            "0.0",
+            "--max-iters",
+            "8",
+            "--eval-every",
+            "0",
+            "--trace",
+            trace_path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run coordinator");
+    assert!(
+        out.status.success(),
+        "coordinator failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    drop(cleanup); // workers have exited with the job; reap them
+
+    // Final objective from the trace JSON the coordinator wrote.
+    let text = std::fs::read_to_string(&trace_path).expect("trace file");
+    std::fs::remove_file(&trace_path).ok();
+    let trace = dglmnet::util::json::parse(&text).expect("trace json");
+    let objectives = match trace.get("objective") {
+        Some(dglmnet::util::json::Json::Arr(xs)) => {
+            xs.iter().filter_map(|x| x.as_f64()).collect::<Vec<_>>()
+        }
+        _ => panic!("trace has no objective series"),
+    };
+    let cluster_obj = *objectives.last().expect("non-empty objective series");
+
+    // In-process reference with the identical recipe: same dataset, seed,
+    // M = 4 blocks, and the coordinator's default tol/patience (1e-7 / 2).
+    let splits = dglmnet::harness::load_splits("epsilon_like", 0.05, 1).expect("splits");
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::new(0.5, 0.0);
+    let seq = dg::fit(
+        &splits.train,
+        &compute,
+        &pen,
+        &DGlmnetConfig {
+            nodes: 4,
+            max_iters: 8,
+            tol: 1e-7,
+            patience: 2,
+            seed: 1,
+            eval_every: 0,
+            ..Default::default()
+        },
+        None,
+    )
+    .objective;
+    let gap = (cluster_obj - seq).abs() / seq.abs().max(1e-12);
+    assert!(
+        gap < 1e-6,
+        "4-process cluster objective {cluster_obj} vs reference {seq} (gap {gap:.3e})"
+    );
+}

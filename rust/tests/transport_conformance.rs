@@ -1,0 +1,286 @@
+//! Transport-conformance suite: one parameterized set of contract tests
+//! executed against BOTH interconnect backends — the in-process mailbox
+//! fabric and the TCP mesh on loopback. The distributed solver's
+//! correctness rests on these invariants being backend-independent (see
+//! `cluster::transport` for the contract).
+
+use dglmnet::cluster::allreduce::allreduce_max;
+use dglmnet::cluster::{
+    allreduce_scalar, allreduce_sum, bind_loopback, fabric, frame_bytes, transport_barrier,
+    AllReduceAlgo, NetworkModel, TcpOptions, TcpTransport, Transport, TAG_STRIDE,
+};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// Backend parameterization
+// ---------------------------------------------------------------------------
+
+type Backend = (&'static str, fn(usize) -> Vec<Box<dyn Transport>>);
+
+fn fabric_endpoints(m: usize) -> Vec<Box<dyn Transport>> {
+    let (eps, _) = fabric(m, NetworkModel::default());
+    eps.into_iter()
+        .map(|e| Box::new(e) as Box<dyn Transport>)
+        .collect()
+}
+
+fn tcp_endpoints(m: usize) -> Vec<Box<dyn Transport>> {
+    let (addrs, listeners) = bind_loopback(m).expect("bind loopback");
+    let mut out: Vec<Option<Box<dyn Transport>>> = (0..m).map(|_| None).collect();
+    // Mesh formation blocks until every pair is connected, so all ranks
+    // must build concurrently.
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (rank, listener) in listeners.into_iter().enumerate() {
+            let addrs = addrs.clone();
+            handles.push(s.spawn(move || {
+                TcpTransport::with_listener(rank, &addrs, listener, TcpOptions::default())
+                    .expect("tcp mesh")
+            }));
+        }
+        for (rank, h) in handles.into_iter().enumerate() {
+            out[rank] = Some(Box::new(h.join().expect("mesh thread")));
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+const BACKENDS: [Backend; 2] = [("fabric", fabric_endpoints), ("tcp", tcp_endpoints)];
+
+/// Run `f` SPMD: one thread per endpoint. Panics in any rank fail the test.
+fn spmd(endpoints: Vec<Box<dyn Transport>>, f: impl Fn(&mut dyn Transport) + Send + Sync) {
+    std::thread::scope(|s| {
+        for mut ep in endpoints {
+            let f = &f;
+            s.spawn(move || f(ep.as_mut()));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 1. Tagged delivery: out-of-order arrivals are parked, never lost;
+//    same-tag messages stay FIFO.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tagged_out_of_order_delivery() {
+    for (name, make) in BACKENDS {
+        spmd(make(2), |t| match t.rank() {
+            1 => {
+                t.send(0, 2, vec![2.0]);
+                t.send(0, 1, vec![1.0]);
+                t.send(0, 1, vec![1.5]);
+            }
+            _ => {
+                // Ask for tag 1 first: the tag-2 message must be parked.
+                assert_eq!(t.recv_from(1, 1), vec![1.0], "{name}");
+                // FIFO within a tag.
+                assert_eq!(t.recv_from(1, 1), vec![1.5], "{name}");
+                assert_eq!(t.recv_from(1, 2), vec![2.0], "{name}");
+                // And nothing else is pending.
+                assert_eq!(t.try_recv_from(1, 1), None, "{name}");
+                assert_eq!(t.try_recv_from(1, 2), None, "{name}");
+            }
+        });
+    }
+}
+
+#[test]
+fn try_recv_eventually_sees_the_message() {
+    for (name, make) in BACKENDS {
+        spmd(make(2), |t| match t.rank() {
+            1 => t.send(0, 9, vec![4.25]),
+            _ => {
+                // TCP delivery is asynchronous: poll until it lands.
+                let mut got = None;
+                for _ in 0..10_000 {
+                    got = t.try_recv_from(1, 9);
+                    if got.is_some() {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+                assert_eq!(got, Some(vec![4.25]), "{name}");
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Barrier
+// ---------------------------------------------------------------------------
+
+#[test]
+fn barrier_holds_until_all_ranks_arrive() {
+    for (name, make) in BACKENDS {
+        let m = 4;
+        let arrived = Arc::new(AtomicUsize::new(0));
+        let arrived2 = arrived.clone();
+        spmd(make(m), move |t| {
+            // Stagger arrivals so the barrier actually has to hold.
+            std::thread::sleep(std::time::Duration::from_millis(10 * t.rank() as u64));
+            arrived2.fetch_add(1, Ordering::SeqCst);
+            transport_barrier(t, 0);
+            assert_eq!(arrived2.load(Ordering::SeqCst), m, "{name}");
+            // Barriers are reusable on fresh tags.
+            transport_barrier(t, TAG_STRIDE);
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. AllReduce: naive and ring agree with the serial sum (and each other),
+//    including ring's n < M fallback and non-divisible chunking.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn naive_and_ring_allreduce_agree() {
+    for (name, make) in BACKENDS {
+        for m in [1, 2, 4] {
+            for n in [2, 7, 40] {
+                // Deterministic per-rank input so every rank can compute the
+                // expected global sum locally.
+                let input = |rank: usize| -> Vec<f64> {
+                    (0..n).map(|i| ((rank + 1) * (i + 3)) as f64 * 0.125).collect()
+                };
+                let want: Vec<f64> = (0..n)
+                    .map(|i| (0..m).map(|r| input(r)[i]).sum())
+                    .collect();
+                spmd(make(m), move |t| {
+                    let mut a = input(t.rank());
+                    let mut b = input(t.rank());
+                    allreduce_sum(t, 0, &mut a, AllReduceAlgo::Naive);
+                    allreduce_sum(t, TAG_STRIDE, &mut b, AllReduceAlgo::Ring);
+                    for i in 0..n {
+                        assert!(
+                            (a[i] - want[i]).abs() < 1e-12,
+                            "{name} m={m} n={n} naive[{i}]: {} vs {}",
+                            a[i],
+                            want[i]
+                        );
+                        assert!(
+                            (b[i] - want[i]).abs() < 1e-9,
+                            "{name} m={m} n={n} ring[{i}]: {} vs {}",
+                            b[i],
+                            want[i]
+                        );
+                    }
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn allreduce_max_returns_global_max_everywhere() {
+    for (name, make) in BACKENDS {
+        for m in [1, 3, 4] {
+            spmd(make(m), move |t| {
+                // Rank r contributes r·1.5 — rank 0's contribution is the
+                // smallest, so the root must actually look at its peers.
+                let mine = t.rank() as f64 * 1.5;
+                let got = allreduce_max(t, 0, mine);
+                let want = (m - 1) as f64 * 1.5;
+                assert_eq!(got, want, "{name} m={m} rank={}", t.rank());
+            });
+        }
+    }
+}
+
+#[test]
+fn scalar_reduction_is_algo_independent() {
+    for (name, make) in BACKENDS {
+        let m = 3;
+        spmd(make(m), move |t| {
+            let x = t.rank() as f64 + 0.5;
+            let scalar = allreduce_scalar(t, 0, x);
+            let mut v1 = [x];
+            allreduce_sum(t, TAG_STRIDE, &mut v1, AllReduceAlgo::Naive);
+            let mut v2 = [x];
+            allreduce_sum(t, 2 * TAG_STRIDE, &mut v2, AllReduceAlgo::Ring);
+            assert_eq!(scalar, v1[0], "{name}");
+            assert_eq!(scalar, v2[0], "{name}");
+            assert_eq!(scalar, 0.5 + 1.5 + 2.5, "{name}");
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Byte accounting: both backends charge exactly 16 + 8·len per message,
+//    so collective traffic is predictable in closed form on either backend.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn byte_accounting_matches_closed_form() {
+    for (name, make) in BACKENDS {
+        // Naive allreduce, m = 3, n = 5: rank 0 receives 2 and broadcasts 2
+        // (sends 2 messages of n); every other rank sends exactly 1.
+        let m = 3;
+        let n = 5;
+        spmd(make(m), move |t| {
+            let mut data = vec![1.0; n];
+            allreduce_sum(t, 0, &mut data, AllReduceAlgo::Naive);
+            let (bytes, msgs) = t.sent();
+            let want_msgs = if t.rank() == 0 { (m - 1) as u64 } else { 1 };
+            assert_eq!(msgs, want_msgs, "{name} naive msgs rank {}", t.rank());
+            assert_eq!(
+                bytes,
+                want_msgs * frame_bytes(n),
+                "{name} naive bytes rank {}",
+                t.rank()
+            );
+        });
+
+        // Ring allreduce, m = 4, n = 8 (divisible): every rank sends
+        // 2(M−1) chunks of n/M doubles — the Θ(n) per-node bound behind
+        // the paper's Mn-doubles-per-iteration claim (Table 2).
+        let m = 4;
+        let n = 8;
+        spmd(make(m), move |t| {
+            let mut data = vec![1.0; n];
+            allreduce_sum(t, 0, &mut data, AllReduceAlgo::Ring);
+            let (bytes, msgs) = t.sent();
+            let want_msgs = 2 * (m - 1) as u64;
+            assert_eq!(msgs, want_msgs, "{name} ring msgs rank {}", t.rank());
+            assert_eq!(
+                bytes,
+                want_msgs * frame_bytes(n / m),
+                "{name} ring bytes rank {}",
+                t.rank()
+            );
+        });
+
+        // Barriers cost one empty frame per participant direction.
+        let m = 3;
+        spmd(make(m), move |t| {
+            transport_barrier(t, 0);
+            let (bytes, msgs) = t.sent();
+            let want_msgs = if t.rank() == 0 { (m - 1) as u64 } else { 1 };
+            assert_eq!(msgs, want_msgs, "{name} barrier msgs rank {}", t.rank());
+            assert_eq!(bytes, want_msgs * frame_bytes(0), "{name} barrier bytes");
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 5. Rank/size identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ranks_and_sizes_are_consistent() {
+    for (name, make) in BACKENDS {
+        let m = 3;
+        let seen = Arc::new(AtomicUsize::new(0));
+        let seen2 = seen.clone();
+        spmd(make(m), move |t| {
+            assert_eq!(t.size(), m, "{name}");
+            assert!(t.rank() < m, "{name}");
+            // Fresh endpoints start with clean accounting.
+            assert_eq!(t.sent(), (0, 0), "{name}");
+            seen2.fetch_add(1 << (8 * t.rank()), Ordering::SeqCst);
+        });
+        // Every rank 0..m appeared exactly once.
+        assert_eq!(seen.load(Ordering::SeqCst), 0x01_01_01, "{name}");
+    }
+}
