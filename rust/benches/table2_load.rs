@@ -157,4 +157,32 @@ fn main() {
         fmt_b(d_comm),
         fmt_b((2 * (m - 1) * n) as f64 * 8.0),
     );
+
+    // --- asynchronous column: per-rank load under d-GLMNET-ALB (§7) ---
+    // One injected straggler; the per-rank table shows the cut-off rank
+    // doing less CD work while the fast ranks' sync wait stays small —
+    // the Table-2 accounting extended to asynchronous runs.
+    println!("\n=== d-GLMNET-ALB (κ=0.75) per-rank load, 40 ms straggler on rank 2 ===");
+    let alb = fit_distributed(
+        &splits.train,
+        None,
+        &compute,
+        &pen,
+        &DistributedConfig {
+            nodes: m,
+            alb_kappa: Some(0.75),
+            max_iters: iters,
+            tol: 0.0,
+            eval_every: 0,
+            allreduce: AllReduceAlgo::Ring,
+            chunk: 8,
+            straggler_delays: dglmnet::harness::delays_with_straggler(
+                m,
+                2,
+                std::time::Duration::from_millis(40),
+            ),
+            ..Default::default()
+        },
+    );
+    dglmnet::harness::print_rank_loads(&alb.per_rank);
 }

@@ -2,16 +2,45 @@
 //! slow-node problem.
 //!
 //! Every node reports when it has finished one full pass over its block
-//! S^m. As soon as at least ⌈κ·M⌉ nodes have reported, the controller raises
-//! a stop flag that the coordinate-descent inner loop polls between updates:
+//! S^m. As soon as at least ⌈κ·M⌉ nodes have reported, a stop signal is
+//! raised that the coordinate-descent inner loop polls between updates:
 //! stragglers cut their pass short, fast nodes stop their extra cycles, and
 //! everyone proceeds to the AllReduce. Because updates are cyclic with a
 //! persistent cursor, a straggler resumes exactly where it stopped on the
 //! next iteration — no weight is starved (paper: "on the next iteration a
 //! node resumes optimization starting from the next weight in S^m").
+//!
+//! The worker is written against one per-iteration handle, [`AlbQuorum`],
+//! with two implementations behind it:
+//!
+//! * [`RemoteQuorum`] — the transport-level κ-quorum: pass-done broadcasts
+//!   on a tag that is fresh every outer iteration, so there is nothing to
+//!   reset and no barrier anywhere. This is the path real multi-process
+//!   clusters use, and it runs unchanged over the in-process fabric.
+//! * [`AlbController`] — the shared-memory special case for nodes that are
+//!   threads of one process: zero wire frames and a per-coordinate
+//!   [`AtomicBool`] stop flag for the CD hot loop. Its per-iteration reset
+//!   is claimed through a generation CAS in [`AlbController::
+//!   begin_iteration`] — safe without a barrier because no rank can start
+//!   iteration k+1 before every rank has left iteration k's CD loop (the
+//!   XΔβ AllReduce between them completes only once all ranks contribute).
 
 use crate::cluster::transport::Transport;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// The κ→threshold rule shared by every quorum implementation: at least
+/// ⌈κ·M⌉ full-pass reports end the iteration, clamped into [1, M]. A single
+/// source of truth so the shared-memory and transport paths can never
+/// disagree on when an iteration ends (rounding parity is pinned by unit
+/// tests below).
+pub fn quorum_threshold(nodes: usize, kappa: f64) -> usize {
+    assert!(nodes > 0, "quorum needs at least one node");
+    assert!(
+        kappa > 0.0 && kappa <= 1.0,
+        "κ must be in (0, 1], got {kappa}"
+    );
+    ((kappa * nodes as f64).ceil() as usize).clamp(1, nodes)
+}
 
 /// Shared-memory ALB controller — used when all nodes are threads in one
 /// process (the fabric backend). For separate OS processes, the same quorum
@@ -22,20 +51,63 @@ pub struct AlbController {
     threshold: usize,
     done: AtomicUsize,
     stop: AtomicBool,
+    /// Latest generation some rank has claimed (and begun resetting).
+    gen_claim: AtomicU64,
+    /// Latest generation whose reset is published; ranks spin on this in
+    /// [`begin_iteration`](Self::begin_iteration) until the winner is done.
+    gen_ready: AtomicU64,
 }
 
 impl AlbController {
     /// κ is the fraction of nodes that must complete a full pass
     /// (paper uses κ = 0.75).
     pub fn new(nodes: usize, kappa: f64) -> AlbController {
-        assert!(nodes > 0);
-        assert!(kappa > 0.0 && kappa <= 1.0);
-        let threshold = ((kappa * nodes as f64).ceil() as usize).clamp(1, nodes);
         AlbController {
             nodes,
-            threshold,
+            threshold: quorum_threshold(nodes, kappa),
             done: AtomicUsize::new(0),
             stop: AtomicBool::new(false),
+            gen_claim: AtomicU64::new(0),
+            gen_ready: AtomicU64::new(0),
+        }
+    }
+
+    /// Start a new outer iteration identified by a strictly increasing
+    /// generation number (the worker passes its per-iteration ALB tag).
+    /// Every rank calls this; exactly one wins the claim and resets the
+    /// counters, the rest wait until the reset is published. Replaces the
+    /// old barrier-guarded `reset`: by the time any rank calls this for
+    /// generation g, every rank has left generation g−1's CD loop (they all
+    /// contributed to the XΔβ AllReduce in between), so nobody can still be
+    /// reading the flag being cleared, and no stale g−1 report can land
+    /// after the reset.
+    pub fn begin_iteration(&self, gen: u64) {
+        let mut cur = self.gen_claim.load(Ordering::Acquire);
+        loop {
+            if cur >= gen {
+                break; // this (or a later) generation is already claimed
+            }
+            match self.gen_claim.compare_exchange(
+                cur,
+                gen,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    self.done.store(0, Ordering::Release);
+                    self.stop.store(false, Ordering::Release);
+                    self.gen_ready.store(gen, Ordering::Release);
+                    return;
+                }
+                Err(now) => cur = now,
+            }
+        }
+        while self.gen_ready.load(Ordering::Acquire) < gen {
+            // The winner only has two stores left, but it may have been
+            // preempted between the claim and the publish — yield so an
+            // oversubscribed host (nodes > cores) reschedules it instead of
+            // burning whole quanta in a pure spin.
+            std::thread::yield_now();
         }
     }
 
@@ -56,8 +128,8 @@ impl AlbController {
         self.stop.load(Ordering::Acquire)
     }
 
-    /// Reset for the next outer iteration (call after the barrier, once all
-    /// workers have stopped reading the flag).
+    /// Unconditional reset (single-owner embedders and tests; the worker
+    /// path goes through [`begin_iteration`](Self::begin_iteration)).
     pub fn reset(&self) {
         self.done.store(0, Ordering::Release);
         self.stop.store(false, Ordering::Release);
@@ -96,18 +168,16 @@ pub struct RemoteQuorum {
 
 impl RemoteQuorum {
     pub fn new(nodes: usize, kappa: f64, tag: u64) -> RemoteQuorum {
-        assert!(nodes > 0);
-        assert!(kappa > 0.0 && kappa <= 1.0);
-        let threshold = ((kappa * nodes as f64).ceil() as usize).clamp(1, nodes);
         RemoteQuorum {
             tag,
-            threshold,
+            threshold: quorum_threshold(nodes, kappa),
             seen: vec![false; nodes],
             reports: 0,
         }
     }
 
     /// This node finished one full pass over its block: broadcast it.
+    /// Idempotent — repeated calls neither re-broadcast nor re-count.
     pub fn report_full_pass(&mut self, t: &mut dyn Transport) {
         let me = t.rank();
         if !self.seen[me] {
@@ -120,19 +190,116 @@ impl RemoteQuorum {
     }
 
     /// Poll peers' pass-done frames; true once the κ quorum is met.
+    /// Duplicate frames from one rank are drained but never double-counted.
     pub fn should_stop(&mut self, t: &mut dyn Transport) -> bool {
         let me = t.rank();
         for from in (0..t.size()).filter(|&r| r != me) {
-            while !self.seen[from] && t.try_recv_from(from, self.tag).is_some() {
-                self.seen[from] = true;
-                self.reports += 1;
+            while t.try_recv_from(from, self.tag).is_some() {
+                if !self.seen[from] {
+                    self.seen[from] = true;
+                    self.reports += 1;
+                }
             }
         }
         self.reports >= self.threshold
     }
 
+    /// Distinct ranks whose full pass this quorum has observed so far.
+    pub fn reports(&self) -> usize {
+        self.reports
+    }
+
     pub fn threshold(&self) -> usize {
         self.threshold
+    }
+}
+
+/// Discard any pass-done frames still parked (or newly arrived) on a
+/// retired quorum tag. The worker keeps a sliding window of its last
+/// [`RETIRED_TAG_WINDOW`] ALB tags and drains all of them every iteration,
+/// so a late straggler frame only escapes the drain if it stays in flight
+/// for more than that many full outer iterations — each of which contains
+/// several blocking collectives with every rank — which bounds the
+/// transport's pending map in any real execution.
+pub fn drain_retired_tag(t: &mut dyn Transport, tag: u64) {
+    let me = t.rank();
+    for from in (0..t.size()).filter(|&r| r != me) {
+        while t.try_recv_from(from, tag).is_some() {}
+    }
+}
+
+/// How many retired ALB tags the worker keeps draining (see
+/// [`drain_retired_tag`]).
+pub const RETIRED_TAG_WINDOW: usize = 4;
+
+/// How a run obtains its per-iteration ALB quorum — carried by
+/// `WorkerShared` and turned into one fresh [`AlbQuorum`] per outer
+/// iteration by the worker.
+#[derive(Clone, Copy)]
+pub enum AlbMode<'a> {
+    /// Shared-memory controller: all nodes are threads of one process (the
+    /// fabric driver). Thin special case — zero wire frames and a
+    /// per-coordinate stop flag for the CD hot loop.
+    Shared(&'a AlbController),
+    /// Transport-level κ-quorum on a fresh per-iteration tag: works across
+    /// OS processes (TCP mesh) and over the fabric alike.
+    Transport { kappa: f64 },
+}
+
+impl<'a> AlbMode<'a> {
+    /// Begin one outer iteration: `tag` must come from the worker's
+    /// SPMD-deterministic `TAG_STRIDE` allocator (strictly increasing, the
+    /// same value on every rank).
+    pub fn begin_iteration(&self, nodes: usize, tag: u64) -> AlbQuorum<'a> {
+        match self {
+            AlbMode::Shared(c) => {
+                c.begin_iteration(tag);
+                AlbQuorum::Shared(c)
+            }
+            AlbMode::Transport { kappa } => {
+                AlbQuorum::Remote(RemoteQuorum::new(nodes, *kappa, tag))
+            }
+        }
+    }
+}
+
+/// One outer iteration's ALB stop decision — the unified handle the worker
+/// (and the chaos suite) is written against. The shared-memory controller
+/// is the fabric special case; the transport quorum is the general one.
+pub enum AlbQuorum<'a> {
+    Shared(&'a AlbController),
+    Remote(RemoteQuorum),
+}
+
+impl AlbQuorum<'_> {
+    pub fn report_full_pass(&mut self, t: &mut dyn Transport) {
+        match self {
+            AlbQuorum::Shared(c) => c.report_full_pass(),
+            AlbQuorum::Remote(q) => q.report_full_pass(t),
+        }
+    }
+
+    pub fn should_stop(&mut self, t: &mut dyn Transport) -> bool {
+        match self {
+            AlbQuorum::Shared(c) => c.should_stop(),
+            AlbQuorum::Remote(q) => q.should_stop(t),
+        }
+    }
+
+    /// Per-coordinate stop flag for `cd_cycle` — only the shared-memory
+    /// special case can offer one; the transport path polls between chunks.
+    pub fn stop_flag(&self) -> Option<&AtomicBool> {
+        match self {
+            AlbQuorum::Shared(c) => Some(c.stop_flag()),
+            AlbQuorum::Remote(_) => None,
+        }
+    }
+
+    pub fn threshold(&self) -> usize {
+        match self {
+            AlbQuorum::Shared(c) => c.threshold(),
+            AlbQuorum::Remote(q) => q.threshold(),
+        }
     }
 }
 
@@ -148,6 +315,42 @@ mod tests {
         assert_eq!(AlbController::new(3, 0.75).threshold(), 3); // ceil(2.25)
         assert_eq!(AlbController::new(1, 0.75).threshold(), 1);
         assert_eq!(AlbController::new(8, 1.0).threshold(), 8);
+    }
+
+    #[test]
+    fn threshold_parity_between_controller_and_remote_quorum() {
+        // The shared helper is the single source of truth: both fronts must
+        // agree bit-for-bit on every (M, κ) cell of the test matrix.
+        for m in [1usize, 3, 4, 8, 16] {
+            for kappa in [0.5, 0.75, 1.0] {
+                let want = quorum_threshold(m, kappa);
+                assert_eq!(
+                    AlbController::new(m, kappa).threshold(),
+                    want,
+                    "controller M={m} κ={kappa}"
+                );
+                assert_eq!(
+                    RemoteQuorum::new(m, kappa, 0).threshold(),
+                    want,
+                    "remote M={m} κ={kappa}"
+                );
+                // ⌈κM⌉ by construction, clamped into [1, M].
+                assert_eq!(want, ((kappa * m as f64).ceil() as usize).clamp(1, m));
+            }
+        }
+        // Pinned values across the matrix (ceil, not round/floor).
+        assert_eq!(quorum_threshold(3, 0.5), 2); // ceil(1.5)
+        assert_eq!(quorum_threshold(4, 0.5), 2);
+        assert_eq!(quorum_threshold(8, 0.75), 6);
+        assert_eq!(quorum_threshold(16, 0.5), 8);
+        assert_eq!(quorum_threshold(1, 0.5), 1); // clamp low
+        assert_eq!(quorum_threshold(16, 1.0), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "κ must be in (0, 1]")]
+    fn threshold_rejects_kappa_above_one() {
+        quorum_threshold(4, 1.5);
     }
 
     #[test]
@@ -170,6 +373,51 @@ mod tests {
         assert!(!c.should_stop());
         c.report_full_pass();
         assert!(c.should_stop());
+    }
+
+    #[test]
+    fn begin_iteration_resets_once_per_generation() {
+        let c = AlbController::new(2, 0.5);
+        c.begin_iteration(100);
+        c.report_full_pass();
+        assert!(c.should_stop());
+        // Second caller of the same generation must NOT wipe the quorum.
+        c.begin_iteration(100);
+        assert!(c.should_stop());
+        // A later generation does.
+        c.begin_iteration(200);
+        assert!(!c.should_stop());
+        // A stale (lower) generation is a no-op.
+        c.begin_iteration(150);
+        assert!(!c.should_stop());
+        c.report_full_pass();
+        assert!(c.should_stop());
+    }
+
+    #[test]
+    fn begin_iteration_races_resolve_to_one_reset() {
+        // Many threads begin the same generation concurrently after the
+        // previous one fired: everyone must come out seeing a cleared flag.
+        for round in 0..20u64 {
+            let c = Arc::new(AlbController::new(8, 0.5));
+            c.begin_iteration(round * 1000 + 1);
+            for _ in 0..4 {
+                c.report_full_pass();
+            }
+            assert!(c.should_stop());
+            let gen = round * 1000 + 2;
+            let mut handles = Vec::new();
+            for _ in 0..8 {
+                let c = c.clone();
+                handles.push(std::thread::spawn(move || {
+                    c.begin_iteration(gen);
+                    assert!(!c.should_stop(), "stale stop leaked into gen {gen}");
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
     }
 
     #[test]
@@ -216,6 +464,51 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn drain_retired_tag_discards_parked_frames() {
+        use crate::cluster::fabric::{fabric, NetworkModel};
+        use crate::cluster::transport::Transport as _;
+        let (mut eps, _) = fabric(2, NetworkModel::default());
+        let (e1, e0) = (eps.pop().unwrap(), eps.pop().unwrap());
+        let mut e0 = e0;
+        // Three late straggler frames on a retired tag, one on a live tag.
+        e1.send(0, 100, Vec::new());
+        e1.send(0, 100, Vec::new());
+        e1.send(0, 100, Vec::new());
+        e1.send(0, 200, vec![1.0]);
+        drain_retired_tag(&mut e0, 100);
+        assert_eq!(e0.try_recv_from(1, 100), None, "retired frames discarded");
+        assert_eq!(
+            e0.try_recv_from(1, 200),
+            Some(vec![1.0]),
+            "live-tag frames survive the drain"
+        );
+    }
+
+    #[test]
+    fn alb_quorum_unifies_both_variants() {
+        use crate::cluster::fabric::{fabric, NetworkModel};
+        let (mut eps, _) = fabric(1, NetworkModel::default());
+        let mut ep = eps.pop().unwrap();
+
+        let ctrl = AlbController::new(2, 0.5);
+        let mode = AlbMode::Shared(&ctrl);
+        let mut q = mode.begin_iteration(2, 10);
+        assert_eq!(q.threshold(), 1);
+        assert!(q.stop_flag().is_some());
+        assert!(!q.should_stop(&mut ep));
+        q.report_full_pass(&mut ep);
+        assert!(q.should_stop(&mut ep));
+
+        // M = 1 remote quorum: own report is the whole quorum.
+        let mode = AlbMode::Transport { kappa: 1.0 };
+        let mut q = mode.begin_iteration(1, 20);
+        assert!(q.stop_flag().is_none());
+        assert!(!q.should_stop(&mut ep));
+        q.report_full_pass(&mut ep);
+        assert!(q.should_stop(&mut ep));
     }
 
     #[test]

@@ -1,18 +1,10 @@
-//! Barriers for the BSP phases of the cluster.
-//!
-//! Two implementations:
-//! * [`Barrier`] — shared-memory sense-reversing barrier (Mutex + Condvar)
-//!   for the in-process fabric. Owning the implementation (rather than
-//!   std's `Barrier`) lets the coordinator instrument wait time — the
-//!   "slow node" diagnosis in the ALB experiments.
-//! * [`transport_barrier`] — message-based barrier over any [`Transport`],
-//!   the only kind available once nodes are separate OS processes. Gather
-//!   to rank 0 then broadcast: 2(M−1) empty frames.
+//! Message-based barrier over the [`Transport`] seam — the only barrier the
+//! system needs now that ALB runs on per-iteration quorum tags (the old
+//! shared-memory sense-reversing `Barrier`, which existed solely for ALB's
+//! generation reset, is gone). Gather to rank 0 then broadcast:
+//! 2(M−1) empty frames.
 
 use crate::cluster::transport::Transport;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
-use std::time::Instant;
 
 /// Message-based barrier over a [`Transport`]: every rank blocks until all
 /// M ranks have entered. Consumes tags `tag_base` and `tag_base + 1`;
@@ -36,114 +28,11 @@ pub fn transport_barrier(t: &mut dyn Transport, tag_base: u64) {
     }
 }
 
-pub struct Barrier {
-    lock: Mutex<BarrierState>,
-    cv: Condvar,
-    parties: usize,
-    /// Total nanoseconds threads spent blocked here (all parties summed).
-    wait_ns: AtomicU64,
-}
-
-struct BarrierState {
-    count: usize,
-    generation: u64,
-}
-
-impl Barrier {
-    pub fn new(parties: usize) -> Barrier {
-        assert!(parties > 0);
-        Barrier {
-            lock: Mutex::new(BarrierState {
-                count: 0,
-                generation: 0,
-            }),
-            cv: Condvar::new(),
-            parties,
-            wait_ns: AtomicU64::new(0),
-        }
-    }
-
-    /// Block until all parties arrive. Returns true for exactly one
-    /// "leader" per generation (the last arriver).
-    pub fn wait(&self) -> bool {
-        let t0 = Instant::now();
-        let mut st = self.lock.lock().unwrap();
-        st.count += 1;
-        if st.count == self.parties {
-            st.count = 0;
-            st.generation = st.generation.wrapping_add(1);
-            self.cv.notify_all();
-            self.wait_ns
-                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            true
-        } else {
-            let gen = st.generation;
-            while st.generation == gen {
-                st = self.cv.wait(st).unwrap();
-            }
-            self.wait_ns
-                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            false
-        }
-    }
-
-    /// Cumulative blocked time across all parties (seconds).
-    pub fn total_wait_secs(&self) -> f64 {
-        self.wait_ns.load(Ordering::Relaxed) as f64 * 1e-9
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
-
-    #[test]
-    fn all_threads_cross_together() {
-        let parties = 8;
-        let barrier = Arc::new(Barrier::new(parties));
-        let before = Arc::new(AtomicUsize::new(0));
-        let after = Arc::new(AtomicUsize::new(0));
-        let mut handles = Vec::new();
-        for _ in 0..parties {
-            let (b, bf, af) = (barrier.clone(), before.clone(), after.clone());
-            handles.push(std::thread::spawn(move || {
-                bf.fetch_add(1, Ordering::SeqCst);
-                b.wait();
-                // When any thread is past the barrier, all must have arrived.
-                assert_eq!(bf.load(Ordering::SeqCst), 8);
-                af.fetch_add(1, Ordering::SeqCst);
-            }));
-        }
-        for h in handles {
-            h.join().unwrap();
-        }
-        assert_eq!(after.load(Ordering::SeqCst), parties);
-    }
-
-    #[test]
-    fn exactly_one_leader_per_generation() {
-        let parties = 4;
-        let generations = 10;
-        let barrier = Arc::new(Barrier::new(parties));
-        let leaders = Arc::new(AtomicUsize::new(0));
-        let mut handles = Vec::new();
-        for _ in 0..parties {
-            let (b, l) = (barrier.clone(), leaders.clone());
-            handles.push(std::thread::spawn(move || {
-                for _ in 0..generations {
-                    if b.wait() {
-                        l.fetch_add(1, Ordering::SeqCst);
-                    }
-                }
-            }));
-        }
-        for h in handles {
-            h.join().unwrap();
-        }
-        assert_eq!(leaders.load(Ordering::SeqCst), generations);
-    }
 
     #[test]
     fn transport_barrier_synchronizes_fabric_ranks() {
@@ -168,19 +57,5 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-    }
-
-    #[test]
-    fn wait_time_recorded_for_stragglers() {
-        let barrier = Arc::new(Barrier::new(2));
-        let b2 = barrier.clone();
-        let h = std::thread::spawn(move || {
-            b2.wait();
-        });
-        std::thread::sleep(std::time::Duration::from_millis(30));
-        barrier.wait();
-        h.join().unwrap();
-        // The early thread blocked ~30 ms.
-        assert!(barrier.total_wait_secs() > 0.02);
     }
 }

@@ -13,9 +13,11 @@ pub mod process;
 pub mod tcp;
 pub mod transport;
 
-pub use alb::{AlbController, RemoteQuorum};
+pub use alb::{
+    drain_retired_tag, quorum_threshold, AlbController, AlbMode, AlbQuorum, RemoteQuorum,
+};
 pub use allreduce::{allreduce_scalar, allreduce_sum, AllReduceAlgo, TAG_STRIDE};
-pub use barrier::{transport_barrier, Barrier};
+pub use barrier::transport_barrier;
 pub use fabric::{fabric, Endpoint, FabricStats, NetworkModel};
 pub use tcp::{bind_loopback, TcpOptions, TcpTransport};
 pub use transport::{frame_bytes, Transport};

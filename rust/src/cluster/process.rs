@@ -16,22 +16,28 @@
 //!    the same listener (handshake-checked rank/size/protocol-version).
 //! 3. **Train**: each process materializes the *identical* dataset from the
 //!    spec's deterministic recipe, shards its own feature block S^m, and
-//!    runs the SPMD worker. The only training traffic is the AllReduce.
+//!    runs the SPMD worker. Training traffic is the AllReduce plus, under
+//!    ALB (`alb_kappa`), the per-iteration pass-done quorum frames — the
+//!    asynchronous path needs no barrier, so it runs across real processes.
 //! 4. **Gather**: workers send β^m to rank 0 on a reserved tag; the
 //!    coordinator reassembles the global model. Each worker finally reports
-//!    its transport accounting on the control connection, so the
-//!    coordinator's Table-2 numbers cover all links.
+//!    its transport accounting plus its pass/cut-off/sync-wait load on the
+//!    control connection, so the coordinator's Table-2 numbers cover all
+//!    links and stay meaningful for asynchronous runs.
 //!
 //! Datasets are recipes, not payloads: synthetic corpora are deterministic
 //! in `(name, scale, seed)`, and libsvm paths must be readable by every
 //! process. Engine is native-only here (the XLA runtime is per-process and
-//! orthogonal to the transport); ALB needs the in-process barrier and is
-//! rejected up front.
+//! orthogonal to the transport). Straggler chaos ships in the spec:
+//! per-rank `straggler_delays` (injected per-pass sleeps) and
+//! `slow_factors` (virtual-clock handicaps), each rank picking its own
+//! entry; `dglmnet worker` can additionally override both locally.
 
+use crate::cluster::alb::AlbMode;
 use crate::cluster::allreduce::AllReduceAlgo;
 use crate::cluster::tcp::{dial_with_backoff, TcpOptions, TcpTransport, PROTOCOL_VERSION};
 use crate::cluster::transport::Transport;
-use crate::coordinator::driver::ClusterFitResult;
+use crate::coordinator::driver::{ClusterFitResult, RankLoad};
 use crate::coordinator::worker::{run_worker, WorkerConfig, WorkerOutput, WorkerShared};
 use crate::data::Splits;
 use crate::glm::loss::LossKind;
@@ -81,6 +87,21 @@ pub struct JobSpec {
     /// Test-metric cadence (0 = never; avoids shipping test margins).
     pub eval_every: usize,
     pub allreduce: AllReduceAlgo,
+    /// ALB quorum fraction κ; None = synchronous BSP.
+    pub alb_kappa: Option<f64>,
+    /// Fast-node extra passes cap under ALB.
+    pub max_passes: usize,
+    /// Quorum poll granularity in coordinates.
+    pub chunk: usize,
+    /// Injected per-pass delay in seconds, one entry per rank (missing
+    /// entries mean zero) — the deterministic straggler schedule.
+    pub straggler_delays: Vec<f64>,
+    /// Virtual cluster clock: trace timestamps become max-over-ranks CPU
+    /// time (× slow factors) plus modeled wire time. Without it the
+    /// `slow_factors` have nothing to scale.
+    pub virtual_time: bool,
+    /// Per-rank virtual-clock compute handicaps (missing entries mean 1.0).
+    pub slow_factors: Vec<f64>,
 }
 
 impl JobSpec {
@@ -107,7 +128,21 @@ impl JobSpec {
             .set("tol", self.tol)
             .set("patience", self.patience)
             .set("eval_every", self.eval_every)
-            .set("allreduce", self.allreduce.name());
+            .set("allreduce", self.allreduce.name())
+            .set("max_passes", self.max_passes)
+            .set("chunk", self.chunk)
+            .set("virtual_time", self.virtual_time)
+            .set(
+                "straggler_delays",
+                Json::Arr(self.straggler_delays.iter().map(|&d| Json::Num(d)).collect()),
+            )
+            .set(
+                "slow_factors",
+                Json::Arr(self.slow_factors.iter().map(|&f| Json::Num(f)).collect()),
+            );
+        if let Some(kappa) = self.alb_kappa {
+            o.set("alb_kappa", kappa);
+        }
         o
     }
 
@@ -123,6 +158,18 @@ impl JobSpec {
                 .and_then(|j| j.as_str())
                 .map(str::to_string)
                 .ok_or_else(|| format!("job spec missing string '{k}'"))
+        };
+        let num_list = |k: &str| -> Result<Vec<f64>, String> {
+            match v.get(k) {
+                Some(Json::Arr(xs)) => xs
+                    .iter()
+                    .map(|x| {
+                        x.as_f64()
+                            .ok_or_else(|| format!("non-numeric entry in '{k}'"))
+                    })
+                    .collect(),
+                _ => Err(format!("job spec missing list '{k}'")),
+            }
         };
         let proto = num("proto")? as u32;
         if proto != PROTOCOL_VERSION {
@@ -152,6 +199,26 @@ impl JobSpec {
         let seed: u64 = seed_str
             .parse()
             .map_err(|e| format!("bad seed '{seed_str}': {e}"))?;
+        let alb_kappa = match v.get("alb_kappa") {
+            None => None,
+            Some(j) => {
+                let kappa = j
+                    .as_f64()
+                    .ok_or_else(|| "non-numeric 'alb_kappa'".to_string())?;
+                if !(kappa > 0.0 && kappa <= 1.0) {
+                    return Err(format!("alb_kappa {kappa} outside (0, 1]"));
+                }
+                Some(kappa)
+            }
+        };
+        let straggler_delays = num_list("straggler_delays")?;
+        if straggler_delays.iter().any(|d| !d.is_finite() || *d < 0.0) {
+            return Err("straggler_delays must be finite and non-negative".into());
+        }
+        let slow_factors = num_list("slow_factors")?;
+        if slow_factors.iter().any(|f| !f.is_finite() || *f <= 0.0) {
+            return Err("slow_factors must be finite and positive".into());
+        }
         let spec = JobSpec {
             rank: num("rank")? as usize,
             cluster,
@@ -168,6 +235,12 @@ impl JobSpec {
             patience: num("patience")? as usize,
             eval_every: num("eval_every")? as usize,
             allreduce,
+            alb_kappa,
+            max_passes: num("max_passes")? as usize,
+            chunk: num("chunk")? as usize,
+            virtual_time: matches!(v.get("virtual_time"), Some(Json::Bool(true))),
+            straggler_delays,
+            slow_factors,
         };
         if spec.rank >= spec.cluster.len() {
             return Err(format!(
@@ -179,6 +252,8 @@ impl JobSpec {
         Ok(spec)
     }
 
+    /// This rank's worker config: shared hyper-parameters plus the rank's
+    /// own entry of the chaos schedule.
     fn worker_config(&self) -> WorkerConfig {
         WorkerConfig {
             adaptive_mu: self.adaptive_mu,
@@ -192,12 +267,40 @@ impl JobSpec {
             linesearch: LineSearchConfig::default(),
             eval_every: self.eval_every,
             allreduce: self.allreduce,
-            max_passes: 1, // BSP: ALB needs the in-process barrier
-            chunk: 64,
-            straggler_delay: Duration::ZERO,
-            virtual_time: false,
-            slow_factor: 1.0,
+            max_passes: if self.alb_kappa.is_some() {
+                self.max_passes.max(1)
+            } else {
+                1
+            },
+            chunk: self.chunk.max(1),
+            straggler_delay: Duration::from_secs_f64(
+                self.straggler_delays.get(self.rank).copied().unwrap_or(0.0),
+            ),
+            virtual_time: self.virtual_time,
+            slow_factor: self.slow_factors.get(self.rank).copied().unwrap_or(1.0),
             network: crate::cluster::fabric::NetworkModel::default(),
+        }
+    }
+}
+
+/// Local chaos knobs a `dglmnet worker` process can apply on top of the
+/// coordinator's spec (its own rank only) — lets an operator handicap one
+/// node without the coordinator's cooperation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerOverrides {
+    /// Replace this rank's spec slow factor.
+    pub slow_factor: Option<f64>,
+    /// Replace this rank's spec per-pass straggler delay.
+    pub straggler_delay: Option<Duration>,
+}
+
+impl WorkerOverrides {
+    fn apply(&self, cfg: &mut WorkerConfig) {
+        if let Some(f) = self.slow_factor {
+            cfg.slow_factor = f;
+        }
+        if let Some(d) = self.straggler_delay {
+            cfg.straggler_delay = d;
         }
     }
 }
@@ -217,6 +320,7 @@ fn solve_rank(
     spec: &JobSpec,
     listener: TcpListener,
     splits: &Splits,
+    overrides: &WorkerOverrides,
 ) -> anyhow::Result<RankRun> {
     let m = spec.cluster.len();
     let kind = LossKind::parse(&spec.loss)
@@ -239,14 +343,14 @@ fn solve_rank(
 
     let mut transport =
         TcpTransport::with_listener(spec.rank, &spec.cluster, listener, mesh_options())?;
-    let wcfg = spec.worker_config();
+    let mut wcfg = spec.worker_config();
+    overrides.apply(&mut wcfg);
     let shared = WorkerShared {
         compute: &compute,
         penalty: &penalty,
         y: &splits.train.y,
         test_y: test_y.as_deref(),
-        barrier: None,
-        alb: None,
+        alb: spec.alb_kappa.map(|kappa| AlbMode::Transport { kappa }),
         cfg: &wcfg,
         nodes: m,
     };
@@ -266,15 +370,18 @@ fn write_line(s: &mut TcpStream, j: &Json) -> std::io::Result<()> {
 
 /// `dglmnet worker --listen ADDR`: serve exactly one training job, then
 /// exit. Returns the job's rank on success.
-pub fn run_worker_process(listen: &str) -> anyhow::Result<usize> {
+pub fn run_worker_process(listen: &str, overrides: WorkerOverrides) -> anyhow::Result<usize> {
     let listener = TcpListener::bind(listen)
         .map_err(|e| anyhow::anyhow!("bind {listen}: {e}"))?;
-    run_worker_on(listener)
+    run_worker_on(listener, overrides)
 }
 
 /// Serve one job on an already-bound listener (lets tests and embedders
 /// hold the port from the start instead of bind-drop-rebind racing).
-pub fn run_worker_on(listener: TcpListener) -> anyhow::Result<usize> {
+pub fn run_worker_on(
+    listener: TcpListener,
+    overrides: WorkerOverrides,
+) -> anyhow::Result<usize> {
     // Printed (and flushed) before accepting so launchers can scrape the
     // resolved port when listening on :0.
     println!("worker: listening on {}", listener.local_addr()?);
@@ -307,18 +414,21 @@ pub fn run_worker_on(listener: TcpListener) -> anyhow::Result<usize> {
     ack.set("ok", true).set("rank", spec.rank);
     write_line(&mut ctrl_w, &ack)?;
     println!(
-        "worker: rank {}/{} | dataset={} scale={} loss={} λ1={} λ2={}",
+        "worker: rank {}/{} | dataset={} scale={} loss={} λ1={} λ2={} alb={}",
         spec.rank,
         spec.cluster.len(),
         spec.dataset,
         spec.scale,
         spec.loss,
         spec.l1,
-        spec.l2
+        spec.l2,
+        spec.alb_kappa
+            .map(|k| format!("κ={k}"))
+            .unwrap_or_else(|| "off".into()),
     );
 
     let splits = crate::harness::load_splits(&spec.dataset, spec.scale, spec.seed)?;
-    let run = solve_rank(&spec, listener, &splits)?;
+    let run = solve_rank(&spec, listener, &splits, &overrides)?;
     let mut transport = run.transport;
     transport.send(0, GATHER_TAG, run.output.beta_local.clone());
     // Report traffic AFTER the gather send so the coordinator's totals
@@ -330,7 +440,11 @@ pub fn run_worker_on(listener: TcpListener) -> anyhow::Result<usize> {
         .set("rank", spec.rank)
         .set("iters", run.output.iters)
         .set("sent_bytes", sent_bytes)
-        .set("sent_msgs", sent_msgs);
+        .set("sent_msgs", sent_msgs)
+        .set("cd_updates", run.output.cd_updates)
+        .set("full_passes", run.output.full_passes)
+        .set("cutoffs", run.output.cutoffs)
+        .set("sync_wait_secs", run.output.sync_wait_secs);
     write_line(&mut ctrl_w, &done)?;
     drop(transport); // joins the writer threads: the gather frame is flushed
     println!("worker: rank {} done after {} iterations", spec.rank, run.output.iters);
@@ -399,7 +513,7 @@ pub fn train_cluster(
         cluster,
         ..spec0.clone()
     };
-    let run = solve_rank(&spec, listener, splits)?;
+    let run = solve_rank(&spec, listener, splits, &WorkerOverrides::default())?;
     let mut transport = run.transport;
 
     // Gather β blocks.
@@ -417,17 +531,31 @@ pub fn train_cluster(
     }
     let beta = run.partition.unshard_weights(&blocks);
 
-    // Collect accounting reports.
+    // Collect accounting + per-rank load reports.
     let mut comm_bytes = run.output.sent_bytes;
     let mut comm_msgs = run.output.sent_msgs;
+    let mut barrier_wait_secs = run.output.sync_wait_secs;
+    let mut per_rank: Vec<RankLoad> = vec![RankLoad::from_output(&run.output)];
     for br in ctrls.iter_mut() {
         let mut line = String::new();
         br.read_line(&mut line)?;
         let done = json::parse(line.trim())
             .map_err(|e| anyhow::anyhow!("worker sent a bad done report: {e}"))?;
-        comm_bytes += done.get("sent_bytes").and_then(|j| j.as_f64()).unwrap_or(0.0) as u64;
-        comm_msgs += done.get("sent_msgs").and_then(|j| j.as_f64()).unwrap_or(0.0) as u64;
+        let field = |k: &str| done.get(k).and_then(|j| j.as_f64()).unwrap_or(0.0);
+        comm_bytes += field("sent_bytes") as u64;
+        comm_msgs += field("sent_msgs") as u64;
+        barrier_wait_secs += field("sync_wait_secs");
+        per_rank.push(RankLoad {
+            rank: field("rank") as usize,
+            cd_updates: field("cd_updates") as u64,
+            full_passes: field("full_passes") as u64,
+            cutoffs: field("cutoffs") as u64,
+            sent_bytes: field("sent_bytes") as u64,
+            sent_msgs: field("sent_msgs") as u64,
+            sync_wait_secs: field("sync_wait_secs"),
+        });
     }
+    per_rank.sort_by_key(|l| l.rank);
     drop(transport);
 
     let mut trace = run.output.trace.expect("rank 0 produces the trace");
@@ -449,8 +577,9 @@ pub fn train_cluster(
         comm_bytes,
         comm_msgs,
         sim_wire_secs: 0.0,
-        barrier_wait_secs: 0.0,
+        barrier_wait_secs,
         peak_node_f64_slots: 4 * n + 2 * max_block,
+        per_rank,
     })
 }
 
@@ -475,12 +604,24 @@ mod tests {
             patience: 2,
             eval_every: 0,
             allreduce: AllReduceAlgo::Ring,
+            alb_kappa: None,
+            max_passes: 4,
+            chunk: 64,
+            virtual_time: false,
+            straggler_delays: Vec::new(),
+            slow_factors: Vec::new(),
         }
     }
 
     #[test]
     fn job_spec_json_roundtrip() {
-        let s = spec();
+        let mut s = spec();
+        s.alb_kappa = Some(0.75);
+        s.max_passes = 3;
+        s.chunk = 16;
+        s.virtual_time = true;
+        s.straggler_delays = vec![0.0, 0.04];
+        s.slow_factors = vec![1.0, 2.5];
         let text = s.to_json().dump();
         let back = JobSpec::from_json(&text).unwrap();
         assert_eq!(back.rank, s.rank);
@@ -497,6 +638,21 @@ mod tests {
         assert_eq!(back.patience, s.patience);
         assert_eq!(back.eval_every, s.eval_every);
         assert_eq!(back.allreduce, s.allreduce);
+        assert_eq!(back.alb_kappa, s.alb_kappa);
+        assert_eq!(back.max_passes, s.max_passes);
+        assert_eq!(back.chunk, s.chunk);
+        assert_eq!(back.virtual_time, s.virtual_time);
+        assert_eq!(back.straggler_delays, s.straggler_delays);
+        assert_eq!(back.slow_factors, s.slow_factors);
+    }
+
+    #[test]
+    fn job_spec_bsp_roundtrips_without_alb_kappa() {
+        let s = spec();
+        let text = s.to_json().dump();
+        assert!(!text.contains("alb_kappa"));
+        let back = JobSpec::from_json(&text).unwrap();
+        assert_eq!(back.alb_kappa, None);
     }
 
     #[test]
@@ -513,6 +669,51 @@ mod tests {
         assert!(JobSpec::from_json(&j.dump()).is_err());
     }
 
+    #[test]
+    fn job_spec_rejects_bad_chaos_values() {
+        let mut j = spec().to_json();
+        j.set("alb_kappa", 1.5);
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+        let mut j = spec().to_json();
+        j.set("straggler_delays", Json::Arr(vec![Json::Num(-0.5)]));
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+        let mut j = spec().to_json();
+        j.set("slow_factors", Json::Arr(vec![Json::Num(0.0)]));
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+    }
+
+    #[test]
+    fn worker_config_picks_this_ranks_chaos_entries() {
+        let mut s = spec();
+        s.rank = 1;
+        s.alb_kappa = Some(0.75);
+        s.virtual_time = true;
+        s.straggler_delays = vec![0.0, 0.03];
+        s.slow_factors = vec![1.0, 4.0];
+        let cfg = s.worker_config();
+        assert_eq!(cfg.straggler_delay, Duration::from_millis(30));
+        assert_eq!(cfg.slow_factor, 4.0);
+        assert!(cfg.virtual_time, "virtual clock must reach the worker");
+        assert_eq!(cfg.max_passes, 4);
+        // BSP forces a single pass regardless of max_passes.
+        s.alb_kappa = None;
+        assert_eq!(s.worker_config().max_passes, 1);
+    }
+
+    #[test]
+    fn worker_overrides_replace_spec_chaos() {
+        let mut cfg = spec().worker_config();
+        let ov = WorkerOverrides {
+            slow_factor: Some(2.0),
+            straggler_delay: Some(Duration::from_millis(5)),
+        };
+        ov.apply(&mut cfg);
+        assert_eq!(cfg.slow_factor, 2.0);
+        assert_eq!(cfg.straggler_delay, Duration::from_millis(5));
+        WorkerOverrides::default().apply(&mut cfg);
+        assert_eq!(cfg.slow_factor, 2.0, "empty overrides change nothing");
+    }
+
     /// Full in-test cluster: 1 coordinator + 2 workers as threads of this
     /// process, each running the real process entry points over loopback.
     #[test]
@@ -527,14 +728,22 @@ mod tests {
         let mut s = spec();
         s.cluster = vec!["127.0.0.1:0".into(), a1, a2];
 
-        let h1 = std::thread::spawn(move || run_worker_on(w1).unwrap());
-        let h2 = std::thread::spawn(move || run_worker_on(w2).unwrap());
+        let h1 =
+            std::thread::spawn(move || run_worker_on(w1, WorkerOverrides::default()).unwrap());
+        let h2 =
+            std::thread::spawn(move || run_worker_on(w2, WorkerOverrides::default()).unwrap());
         let fit = train_cluster(&s, None).unwrap();
         assert_eq!(h1.join().unwrap(), 1);
         assert_eq!(h2.join().unwrap(), 2);
 
         assert!(fit.objective.is_finite());
         assert!(fit.comm_bytes > 0, "three ranks must have talked");
+        assert_eq!(fit.per_rank.len(), 3);
+        for (r, load) in fit.per_rank.iter().enumerate() {
+            assert_eq!(load.rank, r);
+            assert_eq!(load.full_passes, fit.iters as u64, "BSP: 1 pass/iter");
+            assert_eq!(load.cutoffs, 0);
+        }
 
         // Oracle: identical math to the single-process reference.
         let splits = crate::harness::load_splits("epsilon_like", 0.05, 3).unwrap();
@@ -560,5 +769,43 @@ mod tests {
             fit.objective,
             seq.objective
         );
+    }
+
+    /// The same in-test cluster under ALB with an injected straggler: the
+    /// per-rank load report must show the slow rank doing less CD work.
+    #[test]
+    fn alb_cluster_job_reports_straggler_load() {
+        use std::net::TcpListener;
+        let w1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let w2 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a1 = w1.local_addr().unwrap().to_string();
+        let a2 = w2.local_addr().unwrap().to_string();
+        let mut s = spec();
+        s.cluster = vec!["127.0.0.1:0".into(), a1, a2];
+        s.alb_kappa = Some(0.5); // M=3 → threshold ⌈1.5⌉ = 2: fast ranks decide
+        s.chunk = 4;
+        s.max_iters = 6;
+        s.tol = 0.0;
+        s.straggler_delays = vec![0.0, 0.03, 0.0]; // rank 1 sleeps per pass
+
+        let h1 =
+            std::thread::spawn(move || run_worker_on(w1, WorkerOverrides::default()).unwrap());
+        let h2 =
+            std::thread::spawn(move || run_worker_on(w2, WorkerOverrides::default()).unwrap());
+        let fit = train_cluster(&s, None).unwrap();
+        h1.join().unwrap();
+        h2.join().unwrap();
+
+        assert!(fit.objective.is_finite());
+        assert_eq!(fit.per_rank.len(), 3);
+        let straggler = &fit.per_rank[1];
+        let fast_min = fit.per_rank[0].cd_updates.min(fit.per_rank[2].cd_updates);
+        assert!(
+            straggler.cd_updates < fast_min,
+            "straggler did {} updates vs fastest {} — ALB did not cut it off",
+            straggler.cd_updates,
+            fast_min
+        );
+        assert!(straggler.cutoffs > 0, "straggler never reported a cut-off");
     }
 }

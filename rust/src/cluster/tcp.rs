@@ -34,8 +34,10 @@ use std::time::{Duration, Instant};
 
 /// Handshake magic ("dGLM" little-endian) — rejects strangers early.
 const MAGIC: u32 = 0x4D4C_4764;
-/// Bump on any wire-format change; both sides must agree.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// Bump on any wire-format change; both sides must agree. v2: the job spec
+/// gained the ALB / straggler-chaos fields (alb_kappa, max_passes, chunk,
+/// straggler_delays, slow_factors).
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Dial / handshake tuning.
 #[derive(Clone, Copy, Debug)]

@@ -1,17 +1,19 @@
 //! Driver: builds the feature partition, shards the data, wires the
-//! transport / barrier / ALB controller, spawns one worker thread per node
-//! and assembles the global model from the per-node blocks.
+//! transport / ALB mode, spawns one worker thread per node and assembles
+//! the global model from the per-node blocks.
 //!
 //! Two entry points share all of the above through the [`Transport`] seam:
 //! [`fit_distributed`] (in-process fabric, the simulation substrate with
-//! modeled wire time and ALB) and [`fit_distributed_tcp`] (one thread per
-//! rank, each talking real length-prefixed TCP over loopback — the
+//! modeled wire time) and [`fit_distributed_tcp`] (one thread per rank,
+//! each talking real length-prefixed TCP over loopback — the
 //! single-process proof of the socket backend; `dglmnet train --cluster`
-//! runs the same worker across separate OS processes).
+//! runs the same worker across separate OS processes). Both support ALB:
+//! the fabric wires the shared-memory [`AlbController`] special case, the
+//! TCP path the transport-level per-iteration quorum — the worker cannot
+//! tell them apart behind `AlbMode`.
 
-use crate::cluster::alb::AlbController;
+use crate::cluster::alb::{AlbController, AlbMode};
 use crate::cluster::allreduce::AllReduceAlgo;
-use crate::cluster::barrier::Barrier;
 use crate::cluster::fabric::{fabric, NetworkModel};
 use crate::cluster::tcp::{bind_loopback, TcpOptions, TcpTransport};
 use crate::data::Dataset;
@@ -20,7 +22,7 @@ use crate::solver::compute::GlmCompute;
 use crate::solver::linesearch::LineSearchConfig;
 use crate::solver::trace::Trace;
 use crate::sparse::{Csc, FeaturePartition};
-use crate::coordinator::worker::{run_worker, WorkerConfig, WorkerShared};
+use crate::coordinator::worker::{run_worker, WorkerConfig, WorkerOutput, WorkerShared};
 use std::time::Duration;
 
 /// Configuration of a distributed fit.
@@ -83,6 +85,38 @@ impl Default for DistributedConfig {
     }
 }
 
+/// Per-rank load accounting — the Table-2 columns that stay meaningful
+/// under asynchronous (ALB) runs, where ranks no longer perform identical
+/// work: a straggler shows fewer CD updates and non-zero cut-offs.
+#[derive(Clone, Debug, Default)]
+pub struct RankLoad {
+    pub rank: usize,
+    /// Coordinate updates performed across the run.
+    pub cd_updates: u64,
+    /// Full passes over S^m completed.
+    pub full_passes: u64,
+    /// Iterations this rank was cut off before completing one pass.
+    pub cutoffs: u64,
+    pub sent_bytes: u64,
+    pub sent_msgs: u64,
+    /// Time spent blocked in the post-CD XΔβ synchronization.
+    pub sync_wait_secs: f64,
+}
+
+impl RankLoad {
+    pub fn from_output(o: &WorkerOutput) -> RankLoad {
+        RankLoad {
+            rank: o.rank,
+            cd_updates: o.cd_updates,
+            full_passes: o.full_passes,
+            cutoffs: o.cutoffs,
+            sent_bytes: o.sent_bytes,
+            sent_msgs: o.sent_msgs,
+            sync_wait_secs: o.sync_wait_secs,
+        }
+    }
+}
+
 /// Result of a distributed fit.
 #[derive(Clone, Debug)]
 pub struct ClusterFitResult {
@@ -95,11 +129,15 @@ pub struct ClusterFitResult {
     pub comm_msgs: u64,
     /// Modeled wire time under the configured `NetworkModel`.
     pub sim_wire_secs: f64,
-    /// Cumulative barrier wait (straggler diagnosis).
+    /// Cumulative time all ranks spent blocked in the post-CD XΔβ
+    /// synchronization — the BSP "barrier wait" stragglers inflate and ALB
+    /// cuts (straggler diagnosis).
     pub barrier_wait_secs: f64,
     /// Per-node memory footprint in f64 slots: the paper's 3n + 2|S^m|
     /// claim, reported as measured vector lengths (max over nodes).
     pub peak_node_f64_slots: usize,
+    /// Per-rank pass / cut-off / traffic accounting (index = rank).
+    pub per_rank: Vec<RankLoad>,
 }
 
 /// Shared prep: partition, shards, and the per-worker base config.
@@ -154,15 +192,26 @@ fn plan_cluster(
     }
 }
 
+/// Per-rank worker config: the base plus this rank's injected chaos.
+fn rank_cfg(base: &WorkerConfig, cfg: &DistributedConfig, rank: usize) -> WorkerConfig {
+    let mut wcfg = base.clone();
+    if let Some(d) = cfg.straggler_delays.get(rank) {
+        wcfg.straggler_delay = *d;
+    }
+    if let Some(f) = cfg.slow_factors.get(rank) {
+        wcfg.slow_factor = *f;
+    }
+    wcfg
+}
+
 /// Assemble the per-node blocks into the global result. Communication
 /// totals come from the workers' transport accounting, so the numbers are
 /// identical across backends.
 fn assemble_result(
     train: &Dataset,
     partition: &FeaturePartition,
-    outputs: Vec<crate::coordinator::worker::WorkerOutput>,
+    outputs: Vec<WorkerOutput>,
     sim_wire_secs: f64,
-    barrier_wait_secs: f64,
 ) -> ClusterFitResult {
     let n = train.n();
     let block_weights: Vec<Vec<f64>> = outputs.iter().map(|o| o.beta_local.clone()).collect();
@@ -170,6 +219,8 @@ fn assemble_result(
 
     let comm_bytes: u64 = outputs.iter().map(|o| o.sent_bytes).sum();
     let comm_msgs: u64 = outputs.iter().map(|o| o.sent_msgs).sum();
+    let barrier_wait_secs: f64 = outputs.iter().map(|o| o.sync_wait_secs).sum();
+    let per_rank: Vec<RankLoad> = outputs.iter().map(RankLoad::from_output).collect();
 
     let mut trace = outputs
         .iter()
@@ -194,6 +245,7 @@ fn assemble_result(
         sim_wire_secs,
         barrier_wait_secs,
         peak_node_f64_slots: peak,
+        per_rank,
     }
 }
 
@@ -208,27 +260,20 @@ pub fn fit_distributed(
 ) -> ClusterFitResult {
     let plan = plan_cluster(train, test, cfg);
     let (endpoints, stats) = fabric(cfg.nodes, cfg.network);
-    let barrier = Barrier::new(cfg.nodes);
+    // The fabric's thin special case: a shared-memory controller whose
+    // per-iteration reset is claimed via generation CAS — no barrier.
     let alb = cfg
         .alb_kappa
         .map(|kappa| AlbController::new(cfg.nodes, kappa));
 
-    let mut outputs: Vec<Option<crate::coordinator::worker::WorkerOutput>> =
-        (0..cfg.nodes).map(|_| None).collect();
+    let mut outputs: Vec<Option<WorkerOutput>> = (0..cfg.nodes).map(|_| None).collect();
 
     crossbeam_utils::thread::scope(|scope| {
         let mut handles = Vec::new();
         for (rank, ep) in endpoints.into_iter().enumerate() {
             let shard = &plan.shards[rank];
             let test_shard = plan.test_shards.as_ref().map(|ts| &ts[rank]);
-            let mut wcfg = plan.worker_cfg_base.clone();
-            if let Some(d) = cfg.straggler_delays.get(rank) {
-                wcfg.straggler_delay = *d;
-            }
-            if let Some(f) = cfg.slow_factors.get(rank) {
-                wcfg.slow_factor = *f;
-            }
-            let barrier_ref = &barrier;
+            let wcfg = rank_cfg(&plan.worker_cfg_base, cfg, rank);
             let alb_ref = alb.as_ref();
             let y = train.y.as_slice();
             let test_y = test.map(|t| t.y.as_slice());
@@ -239,8 +284,7 @@ pub fn fit_distributed(
                     penalty,
                     y,
                     test_y,
-                    barrier: Some(barrier_ref),
-                    alb: alb_ref,
+                    alb: alb_ref.map(AlbMode::Shared),
                     cfg: &wcfg,
                     nodes,
                 };
@@ -256,28 +300,20 @@ pub fn fit_distributed(
     })
     .expect("cluster scope failed");
 
-    let outputs: Vec<crate::coordinator::worker::WorkerOutput> =
-        outputs.into_iter().map(|o| o.unwrap()).collect();
+    let outputs: Vec<WorkerOutput> = outputs.into_iter().map(|o| o.unwrap()).collect();
     debug_assert_eq!(
         outputs.iter().map(|o| o.sent_bytes).sum::<u64>(),
         stats.total_bytes(),
         "fabric global accounting must equal the sum of per-endpoint sends"
     );
-    assemble_result(
-        train,
-        &plan.partition,
-        outputs,
-        stats.sim_wire_secs(),
-        barrier.total_wait_secs(),
-    )
+    assemble_result(train, &plan.partition, outputs, stats.sim_wire_secs())
 }
 
 /// Train d-GLMNET over real TCP sockets on loopback: one thread per rank,
 /// each owning a [`TcpTransport`] endpoint of a full mesh — the same worker
 /// code as [`fit_distributed`], exercising the wire protocol end to end.
-/// BSP only: ALB's generation reset needs a shared-memory barrier, which
-/// separate processes don't have (see `cluster::alb::RemoteQuorum` for the
-/// distributed quorum building block).
+/// ALB included: `alb_kappa` runs the transport-level per-iteration quorum,
+/// exactly what separate OS processes (`dglmnet train --cluster`) use.
 pub fn fit_distributed_tcp(
     train: &Dataset,
     test: Option<&Dataset>,
@@ -285,28 +321,17 @@ pub fn fit_distributed_tcp(
     penalty: &dyn Penalty1D,
     cfg: &DistributedConfig,
 ) -> anyhow::Result<ClusterFitResult> {
-    anyhow::ensure!(
-        cfg.alb_kappa.is_none(),
-        "ALB requires the in-process fabric (shared-memory barrier)"
-    );
     let plan = plan_cluster(train, test, cfg);
     let (addrs, listeners) = bind_loopback(cfg.nodes)?;
 
-    let mut outputs: Vec<Option<crate::coordinator::worker::WorkerOutput>> =
-        (0..cfg.nodes).map(|_| None).collect();
+    let mut outputs: Vec<Option<WorkerOutput>> = (0..cfg.nodes).map(|_| None).collect();
 
     crossbeam_utils::thread::scope(|scope| {
         let mut handles = Vec::new();
         for (rank, listener) in listeners.into_iter().enumerate() {
             let shard = &plan.shards[rank];
             let test_shard = plan.test_shards.as_ref().map(|ts| &ts[rank]);
-            let mut wcfg = plan.worker_cfg_base.clone();
-            if let Some(d) = cfg.straggler_delays.get(rank) {
-                wcfg.straggler_delay = *d;
-            }
-            if let Some(f) = cfg.slow_factors.get(rank) {
-                wcfg.slow_factor = *f;
-            }
+            let wcfg = rank_cfg(&plan.worker_cfg_base, cfg, rank);
             let y = train.y.as_slice();
             let test_y = test.map(|t| t.y.as_slice());
             let addrs = addrs.clone();
@@ -319,8 +344,7 @@ pub fn fit_distributed_tcp(
                     penalty,
                     y,
                     test_y,
-                    barrier: None,
-                    alb: None,
+                    alb: cfg.alb_kappa.map(|kappa| AlbMode::Transport { kappa }),
                     cfg: &wcfg,
                     nodes: cfg.nodes,
                 };
@@ -335,9 +359,8 @@ pub fn fit_distributed_tcp(
     })
     .expect("cluster scope failed");
 
-    let outputs: Vec<crate::coordinator::worker::WorkerOutput> =
-        outputs.into_iter().map(|o| o.unwrap()).collect();
-    Ok(assemble_result(train, &plan.partition, outputs, 0.0, 0.0))
+    let outputs: Vec<WorkerOutput> = outputs.into_iter().map(|o| o.unwrap()).collect();
+    Ok(assemble_result(train, &plan.partition, outputs, 0.0))
 }
 
 #[cfg(test)]
@@ -435,7 +458,7 @@ mod tests {
 
     #[test]
     fn alb_beats_bsp_with_injected_straggler() {
-        // One node 30x slower: ALB should cut it off and finish the same
+        // One node much slower: ALB should cut it off and finish the same
         // iteration count in much less wall-clock time.
         let train = ds(300, 40, 14);
         let compute = NativeCompute::new(LossKind::Logistic);
@@ -465,6 +488,59 @@ mod tests {
             alb_time < bsp_time,
             "ALB {alb_time:?} should beat BSP {bsp_time:?} with a straggler"
         );
+    }
+
+    #[test]
+    fn slow_factor_scales_the_virtual_clock() {
+        // The virtual cluster clock charges max-over-nodes CPU × slow
+        // factor: a heavily handicapped rank must dominate the simulated
+        // time axis even though wall-clock is unchanged.
+        let train = ds(1500, 60, 16);
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let pen = ElasticNet::new(0.2, 0.1);
+        let sim_t = |factors: Vec<f64>| {
+            let cfg = DistributedConfig {
+                nodes: 2,
+                max_iters: 6,
+                tol: 0.0,
+                eval_every: 0,
+                virtual_time: true,
+                slow_factors: factors,
+                ..Default::default()
+            };
+            let fit = fit_distributed(&train, None, &compute, &pen, &cfg);
+            fit.trace.points.last().unwrap().t_sec
+        };
+        let even = sim_t(vec![1.0, 1.0]);
+        let skewed = sim_t(vec![1.0, 200.0]);
+        assert!(even > 0.0, "virtual clock must advance ({even})");
+        assert!(
+            skewed > 5.0 * even,
+            "200× slow factor should dominate the virtual clock: {skewed} vs {even}"
+        );
+    }
+
+    #[test]
+    fn per_rank_loads_are_uniform_under_bsp() {
+        let train = ds(150, 20, 18);
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let pen = ElasticNet::new(0.3, 0.1);
+        let cfg = DistributedConfig {
+            nodes: 3,
+            max_iters: 5,
+            tol: 0.0,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let fit = fit_distributed(&train, None, &compute, &pen, &cfg);
+        assert_eq!(fit.per_rank.len(), 3);
+        for (r, load) in fit.per_rank.iter().enumerate() {
+            assert_eq!(load.rank, r);
+            assert_eq!(load.full_passes, 5, "BSP: one pass per iteration");
+            assert_eq!(load.cutoffs, 0);
+        }
+        let total: u64 = fit.per_rank.iter().map(|l| l.cd_updates).sum();
+        assert_eq!(total, 5 * train.p() as u64, "Σ updates = iters × p");
     }
 
     #[test]

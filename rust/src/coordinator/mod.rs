@@ -6,4 +6,6 @@
 pub mod driver;
 pub mod worker;
 
-pub use driver::{fit_distributed, fit_distributed_tcp, ClusterFitResult, DistributedConfig};
+pub use driver::{
+    fit_distributed, fit_distributed_tcp, ClusterFitResult, DistributedConfig, RankLoad,
+};

@@ -11,11 +11,13 @@
 //!
 //! All communication goes through the [`Transport`] seam, so the identical
 //! worker drives both the in-process fabric (threads) and the TCP mesh
-//! (separate OS processes, `dglmnet worker`).
+//! (separate OS processes, `dglmnet worker`). ALB included: each outer
+//! iteration begins one fresh [`AlbQuorum`] on a tag from the worker's
+//! `TAG_STRIDE` allocator, so there is no generation reset and no barrier —
+//! the asynchronous path works across real processes.
 
-use crate::cluster::alb::AlbController;
+use crate::cluster::alb::{AlbMode, AlbQuorum};
 use crate::cluster::allreduce::{allreduce_max, allreduce_sum, AllReduceAlgo, TAG_STRIDE};
-use crate::cluster::barrier::Barrier;
 use crate::cluster::transport::Transport;
 use crate::glm::regularizer::Penalty1D;
 use crate::metrics;
@@ -33,10 +35,9 @@ pub struct WorkerShared<'a> {
     pub penalty: &'a dyn Penalty1D,
     pub y: &'a [f64],
     pub test_y: Option<&'a [f64]>,
-    /// Shared-memory barrier — only available (and only needed, for the ALB
-    /// generation reset) when all nodes are threads in one process.
-    pub barrier: Option<&'a Barrier>,
-    pub alb: Option<&'a AlbController>,
+    /// ALB quorum source; `None` = synchronous BSP. Must be the same
+    /// variant on every rank (SPMD uniformity).
+    pub alb: Option<AlbMode<'a>>,
     pub cfg: &'a WorkerConfig,
     /// Total node count M (for SPMD-uniform per-node traffic estimates).
     pub nodes: usize,
@@ -65,7 +66,8 @@ pub struct WorkerConfig {
     /// Under ALB, cap on full passes a fast node may run per iteration
     /// ("two or more updates of each weight", paper §7).
     pub max_passes: usize,
-    /// Coordinates between stop-flag polls / straggler sleeps.
+    /// Coordinates between stop-flag polls / straggler sleeps (capped at
+    /// the block size so every pass polls the quorum at least once).
     pub chunk: usize,
     /// Injected per-pass compute delay for this node (slow-node simulation).
     pub straggler_delay: Duration,
@@ -92,6 +94,97 @@ pub struct WorkerOutput {
     /// This endpoint's sent traffic during the run (transport accounting).
     pub sent_bytes: u64,
     pub sent_msgs: u64,
+    /// Coordinate updates this rank performed across all iterations — the
+    /// Table-2 load column that exposes straggler cut-offs under ALB.
+    pub cd_updates: u64,
+    /// Full passes over S^m completed (BSP: one per iteration).
+    pub full_passes: u64,
+    /// Iterations where the κ quorum cut this rank off before it finished
+    /// a single pass.
+    pub cutoffs: u64,
+    /// Time this rank spent inside the post-CD XΔβ AllReduce — under BSP
+    /// this is the barrier wait fast nodes pay for stragglers; ALB exists
+    /// to shrink it.
+    pub sync_wait_secs: f64,
+}
+
+/// Outcome of one iteration's ALB subproblem (see [`run_alb_subproblem`]).
+pub struct AlbOutcome {
+    /// Coordinate updates performed this iteration.
+    pub updates: usize,
+    /// Full passes over the block completed this iteration.
+    pub full_passes: usize,
+    /// Whether this rank reported a completed pass to the quorum (false =
+    /// it was cut off mid-pass, the paper's straggler case).
+    pub reported: bool,
+}
+
+/// One outer iteration's local subproblem under ALB: chunks of coordinate
+/// descent with the quorum polled between chunks (and, in the shared-memory
+/// special case, a per-coordinate stop flag inside the chunk). Always runs
+/// at least one chunk, mirroring `cd_cycle`'s at-least-one-update rule, so
+/// a pre-fired quorum still makes progress on every rank and the cyclic
+/// cursor keeps advancing — the straggler resumes mid-block next iteration.
+pub fn run_alb_subproblem(
+    x: &Csc,
+    beta: &[f64],
+    w: &[f64],
+    z: &[f64],
+    mu: f64,
+    penalty: &dyn Penalty1D,
+    cfg: &WorkerConfig,
+    state: &mut SubproblemState,
+    quorum: &mut AlbQuorum<'_>,
+    t: &mut dyn Transport,
+) -> AlbOutcome {
+    let p_local = x.ncols;
+    if p_local == 0 {
+        // An empty block is a trivially complete pass: report it so this
+        // rank never starves the κ quorum (possible when p < M).
+        quorum.report_full_pass(t);
+        return AlbOutcome {
+            updates: 0,
+            full_passes: 1,
+            reported: true,
+        };
+    }
+    let max_updates = cfg.max_passes.max(1) * p_local;
+    let mut updates = 0usize;
+    let mut reported = false;
+    loop {
+        let chunk = cfg.chunk.max(1).min(p_local).min(max_updates - updates);
+        inject_delay(cfg, chunk, p_local);
+        let out = cd_cycle(
+            x,
+            beta,
+            w,
+            z,
+            mu,
+            cfg.nu,
+            penalty,
+            state,
+            CycleBudget {
+                max_updates: chunk,
+                stop: quorum.stop_flag(),
+            },
+        );
+        updates += out.updates;
+        if !reported && updates >= p_local {
+            quorum.report_full_pass(t);
+            reported = true;
+        }
+        if out.updates < chunk {
+            break; // the shared stop flag fired mid-chunk
+        }
+        if updates >= max_updates || quorum.should_stop(t) {
+            break;
+        }
+    }
+    AlbOutcome {
+        updates,
+        full_passes: updates / p_local,
+        reported,
+    }
 }
 
 /// Run the full training loop for one node. `x` is the node's shard X^m;
@@ -124,6 +217,15 @@ pub fn run_worker(
     let mut cpu_mark = crate::util::cputime::thread_cpu_secs();
     let mut bytes_mark = 0u64;
     let mut msgs_mark = 0u64;
+    // Table-2 load accounting.
+    let mut cd_updates = 0u64;
+    let mut full_passes = 0u64;
+    let mut cutoffs = 0u64;
+    let mut sync_wait = Duration::ZERO;
+    // Sliding window of retired ALB tags, re-drained every iteration so
+    // late straggler frames don't pile up in the transport's pending map
+    // (a frame can arrive after its tag was first drained).
+    let mut retired_alb_tags: Vec<u64> = Vec::new();
 
     // Tag allocator: SPMD-deterministic (every rank performs the identical
     // sequence of collectives).
@@ -167,10 +269,10 @@ pub fn run_worker(
         iters = it;
         // ---- Algorithm 4 step 4: local subproblem (with optional ALB) ----
         state.reset();
-        if p_local > 0 {
-            match shared.alb {
-                None => {
-                    // BSP: exactly one full pass.
+        match shared.alb {
+            None => {
+                // BSP: exactly one full pass.
+                if p_local > 0 {
                     inject_delay(cfg, p_local, p_local);
                     cd_cycle(
                         x,
@@ -184,48 +286,50 @@ pub fn run_worker(
                         CycleBudget::full_cycle(p_local),
                     );
                 }
-                Some(alb) => {
-                    let mut updates_done = 0usize;
-                    let mut reported = false;
-                    let max_updates = cfg.max_passes * p_local;
-                    while updates_done < max_updates && !alb.should_stop() {
-                        let chunk = cfg.chunk.min(max_updates - updates_done);
-                        inject_delay(cfg, chunk, p_local);
-                        let out = cd_cycle(
-                            x,
-                            &beta,
-                            &w,
-                            &z,
-                            mu,
-                            cfg.nu,
-                            shared.penalty,
-                            &mut state,
-                            CycleBudget {
-                                max_updates: chunk,
-                                stop: Some(alb.stop_flag()),
-                            },
-                        );
-                        updates_done += out.updates;
-                        if !reported && updates_done >= p_local {
-                            alb.report_full_pass();
-                            reported = true;
-                        }
-                        if out.updates < chunk {
-                            break; // stop flag fired mid-chunk
-                        }
-                    }
-                    if !reported {
-                        // Straggler: still counts as "participated" but does
-                        // not contribute to the κ quorum (paper semantics:
-                        // quorum counts nodes that FINISHED their pass).
-                    }
+                cd_updates += p_local as u64;
+                full_passes += 1;
+            }
+            Some(mode) => {
+                // Fresh quorum on a fresh tag every iteration: late frames
+                // from stragglers land on a retired tag and are never
+                // replayed, so there is nothing to reset. Re-drain the
+                // recent retired tags so those frames don't accumulate.
+                for &old in &retired_alb_tags {
+                    crate::cluster::alb::drain_retired_tag(*ep_cell.borrow_mut(), old);
+                }
+                let alb_tag = next_tag();
+                if retired_alb_tags.len() == crate::cluster::alb::RETIRED_TAG_WINDOW {
+                    retired_alb_tags.remove(0);
+                }
+                retired_alb_tags.push(alb_tag);
+                let mut quorum = mode.begin_iteration(shared.nodes, alb_tag);
+                let out = run_alb_subproblem(
+                    x,
+                    &beta,
+                    &w,
+                    &z,
+                    mu,
+                    shared.penalty,
+                    cfg,
+                    &mut state,
+                    &mut quorum,
+                    *ep_cell.borrow_mut(),
+                );
+                cd_updates += out.updates as u64;
+                full_passes += out.full_passes as u64;
+                if !out.reported {
+                    cutoffs += 1;
                 }
             }
         }
 
         // ---- step 6: AllReduce XΔβ ----
+        // Timed: under BSP this blocking collective is where fast ranks
+        // wait out stragglers (the "barrier wait" the comm report exposes).
+        let sync_t0 = Instant::now();
         let mut dmargins = state.t.clone();
         allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut dmargins, cfg.allreduce);
+        sync_wait += sync_t0.elapsed();
 
         // ---- step 7: global line search (redundant on every node) ----
         // ∇L(β)ᵀΔβ from the cached working set: g_i = −w_i z_i exactly
@@ -329,17 +433,6 @@ pub fn run_worker(
             shared,
         );
 
-        // ---- ALB generation reset: leader resets between barriers ----
-        if let Some(alb) = shared.alb {
-            let barrier = shared
-                .barrier
-                .expect("shared-memory ALB requires an in-process barrier");
-            if barrier.wait() {
-                alb.reset();
-            }
-            barrier.wait();
-        }
-
         // ---- convergence (identical decision on every node) ----
         if rel_drop.abs() < cfg.tol {
             stall += 1;
@@ -359,11 +452,15 @@ pub fn run_worker(
         iters,
         sent_bytes,
         sent_msgs,
+        cd_updates,
+        full_passes,
+        cutoffs,
+        sync_wait_secs: sync_wait.as_secs_f64(),
     }
 }
 
 /// Injected straggler sleep, prorated to the fraction of a pass executed.
-fn inject_delay(cfg: &WorkerConfig, updates: usize, p_local: usize) {
+pub(crate) fn inject_delay(cfg: &WorkerConfig, updates: usize, p_local: usize) {
     if cfg.straggler_delay != Duration::ZERO && p_local > 0 {
         let frac = updates as f64 / p_local as f64;
         std::thread::sleep(Duration::from_secs_f64(
@@ -420,5 +517,65 @@ fn record_point(
             mu,
             auprc,
         });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_with_delay(ms: u64) -> WorkerConfig {
+        WorkerConfig {
+            adaptive_mu: true,
+            mu0: 1.0,
+            eta1: 2.0,
+            eta2: 2.0,
+            nu: 1e-6,
+            max_iters: 1,
+            tol: 0.0,
+            patience: 1,
+            linesearch: LineSearchConfig::default(),
+            eval_every: 0,
+            allreduce: AllReduceAlgo::Naive,
+            max_passes: 1,
+            chunk: 64,
+            straggler_delay: Duration::from_millis(ms),
+            virtual_time: false,
+            slow_factor: 1.0,
+            network: crate::cluster::fabric::NetworkModel::default(),
+        }
+    }
+
+    #[test]
+    fn inject_delay_is_prorated_to_pass_fraction() {
+        let cfg = cfg_with_delay(400);
+        // Sleeps guarantee only a minimum, so avoid absolute upper bounds:
+        // assert the floors plus the relative property that a quarter pass
+        // sleeps strictly less than a full pass measured on the same box —
+        // an unprorated implementation would sleep the full delay both
+        // times and fail the comparison.
+        let t0 = Instant::now();
+        inject_delay(&cfg, 25, 100);
+        let quarter = t0.elapsed();
+        let t0 = Instant::now();
+        inject_delay(&cfg, 100, 100);
+        let full = t0.elapsed();
+        assert!(
+            quarter >= Duration::from_millis(100),
+            "quarter pass slept {quarter:?}"
+        );
+        assert!(full >= Duration::from_millis(400), "full pass slept {full:?}");
+        assert!(
+            quarter < full,
+            "proration broken: quarter {quarter:?} vs full {full:?}"
+        );
+    }
+
+    #[test]
+    fn inject_delay_noop_without_delay_or_block() {
+        let t0 = Instant::now();
+        inject_delay(&cfg_with_delay(0), 10, 10);
+        inject_delay(&cfg_with_delay(40), 10, 0); // empty block: no proration
+        assert!(t0.elapsed() < Duration::from_millis(20));
     }
 }

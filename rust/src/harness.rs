@@ -4,7 +4,7 @@
 //! the format of the paper's figures.
 
 use crate::cluster::allreduce::AllReduceAlgo;
-use crate::coordinator::{fit_distributed, ClusterFitResult, DistributedConfig};
+use crate::coordinator::{fit_distributed, ClusterFitResult, DistributedConfig, RankLoad};
 use crate::data::{Corpus, Splits};
 use crate::glm::loss::LossKind;
 use crate::glm::regularizer::ElasticNet;
@@ -191,6 +191,51 @@ pub fn print_convergence(dataset: &str, traces: &[&Trace], f_star: f64) {
         }
     }
     t.print();
+}
+
+/// Per-rank Table-2-style load report — the columns that stay meaningful
+/// under asynchronous (ALB) runs: a straggler shows fewer CD updates and
+/// non-zero cut-offs, and the sync-wait column is the BSP barrier cost ALB
+/// exists to shrink. Shared by the CLI and the chaos test suite.
+pub fn print_rank_loads(ranks: &[RankLoad]) {
+    if ranks.is_empty() {
+        return;
+    }
+    println!("\n== per-rank load (Table 2, asynchronous-aware) ==");
+    let mut t = Table::new(&[
+        "rank",
+        "cd updates",
+        "passes",
+        "cutoffs",
+        "sent MiB",
+        "msgs",
+        "sync wait (s)",
+    ]);
+    for r in ranks {
+        t.row(&[
+            r.rank.to_string(),
+            r.cd_updates.to_string(),
+            r.full_passes.to_string(),
+            r.cutoffs.to_string(),
+            format!("{:.2}", r.sent_bytes as f64 / (1024.0 * 1024.0)),
+            r.sent_msgs.to_string(),
+            format!("{:.3}", r.sync_wait_secs),
+        ]);
+    }
+    t.print();
+}
+
+/// One-straggler delay schedule: rank `victim` of `m` sleeps `delay` per
+/// pass, everyone else runs full speed (the chaos suite's standard shape).
+pub fn delays_with_straggler(
+    m: usize,
+    victim: usize,
+    delay: std::time::Duration,
+) -> Vec<std::time::Duration> {
+    assert!(victim < m, "straggler rank {victim} out of range for {m} nodes");
+    let mut delays = vec![std::time::Duration::ZERO; m];
+    delays[victim] = delay;
+    delays
 }
 
 /// Subsample a trace to ≤ 8 display checkpoints (first, last, log-spaced).

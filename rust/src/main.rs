@@ -15,10 +15,11 @@
 //!   dglmnet bench-serve --addr 127.0.0.1:7878 --threads 8
 //!
 //! Multi-process cluster (real sockets instead of the thread simulation;
-//! start the workers first, then the coordinator):
+//! start the workers first, then the coordinator — add --alb-kappa 0.75 for
+//! asynchronous load balancing across the processes):
 //!   dglmnet worker --listen 127.0.0.1:7101   # × M−1, one per node
 //!   dglmnet train --cluster 127.0.0.1:7100,127.0.0.1:7101,... \
-//!       --dataset epsilon_like --l1 1.0 --max-iters 30
+//!       --dataset epsilon_like --l1 1.0 --max-iters 30 --alb-kappa 0.75
 
 use std::sync::Arc;
 
@@ -98,10 +99,35 @@ fn train_cli() -> Cli {
         "",
         "comma-separated host:port list for a real multi-process TCP cluster \
          (entry 0 = this coordinator's listen address; others must be running \
-         `dglmnet worker`). Overrides --nodes; BSP only",
+         `dglmnet worker`). Overrides --nodes; BSP and ALB (--alb-kappa) both work",
     )
     .switch("alb", "enable Asynchronous Load Balancing (κ = 0.75)")
     .flag("kappa", "0.75", "ALB quorum fraction")
+    .flag(
+        "alb-kappa",
+        "",
+        "enable ALB with this quorum fraction κ in one flag (works with \
+         --cluster: the asynchronous path runs across real processes)",
+    )
+    .flag("max-passes", "4", "ALB cap on full passes a fast node runs per iteration")
+    .flag("chunk", "64", "coordinates between ALB quorum polls / straggler sleeps")
+    .flag(
+        "straggler-delays-ms",
+        "",
+        "comma list of injected per-pass delays in ms, one per rank \
+         (deterministic slow-node chaos; shipped to workers via the job spec)",
+    )
+    .flag(
+        "slow-factors",
+        "",
+        "comma list of per-rank compute handicaps for the virtual clock \
+         (requires --virtual-time)",
+    )
+    .switch(
+        "virtual-time",
+        "trace timestamps = max-over-ranks CPU time (× --slow-factors) + \
+         modeled wire time, instead of wall-clock",
+    )
     .flag("engine", "native", "compute engine: native | xla (needs artifacts/)")
     .flag("artifacts", "artifacts", "artifacts directory for --engine xla")
     .flag("max-iters", "50", "outer iteration budget")
@@ -161,14 +187,62 @@ fn cmd_train(argv: &[String]) -> i32 {
             eprintln!("--cluster contains an empty address (stray comma?)");
             return 2;
         }
-        if args.get_bool("alb") {
-            eprintln!("--alb needs the in-process fabric; a TCP cluster runs BSP (drop --alb)");
-            return 2;
-        }
         if args.get("engine") != "native" {
             eprintln!("--cluster currently supports --engine native only");
             return 2;
         }
+    }
+    // ALB selection: --alb-kappa κ in one flag, or the --alb switch with
+    // the separate --kappa fraction. Either form works with --cluster (the
+    // per-iteration quorum needs no shared memory).
+    let alb_kappa = if !args.get("alb-kappa").is_empty() {
+        match args.get("alb-kappa").parse::<f64>() {
+            Ok(k) => Some(k),
+            Err(_) => {
+                eprintln!("--alb-kappa must be a number in (0, 1]");
+                return 2;
+            }
+        }
+    } else if args.get_bool("alb") {
+        Some(args.get_f64("kappa"))
+    } else {
+        None
+    };
+    // Validated once for both spellings (--alb-kappa and --alb --kappa):
+    // an out-of-range κ must be a usage error, not a quorum assert later.
+    if let Some(k) = alb_kappa {
+        if !(k > 0.0 && k <= 1.0) {
+            eprintln!("ALB quorum fraction must be in (0, 1], got {k}");
+            return 2;
+        }
+    }
+    let straggler_delays = match parse_f64_list(args.get("straggler-delays-ms")) {
+        Ok(ms) => ms
+            .into_iter()
+            .map(|m| std::time::Duration::from_secs_f64(m / 1000.0))
+            .collect::<Vec<_>>(),
+        Err(e) => {
+            eprintln!("--straggler-delays-ms: {e}");
+            return 2;
+        }
+    };
+    let slow_factors = match parse_f64_list(args.get("slow-factors")) {
+        Ok(fs) => {
+            if fs.iter().any(|f| *f <= 0.0) {
+                eprintln!("--slow-factors entries must be positive");
+                return 2;
+            }
+            fs
+        }
+        Err(e) => {
+            eprintln!("--slow-factors: {e}");
+            return 2;
+        }
+    };
+    let virtual_time = args.get_bool("virtual-time");
+    if !slow_factors.is_empty() && !virtual_time {
+        eprintln!("--slow-factors only scale the virtual clock; add --virtual-time");
+        return 2;
     }
     let cfg = DistributedConfig {
         nodes: if cluster.is_empty() {
@@ -176,13 +250,18 @@ fn cmd_train(argv: &[String]) -> i32 {
         } else {
             cluster.len()
         },
-        alb_kappa: args.get_bool("alb").then(|| args.get_f64("kappa")),
+        alb_kappa,
         adaptive_mu: !args.get_bool("no-adaptive-mu"),
         mu0: args.get_f64("mu0"),
         max_iters: args.get_usize("max-iters"),
         eval_every: args.get_usize("eval-every"),
         seed,
         allreduce: AllReduceAlgo::Ring,
+        max_passes: args.get_usize("max-passes"),
+        chunk: args.get_usize("chunk"),
+        straggler_delays: straggler_delays.clone(),
+        virtual_time,
+        slow_factors: slow_factors.clone(),
         ..Default::default()
     };
 
@@ -221,6 +300,15 @@ fn cmd_train(argv: &[String]) -> i32 {
             patience: cfg.patience,
             eval_every: cfg.eval_every,
             allreduce: AllReduceAlgo::Ring,
+            alb_kappa: cfg.alb_kappa,
+            max_passes: cfg.max_passes,
+            chunk: cfg.chunk,
+            straggler_delays: straggler_delays
+                .iter()
+                .map(|d| d.as_secs_f64())
+                .collect(),
+            virtual_time: cfg.virtual_time,
+            slow_factors,
         };
         match process::train_cluster(&spec, Some(&splits)) {
             Ok(r) => r,
@@ -268,13 +356,14 @@ fn cmd_train(argv: &[String]) -> i32 {
         auc
     );
     println!(
-        "comm: {:.2} MiB in {} messages (modeled wire time {:.3}s) | barrier wait {:.3}s | peak node mem {:.1} MiB",
+        "comm: {:.2} MiB in {} messages (modeled wire time {:.3}s) | sync wait {:.3}s | peak node mem {:.1} MiB",
         result.comm_bytes as f64 / (1024.0 * 1024.0),
         result.comm_msgs,
         result.sim_wire_secs,
         result.barrier_wait_secs,
         result.peak_node_f64_slots as f64 * 8.0 / (1024.0 * 1024.0),
     );
+    harness::print_rank_loads(&result.per_rank);
     harness::print_convergence(
         &splits.train.name,
         &[&result.trace],
@@ -311,7 +400,18 @@ fn cmd_worker(argv: &[String]) -> i32 {
         "serve one rank of a multi-process TCP training cluster, then exit \
          (rank, data recipe, and hyper-parameters arrive from the coordinator)",
     )
-    .flag("listen", "127.0.0.1:0", "listen address for control + cluster mesh (port 0 = ephemeral, printed on startup)");
+    .flag("listen", "127.0.0.1:0", "listen address for control + cluster mesh (port 0 = ephemeral, printed on startup)")
+    .flag(
+        "slow-factor",
+        "",
+        "override this rank's virtual-clock compute handicap (takes effect \
+         when the coordinator's job enables --virtual-time)",
+    )
+    .flag(
+        "straggler-delay-ms",
+        "",
+        "override this rank's injected per-pass delay in ms (local chaos injection)",
+    );
     let args = match cli.parse(argv) {
         Ok(a) => a,
         Err(CliError::HelpRequested) => {
@@ -323,13 +423,56 @@ fn cmd_worker(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    match process::run_worker_process(args.get("listen")) {
+    let mut overrides = process::WorkerOverrides::default();
+    if !args.get("slow-factor").is_empty() {
+        match args.get("slow-factor").parse::<f64>() {
+            Ok(f) if f.is_finite() && f > 0.0 => overrides.slow_factor = Some(f),
+            _ => {
+                eprintln!("--slow-factor must be a positive number");
+                return 2;
+            }
+        }
+    }
+    if !args.get("straggler-delay-ms").is_empty() {
+        match args.get("straggler-delay-ms").parse::<f64>() {
+            Ok(ms) if ms.is_finite() && ms >= 0.0 => {
+                overrides.straggler_delay =
+                    Some(std::time::Duration::from_secs_f64(ms / 1000.0));
+            }
+            _ => {
+                eprintln!("--straggler-delay-ms must be a non-negative number");
+                return 2;
+            }
+        }
+    }
+    match process::run_worker_process(args.get("listen"), overrides) {
         Ok(_) => 0,
         Err(e) => {
             eprintln!("worker failed: {e}");
             1
         }
     }
+}
+
+/// Parse a comma-separated list of numbers ("" → empty).
+fn parse_f64_list(s: &str) -> Result<Vec<f64>, String> {
+    if s.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|tok| {
+            let tok = tok.trim();
+            tok.parse::<f64>()
+                .map_err(|e| format!("bad entry '{tok}': {e}"))
+                .and_then(|v| {
+                    if v.is_finite() && v >= 0.0 {
+                        Ok(v)
+                    } else {
+                        Err(format!("entry '{tok}' must be finite and non-negative"))
+                    }
+                })
+        })
+        .collect()
 }
 
 fn cmd_predict(argv: &[String]) -> i32 {

@@ -1,0 +1,675 @@
+//! Deterministic straggler/chaos suite for transport-level ALB (§7).
+//!
+//! Proves the per-iteration quorum-tag protocol end to end, against BOTH
+//! interconnect backends (in-process fabric, TCP mesh on loopback):
+//!
+//! 1. the κ quorum fires at exactly ⌈κ·M⌉ pass reports — never earlier;
+//! 2. a cut-off straggler's cyclic cursor resumes mid-block across outer
+//!    iterations (no weight starved, paper §7);
+//! 3. under a programmable per-rank delay schedule, ALB cuts the cumulative
+//!    post-CD sync wait versus BSP while test logloss stays within
+//!    tolerance of the BSP reference, and the per-rank load report shows
+//!    the straggler doing less CD work;
+//! 4. a real 4-process ALB run through the shipped binary converges to the
+//!    BSP single-process reference (logloss within 1e-3).
+//!
+//! Plus `util::prop` property tests for `RemoteQuorum`: duplicate frames
+//! never double-count, reporting is idempotent, reports are monotone, and
+//! late frames on a retired tag never leak into the next iteration.
+
+use dglmnet::cluster::{
+    bind_loopback, fabric, AlbMode, NetworkModel, RemoteQuorum, TcpOptions, TcpTransport,
+    Transport, TAG_STRIDE,
+};
+use dglmnet::coordinator::worker::{run_alb_subproblem, WorkerConfig};
+use dglmnet::coordinator::{fit_distributed, fit_distributed_tcp, DistributedConfig};
+use dglmnet::glm::loss::LossKind;
+use dglmnet::glm::regularizer::ElasticNet;
+use dglmnet::glm::GlmModel;
+use dglmnet::metrics;
+use dglmnet::solver::compute::NativeCompute;
+use dglmnet::solver::subproblem::SubproblemState;
+use dglmnet::sparse::Csc;
+use dglmnet::util::prop;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Backend parameterization: all endpoints owned by ONE thread — fabric and
+// TCP sends never block, so quorum schedules can be driven deterministically.
+// ---------------------------------------------------------------------------
+
+fn fabric_endpoints(m: usize) -> Vec<Box<dyn Transport>> {
+    let (eps, _) = fabric(m, NetworkModel::default());
+    eps.into_iter()
+        .map(|e| Box::new(e) as Box<dyn Transport>)
+        .collect()
+}
+
+fn tcp_endpoints(m: usize) -> Vec<Box<dyn Transport>> {
+    let (addrs, listeners) = bind_loopback(m).expect("bind loopback");
+    let mut out: Vec<Option<Box<dyn Transport>>> = (0..m).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (rank, listener) in listeners.into_iter().enumerate() {
+            let addrs = addrs.clone();
+            handles.push(s.spawn(move || {
+                TcpTransport::with_listener(rank, &addrs, listener, TcpOptions::default())
+                    .expect("tcp mesh")
+            }));
+        }
+        for (rank, h) in handles.into_iter().enumerate() {
+            out[rank] = Some(Box::new(h.join().expect("mesh thread")));
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+type Backend = (&'static str, fn(usize) -> Vec<Box<dyn Transport>>);
+const BACKENDS: [Backend; 2] = [("fabric", fabric_endpoints), ("tcp", tcp_endpoints)];
+
+/// Poll `q` over `t` until it has observed `want` reports (TCP delivery is
+/// asynchronous). Panics after a generous deadline instead of hanging.
+fn await_reports(name: &str, q: &mut RemoteQuorum, t: &mut dyn Transport, want: usize) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        q.should_stop(t);
+        if q.reports() >= want {
+            return;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "{name}: rank {} saw only {}/{want} reports before the deadline",
+            t.rank(),
+            q.reports()
+        );
+        std::thread::yield_now();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Exact quorum threshold
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quorum_fires_at_exactly_ceil_kappa_m_over_both_backends() {
+    for (name, make) in BACKENDS {
+        let m = 4;
+        for (kappa, threshold) in [(0.5, 2usize), (0.75, 3), (1.0, 4)] {
+            let mut eps = make(m);
+            let tag = TAG_STRIDE;
+            let mut quorums: Vec<RemoteQuorum> =
+                (0..m).map(|_| RemoteQuorum::new(m, kappa, tag)).collect();
+            assert_eq!(quorums[0].threshold(), threshold, "{name} κ={kappa}");
+
+            // threshold − 1 ranks report: NOBODY may stop yet.
+            for r in 0..threshold - 1 {
+                quorums[r].report_full_pass(eps[r].as_mut());
+            }
+            for r in 0..m {
+                // Wait until every frame sent so far has been observed, so
+                // the negative assertion is deterministic (not a race):
+                // reporters count their own pass + the other reporters'
+                // frames, non-reporters count all reporters — both sum to
+                // threshold − 1 reports.
+                await_reports(name, &mut quorums[r], eps[r].as_mut(), threshold - 1);
+                assert!(
+                    !quorums[r].should_stop(eps[r].as_mut()),
+                    "{name} κ={kappa}: rank {r} stopped at {} < ⌈κM⌉ = {threshold}",
+                    threshold - 1
+                );
+            }
+
+            // One more report reaches the threshold: EVERYBODY stops —
+            // for κ < 1 that includes rank M−1, which never reported.
+            quorums[threshold - 1].report_full_pass(eps[threshold - 1].as_mut());
+            for r in 0..m {
+                let deadline = std::time::Instant::now() + Duration::from_secs(10);
+                while !quorums[r].should_stop(eps[r].as_mut()) {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "{name} κ={kappa}: rank {r} never observed the quorum"
+                    );
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Cut-off straggler resumes mid-block
+// ---------------------------------------------------------------------------
+
+fn straggler_cfg(chunk: usize) -> WorkerConfig {
+    WorkerConfig {
+        adaptive_mu: true,
+        mu0: 1.0,
+        eta1: 2.0,
+        eta2: 2.0,
+        nu: 1e-6,
+        max_iters: 1,
+        tol: 0.0,
+        patience: 1,
+        linesearch: Default::default(),
+        eval_every: 0,
+        allreduce: dglmnet::cluster::AllReduceAlgo::Naive,
+        max_passes: 4,
+        chunk,
+        straggler_delay: Duration::ZERO,
+        virtual_time: false,
+        slow_factor: 1.0,
+        network: NetworkModel::default(),
+    }
+}
+
+#[test]
+fn straggler_cursor_resumes_mid_block_across_iterations_over_both_backends() {
+    for (name, make) in BACKENDS {
+        let m = 2;
+        let mut eps = make(m);
+        // 10-column block on 4 examples; dense-ish so every update touches t.
+        let x = Csc::from_triplets(
+            4,
+            10,
+            (0..10).map(|j| (j % 4, j, 1.0 + j as f64 * 0.1)).collect::<Vec<_>>(),
+        );
+        let beta = vec![0.0; 10];
+        let w = vec![1.0; 4];
+        let z = vec![0.5; 4];
+        let pen = ElasticNet::new(0.01, 0.0);
+        let cfg = straggler_cfg(4);
+        let mut state = SubproblemState::new(10, 4);
+        let mode = AlbMode::Transport { kappa: 0.5 }; // M=2 → threshold 1
+
+        let mut cursors = Vec::new();
+        for it in 0..3u64 {
+            state.reset(); // Δβ and t cleared, cursor preserved
+            let tag = (it + 1) * TAG_STRIDE;
+            // The fast peer (rank 1) completes its pass and broadcasts.
+            let mut peer = RemoteQuorum::new(m, 0.5, tag);
+            peer.report_full_pass(eps[1].as_mut());
+            // Rank 0 is the straggler: wait until the quorum is visible so
+            // the schedule is deterministic on both backends, then run its
+            // subproblem — the do-while loop grants exactly one chunk.
+            let mut quorum = mode.begin_iteration(m, tag);
+            let deadline = std::time::Instant::now() + Duration::from_secs(10);
+            while !quorum.should_stop(eps[0].as_mut()) {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "{name}: quorum frame never arrived"
+                );
+                std::thread::yield_now();
+            }
+            let out = run_alb_subproblem(
+                &x,
+                &beta,
+                &w,
+                &z,
+                1.0,
+                &pen,
+                &cfg,
+                &mut state,
+                &mut quorum,
+                eps[0].as_mut(),
+            );
+            assert_eq!(out.updates, 4, "{name} iter {it}: one chunk exactly");
+            assert!(!out.reported, "{name} iter {it}: straggler was cut off");
+            assert_eq!(out.full_passes, 0, "{name} iter {it}");
+            cursors.push(state.cursor);
+        }
+        // 4 updates per iteration over a 10-column block: the cursor walks
+        // 4 → 8 → wraps to 2, i.e. the straggler resumed mid-block twice.
+        assert_eq!(cursors, vec![4, 8, 2], "{name}: cursor must resume cyclically");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. ALB cuts sync wait under an injected slow rank, quality preserved
+// ---------------------------------------------------------------------------
+
+fn logloss_of(beta: &[f64], splits: &dglmnet::data::Splits) -> f64 {
+    let model = GlmModel::new(LossKind::Logistic, beta.to_vec());
+    let probs = model.predict_proba(&splits.test.x);
+    metrics::logloss(&splits.test.y, &probs)
+}
+
+fn chaos_cfg(delays: Vec<Duration>) -> DistributedConfig {
+    DistributedConfig {
+        nodes: 4,
+        max_iters: 60,
+        tol: 1e-9,
+        patience: 2,
+        eval_every: 0,
+        seed: 41,
+        chunk: 4,
+        straggler_delays: delays,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn alb_cuts_sync_wait_and_matches_bsp_quality_over_fabric() {
+    let splits = dglmnet::data::synth::Corpus::epsilon_like(0.05, 41);
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::new(0.3, 0.1);
+    let delays = dglmnet::harness::delays_with_straggler(4, 2, Duration::from_millis(25));
+
+    let bsp = fit_distributed(&splits.train, None, &compute, &pen, &chaos_cfg(delays.clone()));
+    let alb = fit_distributed(
+        &splits.train,
+        None,
+        &compute,
+        &pen,
+        &DistributedConfig {
+            alb_kappa: Some(0.75),
+            ..chaos_cfg(delays)
+        },
+    );
+
+    // (a) The straggler inflates BSP's post-CD sync wait; ALB cuts it.
+    let bsp_wait = bsp.barrier_wait_secs / bsp.iters as f64;
+    let alb_wait = alb.barrier_wait_secs / alb.iters as f64;
+    assert!(
+        alb_wait < 0.7 * bsp_wait,
+        "ALB per-iteration sync wait {alb_wait:.4}s not well under BSP {bsp_wait:.4}s"
+    );
+
+    // (b) Quality: test logloss within tolerance of the BSP reference.
+    let ll_bsp = logloss_of(&bsp.beta, &splits);
+    let ll_alb = logloss_of(&alb.beta, &splits);
+    assert!(
+        (ll_alb - ll_bsp).abs() < 1e-3,
+        "ALB logloss {ll_alb} drifted from BSP {ll_bsp}"
+    );
+
+    // (c) Per-rank load accounting shows the cut-off straggler.
+    let straggler = &alb.per_rank[2];
+    let fast_min = alb
+        .per_rank
+        .iter()
+        .filter(|l| l.rank != 2)
+        .map(|l| l.cd_updates)
+        .min()
+        .unwrap();
+    assert!(
+        straggler.cd_updates < fast_min,
+        "straggler updates {} vs fastest {fast_min}",
+        straggler.cd_updates
+    );
+    assert!(straggler.cutoffs > 0, "straggler was never cut off");
+}
+
+#[test]
+fn alb_cuts_sync_wait_and_matches_bsp_quality_over_tcp() {
+    let splits = dglmnet::data::synth::Corpus::epsilon_like(0.05, 42);
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::new(0.3, 0.1);
+    let delays = dglmnet::harness::delays_with_straggler(4, 1, Duration::from_millis(25));
+
+    let mut cfg = chaos_cfg(delays);
+    cfg.seed = 42;
+    let bsp = fit_distributed_tcp(&splits.train, None, &compute, &pen, &cfg).expect("bsp tcp");
+    let alb = fit_distributed_tcp(
+        &splits.train,
+        None,
+        &compute,
+        &pen,
+        &DistributedConfig {
+            alb_kappa: Some(0.75),
+            ..cfg
+        },
+    )
+    .expect("alb tcp");
+
+    let bsp_wait = bsp.barrier_wait_secs / bsp.iters as f64;
+    let alb_wait = alb.barrier_wait_secs / alb.iters as f64;
+    assert!(
+        alb_wait < 0.7 * bsp_wait,
+        "TCP ALB per-iteration sync wait {alb_wait:.4}s not well under BSP {bsp_wait:.4}s"
+    );
+
+    let ll_bsp = logloss_of(&bsp.beta, &splits);
+    let ll_alb = logloss_of(&alb.beta, &splits);
+    assert!(
+        (ll_alb - ll_bsp).abs() < 1e-3,
+        "TCP ALB logloss {ll_alb} drifted from BSP {ll_bsp}"
+    );
+
+    let straggler = &alb.per_rank[1];
+    let fast_min = alb
+        .per_rank
+        .iter()
+        .filter(|l| l.rank != 1)
+        .map(|l| l.cd_updates)
+        .min()
+        .unwrap();
+    assert!(
+        straggler.cd_updates < fast_min,
+        "TCP straggler updates {} vs fastest {fast_min}",
+        straggler.cd_updates
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 4. Real 4-process ALB cluster through the shipped binary
+// ---------------------------------------------------------------------------
+
+#[test]
+fn multiprocess_alb_cluster_end_to_end() {
+    use std::io::BufRead;
+    use std::process::{Child, Command, Stdio};
+
+    let bin = env!("CARGO_BIN_EXE_dglmnet");
+    let mut workers: Vec<Child> = Vec::new();
+    let mut addrs: Vec<String> = Vec::new();
+
+    struct Cleanup<'a>(&'a mut Vec<Child>);
+    impl Drop for Cleanup<'_> {
+        fn drop(&mut self) {
+            for c in self.0.iter_mut() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+
+    for _ in 0..3 {
+        let mut child = Command::new(bin)
+            .args(["worker", "--listen", "127.0.0.1:0"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn worker");
+        let stdout = child.stdout.take().expect("worker stdout");
+        let mut reader = std::io::BufReader::new(stdout);
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("worker banner");
+        let addr = line
+            .trim()
+            .strip_prefix("worker: listening on ")
+            .unwrap_or_else(|| panic!("unexpected worker banner: {line:?}"))
+            .to_string();
+        addrs.push(addr);
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            loop {
+                sink.clear();
+                if reader.read_line(&mut sink).unwrap_or(0) == 0 {
+                    break;
+                }
+            }
+        });
+        workers.push(child);
+    }
+    let cleanup = Cleanup(&mut workers);
+
+    let model_path = std::env::temp_dir().join(format!(
+        "dglmnet_alb_e2e_model_{}.json",
+        std::process::id()
+    ));
+    let cluster = format!("127.0.0.1:0,{}", addrs.join(","));
+    // Rank 2 carries an injected 40 ms/pass straggler delay via the job spec.
+    let out = Command::new(bin)
+        .args([
+            "train",
+            "--cluster",
+            &cluster,
+            "--alb-kappa",
+            "0.75",
+            "--straggler-delays-ms",
+            "0,0,40,0",
+            "--chunk",
+            "8",
+            "--dataset",
+            "epsilon_like",
+            "--scale",
+            "0.05",
+            "--seed",
+            "1",
+            "--loss",
+            "logistic",
+            "--l1",
+            "0.5",
+            "--l2",
+            "0.0",
+            "--max-iters",
+            "50",
+            "--eval-every",
+            "0",
+            "--save-model",
+            model_path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run coordinator");
+    assert!(
+        out.status.success(),
+        "ALB coordinator failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    drop(cleanup); // workers have exited with the job; reap them
+
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+
+    // The per-rank comm report must show the straggler (rank 2) performing
+    // fewer CD updates than every fast rank.
+    let mut updates: Vec<Option<u64>> = vec![None; 4];
+    for line in stdout.lines() {
+        let cells: Vec<&str> = line
+            .trim()
+            .trim_matches('|')
+            .split('|')
+            .map(str::trim)
+            .collect();
+        if cells.len() >= 7 {
+            if let (Ok(rank), Ok(upd)) = (cells[0].parse::<usize>(), cells[1].parse::<u64>()) {
+                if rank < 4 {
+                    updates[rank] = Some(upd);
+                }
+            }
+        }
+    }
+    let updates: Vec<u64> = updates
+        .into_iter()
+        .map(|u| u.expect("per-rank load row missing from coordinator output"))
+        .collect();
+    let fast_min = [updates[0], updates[1], updates[3]]
+        .into_iter()
+        .min()
+        .unwrap();
+    assert!(
+        updates[2] < fast_min,
+        "straggler rank 2 did {} updates vs fastest {fast_min}\n{stdout}",
+        updates[2]
+    );
+
+    // Quality: the cluster model's test logloss within 1e-3 of the BSP
+    // single-process reference on the identical recipe.
+    let model = GlmModel::load(&model_path).expect("saved cluster model");
+    std::fs::remove_file(&model_path).ok();
+    let splits = dglmnet::harness::load_splits("epsilon_like", 0.05, 1).expect("splits");
+    let probs = model.predict_proba(&splits.test.x);
+    let ll_cluster = metrics::logloss(&splits.test.y, &probs);
+
+    let seq = dglmnet::solver::dglmnet::fit(
+        &splits.train,
+        &NativeCompute::new(LossKind::Logistic),
+        &ElasticNet::new(0.5, 0.0),
+        &dglmnet::solver::dglmnet::DGlmnetConfig {
+            nodes: 4,
+            max_iters: 50,
+            tol: 1e-7,
+            patience: 2,
+            seed: 1,
+            eval_every: 0,
+            ..Default::default()
+        },
+        None,
+    );
+    let ll_ref = logloss_of(&seq.beta, &splits);
+    assert!(
+        (ll_cluster - ll_ref).abs() < 1e-3,
+        "4-process ALB logloss {ll_cluster} vs BSP reference {ll_ref}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// RemoteQuorum property tests (util::prop, single-threaded fabric: sends
+// are visible to try_recv immediately, so every schedule is deterministic)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_duplicate_pass_done_frames_never_double_count() {
+    prop::check("duplicate frames never double-count", 60, |rng| {
+        let m = 2 + rng.below(4); // 2..=5
+        let kappa = [0.5, 0.75, 1.0][rng.below(3)];
+        let (mut eps, _) = fabric(m, NetworkModel::default());
+        let tag = TAG_STRIDE;
+        let mut q = RemoteQuorum::new(m, kappa, tag);
+        let mut distinct = 0usize;
+        for r in 1..m {
+            let dups = rng.below(4); // 0..=3 raw frames from rank r
+            for _ in 0..dups {
+                eps[r].send(0, tag, Vec::new());
+            }
+            if dups > 0 {
+                distinct += 1;
+            }
+        }
+        q.should_stop(&mut eps[0]); // drains everything that arrived
+        if q.reports() != distinct {
+            return Err(format!(
+                "m={m}: counted {} reports from {distinct} distinct ranks",
+                q.reports()
+            ));
+        }
+        let want_stop = distinct >= q.threshold();
+        if q.should_stop(&mut eps[0]) != want_stop {
+            return Err(format!(
+                "m={m} κ={kappa}: stop={} with {distinct}/{} reports",
+                !want_stop,
+                q.threshold()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_report_full_pass_is_idempotent() {
+    prop::check("report_full_pass is idempotent", 40, |rng| {
+        let m = 2 + rng.below(4);
+        let (mut eps, _) = fabric(m, NetworkModel::default());
+        let mut q = RemoteQuorum::new(m, 1.0, 7);
+        let repeats = 1 + rng.below(5);
+        for _ in 0..repeats {
+            q.report_full_pass(&mut eps[0]);
+        }
+        if q.reports() != 1 {
+            return Err(format!("own report counted {} times", q.reports()));
+        }
+        // Exactly one broadcast: M−1 empty frames, no matter how often the
+        // worker re-reports.
+        let (bytes, msgs) = eps[0].sent();
+        if msgs != (m - 1) as u64 || bytes != 16 * (m - 1) as u64 {
+            return Err(format!("broadcast not idempotent: {msgs} msgs, {bytes} B"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reports_are_monotone_and_stop_is_sticky() {
+    prop::check("reports monotone, stop sticky", 60, |rng| {
+        let m = 3 + rng.below(3); // 3..=5
+        let (mut eps, _) = fabric(m, NetworkModel::default());
+        let tag = 3 * TAG_STRIDE;
+        let mut q = RemoteQuorum::new(m, 0.75, tag);
+        // Random event schedule: own report + each peer reporting 0..2
+        // times, interleaved.
+        let mut events: Vec<usize> = vec![0]; // 0 = own report
+        for r in 1..m {
+            for _ in 0..1 + rng.below(2) {
+                events.push(r);
+            }
+        }
+        // Fisher-Yates with the prop rng.
+        for i in (1..events.len()).rev() {
+            events.swap(i, rng.below(i + 1));
+        }
+        let mut last_reports = 0usize;
+        let mut stopped = false;
+        for ev in events {
+            if ev == 0 {
+                q.report_full_pass(&mut eps[0]);
+            } else {
+                eps[ev].send(0, tag, Vec::new());
+            }
+            let stop_now = q.should_stop(&mut eps[0]);
+            if q.reports() < last_reports {
+                return Err(format!(
+                    "reports regressed {last_reports} -> {}",
+                    q.reports()
+                ));
+            }
+            last_reports = q.reports();
+            if stopped && !stop_now {
+                return Err("stop signal un-fired".into());
+            }
+            stopped = stop_now;
+            if stop_now != (last_reports >= q.threshold()) {
+                return Err(format!(
+                    "stop={stop_now} with {last_reports}/{} reports",
+                    q.threshold()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_retired_tag_frames_never_leak_into_next_quorum() {
+    prop::check("retired tags never leak", 60, |rng| {
+        let m = 2 + rng.below(4);
+        let (mut eps, _) = fabric(m, NetworkModel::default());
+        let tag_a = TAG_STRIDE;
+        let tag_b = 2 * TAG_STRIDE;
+
+        // Iteration A: everyone reports, the quorum fires and is retired.
+        let mut qa = RemoteQuorum::new(m, 1.0, tag_a);
+        qa.report_full_pass(&mut eps[0]);
+        for r in 1..m {
+            eps[r].send(0, tag_a, Vec::new());
+        }
+        if !qa.should_stop(&mut eps[0]) {
+            return Err("iteration A quorum did not fire".into());
+        }
+
+        // Late stragglers keep spraying frames on the RETIRED tag...
+        for r in 1..m {
+            for _ in 0..rng.below(3) {
+                eps[r].send(0, tag_a, Vec::new());
+            }
+        }
+        // ...which must be invisible to iteration B's quorum.
+        let mut qb = RemoteQuorum::new(m, 1.0, tag_b);
+        qb.should_stop(&mut eps[0]);
+        if qb.reports() != 0 {
+            return Err(format!(
+                "B counted {} reports from retired-tag frames",
+                qb.reports()
+            ));
+        }
+        // Genuine B-frames still count exactly once per rank.
+        let fresh = 1 + rng.below(m - 1); // 1..=m−1 ranks report for B
+        for r in 1..=fresh {
+            eps[r].send(0, tag_b, Vec::new());
+        }
+        qb.should_stop(&mut eps[0]);
+        if qb.reports() != fresh {
+            return Err(format!("B saw {} of {fresh} fresh reports", qb.reports()));
+        }
+        Ok(())
+    });
+}

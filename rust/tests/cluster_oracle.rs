@@ -68,6 +68,55 @@ fn distributed_matches_reference_over_both_transports() {
     }
 }
 
+/// The ALB column of the oracle matrix: the asynchronous path has no
+/// iterate-for-iterate oracle (fast ranks run extra passes, stragglers cut
+/// short), but at convergence it must land on the same optimum — within a
+/// quality tolerance of the high-precision reference — for M ∈ {2, 4} over
+/// BOTH transports, so the per-iteration quorum protocol is guarded by the
+/// same suite that pins BSP.
+#[test]
+fn alb_matches_reference_within_quality_tolerance_over_both_transports() {
+    let train = ds(200, 16, 24);
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::new(0.3, 0.1);
+    // High-precision single-process optimum f*.
+    let f_star = dg::fit(
+        &train,
+        &compute,
+        &pen,
+        &DGlmnetConfig {
+            nodes: 1,
+            max_iters: 500,
+            tol: 1e-13,
+            patience: 5,
+            eval_every: 0,
+            seed: 24,
+            ..Default::default()
+        },
+        None,
+    )
+    .objective;
+    for m in [2, 4] {
+        let mut cfg = dist_cfg(m, 200, 24);
+        cfg.tol = 1e-10;
+        cfg.patience = 3;
+        cfg.alb_kappa = Some(0.75);
+        let fab = fit_distributed(&train, None, &compute, &pen, &cfg);
+        let tcp = fit_distributed_tcp(&train, None, &compute, &pen, &cfg).expect("tcp alb");
+        for (name, got) in [("fabric", fab.objective), ("tcp", tcp.objective)] {
+            let gap = (got - f_star) / f_star.abs().max(1e-12);
+            assert!(
+                gap < 1e-3,
+                "{name} ALB M={m}: objective {got} vs reference {f_star} (gap {gap:.3e})"
+            );
+            assert!(
+                gap > -1e-6,
+                "{name} ALB M={m}: objective {got} below the reference optimum {f_star}"
+            );
+        }
+    }
+}
+
 /// The L1 run's support (which features are exactly zero) survives the
 /// distributed path on both transports.
 #[test]
