@@ -135,7 +135,7 @@ fn warmstart_ablation() {
         ..Default::default()
     };
     let t0 = Instant::now();
-    let warm = path::l1_path(&splits, &compute, &lambdas, 0.0, &cfg);
+    let warm = path::l1_path(&splits, &compute, &lambdas, 0.0, &cfg).expect("non-empty grid");
     let warm_time = t0.elapsed().as_secs_f64();
     let warm_iters: usize = warm.points.iter().map(|p| p.iters).sum();
 

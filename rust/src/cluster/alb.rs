@@ -539,6 +539,7 @@ mod tests {
             CycleBudget {
                 max_updates: 10,
                 stop: Some(c.stop_flag()),
+                active: None,
             },
         );
         assert_eq!(out.updates, 1);

@@ -25,6 +25,12 @@
 //!    control connection, so the coordinator's Table-2 numbers cover all
 //!    links and stay meaningful for asynchronous runs.
 //!
+//! Protocol v3 adds a second job mode: `mode: "path"` sweeps the spec's
+//! `lambda_grid` descending inside ONE mesh session (warm starts + KKT
+//! screening, validation-auPRC selection — see `run_worker_path`), and the
+//! gather step becomes one β frame per grid point on the same reserved tag
+//! (FIFO per (peer, tag) keeps grid order). Path jobs are BSP-only.
+//!
 //! Datasets are recipes, not payloads: synthetic corpora are deterministic
 //! in `(name, scale, seed)`, and libsvm paths must be readable by every
 //! process. Engine is native-only here (the XLA runtime is per-process and
@@ -37,13 +43,17 @@ use crate::cluster::alb::AlbMode;
 use crate::cluster::allreduce::AllReduceAlgo;
 use crate::cluster::tcp::{dial_with_backoff, TcpOptions, TcpTransport, PROTOCOL_VERSION};
 use crate::cluster::transport::Transport;
-use crate::coordinator::driver::{ClusterFitResult, RankLoad};
-use crate::coordinator::worker::{run_worker, WorkerConfig, WorkerOutput, WorkerShared};
+use crate::coordinator::driver::{ClusterFitResult, ClusterPathResult, RankLoad};
+use crate::coordinator::worker::{
+    run_worker, run_worker_path, PathJob, PathWorkerOutput, WorkerConfig, WorkerOutput,
+    WorkerShared,
+};
 use crate::data::Splits;
 use crate::glm::loss::LossKind;
 use crate::glm::regularizer::ElasticNet;
 use crate::solver::compute::NativeCompute;
 use crate::solver::linesearch::LineSearchConfig;
+use crate::solver::path::PathResult;
 use crate::sparse::FeaturePartition;
 use crate::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Write};
@@ -51,8 +61,41 @@ use std::net::{TcpListener, TcpStream};
 use std::time::Duration;
 
 /// Reserved tag for the final β^m gather — far above anything the worker's
-/// `TAG_STRIDE` allocator can reach within a run.
+/// `TAG_STRIDE` allocator can reach within a run. Path jobs send their
+/// per-λ blocks as consecutive frames on this same tag (the transport is
+/// FIFO per (peer, tag), so λ order is preserved on the wire).
 pub const GATHER_TAG: u64 = u64::MAX - 8;
+
+/// Upper bound on λ-grid length a path job accepts — bounds the gather
+/// traffic and catches garbage specs early.
+pub const MAX_PATH_POINTS: usize = 128;
+
+/// What a job spec asks the cluster to do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobMode {
+    /// One fit at the spec's (l1, l2) — the PR 2/3 behaviour.
+    Train,
+    /// Sweep `lambda_grid` descending with warm starts + KKT screening and
+    /// gather one β per grid point (§8.2 hyper-parameter search).
+    Path,
+}
+
+impl JobMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobMode::Train => "train",
+            JobMode::Path => "path",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<JobMode> {
+        match s {
+            "train" => Some(JobMode::Train),
+            "path" => Some(JobMode::Path),
+            _ => None,
+        }
+    }
+}
 
 /// Mesh-formation budget for process clusters. Deliberately much larger
 /// than `TcpOptions::default()`: between the job ack and the first mesh
@@ -102,6 +145,13 @@ pub struct JobSpec {
     pub virtual_time: bool,
     /// Per-rank virtual-clock compute handicaps (missing entries mean 1.0).
     pub slow_factors: Vec<f64>,
+    /// What to run (protocol v3): a single fit or a λ-path sweep.
+    pub mode: JobMode,
+    /// The λ1 grid for `mode == Path` (descending for warm starts); `l1` is
+    /// ignored in path mode, `l2` stays the fixed ridge term.
+    pub lambda_grid: Vec<f64>,
+    /// KKT strong-rule screening switch for path jobs.
+    pub screen: bool,
 }
 
 impl JobSpec {
@@ -139,7 +189,13 @@ impl JobSpec {
             .set(
                 "slow_factors",
                 Json::Arr(self.slow_factors.iter().map(|&f| Json::Num(f)).collect()),
-            );
+            )
+            .set("mode", self.mode.name())
+            .set(
+                "lambda_grid",
+                Json::Arr(self.lambda_grid.iter().map(|&l| Json::Num(l)).collect()),
+            )
+            .set("screen", self.screen);
         if let Some(kappa) = self.alb_kappa {
             o.set("alb_kappa", kappa);
         }
@@ -219,6 +275,37 @@ impl JobSpec {
         if slow_factors.iter().any(|f| !f.is_finite() || *f <= 0.0) {
             return Err("slow_factors must be finite and positive".into());
         }
+        let mode_name = s("mode")?;
+        let mode = JobMode::parse(&mode_name)
+            .ok_or_else(|| format!("unknown job mode '{mode_name}'"))?;
+        let lambda_grid = num_list("lambda_grid")?;
+        if mode == JobMode::Path {
+            if lambda_grid.is_empty() {
+                return Err("path job with an empty lambda_grid".into());
+            }
+            if lambda_grid.len() > MAX_PATH_POINTS {
+                return Err(format!(
+                    "lambda_grid has {} points (max {MAX_PATH_POINTS})",
+                    lambda_grid.len()
+                ));
+            }
+            if lambda_grid.iter().any(|l| !l.is_finite() || *l <= 0.0) {
+                return Err("lambda_grid entries must be finite and positive".into());
+            }
+            if v.get("alb_kappa").is_some() {
+                return Err("path jobs are BSP-only (alb_kappa not allowed)".into());
+            }
+            // The sweep's short warm fits run no chaos injection either —
+            // reject rather than silently ignore a straggler schedule.
+            if !straggler_delays.is_empty() || !slow_factors.is_empty() {
+                return Err(
+                    "path jobs do not support straggler_delays/slow_factors".into(),
+                );
+            }
+            if matches!(v.get("virtual_time"), Some(Json::Bool(true))) {
+                return Err("path jobs do not support virtual_time".into());
+            }
+        }
         let spec = JobSpec {
             rank: num("rank")? as usize,
             cluster,
@@ -241,6 +328,9 @@ impl JobSpec {
             virtual_time: matches!(v.get("virtual_time"), Some(Json::Bool(true))),
             straggler_delays,
             slow_factors,
+            mode,
+            lambda_grid,
+            screen: matches!(v.get("screen"), Some(Json::Bool(true))),
         };
         if spec.rank >= spec.cluster.len() {
             return Err(format!(
@@ -362,6 +452,59 @@ fn solve_rank(
     })
 }
 
+/// Everything one rank of a path job produces: the per-λ outputs, the
+/// still-open mesh (for the per-λ gather), and the partition (for assembly).
+struct PathRankRun {
+    output: PathWorkerOutput,
+    transport: TcpTransport,
+    partition: FeaturePartition,
+}
+
+/// Shard this rank's feature block ONCE and sweep the spec's λ grid over
+/// the mesh (see [`run_worker_path`]): validation comes from the recipe's
+/// validation split, scored SPMD on every rank.
+fn solve_rank_path(
+    spec: &JobSpec,
+    listener: TcpListener,
+    splits: &Splits,
+) -> anyhow::Result<PathRankRun> {
+    let m = spec.cluster.len();
+    let kind = LossKind::parse(&spec.loss)
+        .ok_or_else(|| anyhow::anyhow!("unknown loss '{}'", spec.loss))?;
+    let compute = NativeCompute::new(kind);
+
+    let partition = FeaturePartition::hashed(splits.train.p(), m, spec.seed);
+    let x_csc = splits.train.to_csc();
+    let shard = partition.shard(&x_csc, spec.rank);
+    let val_csc = splits.validation.to_csc();
+    let val_shard = partition.shard(&val_csc, spec.rank);
+
+    let mut transport =
+        TcpTransport::with_listener(spec.rank, &spec.cluster, listener, mesh_options())?;
+    let wcfg = spec.worker_config();
+    let job = PathJob {
+        lambdas: &spec.lambda_grid,
+        l2: spec.l2,
+        val_x: &val_shard,
+        val_y: &splits.validation.y,
+        screen: spec.screen,
+    };
+    let output = run_worker_path(
+        spec.rank,
+        &shard,
+        &mut transport,
+        &compute,
+        &splits.train.y,
+        &wcfg,
+        &job,
+    );
+    Ok(PathRankRun {
+        output,
+        transport,
+        partition,
+    })
+}
+
 fn write_line(s: &mut TcpStream, j: &Json) -> std::io::Result<()> {
     s.write_all(j.dump().as_bytes())?;
     s.write_all(b"\n")?;
@@ -414,9 +557,10 @@ pub fn run_worker_on(
     ack.set("ok", true).set("rank", spec.rank);
     write_line(&mut ctrl_w, &ack)?;
     println!(
-        "worker: rank {}/{} | dataset={} scale={} loss={} λ1={} λ2={} alb={}",
+        "worker: rank {}/{} | mode={} dataset={} scale={} loss={} λ1={} λ2={} alb={}",
         spec.rank,
         spec.cluster.len(),
+        spec.mode.name(),
         spec.dataset,
         spec.scale,
         spec.loss,
@@ -428,49 +572,79 @@ pub fn run_worker_on(
     );
 
     let splits = crate::harness::load_splits(&spec.dataset, spec.scale, spec.seed)?;
-    let run = solve_rank(&spec, listener, &splits, &overrides)?;
-    let mut transport = run.transport;
-    transport.send(0, GATHER_TAG, run.output.beta_local.clone());
-    // Report traffic AFTER the gather send so the coordinator's totals
-    // really cover every frame this rank put on the wire.
-    let (sent_bytes, sent_msgs) = transport.sent();
+    match spec.mode {
+        JobMode::Train => {
+            let run = solve_rank(&spec, listener, &splits, &overrides)?;
+            let mut transport = run.transport;
+            transport.send(0, GATHER_TAG, run.output.beta_local.clone());
+            // Report traffic AFTER the gather send so the coordinator's
+            // totals really cover every frame this rank put on the wire.
+            let (sent_bytes, sent_msgs) = transport.sent();
 
-    let mut done = Json::obj();
-    done.set("ok", true)
-        .set("rank", spec.rank)
-        .set("iters", run.output.iters)
-        .set("sent_bytes", sent_bytes)
-        .set("sent_msgs", sent_msgs)
-        .set("cd_updates", run.output.cd_updates)
-        .set("full_passes", run.output.full_passes)
-        .set("cutoffs", run.output.cutoffs)
-        .set("sync_wait_secs", run.output.sync_wait_secs);
-    write_line(&mut ctrl_w, &done)?;
-    drop(transport); // joins the writer threads: the gather frame is flushed
-    println!("worker: rank {} done after {} iterations", spec.rank, run.output.iters);
+            let mut done = Json::obj();
+            done.set("ok", true)
+                .set("rank", spec.rank)
+                .set("iters", run.output.iters)
+                .set("sent_bytes", sent_bytes)
+                .set("sent_msgs", sent_msgs)
+                .set("cd_updates", run.output.cd_updates)
+                .set("full_passes", run.output.full_passes)
+                .set("cutoffs", run.output.cutoffs)
+                .set("sync_wait_secs", run.output.sync_wait_secs);
+            write_line(&mut ctrl_w, &done)?;
+            drop(transport); // joins the writer threads: the gather frame is flushed
+            println!(
+                "worker: rank {} done after {} iterations",
+                spec.rank, run.output.iters
+            );
+        }
+        JobMode::Path => {
+            if overrides.slow_factor.is_some() || overrides.straggler_delay.is_some() {
+                eprintln!(
+                    "worker: --slow-factor/--straggler-delay-ms do not apply to \
+                     path jobs (BSP sweep, no chaos injection) — ignoring"
+                );
+            }
+            let run = solve_rank_path(&spec, listener, &splits)?;
+            let mut transport = run.transport;
+            // One frame per λ point, in grid order, all on the gather tag
+            // (FIFO per (peer, tag) keeps them ordered on the wire).
+            for pt in &run.output.points {
+                transport.send(0, GATHER_TAG, pt.beta_local.clone());
+            }
+            let (sent_bytes, sent_msgs) = transport.sent();
+            let total_iters: usize = run.output.points.iter().map(|p| p.iters).sum();
+
+            let mut done = Json::obj();
+            done.set("ok", true)
+                .set("rank", spec.rank)
+                .set("iters", total_iters)
+                .set("sent_bytes", sent_bytes)
+                .set("sent_msgs", sent_msgs)
+                .set("cd_updates", run.output.cd_updates_local)
+                .set("full_passes", 0usize)
+                .set("cutoffs", 0usize)
+                .set("sync_wait_secs", 0.0);
+            write_line(&mut ctrl_w, &done)?;
+            drop(transport);
+            println!(
+                "worker: rank {} done after {} λ points ({} iterations)",
+                spec.rank,
+                run.output.points.len(),
+                total_iters
+            );
+        }
+    }
     Ok(spec.rank)
 }
 
-/// `dglmnet train --cluster A0,A1,...`: run as coordinator (rank 0, address
-/// `A0`), ship the job to the workers listening at `A1..`, train as one of
-/// the M nodes, and reassemble the global model. `preloaded` lets a caller
-/// that already materialized the spec's dataset recipe (the CLI does, for
-/// its banner and final test scoring) avoid a second full load.
-pub fn train_cluster(
+/// Bind the coordinator's listener and ship the job to every worker in rank
+/// order (the mesh-ordering invariant), returning the resolved cluster, the
+/// listener, and the still-open control connections. Shared by the train
+/// and path coordinators.
+fn ship_job(
     spec0: &JobSpec,
-    preloaded: Option<&Splits>,
-) -> anyhow::Result<ClusterFitResult> {
-    anyhow::ensure!(spec0.rank == 0, "coordinator must be rank 0");
-    let owned_splits;
-    let splits = match preloaded {
-        Some(s) => s,
-        None => {
-            owned_splits =
-                crate::harness::load_splits(&spec0.dataset, spec0.scale, spec0.seed)?;
-            &owned_splits
-        }
-    };
-    let m = spec0.cluster.len();
+) -> anyhow::Result<(Vec<String>, TcpListener, Vec<BufReader<TcpStream>>)> {
     let listener = TcpListener::bind(&spec0.cluster[0])
         .map_err(|e| anyhow::anyhow!("bind {}: {e}", spec0.cluster[0]))?;
     // Resolve :0 so workers can dial us back for the mesh.
@@ -506,6 +680,38 @@ pub fn train_cluster(
         br.get_ref().set_read_timeout(None).ok();
         ctrls.push(br);
     }
+    Ok((cluster, listener, ctrls))
+}
+
+/// One worker's done report, summed into the coordinator's totals.
+fn read_done_report(br: &mut BufReader<TcpStream>) -> anyhow::Result<Json> {
+    let mut line = String::new();
+    br.read_line(&mut line)?;
+    json::parse(line.trim()).map_err(|e| anyhow::anyhow!("worker sent a bad done report: {e}"))
+}
+
+/// `dglmnet train --cluster A0,A1,...`: run as coordinator (rank 0, address
+/// `A0`), ship the job to the workers listening at `A1..`, train as one of
+/// the M nodes, and reassemble the global model. `preloaded` lets a caller
+/// that already materialized the spec's dataset recipe (the CLI does, for
+/// its banner and final test scoring) avoid a second full load.
+pub fn train_cluster(
+    spec0: &JobSpec,
+    preloaded: Option<&Splits>,
+) -> anyhow::Result<ClusterFitResult> {
+    anyhow::ensure!(spec0.rank == 0, "coordinator must be rank 0");
+    anyhow::ensure!(spec0.mode == JobMode::Train, "train_cluster needs a train-mode spec");
+    let owned_splits;
+    let splits = match preloaded {
+        Some(s) => s,
+        None => {
+            owned_splits =
+                crate::harness::load_splits(&spec0.dataset, spec0.scale, spec0.seed)?;
+            &owned_splits
+        }
+    };
+    let m = spec0.cluster.len();
+    let (cluster, listener, mut ctrls) = ship_job(spec0)?;
 
     // Train as rank 0 of the mesh.
     let spec = JobSpec {
@@ -537,10 +743,7 @@ pub fn train_cluster(
     let mut barrier_wait_secs = run.output.sync_wait_secs;
     let mut per_rank: Vec<RankLoad> = vec![RankLoad::from_output(&run.output)];
     for br in ctrls.iter_mut() {
-        let mut line = String::new();
-        br.read_line(&mut line)?;
-        let done = json::parse(line.trim())
-            .map_err(|e| anyhow::anyhow!("worker sent a bad done report: {e}"))?;
+        let done = read_done_report(br)?;
         let field = |k: &str| done.get(k).and_then(|j| j.as_f64()).unwrap_or(0.0);
         comm_bytes += field("sent_bytes") as u64;
         comm_msgs += field("sent_msgs") as u64;
@@ -583,6 +786,96 @@ pub fn train_cluster(
     })
 }
 
+/// `dglmnet path --cluster A0,A1,...`: the multi-process λ-path sweep. The
+/// coordinator ships a v3 `path` job, sweeps the grid as rank 0 of the mesh
+/// (warm starts + KKT screening, see [`run_worker_path`]), gathers every
+/// rank's per-λ β blocks, and reassembles one full model per grid point;
+/// the validation-best index was already derived SPMD on every rank.
+pub fn path_cluster(
+    spec0: &JobSpec,
+    preloaded: Option<&Splits>,
+) -> anyhow::Result<ClusterPathResult> {
+    anyhow::ensure!(spec0.rank == 0, "coordinator must be rank 0");
+    anyhow::ensure!(spec0.mode == JobMode::Path, "path_cluster needs a path-mode spec");
+    anyhow::ensure!(!spec0.lambda_grid.is_empty(), "path job with an empty λ grid");
+    anyhow::ensure!(
+        spec0.lambda_grid.len() <= MAX_PATH_POINTS,
+        "λ grid has {} points (max {MAX_PATH_POINTS})",
+        spec0.lambda_grid.len()
+    );
+    anyhow::ensure!(spec0.alb_kappa.is_none(), "path jobs are BSP-only");
+    anyhow::ensure!(
+        spec0.straggler_delays.is_empty() && spec0.slow_factors.is_empty() && !spec0.virtual_time,
+        "path jobs do not support straggler/slow-factor chaos or the virtual clock"
+    );
+    let owned_splits;
+    let splits = match preloaded {
+        Some(s) => s,
+        None => {
+            owned_splits =
+                crate::harness::load_splits(&spec0.dataset, spec0.scale, spec0.seed)?;
+            &owned_splits
+        }
+    };
+    let m = spec0.cluster.len();
+    let (cluster, listener, mut ctrls) = ship_job(spec0)?;
+
+    // Sweep as rank 0 of the mesh.
+    let spec = JobSpec {
+        rank: 0,
+        cluster,
+        ..spec0.clone()
+    };
+    let run = solve_rank_path(&spec, listener, splits)?;
+    let mut transport = run.transport;
+
+    // Gather per-λ β blocks: each worker sends one frame per grid point on
+    // the gather tag, in grid order (FIFO per (peer, tag)).
+    let k_pts = run.output.points.len();
+    let mut per_lambda: Vec<Vec<Vec<f64>>> = (0..k_pts).map(|_| vec![Vec::new(); m]).collect();
+    for (k, pt) in run.output.points.iter().enumerate() {
+        per_lambda[k][0] = pt.beta_local.clone();
+    }
+    for r in 1..m {
+        for point_blocks in per_lambda.iter_mut() {
+            let block = transport.recv_from(r, GATHER_TAG);
+            anyhow::ensure!(
+                block.len() == run.partition.blocks[r].len(),
+                "rank {r} gathered {} weights, expected {}",
+                block.len(),
+                run.partition.blocks[r].len()
+            );
+            point_blocks[r] = block;
+        }
+    }
+
+    // Collect accounting from the done reports.
+    let mut comm_bytes = run.output.sent_bytes;
+    let mut comm_msgs = run.output.sent_msgs;
+    for br in ctrls.iter_mut() {
+        let done = read_done_report(br)?;
+        let field = |k: &str| done.get(k).and_then(|j| j.as_f64()).unwrap_or(0.0);
+        comm_bytes += field("sent_bytes") as u64;
+        comm_msgs += field("sent_msgs") as u64;
+    }
+    drop(transport);
+
+    let points = crate::coordinator::driver::assemble_path_points(
+        &run.partition,
+        &run.output.points,
+        &per_lambda,
+        spec.l2,
+    );
+    Ok(ClusterPathResult {
+        path: PathResult {
+            points,
+            best: run.output.best,
+        },
+        comm_bytes,
+        comm_msgs,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -610,6 +903,18 @@ mod tests {
             virtual_time: false,
             straggler_delays: Vec::new(),
             slow_factors: Vec::new(),
+            mode: JobMode::Train,
+            lambda_grid: Vec::new(),
+            screen: false,
+        }
+    }
+
+    fn path_spec() -> JobSpec {
+        JobSpec {
+            mode: JobMode::Path,
+            lambda_grid: vec![2.0, 0.5, 0.125],
+            screen: true,
+            ..spec()
         }
     }
 
@@ -644,6 +949,59 @@ mod tests {
         assert_eq!(back.virtual_time, s.virtual_time);
         assert_eq!(back.straggler_delays, s.straggler_delays);
         assert_eq!(back.slow_factors, s.slow_factors);
+        assert_eq!(back.mode, s.mode);
+        assert_eq!(back.lambda_grid, s.lambda_grid);
+        assert_eq!(back.screen, s.screen);
+    }
+
+    #[test]
+    fn path_job_spec_roundtrips() {
+        let s = path_spec();
+        let back = JobSpec::from_json(&s.to_json().dump()).unwrap();
+        assert_eq!(back.mode, JobMode::Path);
+        assert_eq!(back.lambda_grid, s.lambda_grid);
+        assert!(back.screen);
+    }
+
+    #[test]
+    fn path_job_spec_validation() {
+        // Empty grid.
+        let mut j = path_spec().to_json();
+        j.set("lambda_grid", Json::Arr(Vec::new()));
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+        // Non-positive λ.
+        let mut j = path_spec().to_json();
+        j.set("lambda_grid", Json::Arr(vec![Json::Num(0.5), Json::Num(0.0)]));
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+        // ALB on a path job.
+        let mut j = path_spec().to_json();
+        j.set("alb_kappa", 0.75);
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+        // Chaos fields on a path job: rejected, never silently ignored.
+        let mut j = path_spec().to_json();
+        j.set("straggler_delays", Json::Arr(vec![Json::Num(0.04)]));
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+        let mut j = path_spec().to_json();
+        j.set("slow_factors", Json::Arr(vec![Json::Num(2.0)]));
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+        let mut j = path_spec().to_json();
+        j.set("virtual_time", true);
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+        // Unknown mode.
+        let mut j = spec().to_json();
+        j.set("mode", "wander");
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+        // Oversized grid.
+        let mut j = path_spec().to_json();
+        j.set(
+            "lambda_grid",
+            Json::Arr((0..=MAX_PATH_POINTS).map(|k| Json::Num(1.0 + k as f64)).collect()),
+        );
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+        // A train job carries the grid fields inertly.
+        let mut j = spec().to_json();
+        j.set("lambda_grid", Json::Arr(Vec::new()));
+        assert!(JobSpec::from_json(&j.dump()).is_ok());
     }
 
     #[test]
@@ -807,5 +1165,68 @@ mod tests {
             fast_min
         );
         assert!(straggler.cutoffs > 0, "straggler never reported a cut-off");
+    }
+
+    /// Full in-test path cluster: 1 coordinator + 2 workers as threads of
+    /// this process running the real entry points, checked against the
+    /// single-process `l1_path` sweep (same recipe, same partition seed).
+    #[test]
+    fn coordinator_and_workers_complete_a_path_job() {
+        use std::net::TcpListener;
+        let w1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let w2 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a1 = w1.local_addr().unwrap().to_string();
+        let a2 = w2.local_addr().unwrap().to_string();
+        let mut s = path_spec();
+        s.cluster = vec!["127.0.0.1:0".into(), a1, a2];
+        s.max_iters = 40;
+        // Naive allreduce accumulates rank blocks in the same order as the
+        // sequential reference — keeps the iterates bit-aligned.
+        s.allreduce = AllReduceAlgo::Naive;
+
+        let h1 =
+            std::thread::spawn(move || run_worker_on(w1, WorkerOverrides::default()).unwrap());
+        let h2 =
+            std::thread::spawn(move || run_worker_on(w2, WorkerOverrides::default()).unwrap());
+        let res = path_cluster(&s, None).unwrap();
+        assert_eq!(h1.join().unwrap(), 1);
+        assert_eq!(h2.join().unwrap(), 2);
+
+        assert_eq!(res.path.points.len(), 3);
+        assert!(res.comm_bytes > 0, "three ranks must have talked");
+
+        let splits = crate::harness::load_splits("epsilon_like", 0.05, 3).unwrap();
+        let reference = crate::solver::path::l1_path(
+            &splits,
+            &NativeCompute::new(LossKind::Logistic),
+            &s.lambda_grid,
+            s.l2,
+            &crate::solver::dglmnet::DGlmnetConfig {
+                nodes: 3,
+                max_iters: 40,
+                tol: s.tol,
+                patience: s.patience,
+                seed: 3,
+                eval_every: 0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(res.path.best, reference.best, "best λ index drifted");
+        for (got, want) in res.path.points.iter().zip(reference.points.iter()) {
+            assert_eq!(got.lambda1, want.lambda1);
+            let gap = (got.objective - want.objective).abs()
+                / want.objective.abs().max(1e-12);
+            assert!(
+                gap < 1e-6,
+                "λ1={}: cluster {} vs reference {} (gap {gap:.3e})",
+                got.lambda1,
+                got.objective,
+                want.objective
+            );
+            assert_eq!(got.beta.len(), want.beta.len());
+            let dn = got.nnz as i64 - want.nnz as i64;
+            assert!(dn.abs() <= 2, "λ1={}: nnz {} vs {}", got.lambda1, got.nnz, want.nnz);
+        }
     }
 }

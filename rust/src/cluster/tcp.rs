@@ -36,8 +36,11 @@ use std::time::{Duration, Instant};
 const MAGIC: u32 = 0x4D4C_4764;
 /// Bump on any wire-format change; both sides must agree. v2: the job spec
 /// gained the ALB / straggler-chaos fields (alb_kappa, max_passes, chunk,
-/// straggler_delays, slow_factors).
-pub const PROTOCOL_VERSION: u32 = 2;
+/// straggler_delays, slow_factors). v3: the job spec gained the `mode`
+/// field (`train` | `path`) plus the path-sweep fields (lambda_grid,
+/// screen) — a `path` job sweeps the λ1 grid with warm starts + KKT
+/// screening and gathers one β per grid point.
+pub const PROTOCOL_VERSION: u32 = 3;
 
 /// Dial / handshake tuning.
 #[derive(Clone, Copy, Debug)]

@@ -16,13 +16,17 @@ use crate::cluster::alb::{AlbController, AlbMode};
 use crate::cluster::allreduce::AllReduceAlgo;
 use crate::cluster::fabric::{fabric, NetworkModel};
 use crate::cluster::tcp::{bind_loopback, TcpOptions, TcpTransport};
-use crate::data::Dataset;
+use crate::data::{Dataset, Splits};
 use crate::glm::regularizer::Penalty1D;
 use crate::solver::compute::GlmCompute;
 use crate::solver::linesearch::LineSearchConfig;
+use crate::solver::path::{PathPoint, PathResult};
 use crate::solver::trace::Trace;
 use crate::sparse::{Csc, FeaturePartition};
-use crate::coordinator::worker::{run_worker, WorkerConfig, WorkerOutput, WorkerShared};
+use crate::coordinator::worker::{
+    run_worker, run_worker_path, PathJob, PathWorkerOutput, WorkerConfig, WorkerOutput,
+    WorkerShared,
+};
 use std::time::Duration;
 
 /// Configuration of a distributed fit.
@@ -363,6 +367,187 @@ pub fn fit_distributed_tcp(
     Ok(assemble_result(train, &plan.partition, outputs, 0.0))
 }
 
+/// Result of a distributed λ-path sweep: the reassembled per-λ models plus
+/// the transport accounting for the whole sweep.
+#[derive(Clone, Debug)]
+pub struct ClusterPathResult {
+    pub path: PathResult,
+    pub comm_bytes: u64,
+    pub comm_msgs: u64,
+}
+
+/// Reassemble one full-width model per λ from rank 0's summary points and
+/// the per-λ per-rank β blocks (`blocks[k][r]`). The summary columns
+/// (objective, auPRC, nnz, iters, updates) are SPMD-identical across
+/// ranks, so rank 0's copies are authoritative. Shared by the in-process
+/// drivers and the multi-process coordinator (`process::path_cluster`).
+pub(crate) fn assemble_path_points(
+    partition: &FeaturePartition,
+    summary: &[crate::coordinator::worker::PathPointLocal],
+    blocks: &[Vec<Vec<f64>>],
+    l2: f64,
+) -> Vec<PathPoint> {
+    debug_assert_eq!(summary.len(), blocks.len());
+    summary
+        .iter()
+        .zip(blocks.iter())
+        .map(|(p, bl)| PathPoint {
+            lambda1: p.lambda1,
+            lambda2: l2,
+            beta: partition.unshard_weights(bl),
+            objective: p.objective,
+            nnz: p.nnz,
+            val_auprc: p.val_auprc,
+            iters: p.iters,
+            cd_updates: p.cd_updates,
+        })
+        .collect()
+}
+
+/// Reassemble per-rank path outputs into full-width per-λ models.
+fn assemble_path(
+    partition: &FeaturePartition,
+    outputs: Vec<PathWorkerOutput>,
+    l2: f64,
+) -> ClusterPathResult {
+    let comm_bytes: u64 = outputs.iter().map(|o| o.sent_bytes).sum();
+    let comm_msgs: u64 = outputs.iter().map(|o| o.sent_msgs).sum();
+    let k_pts = outputs[0].points.len();
+    let blocks: Vec<Vec<Vec<f64>>> = (0..k_pts)
+        .map(|k| outputs.iter().map(|o| o.points[k].beta_local.clone()).collect())
+        .collect();
+    let points = assemble_path_points(partition, &outputs[0].points, &blocks, l2);
+    ClusterPathResult {
+        path: PathResult {
+            points,
+            best: outputs[0].best,
+        },
+        comm_bytes,
+        comm_msgs,
+    }
+}
+
+/// Sweep the λ1 grid once over a simulated cluster of `cfg.nodes` threads on
+/// the in-process fabric: the data is sharded ONCE, every rank sweeps the
+/// grid descending with warm starts + KKT screening, and the driver
+/// reassembles the per-λ models (see [`run_worker_path`]). Validation
+/// selection uses `splits.validation` — the paper's §8.2 protocol at
+/// cluster scale. BSP only; errors on an empty grid or an ALB config.
+pub fn fit_path_distributed(
+    splits: &Splits,
+    compute: &dyn GlmCompute,
+    lambdas: &[f64],
+    l2: f64,
+    cfg: &DistributedConfig,
+    screen: bool,
+) -> anyhow::Result<ClusterPathResult> {
+    anyhow::ensure!(!lambdas.is_empty(), "λ-path sweep given an empty λ1 grid");
+    anyhow::ensure!(
+        cfg.alb_kappa.is_none(),
+        "λ-path sweep is BSP-only (ALB applies to single long fits)"
+    );
+    anyhow::ensure!(
+        cfg.straggler_delays.is_empty() && cfg.slow_factors.is_empty() && !cfg.virtual_time,
+        "λ-path sweep does not support straggler/slow-factor chaos or the virtual clock"
+    );
+    let plan = plan_cluster(&splits.train, Some(&splits.validation), cfg);
+    let val_shards = plan.test_shards.as_ref().expect("validation shards");
+    let (endpoints, _stats) = fabric(cfg.nodes, cfg.network);
+
+    let mut outputs: Vec<Option<PathWorkerOutput>> = (0..cfg.nodes).map(|_| None).collect();
+    crossbeam_utils::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (rank, ep) in endpoints.into_iter().enumerate() {
+            let shard = &plan.shards[rank];
+            let val_shard = &val_shards[rank];
+            let wcfg = plan.worker_cfg_base.clone();
+            let y = splits.train.y.as_slice();
+            let val_y = splits.validation.y.as_slice();
+            handles.push(scope.spawn(move |_| {
+                let mut ep = ep;
+                let job = PathJob {
+                    lambdas,
+                    l2,
+                    val_x: val_shard,
+                    val_y,
+                    screen,
+                };
+                run_worker_path(rank, shard, &mut ep, compute, y, &wcfg, &job)
+            }));
+        }
+        for h in handles {
+            let out = h.join().expect("path worker panicked");
+            let rank = out.rank;
+            outputs[rank] = Some(out);
+        }
+    })
+    .expect("cluster scope failed");
+
+    let outputs: Vec<PathWorkerOutput> = outputs.into_iter().map(|o| o.unwrap()).collect();
+    Ok(assemble_path(&plan.partition, outputs, l2))
+}
+
+/// [`fit_path_distributed`] over real TCP sockets on loopback — one thread
+/// per rank, each owning a [`TcpTransport`] endpoint of a full mesh: the
+/// single-process proof of the wire protocol the multi-process
+/// `dglmnet path --cluster` runtime speaks.
+pub fn fit_path_distributed_tcp(
+    splits: &Splits,
+    compute: &dyn GlmCompute,
+    lambdas: &[f64],
+    l2: f64,
+    cfg: &DistributedConfig,
+    screen: bool,
+) -> anyhow::Result<ClusterPathResult> {
+    anyhow::ensure!(!lambdas.is_empty(), "λ-path sweep given an empty λ1 grid");
+    anyhow::ensure!(
+        cfg.alb_kappa.is_none(),
+        "λ-path sweep is BSP-only (ALB applies to single long fits)"
+    );
+    anyhow::ensure!(
+        cfg.straggler_delays.is_empty() && cfg.slow_factors.is_empty() && !cfg.virtual_time,
+        "λ-path sweep does not support straggler/slow-factor chaos or the virtual clock"
+    );
+    let plan = plan_cluster(&splits.train, Some(&splits.validation), cfg);
+    let val_shards = plan.test_shards.as_ref().expect("validation shards");
+    let (addrs, listeners) = bind_loopback(cfg.nodes)?;
+
+    let mut outputs: Vec<Option<PathWorkerOutput>> = (0..cfg.nodes).map(|_| None).collect();
+    crossbeam_utils::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (rank, listener) in listeners.into_iter().enumerate() {
+            let shard = &plan.shards[rank];
+            let val_shard = &val_shards[rank];
+            let wcfg = plan.worker_cfg_base.clone();
+            let y = splits.train.y.as_slice();
+            let val_y = splits.validation.y.as_slice();
+            let addrs = addrs.clone();
+            handles.push(scope.spawn(move |_| {
+                let mut t =
+                    TcpTransport::with_listener(rank, &addrs, listener, TcpOptions::default())
+                        .expect("tcp mesh formation failed");
+                let job = PathJob {
+                    lambdas,
+                    l2,
+                    val_x: val_shard,
+                    val_y,
+                    screen,
+                };
+                run_worker_path(rank, shard, &mut t, compute, y, &wcfg, &job)
+            }));
+        }
+        for h in handles {
+            let out = h.join().expect("path worker panicked");
+            let rank = out.rank;
+            outputs[rank] = Some(out);
+        }
+    })
+    .expect("cluster scope failed");
+
+    let outputs: Vec<PathWorkerOutput> = outputs.into_iter().map(|o| o.unwrap()).collect();
+    Ok(assemble_path(&plan.partition, outputs, l2))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -585,6 +770,50 @@ mod tests {
         let evals: Vec<f64> = fit.trace.points.iter().filter_map(|p| p.auprc).collect();
         assert!(!evals.is_empty());
         assert!(evals.iter().all(|a| (0.0..=1.0).contains(a)));
+    }
+
+    #[test]
+    fn path_rejects_empty_grid_and_alb() {
+        let splits = synth::Corpus::epsilon_like(0.04, 19);
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let cfg = DistributedConfig {
+            nodes: 2,
+            max_iters: 5,
+            eval_every: 0,
+            ..Default::default()
+        };
+        assert!(fit_path_distributed(&splits, &compute, &[], 0.0, &cfg, true).is_err());
+        let alb_cfg = DistributedConfig {
+            alb_kappa: Some(0.75),
+            ..cfg
+        };
+        assert!(fit_path_distributed(&splits, &compute, &[0.5], 0.0, &alb_cfg, true).is_err());
+    }
+
+    #[test]
+    fn path_sweep_runs_on_the_fabric() {
+        let splits = synth::Corpus::epsilon_like(0.05, 20);
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let cfg = DistributedConfig {
+            nodes: 3,
+            max_iters: 40,
+            tol: 1e-9,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let res =
+            fit_path_distributed(&splits, &compute, &[2.0, 0.5, 0.125], 0.1, &cfg, true).unwrap();
+        assert_eq!(res.path.points.len(), 3);
+        assert!(res.comm_bytes > 0, "three ranks must have talked");
+        let best = res.path.best_point();
+        assert!(best.objective.is_finite());
+        for p in &res.path.points {
+            assert_eq!(p.beta.len(), splits.train.p());
+            assert!((0.0..=1.0).contains(&p.val_auprc), "auPRC {}", p.val_auprc);
+            assert!(p.val_auprc <= best.val_auprc + 1e-12);
+        }
+        // Warm descending path: nnz grows (roughly) as λ shrinks.
+        assert!(res.path.points[2].nnz + 2 >= res.path.points[0].nnz);
     }
 
     #[test]

@@ -7,5 +7,6 @@ pub mod driver;
 pub mod worker;
 
 pub use driver::{
-    fit_distributed, fit_distributed_tcp, ClusterFitResult, DistributedConfig, RankLoad,
+    fit_distributed, fit_distributed_tcp, fit_path_distributed, fit_path_distributed_tcp,
+    ClusterFitResult, ClusterPathResult, DistributedConfig, RankLoad,
 };

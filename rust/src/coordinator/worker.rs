@@ -17,12 +17,15 @@
 //! the asynchronous path works across real processes.
 
 use crate::cluster::alb::{AlbMode, AlbQuorum};
-use crate::cluster::allreduce::{allreduce_max, allreduce_sum, AllReduceAlgo, TAG_STRIDE};
+use crate::cluster::allreduce::{
+    allreduce_max, allreduce_scalar, allreduce_sum, AllReduceAlgo, TAG_STRIDE,
+};
 use crate::cluster::transport::Transport;
-use crate::glm::regularizer::Penalty1D;
+use crate::glm::regularizer::{ElasticNet, Penalty1D};
 use crate::metrics;
 use crate::solver::compute::GlmCompute;
 use crate::solver::linesearch::{line_search, LineSearchConfig};
+use crate::solver::path;
 use crate::solver::subproblem::{cd_cycle, CycleBudget, SubproblemState};
 use crate::solver::trace::{Trace, TracePoint};
 use crate::sparse::Csc;
@@ -166,6 +169,7 @@ pub fn run_alb_subproblem(
             CycleBudget {
                 max_updates: chunk,
                 stop: quorum.stop_flag(),
+                active: None,
             },
         );
         updates += out.updates;
@@ -456,6 +460,267 @@ pub fn run_worker(
         full_passes,
         cutoffs,
         sync_wait_secs: sync_wait.as_secs_f64(),
+    }
+}
+
+/// Inputs of one distributed λ-path sweep (job-spec v3 `path` mode): the λ1
+/// grid (descending, so warm starts and strong-rule screening pay off), the
+/// fixed λ2, the validation feature shard this rank scores, the full
+/// validation labels, and the screening switch.
+pub struct PathJob<'a> {
+    pub lambdas: &'a [f64],
+    pub l2: f64,
+    pub val_x: &'a Csc,
+    pub val_y: &'a [f64],
+    pub screen: bool,
+}
+
+/// One λ point as every rank sees it: the SPMD-identical summary plus this
+/// rank's own β block.
+pub struct PathPointLocal {
+    pub lambda1: f64,
+    pub objective: f64,
+    pub val_auprc: f64,
+    pub nnz: usize,
+    pub iters: usize,
+    /// Global (allreduced) coordinate updates spent on this point.
+    pub cd_updates: u64,
+    pub beta_local: Vec<f64>,
+}
+
+/// What one rank returns from a path sweep.
+pub struct PathWorkerOutput {
+    pub rank: usize,
+    pub points: Vec<PathPointLocal>,
+    /// Validation-best index — SPMD-identical on every rank (NaN-safe:
+    /// degenerate validation splits select deterministically, never panic).
+    pub best: usize,
+    /// This rank's own CD updates across the whole sweep (load accounting).
+    pub cd_updates_local: u64,
+    pub sent_bytes: u64,
+    pub sent_msgs: u64,
+}
+
+/// Run the full λ-path sweep for one node — the distributed mirror of
+/// `solver::path::l1_path` (same math point for point): the shard is built
+/// ONCE, then the grid is swept descending with β, margins and the
+/// `SubproblemState` buffers carried warm across λ points instead of
+/// re-fitting cold. Per point this rank:
+///
+/// 1. screens its own block with the sequential strong rule (the floored
+///    bound of `path::strong_rule_threshold`; screening is embarrassingly
+///    parallel under feature sharding — the gradient only needs the synced
+///    margins),
+/// 2. runs the BSP d-GLMNET loop restricted to the active set,
+/// 3. re-checks the exact KKT conditions on everything it screened out and
+///    re-cycles while ANY rank still has violations (the decision is
+///    allreduced, keeping the collective schedule SPMD-uniform),
+/// 4. scores the validation split through an allreduce of partial margins
+///    and derives the auPRC — identically on every rank, so the best-point
+///    selection needs no extra coordination.
+///
+/// BSP only: the sweep's inner fits run one pass per iteration (ALB applies
+/// to single long fits, not the many short warm fits of a path).
+pub fn run_worker_path(
+    rank: usize,
+    x: &Csc,
+    transport: &mut dyn Transport,
+    compute: &dyn GlmCompute,
+    y: &[f64],
+    cfg: &WorkerConfig,
+    job: &PathJob<'_>,
+) -> PathWorkerOutput {
+    debug_assert_eq!(rank, transport.rank());
+    assert!(!job.lambdas.is_empty(), "path sweep needs a non-empty λ grid");
+    let n = x.nrows;
+    let p_local = x.ncols;
+    debug_assert_eq!(y.len(), n);
+    debug_assert_eq!(job.val_x.ncols, p_local);
+    debug_assert_eq!(job.val_x.nrows, job.val_y.len());
+
+    let mut beta = vec![0.0; p_local];
+    let mut margins = vec![0.0; n];
+    let mut w = vec![0.0; n];
+    let mut z = vec![0.0; n];
+    // Warm state carried across λ points: β, margins, and the Δβ/t buffers.
+    // The cursor restarts whenever the active set changes shape.
+    let mut state = SubproblemState::new(p_local, n);
+
+    let tag = Cell::new(0u64);
+    let next_tag = || {
+        let t = tag.get();
+        tag.set(t + TAG_STRIDE);
+        t
+    };
+    let ep_cell = RefCell::new(transport);
+
+    let mut points: Vec<PathPointLocal> = Vec::with_capacity(job.lambdas.len());
+    let mut lambda_prev: Option<f64> = None;
+    let mut cd_updates_total = 0u64;
+
+    for &l1 in job.lambdas {
+        let pen = ElasticNet::new(l1, job.l2);
+        // Working stats at the warm start (margins are in sync across
+        // ranks: every applied step came from the allreduced XΔβ).
+        let mut loss = compute.stats(y, &margins, &mut w, &mut z);
+        let thresh = if job.screen {
+            path::strong_rule_threshold(l1, lambda_prev)
+        } else {
+            None
+        };
+        // Gradient pass only when a discard bound exists (mirrors
+        // `l1_path`: the unscreened sweep does no extra O(nnz) work).
+        let mut active: Vec<usize> = if thresh.is_some() {
+            let g: Vec<f64> = (0..n).map(|i| -w[i] * z[i]).collect();
+            let grads = x.tmul_vec(&g);
+            path::screen_columns(&beta, &grads, thresh)
+        } else {
+            (0..p_local).collect()
+        };
+        state.cursor = 0;
+
+        let mut reg = {
+            let mut r = [pen.value(&beta)];
+            allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut r, AllReduceAlgo::Naive);
+            r[0]
+        };
+        let mut f_cur = loss + reg;
+        let mut iters = 0usize;
+        let mut updates_local = 0u64;
+
+        // Fit + exact-KKT re-cycle loop (mirrors `path::l1_path`). The
+        // active sets only grow, so the loop terminates.
+        loop {
+            let mut mu = cfg.mu0;
+            let mut stall = 0usize;
+            for _ in 1..=cfg.max_iters {
+                iters += 1;
+                state.reset();
+                let out = cd_cycle(
+                    x,
+                    &beta,
+                    &w,
+                    &z,
+                    mu,
+                    cfg.nu,
+                    &pen,
+                    &mut state,
+                    CycleBudget::screened(&active),
+                );
+                updates_local += out.updates as u64;
+                let mut dmargins = state.t.clone();
+                allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut dmargins, cfg.allreduce);
+                let mut grad_dot = 0.0;
+                for i in 0..n {
+                    grad_dot += -w[i] * z[i] * dmargins[i];
+                }
+                let reg_ray = |alphas: &[f64]| -> Vec<f64> {
+                    let mut out = vec![0.0; alphas.len()];
+                    for (local, d) in state.delta_beta.iter().enumerate() {
+                        let b = beta[local];
+                        for (k, &a) in alphas.iter().enumerate() {
+                            out[k] += pen.value_1d(b + a * d);
+                        }
+                    }
+                    allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut out, AllReduceAlgo::Naive);
+                    out
+                };
+                let ls = line_search(
+                    compute,
+                    &cfg.linesearch,
+                    y,
+                    &margins,
+                    &dmargins,
+                    f_cur,
+                    reg,
+                    grad_dot,
+                    &reg_ray,
+                );
+                if ls.alpha > 0.0 {
+                    for (b, d) in beta.iter_mut().zip(state.delta_beta.iter()) {
+                        *b += ls.alpha * d;
+                    }
+                    for (mi, di) in margins.iter_mut().zip(dmargins.iter()) {
+                        *mi += ls.alpha * di;
+                    }
+                }
+                if cfg.adaptive_mu {
+                    if ls.alpha < 1.0 {
+                        mu *= cfg.eta1;
+                    } else {
+                        mu = (mu / cfg.eta2).max(1.0);
+                    }
+                }
+                loss = compute.stats(y, &margins, &mut w, &mut z);
+                reg = {
+                    let mut r = [pen.value(&beta)];
+                    allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut r, AllReduceAlgo::Naive);
+                    r[0]
+                };
+                let f_new = loss + reg;
+                let rel = (f_cur - f_new) / f_cur.abs().max(1e-12);
+                f_cur = f_new;
+                if rel.abs() < cfg.tol {
+                    stall += 1;
+                    if stall >= cfg.patience {
+                        break;
+                    }
+                } else {
+                    stall = 0;
+                }
+            }
+            if !job.screen {
+                break;
+            }
+            // Exact KKT re-check on this rank's screened-out coordinates.
+            // Any rank's violation re-cycles everyone (allreduced count),
+            // so screening stays exact AND the schedule stays SPMD-uniform.
+            let viol = {
+                let g: Vec<f64> = (0..n).map(|i| -w[i] * z[i]).collect();
+                let grads = x.tmul_vec(&g);
+                path::kkt_violations(&active, &grads, l1, path::KKT_SLACK)
+            };
+            let total =
+                allreduce_scalar(*ep_cell.borrow_mut(), next_tag(), viol.len() as f64);
+            if total == 0.0 {
+                break;
+            }
+            active.extend(viol);
+            active.sort_unstable();
+            state.cursor = 0;
+        }
+
+        // Validation scoring: partial margins X_val^m β^m, allreduced, then
+        // the auPRC derived identically on every rank (SPMD selection).
+        let mut vscores = job.val_x.mul_vec(&beta);
+        allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut vscores, cfg.allreduce);
+        let val_auprc = metrics::auprc(job.val_y, &vscores);
+        // Global nnz + update count in one small collective.
+        let mut acc = [metrics::nnz_weights(&beta) as f64, updates_local as f64];
+        allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut acc, AllReduceAlgo::Naive);
+        cd_updates_total += updates_local;
+        points.push(PathPointLocal {
+            lambda1: l1,
+            objective: f_cur,
+            val_auprc,
+            nnz: acc[0] as usize,
+            iters,
+            cd_updates: acc[1] as u64,
+            beta_local: beta.clone(),
+        });
+        lambda_prev = Some(l1);
+    }
+
+    let auprcs: Vec<f64> = points.iter().map(|p| p.val_auprc).collect();
+    let best = path::nan_safe_argmax(&auprcs).expect("non-empty grid");
+    let (sent_bytes, sent_msgs) = ep_cell.borrow().sent();
+    PathWorkerOutput {
+        rank,
+        points,
+        best,
+        cd_updates_local: cd_updates_total,
+        sent_bytes,
+        sent_msgs,
     }
 }
 

@@ -225,6 +225,27 @@ pub fn print_rank_loads(ranks: &[RankLoad]) {
     t.print();
 }
 
+/// Per-λ table for a path sweep (single-process or distributed): the §8.2
+/// selection protocol made visible — objective, sparsity, validation auPRC
+/// and the CD-update cost of each point, with the validation-best marked.
+/// Shared by `dglmnet path` and the path test suites.
+pub fn print_path_table(res: &crate::solver::path::PathResult) {
+    println!("\n== λ-path sweep (validation-selected, §8.2) ==");
+    let mut t = Table::new(&["λ1", "objective", "nnz", "val auPRC", "iters", "cd updates", ""]);
+    for (i, p) in res.points.iter().enumerate() {
+        t.row(&[
+            format!("{:.6}", p.lambda1),
+            format!("{:.6}", p.objective),
+            p.nnz.to_string(),
+            format!("{:.4}", p.val_auprc),
+            p.iters.to_string(),
+            p.cd_updates.to_string(),
+            if i == res.best { "<- best".into() } else { String::new() },
+        ]);
+    }
+    t.print();
+}
+
 /// One-straggler delay schedule: rank `victim` of `m` sleeps `delay` per
 /// pass, everyone else runs full speed (the chaos suite's standard shape).
 pub fn delays_with_straggler(

@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   train        train a regularized GLM on a synthetic corpus or libsvm file
+//!   path         sweep a λ1 grid with warm starts + KKT screening, pick the
+//!                validation-auPRC best (§8.2) — fabric, loopback TCP, or a
+//!                real multi-process cluster (--cluster)
 //!   worker       serve one rank of a multi-process TCP cluster, then exit
 //!   predict      score a libsvm file with a saved model (batch/offline)
 //!   serve        online scoring endpoint with micro-batching and hot-swap
@@ -24,8 +27,10 @@
 use std::sync::Arc;
 
 use dglmnet::cluster::allreduce::AllReduceAlgo;
-use dglmnet::cluster::process::{self, JobSpec};
-use dglmnet::coordinator::{fit_distributed, DistributedConfig};
+use dglmnet::cluster::process::{self, JobMode, JobSpec};
+use dglmnet::coordinator::{
+    fit_distributed, fit_path_distributed, fit_path_distributed_tcp, DistributedConfig,
+};
 use dglmnet::glm::loss::LossKind;
 use dglmnet::glm::regularizer::ElasticNet;
 use dglmnet::harness;
@@ -52,6 +57,7 @@ fn main() {
     };
     let code = match cmd {
         "train" => cmd_train(&rest),
+        "path" => cmd_path(&rest),
         "worker" => cmd_worker(&rest),
         "predict" => cmd_predict(&rest),
         "serve" => cmd_serve(&rest),
@@ -75,6 +81,7 @@ fn usage() {
         "dglmnet — distributed coordinate descent for regularized GLMs\n\n\
          Subcommands:\n  \
          train        train a model (see `dglmnet train --help`)\n  \
+         path         λ1-grid sweep with warm starts + KKT screening (§8.2)\n  \
          worker       serve one rank of a multi-process TCP cluster\n  \
          predict      score a libsvm file with a saved model\n  \
          serve        online scoring endpoint (micro-batched, hot-swappable)\n  \
@@ -309,6 +316,9 @@ fn cmd_train(argv: &[String]) -> i32 {
                 .collect(),
             virtual_time: cfg.virtual_time,
             slow_factors,
+            mode: JobMode::Train,
+            lambda_grid: Vec::new(),
+            screen: false,
         };
         match process::train_cluster(&spec, Some(&splits)) {
             Ok(r) => r,
@@ -385,6 +395,223 @@ fn cmd_train(argv: &[String]) -> i32 {
             .with_meta("l1", pen.l1)
             .with_meta("l2", pen.l2)
             .with_meta("nodes", cfg.nodes);
+        if let Err(e) = model.save(model_path) {
+            eprintln!("failed to save model: {e}");
+            return 1;
+        }
+        println!("model written to {model_path} ({} non-zero weights)", model.nnz());
+    }
+    0
+}
+
+fn path_cli() -> Cli {
+    Cli::new(
+        "dglmnet path",
+        "sweep a descending λ1 grid with warm starts and KKT strong-rule \
+         screening; select the validation-auPRC best point (paper §8.2)",
+    )
+    .flag("dataset", "clickstream", "epsilon_like | webspam_like | clickstream | path to .libsvm")
+    .flag("scale", "0.25", "synthetic corpus scale factor")
+    .flag("loss", "logistic", "logistic | squared | probit")
+    .flag(
+        "lambdas",
+        "paper",
+        "comma-separated λ1 grid (descending for warm starts to pay off), \
+         or 'paper' for the §8.2 grid {2⁶, …, 2⁻⁶}",
+    )
+    .flag("l2", "0.0", "fixed L2 penalty λ2 held constant along the path")
+    .flag("nodes", "8", "simulated cluster width M (ignored with --cluster)")
+    .flag(
+        "cluster",
+        "",
+        "comma-separated host:port list for a real multi-process TCP sweep \
+         (entry 0 = this coordinator's listen address; others must be running \
+         `dglmnet worker`). Overrides --nodes; ships a job-spec v3 path job",
+    )
+    .flag(
+        "transport",
+        "fabric",
+        "single-process backend: fabric (in-process) | tcp (loopback socket mesh)",
+    )
+    .switch("no-screen", "disable KKT screening (cycle every coordinate at every λ)")
+    .flag("max-iters", "100", "outer iteration budget per λ point")
+    .flag("seed", "1", "random seed")
+    .flag("save-model", "", "write the validation-best model JSON to this path")
+}
+
+fn cmd_path(argv: &[String]) -> i32 {
+    let cli = path_cli();
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(CliError::HelpRequested) => {
+            println!("{}", cli.help_text());
+            return 0;
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli.help_text());
+            return 2;
+        }
+    };
+
+    let kind = match LossKind::parse(args.get("loss")) {
+        Some(k) => k,
+        None => {
+            eprintln!("unknown loss '{}'", args.get("loss"));
+            return 2;
+        }
+    };
+    let scale = args.get_f64("scale");
+    let seed = args.get_u64("seed");
+    let splits = match harness::load_splits(args.get("dataset"), scale, seed) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("dataset error: {e}");
+            return 2;
+        }
+    };
+    let l2 = args.get_f64("l2");
+    let lambdas: Vec<f64> = if args.get("lambdas") == "paper" {
+        dglmnet::solver::path::paper_lambda_grid()
+    } else {
+        match parse_f64_list(args.get("lambdas")) {
+            Ok(ls) if !ls.is_empty() && ls.iter().all(|l| l.is_finite() && *l > 0.0) => ls,
+            Ok(_) => {
+                eprintln!("--lambdas needs a non-empty list of positive finite values (or 'paper')");
+                return 2;
+            }
+            Err(e) => {
+                eprintln!("--lambdas: {e}");
+                return 2;
+            }
+        }
+    };
+    let screen = !args.get_bool("no-screen");
+    let cluster: Vec<String> = if args.get("cluster").is_empty() {
+        Vec::new()
+    } else {
+        args.get("cluster")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .collect()
+    };
+    if !cluster.is_empty() {
+        if cluster.len() < 2 {
+            eprintln!("--cluster needs at least two addresses (coordinator first, then workers)");
+            return 2;
+        }
+        if cluster.iter().any(|a| a.is_empty()) {
+            eprintln!("--cluster contains an empty address (stray comma?)");
+            return 2;
+        }
+    }
+    let nodes = if cluster.is_empty() {
+        args.get_usize("nodes")
+    } else {
+        cluster.len()
+    };
+
+    println!(
+        "path: dataset={} n={} p={} nnz={} | loss={} λ2={} | {} λ1 points [{} .. {}] | M={} screening={}",
+        splits.train.name,
+        splits.train.n(),
+        splits.train.p(),
+        splits.train.nnz(),
+        kind.name(),
+        l2,
+        lambdas.len(),
+        lambdas.first().unwrap(),
+        lambdas.last().unwrap(),
+        nodes,
+        screen,
+    );
+
+    let result = if !cluster.is_empty() {
+        let spec = JobSpec {
+            rank: 0,
+            cluster,
+            dataset: args.get("dataset").to_string(),
+            scale,
+            seed,
+            loss: args.get("loss").to_string(),
+            l1: 0.0, // path mode: the grid supplies λ1
+            l2,
+            max_iters: args.get_usize("max-iters"),
+            mu0: 1.0,
+            adaptive_mu: true,
+            tol: 1e-7,
+            patience: 2,
+            eval_every: 0,
+            allreduce: AllReduceAlgo::Ring,
+            alb_kappa: None,
+            max_passes: 1,
+            chunk: 64,
+            straggler_delays: Vec::new(),
+            virtual_time: false,
+            slow_factors: Vec::new(),
+            mode: JobMode::Path,
+            lambda_grid: lambdas.clone(),
+            screen,
+        };
+        match process::path_cluster(&spec, Some(&splits)) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("cluster path sweep failed: {e}");
+                return 1;
+            }
+        }
+    } else {
+        let cfg = DistributedConfig {
+            nodes,
+            max_iters: args.get_usize("max-iters"),
+            eval_every: 0,
+            seed,
+            allreduce: AllReduceAlgo::Ring,
+            ..Default::default()
+        };
+        let compute = NativeCompute::new(kind);
+        let sweep = match args.get("transport") {
+            "fabric" => fit_path_distributed(&splits, &compute, &lambdas, l2, &cfg, screen),
+            "tcp" => fit_path_distributed_tcp(&splits, &compute, &lambdas, l2, &cfg, screen),
+            other => {
+                eprintln!("unknown transport '{other}' (fabric | tcp)");
+                return 2;
+            }
+        };
+        match sweep {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("path sweep failed: {e}");
+                return 1;
+            }
+        }
+    };
+
+    harness::print_path_table(&result.path);
+    let best = result.path.best_point();
+    let scores = splits.test.x.mul_vec(&best.beta);
+    println!(
+        "\nbest: λ1={} λ2={} | objective={:.6} nnz={}/{} | val auPRC={:.4} test auPRC={:.4} | total cd updates={}",
+        best.lambda1,
+        best.lambda2,
+        best.objective,
+        best.nnz,
+        best.beta.len(),
+        best.val_auprc,
+        metrics::auprc(&splits.test.y, &scores),
+        result.path.total_cd_updates(),
+    );
+    println!(
+        "comm: {:.2} MiB in {} messages",
+        result.comm_bytes as f64 / (1024.0 * 1024.0),
+        result.comm_msgs,
+    );
+
+    let model_path = args.get("save-model");
+    if !model_path.is_empty() {
+        let model = dglmnet::glm::GlmModel::new(kind, best.beta.clone())
+            .with_meta("dataset", &splits.train.name)
+            .with_meta("l1", best.lambda1)
+            .with_meta("l2", best.lambda2);
         if let Err(e) = model.save(model_path) {
             eprintln!("failed to save model: {e}");
             return 1;

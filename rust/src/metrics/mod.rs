@@ -16,6 +16,13 @@ pub use latency::LatencyHistogram;
 /// PR points. Step-wise (not trapezoid-from-(0,1)) so a constant classifier
 /// scores exactly the positive base rate — the robust estimator Davis &
 /// Goadrich (2006), the paper's reference [32], recommend.
+/// NaN policy (shared by [`auprc`] and [`roc_auc`]): scores are ranked and
+/// tie-grouped under the IEEE 754 total order (`f64::total_cmp`), so a
+/// degenerate model whose margins contain NaN/±inf yields a *defined,
+/// deterministic* metric instead of panicking the sort — the failure mode
+/// approximate distributed inner solves are known to produce (Mahajan et
+/// al., arXiv:1405.4544). A split with no positives scores 0.0, with no
+/// negatives 1.0 (auPRC) / 0.5 (auROC).
 pub fn auprc(labels: &[f64], scores: &[f64]) -> f64 {
     assert_eq!(labels.len(), scores.len());
     let total_pos = labels.iter().filter(|&&y| y > 0.0).count();
@@ -23,7 +30,7 @@ pub fn auprc(labels: &[f64], scores: &[f64]) -> f64 {
         return if total_pos == 0 { 0.0 } else { 1.0 };
     }
     let mut order: Vec<usize> = (0..labels.len()).collect();
-    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
 
     let mut tp = 0usize;
     let mut fp = 0usize;
@@ -31,9 +38,15 @@ pub fn auprc(labels: &[f64], scores: &[f64]) -> f64 {
     let mut prev_recall = 0.0;
     let mut i = 0;
     while i < order.len() {
-        // Consume the whole tie group before emitting a PR point.
+        // Consume the whole tie group before emitting a PR point. Ties are
+        // `==` (so ±0.0 stay one group, as before) OR total-order equality
+        // (so a NaN group advances instead of looping forever — NaN != NaN).
+        // The sort keeps ==-equal values adjacent (nothing orders between
+        // -0.0 and +0.0), so this grouping is sound.
         let s = scores[order[i]];
-        while i < order.len() && scores[order[i]] == s {
+        while i < order.len()
+            && (scores[order[i]] == s || scores[order[i]].total_cmp(&s).is_eq())
+        {
             if labels[order[i]] > 0.0 {
                 tp += 1;
             } else {
@@ -50,6 +63,7 @@ pub fn auprc(labels: &[f64], scores: &[f64]) -> f64 {
 }
 
 /// ROC AUC via the rank-sum (Mann–Whitney) formulation with tie correction.
+/// NaN scores follow the total-order policy documented on [`auprc`].
 pub fn roc_auc(labels: &[f64], scores: &[f64]) -> f64 {
     assert_eq!(labels.len(), scores.len());
     let n_pos = labels.iter().filter(|&&y| y > 0.0).count();
@@ -58,14 +72,17 @@ pub fn roc_auc(labels: &[f64], scores: &[f64]) -> f64 {
         return 0.5;
     }
     let mut order: Vec<usize> = (0..labels.len()).collect();
-    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
-    // Average ranks over tie groups.
+    order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
+    // Average ranks over tie groups: `==` (±0.0 stay one group) OR
+    // total-order equality (NaN groups advance instead of spinning).
     let mut rank_sum_pos = 0.0;
     let mut i = 0;
     while i < order.len() {
         let s = scores[order[i]];
         let start = i;
-        while i < order.len() && scores[order[i]] == s {
+        while i < order.len()
+            && (scores[order[i]] == s || scores[order[i]].total_cmp(&s).is_eq())
+        {
             i += 1;
         }
         let avg_rank = (start + 1 + i) as f64 / 2.0; // ranks are 1-based
@@ -213,8 +230,48 @@ mod tests {
 
     #[test]
     fn degenerate_label_sets() {
+        // Zero positives → 0.0, zero negatives → 1.0 (auPRC) / 0.5 (auROC):
+        // a validation split with a one-sided label distribution must select
+        // a model deterministically, never yield NaN or panic.
         assert_eq!(auprc(&[1.0, 1.0], &[0.5, 0.4]), 1.0);
         assert_eq!(auprc(&[-1.0, -1.0], &[0.5, 0.4]), 0.0);
         assert_eq!(roc_auc(&[1.0, 1.0], &[0.5, 0.4]), 0.5);
+        assert_eq!(roc_auc(&[-1.0, -1.0], &[0.5, 0.4]), 0.5);
+        // Degenerate labels trump degenerate scores.
+        assert_eq!(auprc(&[-1.0, -1.0], &[f64::NAN, 0.4]), 0.0);
+        assert_eq!(auprc(&[1.0, 1.0], &[f64::NAN, f64::NAN]), 1.0);
+    }
+
+    #[test]
+    fn signed_zeros_stay_one_tie_group() {
+        // -0.0 == +0.0 numerically: they must remain a single tie group
+        // even though the total-order sort distinguishes them — a constant
+        // classifier emitting mixed-sign zeros scores like any constant.
+        let y = [1.0, -1.0];
+        let s = [-0.0, 0.0];
+        assert!((roc_auc(&y, &s) - 0.5).abs() < 1e-12);
+        assert!((auprc(&y, &s) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_scores_yield_defined_metrics() {
+        // A diverged model (NaN margins) must produce a finite, in-range
+        // metric under the documented total-order policy — previously the
+        // sort panicked and the tie-group loop could spin forever.
+        let y = [1.0, -1.0, 1.0, -1.0];
+        let some_nan = [0.9, f64::NAN, 0.3, 0.1];
+        let all_nan = [f64::NAN; 4];
+        for s in [&some_nan, &all_nan] {
+            let pr = auprc(&y, s);
+            let roc = roc_auc(&y, s);
+            assert!((0.0..=1.0).contains(&pr), "auprc {pr}");
+            assert!((0.0..=1.0).contains(&roc), "roc {roc}");
+        }
+        // All-NaN scores form one tie group → constant-classifier values.
+        assert!((auprc(&y, &all_nan) - 0.5).abs() < 1e-12);
+        assert!((roc_auc(&y, &all_nan) - 0.5).abs() < 1e-12);
+        // ±inf scores are ordered, not fatal.
+        let inf = [f64::INFINITY, f64::NEG_INFINITY, 0.5, 0.2];
+        assert!((0.0..=1.0).contains(&auprc(&y, &inf)));
     }
 }

@@ -392,7 +392,9 @@ mod tests {
         let mut m = a.clone();
         let mut rhs = b.clone();
         for col in 0..p {
-            let piv = (col..p).max_by(|&r1, &r2| m[r1][col].abs().partial_cmp(&m[r2][col].abs()).unwrap()).unwrap();
+            let piv = (col..p)
+                .max_by(|&r1, &r2| m[r1][col].abs().total_cmp(&m[r2][col].abs()))
+                .unwrap();
             m.swap(col, piv);
             rhs.swap(col, piv);
             for r in col + 1..p {

@@ -7,8 +7,29 @@
 //! makes GLMNET-family path computation cheap: solutions are computed from
 //! the largest λ down, each fit starting from the previous solution.
 //!
+//! On top of warm starts the sweep applies **sequential strong-rule
+//! screening** (Tibshirani et al. 2012, the glmnet rule): at λ_k, coming
+//! from the solution at λ_{k−1}, a coordinate is skipped when
+//!
+//! ```text
+//!   |∇L_j(β̂(λ_{k−1}))| < max(2λ_k − λ_{k−1}, λ_k/2)
+//! ```
+//!
+//! (the λ_k/2 floor keeps screening alive on coarse grids — see
+//! [`strong_rule_threshold`]). The rule is a heuristic, so after the
+//! screened fit converges every
+//! discarded coordinate's exact KKT condition (|∇L_j| ≤ λ1 at β_j = 0) is
+//! re-checked; violators are added back and the fit re-cycled until clean.
+//! That violation pass makes screening **exact**: the screened sweep solves
+//! the same problems as the unscreened one, touching a fraction of the
+//! block per pass (see `benches/path_screening.rs` for the update counts).
+//!
 //! Also provides `lambda_max` — the smallest λ1 for which β = 0 is optimal
 //! (the classical KKT bound max_j |∇L_j(0)|), the natural top of the path.
+//!
+//! The distributed mirror of this sweep — same math, M real ranks, the λ
+//! grid swept once over sharded data — lives in
+//! `coordinator::driver::fit_path_distributed`.
 
 use crate::data::{Dataset, Splits};
 use crate::glm::loss::LossKind;
@@ -19,6 +40,30 @@ use crate::solver::dglmnet::DGlmnetConfig;
 use crate::solver::linesearch::line_search;
 use crate::solver::subproblem::{cd_cycle, CycleBudget, SubproblemState};
 use crate::sparse::{Csc, FeaturePartition};
+
+/// Slack on the exact KKT re-check |∇L_j| ≤ λ1: the active fit itself only
+/// converges to `cfg.tol`, so excluded gradients sit within solver noise of
+/// the bound. Adding a borderline coordinate is always safe (just extra
+/// work), so the slack only has to filter float fuzz.
+pub const KKT_SLACK: f64 = 1e-9;
+
+/// Errors a path sweep can report instead of panicking or silently
+/// returning point 0.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PathError {
+    /// The λ grid was empty — there is no point to select.
+    EmptyGrid,
+}
+
+impl std::fmt::Display for PathError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PathError::EmptyGrid => write!(f, "λ-path sweep given an empty λ1 grid"),
+        }
+    }
+}
+
+impl std::error::Error for PathError {}
 
 /// λ1 at which the all-zeros solution is optimal: max_j |Σ_i ℓ'(y_i, 0) x_ij|.
 pub fn lambda_max(train: &Dataset, kind: LossKind) -> f64 {
@@ -39,6 +84,9 @@ pub struct PathPoint {
     /// Validation auPRC (classification) — the paper's selection criterion.
     pub val_auprc: f64,
     pub iters: usize,
+    /// Coordinate updates spent on this point (summed over all blocks and
+    /// KKT re-cycles) — the axis screening shrinks.
+    pub cd_updates: u64,
 }
 
 /// Result of a path sweep.
@@ -53,12 +101,85 @@ impl PathResult {
     pub fn best_point(&self) -> &PathPoint {
         &self.points[self.best]
     }
+
+    /// Total coordinate updates across the sweep (the screening win axis).
+    pub fn total_cd_updates(&self) -> u64 {
+        self.points.iter().map(|p| p.cd_updates).sum()
+    }
+}
+
+/// Index of the maximum under an explicit NaN policy: NaN ranks below every
+/// real value, so a degenerate score (empty validation split, diverged fit)
+/// can never win the selection — and never panics it. Ties keep the first
+/// (largest-λ, sparsest) point. `None` only for an empty slice.
+pub fn nan_safe_argmax(vals: &[f64]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &v) in vals.iter().enumerate() {
+        let key = if v.is_nan() { f64::NEG_INFINITY } else { v };
+        match best {
+            None => best = Some((i, key)),
+            Some((_, b)) if key > b => best = Some((i, key)),
+            _ => {}
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// The discard bound at λ_k coming from λ_prev: the sequential strong rule
+/// `2λ_k − λ_prev` (Tibshirani et al. 2012), **floored at λ_k/2**. The
+/// floor matters on coarse grids: the paper's §8.2 grid halves λ each step,
+/// which drives the strong-rule bound to exactly 0 — it would screen
+/// nothing. Below-floor coordinates (|∇L_j| < λ_k/2 at the warm start)
+/// would need their gradient to more than double to activate, so dropping
+/// them is an aggressive working-set rule in the spirit of newGLMNET's
+/// shrinking — and the KKT violation re-cycle restores exactness for ANY
+/// bound. `None` (screen nothing) on the first point or a non-descending
+/// step.
+pub fn strong_rule_threshold(lambda_k: f64, lambda_prev: Option<f64>) -> Option<f64> {
+    match lambda_prev {
+        Some(lp) if lp > lambda_k => Some((2.0 * lambda_k - lp).max(0.5 * lambda_k)),
+        _ => None,
+    }
+}
+
+/// Local column indices surviving the strong rule: everything when `thresh`
+/// is `None`, otherwise the currently-nonzero weights plus every coordinate
+/// whose loss gradient clears the bound.
+pub fn screen_columns(local_beta: &[f64], grads: &[f64], thresh: Option<f64>) -> Vec<usize> {
+    debug_assert_eq!(local_beta.len(), grads.len());
+    match thresh {
+        None => (0..local_beta.len()).collect(),
+        Some(t) => (0..local_beta.len())
+            .filter(|&j| local_beta[j] != 0.0 || grads[j].abs() >= t)
+            .collect(),
+    }
+}
+
+/// Screened-out coordinates violating the exact KKT condition at β_j = 0
+/// (|∇L_j| > λ1 + slack). These must be added back and the fit re-cycled —
+/// the pass that keeps strong-rule screening exact.
+pub fn kkt_violations(active: &[usize], grads: &[f64], l1: f64, slack: f64) -> Vec<usize> {
+    let mut is_active = vec![false; grads.len()];
+    for &j in active {
+        is_active[j] = true;
+    }
+    (0..grads.len())
+        .filter(|&j| !is_active[j] && grads[j].abs() > l1 + slack)
+        .collect()
+}
+
+/// What one warm fit spent and reached.
+struct WarmFitOutcome {
+    objective: f64,
+    iters: usize,
+    cd_updates: u64,
 }
 
 /// Warm-started fit at one (λ1, λ2), reusing the partition/shards and
-/// starting from `beta` (the previous path point). A slimmed copy of
-/// `dglmnet::fit` that threads an initial β through; kept separate so the
-/// cold-start reference implementation stays simple.
+/// starting from `beta` (the previous path point), restricted to the given
+/// per-block active sets. A slimmed copy of `dglmnet::fit` that threads an
+/// initial β through; kept separate so the cold-start reference
+/// implementation stays simple.
 #[allow(clippy::too_many_arguments)]
 fn warm_fit(
     train: &Dataset,
@@ -67,8 +188,9 @@ fn warm_fit(
     compute: &dyn GlmCompute,
     pen: &ElasticNet,
     cfg: &DGlmnetConfig,
+    active: &[Vec<usize>],
     beta: &mut Vec<f64>,
-) -> (f64, usize) {
+) -> WarmFitOutcome {
     let n = train.n();
     let mut margins = train.x.mul_vec(beta);
     let mut w = vec![0.0; n];
@@ -84,17 +206,18 @@ fn warm_fit(
     let mut f_cur = loss + reg;
     let mut stall = 0;
     let mut iters = 0;
+    let mut cd_updates = 0u64;
     for it in 1..=cfg.max_iters {
         iters = it;
         let mut dmargins = vec![0.0; n];
         for (m, block) in partition.blocks.iter().enumerate() {
-            if block.is_empty() {
+            if block.is_empty() || active[m].is_empty() {
                 continue;
             }
             let local_beta: Vec<f64> = block.iter().map(|&j| beta[j]).collect();
             let st = &mut states[m];
             st.reset();
-            cd_cycle(
+            let out = cd_cycle(
                 &shards[m],
                 &local_beta,
                 &w,
@@ -103,8 +226,9 @@ fn warm_fit(
                 cfg.nu,
                 pen,
                 st,
-                CycleBudget::full_cycle(block.len()),
+                CycleBudget::screened(&active[m]),
             );
+            cd_updates += out.updates as u64;
             for i in 0..n {
                 dmargins[i] += st.t[i];
             }
@@ -171,30 +295,118 @@ fn warm_fit(
             stall = 0;
         }
     }
-    (f_cur, iters)
+    WarmFitOutcome {
+        objective: f_cur,
+        iters,
+        cd_updates,
+    }
 }
 
 /// Sweep an L1 path over `lambdas` (fit in the given order — pass them
-/// descending for warm starts to pay off), selecting by validation auPRC.
-/// `l2` is held fixed.
+/// descending for warm starts and screening to pay off), selecting by
+/// validation auPRC. `l2` is held fixed. Strong-rule screening is ON; use
+/// [`l1_path_with_screening`] to ablate it. Errors on an empty λ grid.
 pub fn l1_path(
     splits: &Splits,
     compute: &dyn GlmCompute,
     lambdas: &[f64],
     l2: f64,
     cfg: &DGlmnetConfig,
-) -> PathResult {
+) -> Result<PathResult, PathError> {
+    l1_path_with_screening(splits, compute, lambdas, l2, cfg, true)
+}
+
+/// [`l1_path`] with the KKT screening switch exposed (`screen = false`
+/// cycles every coordinate at every point — the ablation baseline the
+/// screening bench compares against).
+pub fn l1_path_with_screening(
+    splits: &Splits,
+    compute: &dyn GlmCompute,
+    lambdas: &[f64],
+    l2: f64,
+    cfg: &DGlmnetConfig,
+    screen: bool,
+) -> Result<PathResult, PathError> {
+    if lambdas.is_empty() {
+        return Err(PathError::EmptyGrid);
+    }
     let train = &splits.train;
+    let n = train.n();
     let partition = FeaturePartition::hashed(train.p(), cfg.nodes, cfg.seed);
     let x_csc = train.to_csc();
     let shards: Vec<Csc> = (0..cfg.nodes).map(|m| partition.shard(&x_csc, m)).collect();
 
     let mut beta = vec![0.0; train.p()];
+    let mut w = vec![0.0; n];
+    let mut z = vec![0.0; n];
     let mut points = Vec::with_capacity(lambdas.len());
+    let mut lambda_prev: Option<f64> = None;
+
+    // Per-block loss gradients ∇L_j at the current β (g_i = −w_i z_i from
+    // the floored working set — the same quantity `cd_cycle` sees).
+    let block_grads = |beta: &[f64], w: &mut [f64], z: &mut [f64]| -> Vec<Vec<f64>> {
+        let margins = train.x.mul_vec(beta);
+        compute.stats(&train.y, &margins, w, z);
+        let g: Vec<f64> = (0..n).map(|i| -w[i] * z[i]).collect();
+        shards.iter().map(|s| s.tmul_vec(&g)).collect()
+    };
+
     for &l1 in lambdas {
         let pen = ElasticNet::new(l1, l2);
-        let (objective, iters) =
-            warm_fit(train, &shards, &partition, compute, &pen, cfg, &mut beta);
+        let thresh = if screen {
+            strong_rule_threshold(l1, lambda_prev)
+        } else {
+            None
+        };
+        // The gradient pass is only paid when a discard bound exists —
+        // the unscreened sweep (and the first grid point) must not do
+        // extra O(nnz) work the plain algorithm wouldn't.
+        let mut active: Vec<Vec<usize>> = if thresh.is_some() {
+            let grads = block_grads(&beta, &mut w, &mut z);
+            partition
+                .blocks
+                .iter()
+                .enumerate()
+                .map(|(m, block)| {
+                    let local_beta: Vec<f64> = block.iter().map(|&j| beta[j]).collect();
+                    screen_columns(&local_beta, &grads[m], thresh)
+                })
+                .collect()
+        } else {
+            partition.blocks.iter().map(|b| (0..b.len()).collect()).collect()
+        };
+
+        // Fit, then re-check the exact KKT conditions on everything the
+        // strong rule discarded; re-cycle until clean. The active sets only
+        // grow, so this terminates (worst case: everything active).
+        let mut objective;
+        let mut iters = 0usize;
+        let mut cd_updates = 0u64;
+        loop {
+            let out = warm_fit(
+                train, &shards, &partition, compute, &pen, cfg, &active, &mut beta,
+            );
+            objective = out.objective;
+            iters += out.iters;
+            cd_updates += out.cd_updates;
+            if !screen {
+                break;
+            }
+            let grads = block_grads(&beta, &mut w, &mut z);
+            let mut any = false;
+            for (m, bg) in grads.iter().enumerate() {
+                let viol = kkt_violations(&active[m], bg, l1, KKT_SLACK);
+                if !viol.is_empty() {
+                    any = true;
+                    active[m].extend(viol);
+                    active[m].sort_unstable();
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+
         let scores = splits.validation.x.mul_vec(&beta);
         let val_auprc = metrics::auprc(&splits.validation.y, &scores);
         points.push(PathPoint {
@@ -205,15 +417,13 @@ pub fn l1_path(
             nnz: metrics::nnz_weights(&beta),
             val_auprc,
             iters,
+            cd_updates,
         });
+        lambda_prev = Some(l1);
     }
-    let best = points
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.val_auprc.partial_cmp(&b.1.val_auprc).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0);
-    PathResult { points, best }
+    let auprcs: Vec<f64> = points.iter().map(|p| p.val_auprc).collect();
+    let best = nan_safe_argmax(&auprcs).expect("grid checked non-empty above");
+    Ok(PathResult { points, best })
 }
 
 /// The paper's §8.2 grid: {2⁻⁶, …, 2⁶}, descending for warm starts.
@@ -227,6 +437,7 @@ mod tests {
     use crate::data::Corpus;
     use crate::solver::compute::NativeCompute;
     use crate::solver::dglmnet;
+    use crate::util::prop;
 
     fn cfg() -> DGlmnetConfig {
         DGlmnetConfig {
@@ -244,11 +455,21 @@ mod tests {
         let compute = NativeCompute::new(LossKind::Logistic);
         let lmax = lambda_max(&splits.train, LossKind::Logistic);
         // At λ1 slightly above λ_max the fit must stay at zero.
-        let res = l1_path(&splits, &compute, &[lmax * 1.01], 0.0, &cfg());
+        let res = l1_path(&splits, &compute, &[lmax * 1.01], 0.0, &cfg()).unwrap();
         assert_eq!(res.points[0].nnz, 0, "β should be all-zero above λ_max");
         // Slightly below, some weight enters.
-        let res2 = l1_path(&splits, &compute, &[lmax * 0.9], 0.0, &cfg());
+        let res2 = l1_path(&splits, &compute, &[lmax * 0.9], 0.0, &cfg()).unwrap();
         assert!(res2.points[0].nnz > 0, "β should activate below λ_max");
+    }
+
+    #[test]
+    fn empty_grid_is_an_error_not_point_zero() {
+        let splits = Corpus::webspam_like(0.05, 2);
+        let compute = NativeCompute::new(LossKind::Logistic);
+        assert_eq!(
+            l1_path(&splits, &compute, &[], 0.0, &cfg()).unwrap_err(),
+            PathError::EmptyGrid
+        );
     }
 
     #[test]
@@ -257,7 +478,7 @@ mod tests {
         let compute = NativeCompute::new(LossKind::Logistic);
         let lmax = lambda_max(&splits.train, LossKind::Logistic);
         let lambdas: Vec<f64> = (0..5).map(|k| lmax * 0.7f64.powi(k + 1)).collect();
-        let res = l1_path(&splits, &compute, &lambdas, 0.0, &cfg());
+        let res = l1_path(&splits, &compute, &lambdas, 0.0, &cfg()).unwrap();
         for w in res.points.windows(2) {
             assert!(
                 w[1].nnz + 2 >= w[0].nnz, // allow tiny non-monotonicity
@@ -278,7 +499,7 @@ mod tests {
             patience: 3,
             ..cfg()
         };
-        let res = l1_path(&splits, &compute, &[0.5], 0.1, &c);
+        let res = l1_path(&splits, &compute, &[0.5], 0.1, &c).unwrap();
         let cold = dglmnet::fit(
             &splits.train,
             &compute,
@@ -294,7 +515,7 @@ mod tests {
     fn best_point_maximizes_validation_auprc() {
         let splits = Corpus::clickstream(0.05, 5);
         let compute = NativeCompute::new(LossKind::Logistic);
-        let res = l1_path(&splits, &compute, &[4.0, 1.0, 0.25], 0.0, &cfg());
+        let res = l1_path(&splits, &compute, &[4.0, 1.0, 0.25], 0.0, &cfg()).unwrap();
         let best = res.best_point().val_auprc;
         for p in &res.points {
             assert!(p.val_auprc <= best + 1e-12);
@@ -310,5 +531,123 @@ mod tests {
         for w in g.windows(2) {
             assert!(w[0] > w[1]);
         }
+    }
+
+    #[test]
+    fn nan_safe_argmax_policy() {
+        assert_eq!(nan_safe_argmax(&[]), None);
+        assert_eq!(nan_safe_argmax(&[0.3, 0.9, 0.1]), Some(1));
+        // NaN never wins; ties keep the first (largest-λ) point.
+        assert_eq!(nan_safe_argmax(&[f64::NAN, 0.2, 0.2]), Some(1));
+        assert_eq!(nan_safe_argmax(&[f64::NAN, f64::NAN]), Some(0));
+        assert_eq!(nan_safe_argmax(&[f64::NEG_INFINITY, f64::NAN]), Some(0));
+    }
+
+    #[test]
+    fn strong_rule_threshold_cases() {
+        assert_eq!(strong_rule_threshold(1.0, None), None);
+        assert_eq!(strong_rule_threshold(1.0, Some(0.5)), None); // ascending step
+        // Fine step: the strong-rule bound binds (0.9 > the 0.5 floor).
+        assert_eq!(strong_rule_threshold(1.0, Some(1.1)), Some(2.0 - 1.1));
+        assert_eq!(strong_rule_threshold(2.0, Some(3.0)), Some(1.0));
+        // Dyadic step (the §8.2 grid): the strong rule degenerates to 0 —
+        // the λ_k/2 floor keeps screening alive.
+        assert_eq!(strong_rule_threshold(1.0, Some(2.0)), Some(0.5));
+        // Steep drop: bound would be negative without the floor.
+        assert_eq!(strong_rule_threshold(0.1, Some(3.0)), Some(0.05));
+    }
+
+    #[test]
+    fn screen_columns_keeps_nonzero_weights() {
+        let beta = [0.0, 0.7, 0.0];
+        let grads = [0.1, 0.0, 0.9];
+        assert_eq!(screen_columns(&beta, &grads, Some(0.5)), vec![1, 2]);
+        assert_eq!(screen_columns(&beta, &grads, None), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn kkt_violations_only_on_excluded() {
+        let grads = [2.0, 0.1, 1.5, 0.2];
+        // Coordinate 0 is active (never a "violation"); 2 exceeds λ1 = 1.
+        assert_eq!(kkt_violations(&[0], &grads, 1.0, KKT_SLACK), vec![2]);
+        assert_eq!(kkt_violations(&[0, 2], &grads, 1.0, KKT_SLACK), Vec::<usize>::new());
+    }
+
+    /// Screening must be exact: the screened sweep reaches the unscreened
+    /// objective within 1e-6 at EVERY path point, over random corpora,
+    /// grids and λ2.
+    #[test]
+    fn prop_screened_path_matches_unscreened() {
+        prop::check("screened path = unscreened path", 4, |rng| {
+            let seed = 1 + rng.below(1000) as u64;
+            let splits = Corpus::webspam_like(0.04, seed);
+            let compute = NativeCompute::new(LossKind::Logistic);
+            let lmax = lambda_max(&splits.train, LossKind::Logistic);
+            let npts = 3 + rng.below(3);
+            let decay = 0.4 + 0.3 * rng.f64();
+            let lambdas: Vec<f64> = (0..npts)
+                .map(|k| lmax * decay.powi(k as i32 + 1))
+                .collect();
+            let l2 = if rng.bernoulli(0.5) { 0.05 } else { 0.0 };
+            let c = DGlmnetConfig {
+                max_iters: 120,
+                tol: 1e-11,
+                patience: 3,
+                ..cfg()
+            };
+            let on = l1_path_with_screening(&splits, &compute, &lambdas, l2, &c, true)
+                .map_err(|e| e.to_string())?;
+            let off = l1_path_with_screening(&splits, &compute, &lambdas, l2, &c, false)
+                .map_err(|e| e.to_string())?;
+            for (a, b) in on.points.iter().zip(off.points.iter()) {
+                let gap = (a.objective - b.objective).abs() / b.objective.abs().max(1e-12);
+                if gap > 1e-6 {
+                    return Err(format!(
+                        "λ1={}: screened {} vs unscreened {} (gap {gap:.3e})",
+                        a.lambda1, a.objective, b.objective
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The acceptance bar: on the paper's §8.2 grid the screened sweep
+    /// performs strictly fewer CD updates than the unscreened one while
+    /// selecting the same best point.
+    #[test]
+    fn screening_strictly_cheaper_on_paper_grid() {
+        let splits = Corpus::webspam_like(0.05, 7);
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let grid = paper_lambda_grid();
+        let c = cfg();
+        let on = l1_path_with_screening(&splits, &compute, &grid, 0.0, &c, true).unwrap();
+        let off = l1_path_with_screening(&splits, &compute, &grid, 0.0, &c, false).unwrap();
+        assert!(
+            on.total_cd_updates() < off.total_cd_updates(),
+            "screened {} updates vs unscreened {}",
+            on.total_cd_updates(),
+            off.total_cd_updates()
+        );
+        assert_eq!(on.best, off.best, "screening changed the selected point");
+        let gap = (on.best_point().objective - off.best_point().objective).abs()
+            / off.best_point().objective.abs().max(1e-12);
+        assert!(gap < 1e-6, "best objectives diverged (gap {gap:.3e})");
+    }
+
+    /// A validation split with no positives must select a model (auPRC 0.0
+    /// everywhere → first point wins) without panicking — the degenerate
+    /// split that used to NaN-panic the `max_by`.
+    #[test]
+    fn degenerate_validation_split_selects_without_panicking() {
+        let mut splits = Corpus::webspam_like(0.05, 9);
+        for y in splits.validation.y.iter_mut() {
+            *y = -1.0;
+        }
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let lmax = lambda_max(&splits.train, LossKind::Logistic);
+        let res = l1_path(&splits, &compute, &[lmax * 0.5, lmax * 0.25], 0.0, &cfg()).unwrap();
+        assert_eq!(res.best, 0, "all-0.0 auPRC keeps the first (sparsest) point");
+        assert!(res.points.iter().all(|p| p.val_auprc == 0.0));
     }
 }

@@ -57,6 +57,12 @@ pub struct CycleBudget<'a> {
     pub max_updates: usize,
     /// Optional cooperative stop flag, checked between coordinates.
     pub stop: Option<&'a AtomicBool>,
+    /// Restrict the cycle to these local column indices — the KKT
+    /// strong-rule screening hook (`solver::path`): a warm path fit touches
+    /// only the coordinates that survive the λ_k/λ_{k−1} gradient bound.
+    /// `None` cycles the whole block. Indices must be < the block width;
+    /// the cursor then counts positions *within this list*.
+    pub active: Option<&'a [usize]>,
 }
 
 impl<'a> CycleBudget<'a> {
@@ -64,6 +70,16 @@ impl<'a> CycleBudget<'a> {
         CycleBudget {
             max_updates: ncols,
             stop: None,
+            active: None,
+        }
+    }
+
+    /// One full pass over a screened subset of the block.
+    pub fn screened(active: &'a [usize]) -> Self {
+        CycleBudget {
+            max_updates: active.len(),
+            stop: None,
+            active: Some(active),
         }
     }
 }
@@ -107,15 +123,25 @@ pub fn cd_cycle(
     assert_eq!(z.len(), x.nrows);
     assert_eq!(state.t.len(), x.nrows);
     debug_assert!(mu >= 1.0 && nu > 0.0);
+    if let Some(a) = budget.active {
+        debug_assert!(a.iter().all(|&j| j < p_local), "active index out of block");
+    }
 
     let mut updates = 0usize;
     let mut max_delta = 0.0f64;
-    if p_local == 0 {
+    // Cycle length: the screened subset when one is given, else the block.
+    let cycle_len = budget.active.map_or(p_local, |a| a.len());
+    if cycle_len == 0 {
         return CycleOutcome {
             updates: 0,
             full_pass: true,
             max_delta: 0.0,
         };
+    }
+    // A stale cursor (the active set shrank since the last call) restarts
+    // the cycle rather than indexing out of the list.
+    if state.cursor >= cycle_len {
+        state.cursor = 0;
     }
     let t = &mut state.t;
     while updates < budget.max_updates {
@@ -124,8 +150,9 @@ pub fn cd_cycle(
                 break;
             }
         }
-        let j = state.cursor;
-        state.cursor = (state.cursor + 1) % p_local;
+        let slot = state.cursor;
+        state.cursor = (state.cursor + 1) % cycle_len;
+        let j = budget.active.map_or(slot, |a| a[slot]);
 
         let (rows, vals) = x.col_raw(j);
         // One fused pass over the column: s1 = Σ w x (z − μ t), s2 = Σ w x².
@@ -162,7 +189,7 @@ pub fn cd_cycle(
     }
     CycleOutcome {
         updates,
-        full_pass: updates >= p_local,
+        full_pass: updates >= cycle_len,
         max_delta,
     }
 }
@@ -360,6 +387,7 @@ mod tests {
             CycleBudget {
                 max_updates: 3,
                 stop: None,
+                active: None,
             },
         );
         assert_eq!(st.cursor, 3);
@@ -376,6 +404,7 @@ mod tests {
             CycleBudget {
                 max_updates: 4,
                 stop: None,
+                active: None,
             },
         );
         assert_eq!(st.cursor, 2);
@@ -400,6 +429,7 @@ mod tests {
             CycleBudget {
                 max_updates: 8,
                 stop: Some(&stop),
+                active: None,
             },
         );
         // At least one update always happens; then the flag is honored.
@@ -425,6 +455,95 @@ mod tests {
         );
         assert_eq!(out.updates, 0);
         assert!(out.full_pass);
+    }
+
+    #[test]
+    fn active_set_only_touches_listed_columns() {
+        let mut rng = Rng::new(11);
+        let (x, beta, w, z) = random_problem(&mut rng, 12, 6);
+        let pen = ElasticNet::new(0.05, 0.0);
+        let active = [1usize, 4];
+        let mut st = SubproblemState::new(6, 12);
+        let out = cd_cycle(
+            &x,
+            &beta,
+            &w,
+            &z,
+            1.0,
+            1e-6,
+            &pen,
+            &mut st,
+            CycleBudget::screened(&active),
+        );
+        assert_eq!(out.updates, 2);
+        assert!(out.full_pass, "one pass over the screened subset");
+        for j in 0..6 {
+            if !active.contains(&j) {
+                assert_eq!(st.delta_beta[j], 0.0, "screened-out column {j} moved");
+            }
+        }
+        // The t vector stays consistent with the (screened) Δβ.
+        let want = x.mul_vec(&st.delta_beta);
+        prop::all_close(&st.t, &want, 1e-10).unwrap();
+    }
+
+    #[test]
+    fn active_set_matches_full_cycle_on_full_list() {
+        // active = [0..p] must be byte-identical to the unscreened cycle.
+        let mut rng = Rng::new(12);
+        let (x, beta, w, z) = random_problem(&mut rng, 10, 5);
+        let pen = ElasticNet::new(0.1, 0.1);
+        let all: Vec<usize> = (0..5).collect();
+        let mut st_full = SubproblemState::new(5, 10);
+        let mut st_act = SubproblemState::new(5, 10);
+        cd_cycle(&x, &beta, &w, &z, 1.0, 1e-6, &pen, &mut st_full, CycleBudget::full_cycle(5));
+        cd_cycle(&x, &beta, &w, &z, 1.0, 1e-6, &pen, &mut st_act, CycleBudget::screened(&all));
+        assert_eq!(st_full.delta_beta, st_act.delta_beta);
+        assert_eq!(st_full.cursor, st_act.cursor);
+    }
+
+    #[test]
+    fn stale_cursor_restarts_screened_cycle() {
+        let mut rng = Rng::new(13);
+        let (x, beta, w, z) = random_problem(&mut rng, 8, 6);
+        let pen = ElasticNet::new(0.1, 0.0);
+        let mut st = SubproblemState::new(6, 8);
+        st.cursor = 5; // left over from a wider active set
+        let active = [0usize, 2];
+        let out = cd_cycle(
+            &x,
+            &beta,
+            &w,
+            &z,
+            1.0,
+            1e-6,
+            &pen,
+            &mut st,
+            CycleBudget::screened(&active),
+        );
+        assert_eq!(out.updates, 2);
+        assert!(st.cursor < active.len());
+    }
+
+    #[test]
+    fn empty_active_set_is_noop_full_pass() {
+        let x = Csc::from_triplets(4, 3, vec![(0, 0, 1.0), (1, 1, 2.0)]);
+        let pen = ElasticNet::new(0.1, 0.1);
+        let mut st = SubproblemState::new(3, 4);
+        let active: [usize; 0] = [];
+        let out = cd_cycle(
+            &x,
+            &[0.0; 3],
+            &[1.0; 4],
+            &[0.0; 4],
+            1.0,
+            1e-6,
+            &pen,
+            &mut st,
+            CycleBudget::screened(&active),
+        );
+        assert_eq!(out.updates, 0);
+        assert!(out.full_pass, "an empty screened block is a complete pass");
     }
 
     #[test]

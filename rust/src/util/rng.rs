@@ -166,10 +166,7 @@ impl Zipf {
     /// Draw a rank in [0, n); rank 0 is the most popular.
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.f64();
-        match self
-            .cdf
-            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
-        {
+        match self.cdf.binary_search_by(|c| c.total_cmp(&u)) {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),
         }

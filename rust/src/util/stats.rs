@@ -22,12 +22,15 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile via linear interpolation on the sorted copy; `q` in [0,100].
+/// NaN entries sort to the ends under the IEEE total order (they never
+/// panic the sort) — callers with NaN-contaminated samples get a defined,
+/// deterministic answer instead of a crash.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (q / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -160,6 +163,17 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // A NaN sample must not panic the sort; the total order puts it
+        // after +inf, so low percentiles stay meaningful.
+        let xs = [2.0, f64::NAN, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        // Sorted under the total order: [1, 2, 3, NaN] → median interpolates
+        // the two middle reals (0.5 is exact in binary).
+        assert_eq!(percentile(&xs, 50.0), 2.5);
     }
 
     #[test]

@@ -3,14 +3,18 @@
 //! Algorithm 1 reference (`solver::dglmnet::fit`) exactly: the transport is
 //! plumbing, the math may not change.
 
-use dglmnet::coordinator::{fit_distributed, fit_distributed_tcp, DistributedConfig};
-use dglmnet::data::{synth, Dataset, SynthConfig};
+use dglmnet::coordinator::{
+    fit_distributed, fit_distributed_tcp, fit_path_distributed, fit_path_distributed_tcp,
+    DistributedConfig,
+};
+use dglmnet::data::{synth, Corpus, Dataset, SynthConfig};
 use dglmnet::glm::loss::LossKind;
 use dglmnet::glm::regularizer::ElasticNet;
 use dglmnet::metrics;
 use dglmnet::solver::compute::NativeCompute;
 use dglmnet::solver::dglmnet as dg;
 use dglmnet::solver::dglmnet::DGlmnetConfig;
+use dglmnet::solver::path::{self, l1_path};
 
 fn ds(n: usize, p: usize, seed: u64) -> Dataset {
     synth::epsilon_like(&SynthConfig { n, p, seed })
@@ -148,6 +152,65 @@ fn l1_sparsity_pattern_preserved() {
             if (*a == 0.0) != (*b == 0.0) {
                 panic!("{name}: support mismatch at feature {j} ({a} vs {b})");
             }
+        }
+    }
+}
+
+/// The λ-path column of the oracle matrix: the distributed warm-started
+/// sweep (screening + validation selection included) must pick the SAME
+/// best (λ, objective) as the single-process `l1_path` — per point within
+/// 1e-6 — for M ∈ {2, 4} over BOTH transports. The transport is plumbing;
+/// the §8.2 protocol may not change.
+#[test]
+fn distributed_path_matches_single_process_sweep() {
+    let splits = Corpus::webspam_like(0.05, 31);
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let lmax = path::lambda_max(&splits.train, LossKind::Logistic);
+    let lambdas: Vec<f64> = (0..5).map(|k| lmax * 0.6f64.powi(k + 1)).collect();
+    let l2 = 0.05;
+    for m in [2, 4] {
+        // Reference: the single-process sweep with the SAME block count and
+        // partition seed — block structure is part of the iterate sequence.
+        let ref_cfg = DGlmnetConfig {
+            nodes: m,
+            max_iters: 60,
+            tol: 1e-9,
+            eval_every: 0,
+            seed: 31,
+            ..Default::default()
+        };
+        let reference = l1_path(&splits, &compute, &lambdas, l2, &ref_cfg).unwrap();
+
+        let mut dcfg = dist_cfg(m, 60, 31);
+        dcfg.tol = 1e-9;
+        let fab = fit_path_distributed(&splits, &compute, &lambdas, l2, &dcfg, true)
+            .expect("fabric path");
+        let tcp = fit_path_distributed_tcp(&splits, &compute, &lambdas, l2, &dcfg, true)
+            .expect("tcp path");
+        for (name, got) in [("fabric", &fab.path), ("tcp", &tcp.path)] {
+            assert_eq!(
+                got.best, reference.best,
+                "{name} M={m}: best index {} vs reference {}",
+                got.best, reference.best
+            );
+            assert_eq!(
+                got.best_point().lambda1,
+                reference.best_point().lambda1,
+                "{name} M={m}: best λ drifted"
+            );
+            for (a, b) in got.points.iter().zip(reference.points.iter()) {
+                let gap = (a.objective - b.objective).abs() / b.objective.abs().max(1e-12);
+                assert!(
+                    gap < 1e-6,
+                    "{name} M={m} λ1={}: objective {} vs reference {} (gap {gap:.3e})",
+                    a.lambda1,
+                    a.objective,
+                    b.objective
+                );
+            }
+            let bgap = (got.best_point().objective - reference.best_point().objective).abs()
+                / reference.best_point().objective.abs().max(1e-12);
+            assert!(bgap < 1e-6, "{name} M={m}: best objective gap {bgap:.3e}");
         }
     }
 }

@@ -1,0 +1,151 @@
+//! End-to-end distributed λ-path sweep: real `dglmnet worker` processes
+//! plus a `dglmnet path --cluster` coordinator on loopback, checked against
+//! the single-process `l1_path` reference — the §8.2 hyper-parameter search
+//! as an actual multi-process workload (job-spec v3 `path` mode).
+
+use dglmnet::glm::loss::LossKind;
+use dglmnet::solver::compute::NativeCompute;
+use dglmnet::solver::dglmnet::DGlmnetConfig;
+use dglmnet::solver::path::l1_path;
+
+#[test]
+fn multiprocess_path_sweep_end_to_end() {
+    use std::io::BufRead;
+    use std::process::{Child, Command, Stdio};
+
+    let bin = env!("CARGO_BIN_EXE_dglmnet");
+    let mut workers: Vec<Child> = Vec::new();
+    let mut addrs: Vec<String> = Vec::new();
+
+    // Belt-and-braces cleanup: kill leftover workers on any exit path.
+    struct Cleanup<'a>(&'a mut Vec<Child>);
+    impl Drop for Cleanup<'_> {
+        fn drop(&mut self) {
+            for c in self.0.iter_mut() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+
+    for _ in 0..2 {
+        let mut child = Command::new(bin)
+            .args(["worker", "--listen", "127.0.0.1:0"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn worker");
+        let stdout = child.stdout.take().expect("worker stdout");
+        let mut reader = std::io::BufReader::new(stdout);
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("worker banner");
+        let addr = line
+            .trim()
+            .strip_prefix("worker: listening on ")
+            .unwrap_or_else(|| panic!("unexpected worker banner: {line:?}"))
+            .to_string();
+        addrs.push(addr);
+        // Keep draining the pipe so the worker never blocks on a full one.
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            loop {
+                sink.clear();
+                if reader.read_line(&mut sink).unwrap_or(0) == 0 {
+                    break;
+                }
+            }
+        });
+        workers.push(child);
+    }
+    let cleanup = Cleanup(&mut workers);
+
+    let cluster = format!("127.0.0.1:0,{}", addrs.join(","));
+    let out = Command::new(bin)
+        .args([
+            "path",
+            "--cluster",
+            &cluster,
+            "--dataset",
+            "epsilon_like",
+            "--scale",
+            "0.05",
+            "--seed",
+            "1",
+            "--loss",
+            "logistic",
+            "--lambdas",
+            "2.0,0.5,0.125",
+            "--l2",
+            "0.0",
+            "--max-iters",
+            "8",
+        ])
+        .output()
+        .expect("run path coordinator");
+    assert!(
+        out.status.success(),
+        "path coordinator failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    drop(cleanup); // workers have exited with the job; reap them
+
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(
+        stdout.contains("<- best"),
+        "per-λ table should mark the best point:\n{stdout}"
+    );
+
+    // Parse the "best: λ1=… | objective=…" summary line.
+    let best_line = stdout
+        .lines()
+        .find(|l| l.starts_with("best: "))
+        .unwrap_or_else(|| panic!("no best line in:\n{stdout}"));
+    let field = |key: &str| -> f64 {
+        let start = best_line
+            .find(key)
+            .unwrap_or_else(|| panic!("no '{key}' in {best_line:?}"))
+            + key.len();
+        best_line[start..]
+            .split(|c: char| c == ' ' || c == '|')
+            .next()
+            .and_then(|tok| tok.parse().ok())
+            .unwrap_or_else(|| panic!("unparsable '{key}' in {best_line:?}"))
+    };
+    let got_lambda = field("λ1=");
+    let got_objective = field("objective=");
+
+    // Single-process reference with the identical recipe: same dataset,
+    // seed, M = 3 blocks, and the path CLI's tol/patience (1e-7 / 2).
+    let splits = dglmnet::harness::load_splits("epsilon_like", 0.05, 1).expect("splits");
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let reference = l1_path(
+        &splits,
+        &compute,
+        &[2.0, 0.5, 0.125],
+        0.0,
+        &DGlmnetConfig {
+            nodes: 3,
+            max_iters: 8,
+            tol: 1e-7,
+            patience: 2,
+            seed: 1,
+            eval_every: 0,
+            ..Default::default()
+        },
+    )
+    .expect("reference sweep");
+    let want = reference.best_point();
+    assert_eq!(
+        got_lambda, want.lambda1,
+        "3-process sweep picked λ1={got_lambda}, reference {}",
+        want.lambda1
+    );
+    // The CLI prints the objective with 6 decimals; compare at that grain.
+    let gap = (got_objective - want.objective).abs() / want.objective.abs().max(1e-12);
+    assert!(
+        gap < 1e-4,
+        "3-process best objective {got_objective} vs reference {} (gap {gap:.3e})",
+        want.objective
+    );
+}
