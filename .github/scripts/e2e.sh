@@ -1,0 +1,131 @@
+#!/usr/bin/env bash
+# End-to-end cluster scenarios from the shipped binary, driven by the CI
+# matrix (scenario × thread count). Each scenario spawns real `dglmnet
+# worker` processes on loopback, runs the coordinator, and asserts on its
+# output. Usage: e2e.sh <scenario> [threads]
+set -euo pipefail
+
+SCENARIO="${1:?usage: e2e.sh <scenario> [threads]}"
+THREADS="${2:-1}"
+BIN=./target/release/dglmnet
+
+# Spawn N workers on base_port+1..base_port+N (rank 0 = the coordinator).
+spawn_workers() {
+  local base=$1 count=$2
+  shift 2
+  for i in $(seq 1 "$count"); do
+    "$BIN" worker --listen "127.0.0.1:$((base + i))" "$@" &
+  done
+  sleep 1
+}
+
+# The --cluster address list for base_port + N workers.
+cluster_list() {
+  local base=$1 count=$2
+  local list="127.0.0.1:$base"
+  for i in $(seq 1 "$count"); do list="$list,127.0.0.1:$((base + i))"; done
+  echo "$list"
+}
+
+# Pull "objective=X" out of the coordinator's done line.
+objective_of() {
+  sed -n 's/^done:.*objective=\([0-9.eE+-]*\).*/\1/p' "$1" | head -1
+}
+
+case "$SCENARIO" in
+  train-bsp)
+    # 1 coordinator + 3 workers over loopback TCP: the multi-process
+    # runtime end to end.
+    spawn_workers 7100 3
+    "$BIN" train \
+      --cluster "$(cluster_list 7100 3)" \
+      --dataset epsilon_like --scale 0.1 --seed 1 \
+      --loss logistic --l1 0.5 --max-iters 10 --eval-every 0 \
+      | tee train.log
+    wait
+    grep -q "^done:" train.log
+    ;;
+
+  train-alb)
+    # The asynchronous path with an injected straggler: the per-rank load
+    # table must appear (the suites assert the cut-off itself).
+    spawn_workers 7110 3
+    "$BIN" train \
+      --cluster "$(cluster_list 7110 3)" \
+      --dataset epsilon_like --scale 0.1 --seed 1 \
+      --loss logistic --l1 0.5 --max-iters 20 --eval-every 0 \
+      --alb-kappa 0.75 --straggler-delays-ms 0,0,40,0 --chunk 8 \
+      | tee train_alb.log
+    wait
+    grep -q "^done:" train_alb.log
+    grep -q "per-rank load" train_alb.log
+    ;;
+
+  path)
+    # Distributed λ-path sweep: warm starts + KKT screening over 2 workers.
+    spawn_workers 7120 2
+    "$BIN" path \
+      --cluster "$(cluster_list 7120 2)" \
+      --dataset webspam_like --scale 0.1 --seed 1 \
+      --loss logistic --lambdas 4.0,1.0,0.25,0.0625 --l2 0.0 \
+      --max-iters 30 \
+      | tee path.log
+    wait
+    grep -q "^best:" path.log
+    grep -q -- "<- best" path.log
+    ;;
+
+  hybrid)
+    # Hybrid parallelism: the same converged job single-threaded and with
+    # --threads T per rank. The per-rank table must report the thread count
+    # and the T-threaded objective must match the T=1 log (one convex
+    # optimum; both runs converge).
+    spawn_workers 7130 2
+    "$BIN" train \
+      --cluster "$(cluster_list 7130 2)" \
+      --dataset epsilon_like --scale 0.1 --seed 1 \
+      --loss logistic --l1 0.5 --l2 0.1 --max-iters 80 --eval-every 0 \
+      --threads 1 \
+      | tee train_t1.log
+    wait
+    grep -q "^done:" train_t1.log
+
+    spawn_workers 7140 2
+    "$BIN" train \
+      --cluster "$(cluster_list 7140 2)" \
+      --dataset epsilon_like --scale 0.1 --seed 1 \
+      --loss logistic --l1 0.5 --l2 0.1 --max-iters 80 --eval-every 0 \
+      --threads "$THREADS" \
+      | tee train_tN.log
+    wait
+    grep -q "^done:" train_tN.log
+
+    # Every rank's row of the per-rank table reports the thread count
+    # (table columns: rank | cd updates | passes | cutoffs | sent MiB |
+    # msgs | sync wait | threads | upd/thread).
+    rows=$(awk -F'|' -v t="$THREADS" \
+      'NF >= 11 { gsub(/ /, "", $2); gsub(/ /, "", $9);
+                  if ($2 ~ /^[0-9]+$/ && $9 == t) c++ }
+       END { print c + 0 }' train_tN.log)
+    if [ "$rows" -ne 3 ]; then
+      echo "expected 3 per-rank rows reporting threads=$THREADS, got $rows" >&2
+      exit 1
+    fi
+
+    obj1=$(objective_of train_t1.log)
+    objN=$(objective_of train_tN.log)
+    awk -v a="$obj1" -v b="$objN" 'BEGIN {
+      if (a == "" || b == "") { print "missing objective"; exit 1 }
+      d = (a - b) / a; if (d < 0) d = -d
+      if (d > 1e-3) {
+        printf "hybrid objective drifted: T=1 %s vs T=N %s (rel gap %g)\n", a, b, d
+        exit 1
+      }
+    }'
+    ;;
+
+  *)
+    echo "unknown scenario '$SCENARIO'" >&2
+    exit 2
+    ;;
+esac

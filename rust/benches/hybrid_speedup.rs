@@ -1,0 +1,80 @@
+//! Hybrid-mode CD-pass throughput: one rank's feature block run as T
+//! sub-block pool waves for T ∈ {1, 2, 4, 8}, against the classic coupled
+//! single-thread cycle as the baseline. This measures exactly the hot path
+//! `--threads` accelerates — the per-iteration local subproblem — without
+//! transport noise, so the table is the intra-rank speedup ceiling for any
+//! cluster shape.
+//!
+//!     cargo bench --bench hybrid_speedup
+
+use dglmnet::data::{synth, SynthConfig};
+use dglmnet::glm::regularizer::ElasticNet;
+use dglmnet::solver::subproblem::{cd_cycle, CycleBudget, HybridCd, SubproblemState};
+use dglmnet::util::bench::{bench, Table};
+use dglmnet::util::rng::Rng;
+
+fn main() {
+    let ds = synth::webspam_like(
+        &SynthConfig {
+            n: 20_000,
+            p: 24_000,
+            seed: 1,
+        },
+        100,
+    );
+    let x = ds.to_csc();
+    let n = x.nrows;
+    let p = x.ncols;
+    let nnz = x.nnz();
+    println!("hybrid_speedup: one rank's block n={n} p={p} nnz={nnz}");
+
+    let mut rng = Rng::new(2);
+    let beta = vec![0.0; p];
+    let w: Vec<f64> = (0..n).map(|_| rng.range_f64(0.01, 0.25)).collect();
+    let z: Vec<f64> = (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+    let pen = ElasticNet::new(0.5, 0.1);
+
+    // Baseline: the classic coupled cycle (what --threads 1 runs today).
+    let mut st = SubproblemState::new(p, n);
+    let classic = bench("classic coupled cd pass", 1, 8, || {
+        st.reset();
+        cd_cycle(
+            &x,
+            &beta,
+            &w,
+            &z,
+            1.0,
+            1e-6,
+            &pen,
+            &mut st,
+            CycleBudget::full_cycle(p),
+        );
+    });
+
+    let mut table = Table::new(&["threads", "pass (median)", "updates/s", "speedup vs T=1"]);
+    let mut t1 = f64::NAN;
+    for threads in [1usize, 2, 4, 8] {
+        let mut h = HybridCd::new(&x, threads);
+        let mut state = SubproblemState::new(p, n);
+        let s = bench(&format!("hybrid cd pass T={threads}"), 1, 8, || {
+            state.reset();
+            h.bsp_pass(&beta, &w, &z, 1.0, 1e-6, &pen, &mut state);
+        });
+        let med = s.median();
+        if threads == 1 {
+            t1 = med;
+        }
+        table.row(&[
+            threads.to_string(),
+            dglmnet::util::bench::fmt_dur(med),
+            format!("{:.2e}", p as f64 / med),
+            format!("{:.2}x", t1 / med),
+        ]);
+    }
+    table.print();
+    println!(
+        "    (classic coupled pass median {}; T=1 hybrid ≈ classic is the \
+         zero-overhead check)",
+        dglmnet::util::bench::fmt_dur(classic.median())
+    );
+}

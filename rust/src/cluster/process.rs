@@ -31,6 +31,11 @@
 //! gather step becomes one β frame per grid point on the same reserved tag
 //! (FIFO per (peer, tag) keeps grid order). Path jobs are BSP-only.
 //!
+//! Protocol v4 adds per-rank `threads`: rank r splits its feature block
+//! into `threads[r]` sub-blocks run by an intra-rank pool (hybrid
+//! parallelism, DESIGN.md §Hybrid parallelism); the done report gains the
+//! effective thread count and the per-thread update accounting.
+//!
 //! Datasets are recipes, not payloads: synthetic corpora are deterministic
 //! in `(name, scale, seed)`, and libsvm paths must be readable by every
 //! process. Engine is native-only here (the XLA runtime is per-process and
@@ -69,6 +74,16 @@ pub const GATHER_TAG: u64 = u64::MAX - 8;
 /// Upper bound on λ-grid length a path job accepts — bounds the gather
 /// traffic and catches garbage specs early.
 pub const MAX_PATH_POINTS: usize = 128;
+
+/// Upper bound on a per-rank intra-rank CD thread count — the protocol v4
+/// contract shared by the job-spec validator and every CLI spelling
+/// (`train/path --threads`, `worker --threads`).
+pub const MAX_THREADS_PER_RANK: usize = 1024;
+
+/// Shared range check for one per-rank thread count.
+pub fn thread_count_in_range(t: usize) -> bool {
+    (1..=MAX_THREADS_PER_RANK).contains(&t)
+}
 
 /// What a job spec asks the cluster to do.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -152,6 +167,10 @@ pub struct JobSpec {
     pub lambda_grid: Vec<f64>,
     /// KKT strong-rule screening switch for path jobs.
     pub screen: bool,
+    /// Intra-rank CD threads, one entry per rank (protocol v4; missing
+    /// entries mean 1 = classic single-threaded). Rank r splits its block
+    /// into `threads[r]` sub-blocks run as pool waves.
+    pub threads: Vec<usize>,
 }
 
 impl JobSpec {
@@ -195,7 +214,11 @@ impl JobSpec {
                 "lambda_grid",
                 Json::Arr(self.lambda_grid.iter().map(|&l| Json::Num(l)).collect()),
             )
-            .set("screen", self.screen);
+            .set("screen", self.screen)
+            .set(
+                "threads",
+                Json::Arr(self.threads.iter().map(|&t| Json::Num(t as f64)).collect()),
+            );
         if let Some(kappa) = self.alb_kappa {
             o.set("alb_kappa", kappa);
         }
@@ -306,6 +329,26 @@ impl JobSpec {
                 return Err("path jobs do not support virtual_time".into());
             }
         }
+        let threads_raw = num_list("threads")?;
+        let mut threads = Vec::with_capacity(threads_raw.len());
+        for t in threads_raw {
+            // `as usize` after the fract/finite check saturates negatives
+            // to 0 and huge values to usize::MAX — both out of range.
+            if !t.is_finite() || t.fract() != 0.0 || !thread_count_in_range(t as usize) {
+                return Err(format!(
+                    "threads entry {t} must be an integer in [1, {MAX_THREADS_PER_RANK}]"
+                ));
+            }
+            threads.push(t as usize);
+        }
+        // The virtual clock charges per-thread CPU time of the rank's main
+        // thread; hybrid pool compute is not charged yet — reject rather
+        // than silently under-count.
+        if matches!(v.get("virtual_time"), Some(Json::Bool(true)))
+            && threads.iter().any(|&t| t > 1)
+        {
+            return Err("virtual_time does not support hybrid threads (> 1)".into());
+        }
         let spec = JobSpec {
             rank: num("rank")? as usize,
             cluster,
@@ -331,6 +374,7 @@ impl JobSpec {
             mode,
             lambda_grid,
             screen: matches!(v.get("screen"), Some(Json::Bool(true))),
+            threads,
         };
         if spec.rank >= spec.cluster.len() {
             return Err(format!(
@@ -363,6 +407,7 @@ impl JobSpec {
                 1
             },
             chunk: self.chunk.max(1),
+            threads: self.threads.get(self.rank).copied().unwrap_or(1).max(1),
             straggler_delay: Duration::from_secs_f64(
                 self.straggler_delays.get(self.rank).copied().unwrap_or(0.0),
             ),
@@ -382,6 +427,10 @@ pub struct WorkerOverrides {
     pub slow_factor: Option<f64>,
     /// Replace this rank's spec per-pass straggler delay.
     pub straggler_delay: Option<Duration>,
+    /// Replace this rank's spec intra-rank CD thread count (hybrid mode) —
+    /// lets an operator right-size one node to its core count without the
+    /// coordinator's cooperation.
+    pub threads: Option<usize>,
 }
 
 impl WorkerOverrides {
@@ -391,6 +440,9 @@ impl WorkerOverrides {
         }
         if let Some(d) = self.straggler_delay {
             cfg.straggler_delay = d;
+        }
+        if let Some(t) = self.threads {
+            cfg.threads = t.max(1);
         }
     }
 }
@@ -467,6 +519,7 @@ fn solve_rank_path(
     spec: &JobSpec,
     listener: TcpListener,
     splits: &Splits,
+    overrides: &WorkerOverrides,
 ) -> anyhow::Result<PathRankRun> {
     let m = spec.cluster.len();
     let kind = LossKind::parse(&spec.loss)
@@ -481,7 +534,12 @@ fn solve_rank_path(
 
     let mut transport =
         TcpTransport::with_listener(spec.rank, &spec.cluster, listener, mesh_options())?;
-    let wcfg = spec.worker_config();
+    let mut wcfg = spec.worker_config();
+    // Only the capacity override applies to path jobs (chaos injection is
+    // rejected for them — see run_worker_process).
+    if let Some(t) = overrides.threads {
+        wcfg.threads = t.max(1);
+    }
     let job = PathJob {
         lambdas: &spec.lambda_grid,
         l2: spec.l2,
@@ -590,7 +648,18 @@ pub fn run_worker_on(
                 .set("cd_updates", run.output.cd_updates)
                 .set("full_passes", run.output.full_passes)
                 .set("cutoffs", run.output.cutoffs)
-                .set("sync_wait_secs", run.output.sync_wait_secs);
+                .set("sync_wait_secs", run.output.sync_wait_secs)
+                .set("threads", run.output.threads)
+                .set(
+                    "updates_per_thread",
+                    Json::Arr(
+                        run.output
+                            .updates_per_thread
+                            .iter()
+                            .map(|&u| Json::Num(u as f64))
+                            .collect(),
+                    ),
+                );
             write_line(&mut ctrl_w, &done)?;
             drop(transport); // joins the writer threads: the gather frame is flushed
             println!(
@@ -605,7 +674,7 @@ pub fn run_worker_on(
                      path jobs (BSP sweep, no chaos injection) — ignoring"
                 );
             }
-            let run = solve_rank_path(&spec, listener, &splits)?;
+            let run = solve_rank_path(&spec, listener, &splits, &overrides)?;
             let mut transport = run.transport;
             // One frame per λ point, in grid order, all on the gather tag
             // (FIFO per (peer, tag) keeps them ordered on the wire).
@@ -745,6 +814,14 @@ pub fn train_cluster(
     for br in ctrls.iter_mut() {
         let done = read_done_report(br)?;
         let field = |k: &str| done.get(k).and_then(|j| j.as_f64()).unwrap_or(0.0);
+        let updates_per_thread: Vec<u64> = match done.get("updates_per_thread") {
+            Some(Json::Arr(xs)) => xs
+                .iter()
+                .filter_map(|x| x.as_f64())
+                .map(|v| v as u64)
+                .collect(),
+            _ => Vec::new(),
+        };
         comm_bytes += field("sent_bytes") as u64;
         comm_msgs += field("sent_msgs") as u64;
         barrier_wait_secs += field("sync_wait_secs");
@@ -756,6 +833,8 @@ pub fn train_cluster(
             sent_bytes: field("sent_bytes") as u64,
             sent_msgs: field("sent_msgs") as u64,
             sync_wait_secs: field("sync_wait_secs"),
+            threads: (field("threads") as usize).max(1),
+            updates_per_thread,
         });
     }
     per_rank.sort_by_key(|l| l.rank);
@@ -826,7 +905,7 @@ pub fn path_cluster(
         cluster,
         ..spec0.clone()
     };
-    let run = solve_rank_path(&spec, listener, splits)?;
+    let run = solve_rank_path(&spec, listener, splits, &WorkerOverrides::default())?;
     let mut transport = run.transport;
 
     // Gather per-λ β blocks: each worker sends one frame per grid point on
@@ -906,6 +985,7 @@ mod tests {
             mode: JobMode::Train,
             lambda_grid: Vec::new(),
             screen: false,
+            threads: Vec::new(),
         }
     }
 
@@ -927,6 +1007,7 @@ mod tests {
         s.virtual_time = true;
         s.straggler_delays = vec![0.0, 0.04];
         s.slow_factors = vec![1.0, 2.5];
+        s.threads = vec![1, 1];
         let text = s.to_json().dump();
         let back = JobSpec::from_json(&text).unwrap();
         assert_eq!(back.rank, s.rank);
@@ -952,6 +1033,35 @@ mod tests {
         assert_eq!(back.mode, s.mode);
         assert_eq!(back.lambda_grid, s.lambda_grid);
         assert_eq!(back.screen, s.screen);
+        assert_eq!(back.threads, s.threads);
+    }
+
+    #[test]
+    fn job_spec_threads_roundtrip_and_validation() {
+        // Per-rank thread list survives the wire.
+        let mut s = spec();
+        s.threads = vec![4, 2];
+        let back = JobSpec::from_json(&s.to_json().dump()).unwrap();
+        assert_eq!(back.threads, vec![4, 2]);
+        // Zero, fractional, and absurd counts are rejected.
+        for bad in [0.0, 2.5, -1.0, 4096.0] {
+            let mut j = spec().to_json();
+            j.set("threads", Json::Arr(vec![Json::Num(bad)]));
+            assert!(
+                JobSpec::from_json(&j.dump()).is_err(),
+                "threads entry {bad} must be rejected"
+            );
+        }
+        // The virtual clock cannot charge hybrid pool compute yet.
+        let mut s = spec();
+        s.virtual_time = true;
+        s.threads = vec![1, 4];
+        assert!(JobSpec::from_json(&s.to_json().dump()).is_err());
+        // Path jobs may use hybrid threads.
+        let mut s = path_spec();
+        s.threads = vec![2, 2];
+        let back = JobSpec::from_json(&s.to_json().dump()).unwrap();
+        assert_eq!(back.threads, vec![2, 2]);
     }
 
     #[test]
@@ -1048,10 +1158,12 @@ mod tests {
         s.virtual_time = true;
         s.straggler_delays = vec![0.0, 0.03];
         s.slow_factors = vec![1.0, 4.0];
+        s.threads = vec![1, 8];
         let cfg = s.worker_config();
         assert_eq!(cfg.straggler_delay, Duration::from_millis(30));
         assert_eq!(cfg.slow_factor, 4.0);
         assert!(cfg.virtual_time, "virtual clock must reach the worker");
+        assert_eq!(cfg.threads, 8, "rank 1 picks its own threads entry");
         assert_eq!(cfg.max_passes, 4);
         // BSP forces a single pass regardless of max_passes.
         s.alb_kappa = None;
@@ -1064,12 +1176,15 @@ mod tests {
         let ov = WorkerOverrides {
             slow_factor: Some(2.0),
             straggler_delay: Some(Duration::from_millis(5)),
+            threads: Some(4),
         };
         ov.apply(&mut cfg);
         assert_eq!(cfg.slow_factor, 2.0);
         assert_eq!(cfg.straggler_delay, Duration::from_millis(5));
+        assert_eq!(cfg.threads, 4);
         WorkerOverrides::default().apply(&mut cfg);
         assert_eq!(cfg.slow_factor, 2.0, "empty overrides change nothing");
+        assert_eq!(cfg.threads, 4, "empty overrides change nothing");
     }
 
     /// Full in-test cluster: 1 coordinator + 2 workers as threads of this
@@ -1165,6 +1280,71 @@ mod tests {
             fast_min
         );
         assert!(straggler.cutoffs > 0, "straggler never reported a cut-off");
+    }
+
+    /// The same in-test cluster in hybrid mode: every rank splits its block
+    /// across an intra-rank pool, and the per-rank load report must carry
+    /// the thread count plus per-thread update accounting.
+    #[test]
+    fn hybrid_cluster_job_reports_per_thread_load() {
+        use std::net::TcpListener;
+        let w1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let w2 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a1 = w1.local_addr().unwrap().to_string();
+        let a2 = w2.local_addr().unwrap().to_string();
+        let mut s = spec();
+        s.cluster = vec!["127.0.0.1:0".into(), a1, a2];
+        s.threads = vec![2, 2, 2];
+        s.max_iters = 80;
+        s.tol = 1e-10;
+        s.patience = 3;
+
+        let h1 =
+            std::thread::spawn(move || run_worker_on(w1, WorkerOverrides::default()).unwrap());
+        let h2 =
+            std::thread::spawn(move || run_worker_on(w2, WorkerOverrides::default()).unwrap());
+        let fit = train_cluster(&s, None).unwrap();
+        h1.join().unwrap();
+        h2.join().unwrap();
+
+        assert!(fit.objective.is_finite());
+        assert_eq!(fit.per_rank.len(), 3);
+        for load in &fit.per_rank {
+            assert_eq!(load.threads, 2, "rank {} thread count", load.rank);
+            assert_eq!(load.updates_per_thread.len(), 2, "rank {}", load.rank);
+            assert_eq!(
+                load.updates_per_thread.iter().sum::<u64>(),
+                load.cd_updates,
+                "rank {}: per-thread accounting must total the rank's updates",
+                load.rank
+            );
+        }
+        // Quality: the unique optimum does not depend on the block count —
+        // the hybrid run (3 ranks × 2 sub-blocks) must land within 1e-3 of
+        // the high-precision single-process reference at convergence.
+        let splits = crate::harness::load_splits("epsilon_like", 0.05, 3).unwrap();
+        let f_star = crate::solver::dglmnet::fit(
+            &splits.train,
+            &NativeCompute::new(LossKind::Logistic),
+            &ElasticNet::new(0.5, 0.1),
+            &crate::solver::dglmnet::DGlmnetConfig {
+                nodes: 1,
+                max_iters: 400,
+                tol: 1e-13,
+                patience: 5,
+                seed: 3,
+                eval_every: 0,
+                ..Default::default()
+            },
+            None,
+        )
+        .objective;
+        let gap = (fit.objective - f_star) / f_star.abs().max(1e-12);
+        assert!(
+            gap < 1e-3 && gap > -1e-6,
+            "hybrid cluster objective {} vs reference optimum {f_star} (gap {gap:.3e})",
+            fit.objective
+        );
     }
 
     /// Full in-test path cluster: 1 coordinator + 2 workers as threads of

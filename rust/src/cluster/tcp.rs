@@ -39,8 +39,10 @@ const MAGIC: u32 = 0x4D4C_4764;
 /// straggler_delays, slow_factors). v3: the job spec gained the `mode`
 /// field (`train` | `path`) plus the path-sweep fields (lambda_grid,
 /// screen) — a `path` job sweeps the λ1 grid with warm starts + KKT
-/// screening and gathers one β per grid point.
-pub const PROTOCOL_VERSION: u32 = 3;
+/// screening and gathers one β per grid point. v4: per-rank `threads`
+/// (hybrid intra-rank CD pool) plus per-thread update accounting in the
+/// done report.
+pub const PROTOCOL_VERSION: u32 = 4;
 
 /// Dial / handshake tuning.
 #[derive(Clone, Copy, Debug)]

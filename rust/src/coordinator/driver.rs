@@ -54,6 +54,10 @@ pub struct DistributedConfig {
     pub max_passes: usize,
     /// Stop-flag poll granularity (coordinates).
     pub chunk: usize,
+    /// Intra-rank CD threads T (hybrid mode): every rank splits its block
+    /// into T sub-blocks run as pool waves — the cluster behaves like M·T
+    /// feature blocks. 1 = classic single-threaded ranks.
+    pub threads: usize,
     /// Virtual cluster clock: trace timestamps = max-over-nodes thread CPU
     /// time (× per-node slow factors) + modeled wire time. Required for
     /// meaningful scaling numbers when the host has fewer cores than M.
@@ -83,6 +87,7 @@ impl Default for DistributedConfig {
             straggler_delays: Vec::new(),
             max_passes: 4,
             chunk: 64,
+            threads: 1,
             virtual_time: false,
             slow_factors: Vec::new(),
         }
@@ -105,6 +110,10 @@ pub struct RankLoad {
     pub sent_msgs: u64,
     /// Time spent blocked in the post-CD XΔβ synchronization.
     pub sync_wait_secs: f64,
+    /// Effective intra-rank CD threads (sub-block count; 1 = classic).
+    pub threads: usize,
+    /// Coordinate updates per sub-block thread (single entry = classic).
+    pub updates_per_thread: Vec<u64>,
 }
 
 impl RankLoad {
@@ -117,6 +126,8 @@ impl RankLoad {
             sent_bytes: o.sent_bytes,
             sent_msgs: o.sent_msgs,
             sync_wait_secs: o.sync_wait_secs,
+            threads: o.threads,
+            updates_per_thread: o.updates_per_thread.clone(),
         }
     }
 }
@@ -157,6 +168,15 @@ fn plan_cluster(
     test: Option<&Dataset>,
     cfg: &DistributedConfig,
 ) -> ClusterPlan {
+    // The virtual clock charges each rank's main-thread CPU time; hybrid
+    // pool compute is invisible to it. Enforced here (the seam every driver
+    // goes through), not just at the CLI/job-spec shells, so embedders and
+    // benches cannot silently produce under-counted scaling numbers.
+    assert!(
+        !(cfg.virtual_time && cfg.threads > 1),
+        "virtual_time does not support hybrid threads (> 1): pool compute \
+         is not charged to the virtual clock yet"
+    );
     let p = train.p();
     let partition = FeaturePartition::hashed(p, cfg.nodes, cfg.seed);
     let x_csc = train.to_csc();
@@ -183,6 +203,7 @@ fn plan_cluster(
             1
         },
         chunk: cfg.chunk,
+        threads: cfg.threads.max(1),
         straggler_delay: Duration::ZERO,
         virtual_time: cfg.virtual_time,
         slow_factor: 1.0,
@@ -814,6 +835,65 @@ mod tests {
         }
         // Warm descending path: nnz grows (roughly) as λ shrinks.
         assert!(res.path.points[2].nnz + 2 >= res.path.points[0].nnz);
+    }
+
+    #[test]
+    fn hybrid_threads_report_per_rank_accounting_and_are_deterministic() {
+        let train = ds(150, 24, 19);
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let pen = ElasticNet::new(0.2, 0.1);
+        let cfg = DistributedConfig {
+            nodes: 2,
+            threads: 3,
+            max_iters: 5,
+            tol: 0.0,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let fit = fit_distributed(&train, None, &compute, &pen, &cfg);
+        assert!(fit.objective.is_finite());
+        assert_eq!(fit.per_rank.len(), 2);
+        for load in &fit.per_rank {
+            assert_eq!(load.threads, 3, "rank {} thread count", load.rank);
+            assert_eq!(load.updates_per_thread.len(), 3);
+            assert_eq!(
+                load.updates_per_thread.iter().sum::<u64>(),
+                load.cd_updates,
+                "per-thread accounting must total the rank's updates"
+            );
+            assert_eq!(load.full_passes, 5, "hybrid BSP: one pass per iteration");
+        }
+        // Deterministic ordered reduction: a second run is bit-identical.
+        let again = fit_distributed(&train, None, &compute, &pen, &cfg);
+        assert_eq!(fit.beta, again.beta);
+        assert_eq!(fit.objective, again.objective);
+    }
+
+    #[test]
+    fn hybrid_path_sweep_runs_and_is_deterministic() {
+        let splits = synth::Corpus::epsilon_like(0.05, 25);
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let cfg = DistributedConfig {
+            nodes: 2,
+            threads: 2,
+            max_iters: 30,
+            tol: 1e-9,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let res =
+            fit_path_distributed(&splits, &compute, &[2.0, 0.5, 0.125], 0.1, &cfg, true).unwrap();
+        assert_eq!(res.path.points.len(), 3);
+        for p in &res.path.points {
+            assert!(p.objective.is_finite());
+            assert!((0.0..=1.0).contains(&p.val_auprc));
+        }
+        let again =
+            fit_path_distributed(&splits, &compute, &[2.0, 0.5, 0.125], 0.1, &cfg, true).unwrap();
+        for (a, b) in res.path.points.iter().zip(again.path.points.iter()) {
+            assert_eq!(a.beta, b.beta, "hybrid path sweep must be deterministic");
+        }
+        assert_eq!(res.path.best, again.path.best);
     }
 
     #[test]

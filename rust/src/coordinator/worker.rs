@@ -26,7 +26,7 @@ use crate::metrics;
 use crate::solver::compute::GlmCompute;
 use crate::solver::linesearch::{line_search, LineSearchConfig};
 use crate::solver::path;
-use crate::solver::subproblem::{cd_cycle, CycleBudget, SubproblemState};
+use crate::solver::subproblem::{cd_cycle, CycleBudget, HybridCd, SubproblemState};
 use crate::solver::trace::{Trace, TracePoint};
 use crate::sparse::Csc;
 use std::cell::{Cell, RefCell};
@@ -72,6 +72,11 @@ pub struct WorkerConfig {
     /// Coordinates between stop-flag polls / straggler sleeps (capped at
     /// the block size so every pass polls the quorum at least once).
     pub chunk: usize,
+    /// Intra-rank CD threads T (hybrid mode): T ≥ 2 splits the rank's block
+    /// into T sub-blocks run as pool waves against a frozen margin snapshot
+    /// — the global block structure becomes M·T, same Theorem 1 line-search
+    /// merge. 1 = the classic coupled single-thread cycle.
+    pub threads: usize,
     /// Injected per-pass compute delay for this node (slow-node simulation).
     pub straggler_delay: Duration,
     /// Virtual cluster clock (see util::cputime): trace timestamps become
@@ -109,6 +114,11 @@ pub struct WorkerOutput {
     /// this is the barrier wait fast nodes pay for stragglers; ALB exists
     /// to shrink it.
     pub sync_wait_secs: f64,
+    /// Effective intra-rank CD threads (sub-block count; 1 = classic).
+    pub threads: usize,
+    /// Coordinate updates per sub-block thread across the run (a single
+    /// entry equal to `cd_updates` on the classic path).
+    pub updates_per_thread: Vec<u64>,
 }
 
 /// Outcome of one iteration's ALB subproblem (see [`run_alb_subproblem`]).
@@ -128,6 +138,9 @@ pub struct AlbOutcome {
 /// at least one chunk, mirroring `cd_cycle`'s at-least-one-update rule, so
 /// a pre-fired quorum still makes progress on every rank and the cyclic
 /// cursor keeps advancing — the straggler resumes mid-block next iteration.
+/// With `hybrid` the chunks become pool waves (`chunk` coordinates per
+/// sub-block), the quorum polled between waves.
+#[allow(clippy::too_many_arguments)]
 pub fn run_alb_subproblem(
     x: &Csc,
     beta: &[f64],
@@ -137,6 +150,7 @@ pub fn run_alb_subproblem(
     penalty: &dyn Penalty1D,
     cfg: &WorkerConfig,
     state: &mut SubproblemState,
+    hybrid: Option<&mut HybridCd>,
     quorum: &mut AlbQuorum<'_>,
     t: &mut dyn Transport,
 ) -> AlbOutcome {
@@ -150,6 +164,9 @@ pub fn run_alb_subproblem(
             full_passes: 1,
             reported: true,
         };
+    }
+    if let Some(h) = hybrid {
+        return run_alb_subproblem_hybrid(h, beta, w, z, mu, penalty, cfg, state, quorum, t);
     }
     let max_updates = cfg.max_passes.max(1) * p_local;
     let mut updates = 0usize;
@@ -191,6 +208,73 @@ pub fn run_alb_subproblem(
     }
 }
 
+/// The hybrid variant of the ALB subproblem: waves of up to `chunk`
+/// coordinates per sub-block with the quorum polled between waves (and, on
+/// the shared-memory fabric, the per-coordinate stop flag inside each
+/// wave). Partials are merged into `state` by the ordered reduction when
+/// the iteration's CD work is over, so the caller's post-CD flow (allreduce
+/// of `state.t`, line search over `state.delta_beta`) is unchanged.
+#[allow(clippy::too_many_arguments)]
+fn run_alb_subproblem_hybrid(
+    h: &mut HybridCd,
+    beta: &[f64],
+    w: &[f64],
+    z: &[f64],
+    mu: f64,
+    penalty: &dyn Penalty1D,
+    cfg: &WorkerConfig,
+    state: &mut SubproblemState,
+    quorum: &mut AlbQuorum<'_>,
+    t: &mut dyn Transport,
+) -> AlbOutcome {
+    let p_local: usize = h.ranges.iter().map(|r| r.len()).sum();
+    let max_passes = cfg.max_passes.max(1);
+    h.reset();
+    let mut sub_done = vec![0usize; h.threads()];
+    let mut updates = 0usize;
+    let mut reported = false;
+    loop {
+        // Per-wave budget: up to `chunk` coordinates per sub-block, capped
+        // by each sub-block's remaining pass allowance.
+        let budgets: Vec<usize> = h
+            .ranges
+            .iter()
+            .zip(sub_done.iter())
+            .map(|(r, &done)| {
+                let cap = max_passes * r.len();
+                cfg.chunk.max(1).min(r.len()).min(cap.saturating_sub(done))
+            })
+            .collect();
+        let wave_budget: usize = budgets.iter().sum();
+        if wave_budget == 0 {
+            break; // every sub-block exhausted its pass allowance
+        }
+        inject_delay(cfg, wave_budget, p_local);
+        let outs = h.wave(beta, w, z, mu, cfg.nu, penalty, &budgets, None, quorum.stop_flag());
+        let mut cut_mid_wave = false;
+        for (k, o) in outs.iter().enumerate() {
+            sub_done[k] += o.updates;
+            updates += o.updates;
+            if budgets[k] > 0 && o.updates < budgets[k] {
+                cut_mid_wave = true; // the shared stop flag fired inside the wave
+            }
+        }
+        if !reported && updates >= p_local {
+            quorum.report_full_pass(t);
+            reported = true;
+        }
+        if cut_mid_wave || quorum.should_stop(t) {
+            break;
+        }
+    }
+    h.reduce_into(state);
+    AlbOutcome {
+        updates,
+        full_passes: updates / p_local,
+        reported,
+    }
+}
+
 /// Run the full training loop for one node. `x` is the node's shard X^m;
 /// `test_x` the same feature block of the test matrix (for auPRC traces).
 /// `transport` is the node's attachment to the cluster — fabric endpoint or
@@ -215,6 +299,11 @@ pub fn run_worker(
     let mut z = vec![0.0; n];
     let mut mu = cfg.mu0;
     let mut state = SubproblemState::new(p_local, n);
+    // Hybrid mode: T ≥ 2 decomposes the block into T sub-blocks run as one
+    // pool wave per pass (DESIGN.md §Hybrid parallelism). The rank-level
+    // `state` stays the single source of truth for the post-CD flow — the
+    // waves merge into it via the deterministic ordered reduction.
+    let mut hybrid = (cfg.threads > 1 && p_local > 0).then(|| HybridCd::new(x, cfg.threads));
     let started = Instant::now();
     // Virtual cluster clock state.
     let mut sim_clock = 0.0f64;
@@ -275,20 +364,29 @@ pub fn run_worker(
         state.reset();
         match shared.alb {
             None => {
-                // BSP: exactly one full pass.
-                if p_local > 0 {
-                    inject_delay(cfg, p_local, p_local);
-                    cd_cycle(
-                        x,
-                        &beta,
-                        &w,
-                        &z,
-                        mu,
-                        cfg.nu,
-                        shared.penalty,
-                        &mut state,
-                        CycleBudget::full_cycle(p_local),
-                    );
+                // BSP: exactly one full pass (as one pool wave over the
+                // sub-blocks in hybrid mode).
+                match hybrid.as_mut() {
+                    None => {
+                        if p_local > 0 {
+                            inject_delay(cfg, p_local, p_local);
+                            cd_cycle(
+                                x,
+                                &beta,
+                                &w,
+                                &z,
+                                mu,
+                                cfg.nu,
+                                shared.penalty,
+                                &mut state,
+                                CycleBudget::full_cycle(p_local),
+                            );
+                        }
+                    }
+                    Some(h) => {
+                        inject_delay(cfg, p_local, p_local);
+                        h.bsp_pass(&beta, &w, &z, mu, cfg.nu, shared.penalty, &mut state);
+                    }
                 }
                 cd_updates += p_local as u64;
                 full_passes += 1;
@@ -316,6 +414,7 @@ pub fn run_worker(
                     shared.penalty,
                     cfg,
                     &mut state,
+                    hybrid.as_mut(),
                     &mut quorum,
                     *ep_cell.borrow_mut(),
                 );
@@ -449,6 +548,10 @@ pub fn run_worker(
     }
 
     let (sent_bytes, sent_msgs) = ep_cell.borrow().sent();
+    let (threads, updates_per_thread) = match &hybrid {
+        Some(h) => (h.threads(), h.updates_per_thread.clone()),
+        None => (1, vec![cd_updates]),
+    };
     WorkerOutput {
         rank,
         beta_local: beta,
@@ -460,6 +563,8 @@ pub fn run_worker(
         full_passes,
         cutoffs,
         sync_wait_secs: sync_wait.as_secs_f64(),
+        threads,
+        updates_per_thread,
     }
 }
 
@@ -545,6 +650,9 @@ pub fn run_worker_path(
     // Warm state carried across λ points: β, margins, and the Δβ/t buffers.
     // The cursor restarts whenever the active set changes shape.
     let mut state = SubproblemState::new(p_local, n);
+    // Hybrid mode (threads ≥ 2): the sweep's screened passes run as pool
+    // waves over the rank's sub-blocks, exactly like the train loop.
+    let mut hybrid = (cfg.threads > 1 && p_local > 0).then(|| HybridCd::new(x, cfg.threads));
 
     let tag = Cell::new(0u64);
     let next_tag = || {
@@ -578,6 +686,10 @@ pub fn run_worker_path(
             (0..p_local).collect()
         };
         state.cursor = 0;
+        let mut per_active = hybrid.as_ref().map(|h| h.split_active(&active));
+        if let Some(h) = hybrid.as_mut() {
+            h.reset_cursors();
+        }
 
         let mut reg = {
             let mut r = [pen.value(&beta)];
@@ -596,18 +708,33 @@ pub fn run_worker_path(
             for _ in 1..=cfg.max_iters {
                 iters += 1;
                 state.reset();
-                let out = cd_cycle(
-                    x,
-                    &beta,
-                    &w,
-                    &z,
-                    mu,
-                    cfg.nu,
-                    &pen,
-                    &mut state,
-                    CycleBudget::screened(&active),
-                );
-                updates_local += out.updates as u64;
+                let did = match hybrid.as_mut() {
+                    None => {
+                        cd_cycle(
+                            x,
+                            &beta,
+                            &w,
+                            &z,
+                            mu,
+                            cfg.nu,
+                            &pen,
+                            &mut state,
+                            CycleBudget::screened(&active),
+                        )
+                        .updates
+                    }
+                    Some(h) => h.screened_pass(
+                        &beta,
+                        &w,
+                        &z,
+                        mu,
+                        cfg.nu,
+                        &pen,
+                        per_active.as_ref().expect("hybrid active split"),
+                        &mut state,
+                    ),
+                };
+                updates_local += did as u64;
                 let mut dmargins = state.t.clone();
                 allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut dmargins, cfg.allreduce);
                 let mut grad_dot = 0.0;
@@ -688,6 +815,10 @@ pub fn run_worker_path(
             active.extend(viol);
             active.sort_unstable();
             state.cursor = 0;
+            if let Some(h) = hybrid.as_mut() {
+                per_active = Some(h.split_active(&active));
+                h.reset_cursors();
+            }
         }
 
         // Validation scoring: partial margins X_val^m β^m, allreduced, then
@@ -804,6 +935,7 @@ mod tests {
             allreduce: AllReduceAlgo::Naive,
             max_passes: 1,
             chunk: 64,
+            threads: 1,
             straggler_delay: Duration::from_millis(ms),
             virtual_time: false,
             slow_factor: 1.0,

@@ -210,8 +210,19 @@ pub fn print_rank_loads(ranks: &[RankLoad]) {
         "sent MiB",
         "msgs",
         "sync wait (s)",
+        "threads",
+        "upd/thread",
     ]);
     for r in ranks {
+        // Per-thread update spread: single number on the classic path, a
+        // min..max range when the rank ran hybrid sub-block threads.
+        let upd_per_thread = if r.updates_per_thread.len() > 1 {
+            let lo = r.updates_per_thread.iter().min().copied().unwrap_or(0);
+            let hi = r.updates_per_thread.iter().max().copied().unwrap_or(0);
+            format!("{lo}..{hi}")
+        } else {
+            r.cd_updates.to_string()
+        };
         t.row(&[
             r.rank.to_string(),
             r.cd_updates.to_string(),
@@ -220,6 +231,8 @@ pub fn print_rank_loads(ranks: &[RankLoad]) {
             format!("{:.2}", r.sent_bytes as f64 / (1024.0 * 1024.0)),
             r.sent_msgs.to_string(),
             format!("{:.3}", r.sync_wait_secs),
+            r.threads.max(1).to_string(),
+            upd_per_thread,
         ]);
     }
     t.print();

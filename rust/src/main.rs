@@ -23,6 +23,10 @@
 //!   dglmnet worker --listen 127.0.0.1:7101   # × M−1, one per node
 //!   dglmnet train --cluster 127.0.0.1:7100,127.0.0.1:7101,... \
 //!       --dataset epsilon_like --l1 1.0 --max-iters 30 --alb-kappa 0.75
+//!
+//! Hybrid parallelism (add to either shape): `--threads 4` splits every
+//! rank's feature block across 4 pool threads — the cluster behaves like
+//! M·4 blocks, same convergence theory, more of the box used.
 
 use std::sync::Arc;
 
@@ -118,6 +122,14 @@ fn train_cli() -> Cli {
     )
     .flag("max-passes", "4", "ALB cap on full passes a fast node runs per iteration")
     .flag("chunk", "64", "coordinates between ALB quorum polls / straggler sleeps")
+    .flag(
+        "threads",
+        "1",
+        "intra-rank CD threads T (hybrid mode): each rank splits its feature \
+         block into T sub-blocks run by a scoped pool — the cluster behaves \
+         like M·T blocks. With --cluster a comma list assigns one count per \
+         rank",
+    )
     .flag(
         "straggler-delays-ms",
         "",
@@ -251,6 +263,20 @@ fn cmd_train(argv: &[String]) -> i32 {
         eprintln!("--slow-factors only scale the virtual clock; add --virtual-time");
         return 2;
     }
+    let threads = match parse_threads_list(args.get("threads"), cluster.len()) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("--threads: {e}");
+            return 2;
+        }
+    };
+    if virtual_time && threads.iter().any(|&t| t > 1) {
+        eprintln!(
+            "--virtual-time charges per-thread CPU time and cannot account \
+             hybrid pool compute yet; drop --threads or --virtual-time"
+        );
+        return 2;
+    }
     let cfg = DistributedConfig {
         nodes: if cluster.is_empty() {
             args.get_usize("nodes")
@@ -266,6 +292,7 @@ fn cmd_train(argv: &[String]) -> i32 {
         allreduce: AllReduceAlgo::Ring,
         max_passes: args.get_usize("max-passes"),
         chunk: args.get_usize("chunk"),
+        threads: threads[0],
         straggler_delays: straggler_delays.clone(),
         virtual_time,
         slow_factors: slow_factors.clone(),
@@ -273,7 +300,7 @@ fn cmd_train(argv: &[String]) -> i32 {
     };
 
     println!(
-        "train: dataset={} n={} p={} nnz={} | loss={} λ1={} λ2={} | M={} alb={} engine={}",
+        "train: dataset={} n={} p={} nnz={} | loss={} λ1={} λ2={} | M={} T={} alb={} engine={}",
         splits.train.name,
         splits.train.n(),
         splits.train.p(),
@@ -282,6 +309,7 @@ fn cmd_train(argv: &[String]) -> i32 {
         pen.l1,
         pen.l2,
         cfg.nodes,
+        threads.iter().max().copied().unwrap_or(1),
         cfg.alb_kappa.is_some(),
         args.get("engine"),
     );
@@ -319,6 +347,7 @@ fn cmd_train(argv: &[String]) -> i32 {
             mode: JobMode::Train,
             lambda_grid: Vec::new(),
             screen: false,
+            threads: threads.clone(),
         };
         match process::train_cluster(&spec, Some(&splits)) {
             Ok(r) => r,
@@ -329,27 +358,27 @@ fn cmd_train(argv: &[String]) -> i32 {
         }
     } else {
         match args.get("engine") {
-        "xla" => {
-            let rt = match Runtime::start(args.get("artifacts")) {
-                Ok(rt) => rt,
-                Err(e) => {
-                    eprintln!(
-                        "failed to start XLA runtime: {e}\n(build artifacts with `make artifacts`)"
-                    );
-                    return 1;
-                }
-            };
-            let compute = XlaCompute::new(rt.handle(), kind);
-            fit_distributed(&splits.train, Some(&splits.test), &compute, &pen, &cfg)
-        }
-        "native" => {
-            let compute = NativeCompute::new(kind);
-            fit_distributed(&splits.train, Some(&splits.test), &compute, &pen, &cfg)
-        }
-        other => {
-            eprintln!("unknown engine '{other}'");
-            return 2;
-        }
+            "xla" => {
+                let rt = match Runtime::start(args.get("artifacts")) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        eprintln!(
+                            "failed to start XLA runtime: {e}\n(build artifacts with `make artifacts`)"
+                        );
+                        return 1;
+                    }
+                };
+                let compute = XlaCompute::new(rt.handle(), kind);
+                fit_distributed(&splits.train, Some(&splits.test), &compute, &pen, &cfg)
+            }
+            "native" => {
+                let compute = NativeCompute::new(kind);
+                fit_distributed(&splits.train, Some(&splits.test), &compute, &pen, &cfg)
+            }
+            other => {
+                eprintln!("unknown engine '{other}'");
+                return 2;
+            }
         }
     };
 
@@ -434,6 +463,12 @@ fn path_cli() -> Cli {
         "single-process backend: fabric (in-process) | tcp (loopback socket mesh)",
     )
     .switch("no-screen", "disable KKT screening (cycle every coordinate at every λ)")
+    .flag(
+        "threads",
+        "1",
+        "intra-rank CD threads T (hybrid mode) for the sweep's screened \
+         passes; with --cluster a comma list assigns one count per rank",
+    )
     .flag("max-iters", "100", "outer iteration budget per λ point")
     .flag("seed", "1", "random seed")
     .flag("save-model", "", "write the validation-best model JSON to this path")
@@ -509,6 +544,13 @@ fn cmd_path(argv: &[String]) -> i32 {
     } else {
         cluster.len()
     };
+    let threads = match parse_threads_list(args.get("threads"), cluster.len()) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("--threads: {e}");
+            return 2;
+        }
+    };
 
     println!(
         "path: dataset={} n={} p={} nnz={} | loss={} λ2={} | {} λ1 points [{} .. {}] | M={} screening={}",
@@ -551,6 +593,7 @@ fn cmd_path(argv: &[String]) -> i32 {
             mode: JobMode::Path,
             lambda_grid: lambdas.clone(),
             screen,
+            threads: threads.clone(),
         };
         match process::path_cluster(&spec, Some(&splits)) {
             Ok(r) => r,
@@ -566,6 +609,7 @@ fn cmd_path(argv: &[String]) -> i32 {
             eval_every: 0,
             seed,
             allreduce: AllReduceAlgo::Ring,
+            threads: threads[0],
             ..Default::default()
         };
         let compute = NativeCompute::new(kind);
@@ -638,6 +682,12 @@ fn cmd_worker(argv: &[String]) -> i32 {
         "straggler-delay-ms",
         "",
         "override this rank's injected per-pass delay in ms (local chaos injection)",
+    )
+    .flag(
+        "threads",
+        "",
+        "override this rank's intra-rank CD thread count (hybrid mode) — \
+         right-size one node to its cores without the coordinator's help",
     );
     let args = match cli.parse(argv) {
         Ok(a) => a,
@@ -672,12 +722,51 @@ fn cmd_worker(argv: &[String]) -> i32 {
             }
         }
     }
+    if !args.get("threads").is_empty() {
+        match args.get("threads").parse::<usize>() {
+            Ok(t) if process::thread_count_in_range(t) => overrides.threads = Some(t),
+            _ => {
+                eprintln!(
+                    "--threads must be an integer in [1, {}]",
+                    process::MAX_THREADS_PER_RANK
+                );
+                return 2;
+            }
+        }
+    }
     match process::run_worker_process(args.get("listen"), overrides) {
         Ok(_) => 0,
         Err(e) => {
             eprintln!("worker failed: {e}");
             1
         }
+    }
+}
+
+/// Parse the --threads flag: a single count (applied uniformly) or, with
+/// --cluster, a comma list assigning one count per rank. `m` is the cluster
+/// size (0 = non-cluster mode: only a single count makes sense). Returns
+/// one entry per rank (a single entry in non-cluster mode).
+fn parse_threads_list(s: &str, m: usize) -> Result<Vec<usize>, String> {
+    let entries = s
+        .split(',')
+        .map(|tok| {
+            let tok = tok.trim();
+            match tok.parse::<usize>() {
+                Ok(t) if process::thread_count_in_range(t) => Ok(t),
+                _ => Err(format!(
+                    "bad entry '{tok}': expected an integer in [1, {}]",
+                    process::MAX_THREADS_PER_RANK
+                )),
+            }
+        })
+        .collect::<Result<Vec<usize>, String>>()?;
+    match (m, entries.len()) {
+        (0, 1) => Ok(entries),
+        (0, _) => Err("a per-rank thread list needs --cluster; give a single count".into()),
+        (m, 1) => Ok(vec![entries[0]; m]),
+        (m, k) if k == m => Ok(entries),
+        (m, k) => Err(format!("{k} entries for a cluster of {m} ranks")),
     }
 }
 

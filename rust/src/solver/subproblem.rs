@@ -19,6 +19,8 @@
 
 use crate::glm::regularizer::Penalty1D;
 use crate::sparse::Csc;
+use crate::util::pool::ScopedPool;
+use std::ops::Range;
 use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Mutable per-node state for one outer iteration's subproblem.
@@ -191,6 +193,233 @@ pub fn cd_cycle(
         updates,
         full_pass: updates >= cycle_len,
         max_delta,
+    }
+}
+
+/// Split `0..ncols` into at most `t` contiguous ranges whose lengths differ
+/// by at most one (the first `ncols % s` ranges take the extra column).
+/// Returns fewer than `t` ranges when the block is narrower than `t`, and a
+/// single empty range for an empty block — so the result always has at
+/// least one entry and the ranges always cover `0..ncols` exactly.
+pub fn split_even(ncols: usize, t: usize) -> Vec<Range<usize>> {
+    let s = t.max(1).min(ncols.max(1));
+    let base = ncols / s;
+    let extra = ncols % s;
+    let mut out = Vec::with_capacity(s);
+    let mut start = 0;
+    for k in 0..s {
+        let len = base + usize::from(k < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, ncols);
+    out
+}
+
+/// The hybrid (intra-rank multi-threaded) decomposition of one rank's
+/// feature block: up to T contiguous sub-blocks, each with its own column
+/// shard and [`SubproblemState`], run as one pool wave per CD pass against
+/// a frozen (β, w, z) snapshot. The sub-blocks partition the rank's
+/// columns, so the global block structure becomes M·T blocks and the
+/// paper's Theorem 1 line-search merge applies unchanged (DESIGN.md §Hybrid
+/// parallelism). Per-sub-block (Δβ, t = X_k Δβ_k) partials are combined by
+/// [`HybridCd::reduce_into`] in sub-block index order — a deterministic
+/// ordered reduction, so a fit's iterates never depend on pool scheduling.
+///
+/// Memory: each sub-block holds its own t over all n examples, so the
+/// rank's O(n) state grows to O(T·n); the sub-block shards together hold
+/// one extra copy of the rank's column data (built once per fit).
+pub struct HybridCd {
+    /// Contiguous local-column ranges, one per sub-block.
+    pub ranges: Vec<Range<usize>>,
+    /// Materialized column shards, indexed like `ranges`.
+    shards: Vec<Csc>,
+    /// Per-sub-block Δβ/t/cursor state (cursors persist across outer
+    /// iterations exactly like the rank-level cursor does under ALB).
+    pub states: Vec<SubproblemState>,
+    pool: ScopedPool,
+    /// Coordinate updates each sub-block's thread performed across the run
+    /// — the per-thread load accounting the harness table reports.
+    pub updates_per_thread: Vec<u64>,
+}
+
+impl HybridCd {
+    /// Decompose `x` (one rank's column block) into at most `threads`
+    /// sub-blocks; the pool gets one worker per sub-block.
+    pub fn new(x: &Csc, threads: usize) -> HybridCd {
+        let ranges = split_even(x.ncols, threads);
+        let shards: Vec<Csc> = ranges.iter().map(|r| x.slice_cols(r.clone())).collect();
+        let states: Vec<SubproblemState> = ranges
+            .iter()
+            .map(|r| SubproblemState::new(r.len(), x.nrows))
+            .collect();
+        let pool = ScopedPool::new(ranges.len());
+        let updates_per_thread = vec![0u64; ranges.len()];
+        HybridCd {
+            ranges,
+            shards,
+            states,
+            pool,
+            updates_per_thread,
+        }
+    }
+
+    /// Effective sub-block (= pool worker) count.
+    pub fn threads(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Reset every sub-block's Δβ/t for a new outer iteration (cursors are
+    /// preserved, mirroring [`SubproblemState::reset`]).
+    pub fn reset(&mut self) {
+        for st in &mut self.states {
+            st.reset();
+        }
+    }
+
+    /// Restart every sub-block's cyclic cursor (the path sweep does this
+    /// whenever the screened active set changes shape).
+    pub fn reset_cursors(&mut self) {
+        for st in &mut self.states {
+            st.cursor = 0;
+        }
+    }
+
+    /// One pool wave: sub-block k runs `cd_cycle` with `budgets[k]` updates
+    /// (0 = skip) against the frozen (β, w, z) snapshot, optionally
+    /// restricted to `active[k]` (sub-shard-local indices) and watching the
+    /// shared `stop` flag. Returns per-sub-block outcomes in index order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn wave(
+        &mut self,
+        beta: &[f64],
+        w: &[f64],
+        z: &[f64],
+        mu: f64,
+        nu: f64,
+        penalty: &dyn Penalty1D,
+        budgets: &[usize],
+        active: Option<&[Vec<usize>]>,
+        stop: Option<&AtomicBool>,
+    ) -> Vec<CycleOutcome> {
+        let s = self.ranges.len();
+        debug_assert_eq!(budgets.len(), s);
+        if let Some(a) = active {
+            debug_assert_eq!(a.len(), s);
+        }
+        let mut outcomes = vec![
+            CycleOutcome {
+                updates: 0,
+                full_pass: true,
+                max_delta: 0.0,
+            };
+            s
+        ];
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(s);
+            let iter = self
+                .states
+                .iter_mut()
+                .zip(outcomes.iter_mut())
+                .zip(self.shards.iter().zip(self.ranges.iter()))
+                .enumerate();
+            for (k, ((st, out), (shard, range))) in iter {
+                if budgets[k] == 0 {
+                    continue;
+                }
+                let beta_k = &beta[range.clone()];
+                let act = active.map(|a| a[k].as_slice());
+                let max_updates = budgets[k];
+                jobs.push(Box::new(move || {
+                    *out = cd_cycle(
+                        shard,
+                        beta_k,
+                        w,
+                        z,
+                        mu,
+                        nu,
+                        penalty,
+                        st,
+                        CycleBudget {
+                            max_updates,
+                            stop,
+                            active: act,
+                        },
+                    );
+                }));
+            }
+            self.pool.run(jobs);
+        }
+        for (acc, o) in self.updates_per_thread.iter_mut().zip(outcomes.iter()) {
+            *acc += o.updates as u64;
+        }
+        outcomes
+    }
+
+    /// Deterministic ordered reduction: scatter each sub-block's Δβ into
+    /// the rank-level state and accumulate the per-sub-block t = X_k Δβ_k
+    /// partials in sub-block index order. `state` must be freshly reset.
+    pub fn reduce_into(&self, state: &mut SubproblemState) {
+        for (st, range) in self.states.iter().zip(self.ranges.iter()) {
+            state.delta_beta[range.clone()].copy_from_slice(&st.delta_beta);
+            for (acc, t) in state.t.iter_mut().zip(st.t.iter()) {
+                *acc += *t;
+            }
+        }
+    }
+
+    /// One full BSP pass: every sub-block runs one full cycle against the
+    /// frozen snapshot, then the partials are merged into `state` (which
+    /// the caller reset). Returns the coordinate updates performed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn bsp_pass(
+        &mut self,
+        beta: &[f64],
+        w: &[f64],
+        z: &[f64],
+        mu: f64,
+        nu: f64,
+        penalty: &dyn Penalty1D,
+        state: &mut SubproblemState,
+    ) -> usize {
+        self.reset();
+        let budgets: Vec<usize> = self.ranges.iter().map(|r| r.len()).collect();
+        let outs = self.wave(beta, w, z, mu, nu, penalty, &budgets, None, None);
+        self.reduce_into(state);
+        outs.iter().map(|o| o.updates).sum()
+    }
+
+    /// One screened pass for the path sweep: sub-block k cycles exactly its
+    /// entries of the active set (see [`HybridCd::split_active`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn screened_pass(
+        &mut self,
+        beta: &[f64],
+        w: &[f64],
+        z: &[f64],
+        mu: f64,
+        nu: f64,
+        penalty: &dyn Penalty1D,
+        per_active: &[Vec<usize>],
+        state: &mut SubproblemState,
+    ) -> usize {
+        self.reset();
+        let budgets: Vec<usize> = per_active.iter().map(|a| a.len()).collect();
+        let outs = self.wave(beta, w, z, mu, nu, penalty, &budgets, Some(per_active), None);
+        self.reduce_into(state);
+        outs.iter().map(|o| o.updates).sum()
+    }
+
+    /// Split a rank-local screened active list into per-sub-block lists
+    /// rebased to sub-shard-local column indices.
+    pub fn split_active(&self, active: &[usize]) -> Vec<Vec<usize>> {
+        let mut per: Vec<Vec<usize>> = vec![Vec::new(); self.ranges.len()];
+        for &j in active {
+            let k = self.ranges.partition_point(|r| r.end <= j);
+            debug_assert!(k < self.ranges.len() && self.ranges[k].contains(&j));
+            per[k].push(j - self.ranges[k].start);
+        }
+        per
     }
 }
 
@@ -544,6 +773,154 @@ mod tests {
         );
         assert_eq!(out.updates, 0);
         assert!(out.full_pass, "an empty screened block is a complete pass");
+    }
+
+    #[test]
+    fn split_even_covers_and_balances() {
+        for (ncols, t) in [(10, 3), (7, 7), (5, 8), (1, 4), (0, 3), (16, 1), (100, 8)] {
+            let ranges = split_even(ncols, t);
+            assert!(!ranges.is_empty(), "ncols={ncols} t={t}");
+            assert!(ranges.len() <= t.max(1));
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, ncols);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "ranges must be contiguous");
+            }
+            let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(hi - lo <= 1, "ncols={ncols} t={t}: lens {lens:?}");
+        }
+    }
+
+    #[test]
+    fn hybrid_single_subblock_matches_classic_cycle_exactly() {
+        // T=1 hybrid is one sub-block covering the whole block: the coupled
+        // cycle, bit-for-bit.
+        let mut rng = Rng::new(21);
+        let (x, beta, w, z) = random_problem(&mut rng, 14, 7);
+        let pen = ElasticNet::new(0.1, 0.05);
+        let mut st_classic = SubproblemState::new(7, 14);
+        cd_cycle(
+            &x,
+            &beta,
+            &w,
+            &z,
+            1.5,
+            1e-6,
+            &pen,
+            &mut st_classic,
+            CycleBudget::full_cycle(7),
+        );
+        let mut h = HybridCd::new(&x, 1);
+        let mut st_hybrid = SubproblemState::new(7, 14);
+        let updates = h.bsp_pass(&beta, &w, &z, 1.5, 1e-6, &pen, &mut st_hybrid);
+        assert_eq!(updates, 7);
+        assert_eq!(st_classic.delta_beta, st_hybrid.delta_beta);
+        assert_eq!(st_classic.t, st_hybrid.t);
+    }
+
+    #[test]
+    fn hybrid_pass_matches_manual_subblock_cycles() {
+        // T=3: the pool wave + ordered reduction must equal running the
+        // three sub-blocks sequentially by hand, bit-for-bit.
+        let mut rng = Rng::new(22);
+        let (x, beta, w, z) = random_problem(&mut rng, 16, 11);
+        let pen = ElasticNet::new(0.2, 0.1);
+        let mut h = HybridCd::new(&x, 3);
+        assert_eq!(h.threads(), 3);
+        let mut st_hybrid = SubproblemState::new(11, 16);
+        let updates = h.bsp_pass(&beta, &w, &z, 1.0, 1e-6, &pen, &mut st_hybrid);
+        assert_eq!(updates, 11);
+
+        let mut want = SubproblemState::new(11, 16);
+        for r in split_even(11, 3) {
+            let cols: Vec<usize> = r.clone().collect();
+            let shard = x.select_cols(&cols);
+            let mut st = SubproblemState::new(r.len(), 16);
+            cd_cycle(
+                &shard,
+                &beta[r.clone()],
+                &w,
+                &z,
+                1.0,
+                1e-6,
+                &pen,
+                &mut st,
+                CycleBudget::full_cycle(r.len()),
+            );
+            want.delta_beta[r.clone()].copy_from_slice(&st.delta_beta);
+            for (acc, t) in want.t.iter_mut().zip(st.t.iter()) {
+                *acc += *t;
+            }
+        }
+        assert_eq!(st_hybrid.delta_beta, want.delta_beta);
+        assert_eq!(st_hybrid.t, want.t);
+    }
+
+    #[test]
+    fn hybrid_pass_is_deterministic_across_runs() {
+        let mut rng = Rng::new(23);
+        let (x, beta, w, z) = random_problem(&mut rng, 20, 13);
+        let pen = ElasticNet::new(0.1, 0.0);
+        let run = || {
+            let mut h = HybridCd::new(&x, 4);
+            let mut st = SubproblemState::new(13, 20);
+            for _ in 0..3 {
+                st.reset();
+                h.bsp_pass(&beta, &w, &z, 1.0, 1e-6, &pen, &mut st);
+            }
+            (st.delta_beta.clone(), st.t.clone(), h.updates_per_thread.clone())
+        };
+        let (d1, t1, u1) = run();
+        let (d2, t2, u2) = run();
+        assert_eq!(d1, d2, "Δβ must not depend on pool scheduling");
+        assert_eq!(t1, t2, "t must not depend on pool scheduling");
+        assert_eq!(u1, u2, "per-thread accounting must be deterministic");
+        assert_eq!(u1.iter().sum::<u64>(), 3 * 13);
+    }
+
+    #[test]
+    fn hybrid_split_active_rebases_to_subblocks() {
+        let x = Csc::from_triplets(4, 10, vec![(0, 0, 1.0), (1, 5, 2.0), (2, 9, 3.0)]);
+        let h = HybridCd::new(&x, 3); // ranges 0..4, 4..7, 7..10
+        let per = h.split_active(&[0, 3, 4, 6, 7, 9]);
+        assert_eq!(per, vec![vec![0, 3], vec![0, 2], vec![0, 2]]);
+        // Every index must land inside its sub-block.
+        let per_all = h.split_active(&(0..10).collect::<Vec<_>>());
+        let total: usize = per_all.iter().map(|a| a.len()).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn hybrid_screened_pass_touches_only_active_columns() {
+        let mut rng = Rng::new(24);
+        let (x, beta, w, z) = random_problem(&mut rng, 12, 9);
+        let pen = ElasticNet::new(0.05, 0.0);
+        let mut h = HybridCd::new(&x, 2);
+        let active = [1usize, 4, 7];
+        let per = h.split_active(&active);
+        let mut st = SubproblemState::new(9, 12);
+        let updates = h.screened_pass(&beta, &w, &z, 1.0, 1e-6, &pen, &per, &mut st);
+        assert_eq!(updates, 3);
+        for j in 0..9 {
+            if !active.contains(&j) {
+                assert_eq!(st.delta_beta[j], 0.0, "screened-out column {j} moved");
+            }
+        }
+        // t stays consistent with the merged Δβ.
+        let want = x.mul_vec(&st.delta_beta);
+        prop::all_close(&st.t, &want, 1e-10).unwrap();
+    }
+
+    #[test]
+    fn hybrid_empty_block_is_noop() {
+        let x = Csc::from_triplets(4, 0, Vec::<(usize, usize, f64)>::new());
+        let pen = ElasticNet::new(0.1, 0.1);
+        let mut h = HybridCd::new(&x, 4);
+        assert_eq!(h.threads(), 1);
+        let mut st = SubproblemState::new(0, 4);
+        let updates = h.bsp_pass(&[], &[1.0; 4], &[0.0; 4], 1.0, 1e-6, &pen, &mut st);
+        assert_eq!(updates, 0);
     }
 
     #[test]

@@ -154,6 +154,25 @@ impl Csc {
         }
     }
 
+    /// Copy a contiguous column range into a new matrix — one memcpy of the
+    /// range's entries plus a rebased colptr, no per-column index list.
+    /// Used by the hybrid CD mode to materialize each sub-block shard.
+    pub fn slice_cols(&self, range: std::ops::Range<usize>) -> Csc {
+        assert!(range.start <= range.end && range.end <= self.ncols);
+        let (lo, hi) = (self.colptr[range.start], self.colptr[range.end]);
+        let colptr: Vec<usize> = self.colptr[range.start..=range.end]
+            .iter()
+            .map(|p| p - lo)
+            .collect();
+        Csc {
+            nrows: self.nrows,
+            ncols: range.len(),
+            colptr,
+            rowidx: self.rowidx[lo..hi].to_vec(),
+            values: self.values[lo..hi].to_vec(),
+        }
+    }
+
     /// Convert to CSR (example-major) layout.
     pub fn to_csr(&self) -> Csr {
         let mut rowcnt = vec![0usize; self.nrows];
@@ -255,6 +274,23 @@ mod tests {
         assert_eq!(s.ncols, 2);
         assert_eq!(s.col(0).collect::<Vec<_>>(), vec![(0, 2.0), (2, 5.0)]);
         assert_eq!(s.col(1).collect::<Vec<_>>(), vec![(0, 1.0), (2, 4.0)]);
+    }
+
+    #[test]
+    fn slice_cols_matches_select_cols() {
+        let m = small();
+        for range in [0..0, 0..1, 1..3, 0..3] {
+            let sliced = m.slice_cols(range.clone());
+            let selected = m.select_cols(&range.clone().collect::<Vec<_>>());
+            assert_eq!(sliced.ncols, selected.ncols, "{range:?}");
+            for j in 0..sliced.ncols {
+                assert_eq!(
+                    sliced.col(j).collect::<Vec<_>>(),
+                    selected.col(j).collect::<Vec<_>>(),
+                    "{range:?} col {j}"
+                );
+            }
+        }
     }
 
     #[test]

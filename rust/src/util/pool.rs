@@ -1,0 +1,288 @@
+//! Std-only scoped thread pool — the execution substrate of the hybrid
+//! (intra-rank multi-threaded) CD mode.
+//!
+//! [`ScopedPool`] owns a fixed set of persistent worker threads and executes
+//! *waves* of borrowed jobs: [`ScopedPool::run`] enqueues every job, wakes
+//! the workers, and blocks until the whole wave completed. Because the call
+//! does not return before the last job finished (panicking jobs included —
+//! the completion latch fires either way), jobs may safely borrow from the
+//! caller's stack: the borrow provably outlives every use, which is the
+//! classic scoped-thread soundness argument. No crates — the offline
+//! container builds with std alone (see DESIGN.md §Substitutions).
+//!
+//! Determinism contract: the pool imposes no ordering of its own. Callers
+//! that need scheduling-independent results give each job its own output
+//! slot and reduce the slots in index order after `run` returns — the
+//! "deterministic ordered reduction" the hybrid CD mode relies on
+//! (`HybridCd::wave` + `reduce_into` are that shape).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A queued job with its caller-side lifetime erased. Sound because `run`
+/// waits for the wave before returning (see the safety comment there).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    queue: VecDeque<Task>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work: Condvar,
+}
+
+/// Completion latch for one wave of jobs.
+struct WaveLatch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl WaveLatch {
+    fn new(jobs: usize) -> WaveLatch {
+        WaveLatch {
+            remaining: Mutex::new(jobs),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    fn job_done(&self) {
+        let mut left = self.remaining.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut left = self.remaining.lock().unwrap();
+        while *left > 0 {
+            left = self.done.wait(left).unwrap();
+        }
+    }
+}
+
+/// Fixed-size pool of persistent worker threads executing scoped job waves.
+pub struct ScopedPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ScopedPool {
+    /// Spawn a pool of `threads.max(1)` persistent workers.
+    pub fn new(threads: usize) -> ScopedPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|k| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("cd-pool-{k}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ScopedPool { shared, workers }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run one wave of jobs to completion. Blocks until every job ran, then
+    /// re-panics here if any job panicked (the workers themselves survive a
+    /// job panic and keep serving later waves). Must not be called from
+    /// inside a pool job — the wave would wait on a worker slot it occupies.
+    pub fn run<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let latch = Arc::new(WaveLatch::new(jobs.len()));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            for job in jobs {
+                // SAFETY: erases 'scope to 'static. `latch.wait()` below
+                // blocks until this job finished executing (`job_done` runs
+                // whether the job returned or panicked), so every borrow
+                // captured by the job strictly outlives its use.
+                let job: Task = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Task>(job)
+                };
+                let l = Arc::clone(&latch);
+                st.queue.push_back(Box::new(move || {
+                    if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                        l.panicked.store(true, Ordering::SeqCst);
+                    }
+                    l.job_done();
+                }));
+            }
+        }
+        self.shared.work.notify_all();
+        latch.wait();
+        if latch.panicked.load(Ordering::SeqCst) {
+            panic!("a pool job panicked (wave completed before propagating)");
+        }
+    }
+
+}
+
+impl Drop for ScopedPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(sh: &PoolShared) {
+    loop {
+        let task = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if let Some(t) = st.queue.pop_front() {
+                    break t;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = sh.work.wait(st).unwrap();
+            }
+        };
+        task();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    /// Run `f(k)` for `k ∈ 0..n` with one output slot per job, returning
+    /// the slots in index order — the ordered-reduction shape every
+    /// determinism test below leans on.
+    fn run_indexed<R, F>(pool: &ScopedPool, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let f = &f;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = slots
+            .iter_mut()
+            .enumerate()
+            .map(|(k, slot)| {
+                Box::new(move || *slot = Some(f(k))) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run(jobs);
+        slots
+            .into_iter()
+            .map(|s| s.expect("pool job filled its slot"))
+            .collect()
+    }
+
+    #[test]
+    fn empty_wave_returns_immediately() {
+        let pool = ScopedPool::new(2);
+        pool.run(Vec::new());
+        assert_eq!(pool.threads(), 2);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let pool = ScopedPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(run_indexed(&pool, 3, |k| k * 2), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn slotted_results_are_in_index_order() {
+        // Later jobs finish first (earlier ones sleep longer): the output
+        // must still come back in index order.
+        let pool = ScopedPool::new(4);
+        let got = run_indexed(&pool, 8, |k| {
+            std::thread::sleep(Duration::from_millis(((8 - k) * 3) as u64));
+            k
+        });
+        assert_eq!(got, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_may_borrow_and_mutate_disjoint_caller_state() {
+        let pool = ScopedPool::new(3);
+        let input = vec![1.0f64, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut out = vec![0.0f64; 6];
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .iter_mut()
+                .zip(input.iter())
+                .map(|(slot, v)| {
+                    Box::new(move || *slot = v * v) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run(jobs);
+        }
+        assert_eq!(out, vec![1.0, 4.0, 9.0, 16.0, 25.0, 36.0]);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_waves() {
+        let pool = ScopedPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|_| {
+                    let c = &counter;
+                    Box::new(move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run(jobs);
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 200);
+    }
+
+    #[test]
+    fn job_panic_propagates_and_pool_survives() {
+        let pool = ScopedPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| panic!("boom")),
+                Box::new(|| {}),
+            ];
+            pool.run(jobs);
+        }));
+        assert!(caught.is_err(), "wave with a panicking job must panic");
+        // The workers survived the panic: the next wave still completes.
+        assert_eq!(run_indexed(&pool, 4, |k| k + 1), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn more_jobs_than_workers_all_complete() {
+        let pool = ScopedPool::new(2);
+        let got = run_indexed(&pool, 37, |k| k as u64 * 3);
+        assert_eq!(got.len(), 37);
+        for (k, v) in got.iter().enumerate() {
+            assert_eq!(*v, k as u64 * 3);
+        }
+    }
+}

@@ -28,7 +28,7 @@ use dglmnet::glm::regularizer::ElasticNet;
 use dglmnet::glm::GlmModel;
 use dglmnet::metrics;
 use dglmnet::solver::compute::NativeCompute;
-use dglmnet::solver::subproblem::SubproblemState;
+use dglmnet::solver::subproblem::{HybridCd, SubproblemState};
 use dglmnet::sparse::Csc;
 use dglmnet::util::prop;
 use std::time::Duration;
@@ -155,6 +155,7 @@ fn straggler_cfg(chunk: usize) -> WorkerConfig {
         allreduce: dglmnet::cluster::AllReduceAlgo::Naive,
         max_passes: 4,
         chunk,
+        threads: 1,
         straggler_delay: Duration::ZERO,
         virtual_time: false,
         slow_factor: 1.0,
@@ -209,6 +210,7 @@ fn straggler_cursor_resumes_mid_block_across_iterations_over_both_backends() {
                 &pen,
                 &cfg,
                 &mut state,
+                None,
                 &mut quorum,
                 eps[0].as_mut(),
             );
@@ -220,6 +222,76 @@ fn straggler_cursor_resumes_mid_block_across_iterations_over_both_backends() {
         // 4 updates per iteration over a 10-column block: the cursor walks
         // 4 → 8 → wraps to 2, i.e. the straggler resumed mid-block twice.
         assert_eq!(cursors, vec![4, 8, 2], "{name}: cursor must resume cyclically");
+    }
+}
+
+/// The hybrid wave variant of the same schedule: a cut-off straggler with
+/// T=2 sub-blocks runs exactly one wave (chunk coordinates per sub-block)
+/// when the quorum already fired, and every sub-block's cursor resumes
+/// mid-sub-block next iteration — over both backends.
+#[test]
+fn hybrid_straggler_runs_one_wave_and_subblock_cursors_resume() {
+    for (name, make) in BACKENDS {
+        let m = 2;
+        let mut eps = make(m);
+        let x = Csc::from_triplets(
+            4,
+            10,
+            (0..10).map(|j| (j % 4, j, 1.0 + j as f64 * 0.1)).collect::<Vec<_>>(),
+        );
+        let beta = vec![0.0; 10];
+        let w = vec![1.0; 4];
+        let z = vec![0.5; 4];
+        let pen = ElasticNet::new(0.01, 0.0);
+        let mut cfg = straggler_cfg(4);
+        cfg.threads = 2;
+        let mut state = SubproblemState::new(10, 4);
+        let mut hybrid = HybridCd::new(&x, 2); // sub-blocks 0..5 and 5..10
+        let mode = AlbMode::Transport { kappa: 0.5 }; // M=2 → threshold 1
+
+        let mut cursors: Vec<Vec<usize>> = Vec::new();
+        for it in 0..3u64 {
+            state.reset();
+            let tag = (it + 1) * TAG_STRIDE;
+            let mut peer = RemoteQuorum::new(m, 0.5, tag);
+            peer.report_full_pass(eps[1].as_mut());
+            let mut quorum = mode.begin_iteration(m, tag);
+            let deadline = std::time::Instant::now() + Duration::from_secs(10);
+            while !quorum.should_stop(eps[0].as_mut()) {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "{name}: quorum frame never arrived"
+                );
+                std::thread::yield_now();
+            }
+            let out = run_alb_subproblem(
+                &x,
+                &beta,
+                &w,
+                &z,
+                1.0,
+                &pen,
+                &cfg,
+                &mut state,
+                Some(&mut hybrid),
+                &mut quorum,
+                eps[0].as_mut(),
+            );
+            // One wave: chunk=4 coordinates on each of the 2 sub-blocks.
+            assert_eq!(out.updates, 8, "{name} iter {it}: one wave exactly");
+            assert!(!out.reported, "{name} iter {it}: straggler was cut off");
+            assert_eq!(out.full_passes, 0, "{name} iter {it}");
+            cursors.push(hybrid.states.iter().map(|s| s.cursor).collect());
+        }
+        // Each 5-column sub-block advances its own cursor by 4 per
+        // iteration: 4 → 3 (wrapped) → 2.
+        assert_eq!(
+            cursors,
+            vec![vec![4, 4], vec![3, 3], vec![2, 2]],
+            "{name}: sub-block cursors must resume cyclically"
+        );
+        // Per-thread accounting totals the straggler's updates.
+        assert_eq!(hybrid.updates_per_thread, vec![12, 12], "{name}");
     }
 }
 

@@ -215,6 +215,160 @@ fn distributed_path_matches_single_process_sweep() {
     }
 }
 
+/// The hybrid-threads column of the oracle matrix, part 1 — determinism:
+/// the convex problem has ONE optimum, and the hybrid sub-block structure
+/// only changes the block count (M·T blocks, Theorem 1 unchanged), so a
+/// machine-converged T ∈ {2, 4} fit must land on the T=1 objective to
+/// 1e-12 on BOTH transports. The ordered reduction makes each run exact:
+/// repeating a hybrid fit reproduces β bit-for-bit regardless of pool
+/// scheduling.
+#[test]
+fn hybrid_threads_match_t1_objective_at_machine_convergence() {
+    // Small, strongly convex (ridge + ν), well conditioned: every variant
+    // reaches machine convergence well inside the iteration budget.
+    let train = ds(100, 12, 27);
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::new(0.1, 0.5);
+    let converged = |threads: usize, tcp: bool| {
+        let cfg = DistributedConfig {
+            nodes: 2,
+            threads,
+            max_iters: 400,
+            tol: 0.0, // run the full budget: both variants end machine-converged
+            eval_every: 0,
+            seed: 27,
+            ..Default::default()
+        };
+        if tcp {
+            fit_distributed_tcp(&train, None, &compute, &pen, &cfg)
+                .expect("tcp hybrid")
+                .objective
+        } else {
+            fit_distributed(&train, None, &compute, &pen, &cfg).objective
+        }
+    };
+    for tcp in [false, true] {
+        let name = if tcp { "tcp" } else { "fabric" };
+        let f1 = converged(1, tcp);
+        for threads in [2, 4] {
+            let ft = converged(threads, tcp);
+            let gap = (ft - f1).abs() / f1.abs().max(1e-12);
+            assert!(
+                gap < 1e-12,
+                "{name} T={threads}: objective {ft} vs T=1 {f1} (gap {gap:.3e})"
+            );
+        }
+    }
+}
+
+/// Part 2 — scheduling-independence as a property: over random problems,
+/// two runs of the same hybrid fit are bit-identical (β and objective),
+/// and the converged objective agrees with T=1 to 1e-12.
+#[test]
+fn prop_hybrid_fit_deterministic_and_objective_matches_t1() {
+    dglmnet::util::prop::check("hybrid fit deterministic + T-invariant optimum", 5, |rng| {
+        let n = 60 + rng.below(60);
+        let p = 8 + rng.below(8);
+        let train = ds(n, p, rng.next_u64());
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let pen = ElasticNet::new(0.05 + rng.range_f64(0.0, 0.2), 0.3 + rng.range_f64(0.0, 0.5));
+        let threads = if rng.bernoulli(0.5) { 2 } else { 4 };
+        let fit_with = |t: usize| {
+            let cfg = DistributedConfig {
+                nodes: 2,
+                threads: t,
+                max_iters: 250,
+                tol: 0.0,
+                eval_every: 0,
+                seed: 9,
+                ..Default::default()
+            };
+            fit_distributed(&train, None, &compute, &pen, &cfg)
+        };
+        let a = fit_with(threads);
+        let b = fit_with(threads);
+        if a.beta != b.beta {
+            return Err(format!("T={threads}: repeated fit changed β"));
+        }
+        if a.objective != b.objective {
+            return Err(format!("T={threads}: repeated fit changed the objective"));
+        }
+        let f1 = fit_with(1).objective;
+        let gap = (a.objective - f1).abs() / f1.abs().max(1e-12);
+        if gap < 1e-12 {
+            Ok(())
+        } else {
+            Err(format!(
+                "T={threads}: converged objective {} vs T=1 {f1} (gap {gap:.3e})",
+                a.objective
+            ))
+        }
+    });
+}
+
+/// Part 3 — the M × T quality grid: hybrid fits for M ∈ {2, 4} × T ∈ {1, 4}
+/// must land within a quality tolerance of the high-precision
+/// single-process reference optimum over BOTH transports (the ALB column's
+/// contract, now with intra-rank threads in the matrix).
+#[test]
+fn hybrid_threads_grid_matches_reference_over_both_transports() {
+    let train = ds(160, 14, 29);
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::new(0.2, 0.1);
+    let f_star = dg::fit(
+        &train,
+        &compute,
+        &pen,
+        &DGlmnetConfig {
+            nodes: 1,
+            max_iters: 500,
+            tol: 1e-13,
+            patience: 5,
+            eval_every: 0,
+            seed: 29,
+            ..Default::default()
+        },
+        None,
+    )
+    .objective;
+    for m in [2, 4] {
+        for threads in [1, 4] {
+            let cfg = DistributedConfig {
+                nodes: m,
+                threads,
+                max_iters: 200,
+                tol: 1e-10,
+                patience: 3,
+                eval_every: 0,
+                seed: 29,
+                ..Default::default()
+            };
+            let fab = fit_distributed(&train, None, &compute, &pen, &cfg);
+            let tcp =
+                fit_distributed_tcp(&train, None, &compute, &pen, &cfg).expect("tcp hybrid");
+            for load in fab.per_rank.iter().chain(tcp.per_rank.iter()) {
+                assert!(
+                    load.threads <= threads && load.threads >= 1,
+                    "M={m} T={threads}: rank {} reported {} threads",
+                    load.rank,
+                    load.threads
+                );
+            }
+            for (name, got) in [("fabric", fab.objective), ("tcp", tcp.objective)] {
+                let gap = (got - f_star) / f_star.abs().max(1e-12);
+                assert!(
+                    gap < 1e-3,
+                    "{name} M={m} T={threads}: objective {got} vs reference {f_star} (gap {gap:.3e})"
+                );
+                assert!(
+                    gap > -1e-6,
+                    "{name} M={m} T={threads}: objective {got} below the optimum {f_star}"
+                );
+            }
+        }
+    }
+}
+
 /// Table 2: ring-allreduce traffic per iteration stays ≈ Mn doubles
 /// (2·8·n bytes out per node per XΔβ allreduce) on the TCP backend too.
 #[test]
