@@ -124,6 +124,41 @@ case "$SCENARIO" in
     }'
     ;;
 
+  trace-e2e)
+    # Observability pipeline: a 2-worker cluster run writes the merged run
+    # log (--trace-out), and trace-report renders per-iteration / per-rank
+    # phase breakdowns from it. Asserts every rank shipped spans and that
+    # the journal/rank-load sync reconciliation lines appear.
+    spawn_workers 7150 2
+    "$BIN" train \
+      --cluster "$(cluster_list 7150 2)" \
+      --dataset epsilon_like --scale 0.1 --seed 1 \
+      --loss logistic --l1 0.5 --max-iters 10 --eval-every 0 \
+      --log-level debug --trace-out run.ndjson \
+      | tee trace.log
+    wait
+    grep -q "^done:" trace.log
+    grep -q "run log written to run.ndjson" trace.log
+    grep -q "comm by tag:" trace.log
+
+    # The NDJSON must carry the header, one rank-load record per rank, and
+    # spans from every rank (coordinator = 0, workers = 1, 2).
+    grep -q '"type":"run"' run.ndjson
+    for r in 0 1 2; do
+      grep '"type":"rank"' run.ndjson | grep -q "\"rank\":$r"
+      grep '"type":"span"' run.ndjson | grep -q "\"rank\":$r"
+    done
+
+    "$BIN" trace-report run.ndjson | tee report.log
+    grep -q "per-rank phase totals" report.log
+    grep -q "per-iteration per-rank phase breakdown" report.log
+    grep -q "iteration skew" report.log
+    grep -q "linesearch" report.log
+    for r in 0 1 2; do
+      grep -q "sync reconcile rank $r:" report.log
+    done
+    ;;
+
   *)
     echo "unknown scenario '$SCENARIO'" >&2
     exit 2

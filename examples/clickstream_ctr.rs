@@ -13,6 +13,10 @@
 //!
 //!     make artifacts && cargo run --release --example clickstream_ctr
 
+// Human-facing harness output goes straight to the terminal; the
+// disallowed-macros lint only polices library code.
+#![allow(clippy::disallowed_macros)]
+
 use dglmnet::coordinator::{fit_distributed, DistributedConfig};
 use dglmnet::data::Corpus;
 use dglmnet::glm::loss::LossKind;

@@ -4,6 +4,10 @@
 //!
 //!     cargo run --release --example mu_ablation
 
+// Human-facing harness output goes straight to the terminal; the
+// disallowed-macros lint only polices library code.
+#![allow(clippy::disallowed_macros)]
+
 use dglmnet::cluster::allreduce::AllReduceAlgo;
 use dglmnet::coordinator::{fit_distributed, DistributedConfig};
 

@@ -4,6 +4,10 @@
 //!
 //!     cargo run --release --example quickstart
 
+// Human-facing harness output goes straight to the terminal; the
+// disallowed-macros lint only polices library code.
+#![allow(clippy::disallowed_macros)]
+
 use dglmnet::coordinator::{fit_distributed, DistributedConfig};
 use dglmnet::data::Corpus;
 use dglmnet::glm::loss::LossKind;

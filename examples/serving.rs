@@ -5,6 +5,10 @@
 //!
 //!     cargo run --release --example serving
 
+// Human-facing harness output goes straight to the terminal; the
+// disallowed-macros lint only polices library code.
+#![allow(clippy::disallowed_macros)]
+
 use std::sync::Arc;
 
 use dglmnet::coordinator::{fit_distributed, DistributedConfig};

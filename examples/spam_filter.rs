@@ -4,6 +4,10 @@
 //!
 //!     cargo run --release --example spam_filter
 
+// Human-facing harness output goes straight to the terminal; the
+// disallowed-macros lint only polices library code.
+#![allow(clippy::disallowed_macros)]
+
 use dglmnet::glm::loss::LossKind;
 use dglmnet::harness::{self, RunConfig};
 use dglmnet::solver::compute::NativeCompute;

@@ -7,6 +7,10 @@
 //!
 //!     cargo bench --bench ablations
 
+// Human-facing harness output goes straight to the terminal; the
+// disallowed-macros lint only polices library code.
+#![allow(clippy::disallowed_macros)]
+
 use dglmnet::cluster::allreduce::AllReduceAlgo;
 use dglmnet::coordinator::{fit_distributed, DistributedConfig};
 use dglmnet::data::{synth, Corpus, SynthConfig};

@@ -9,6 +9,10 @@
 //!
 //!     cargo bench --bench fig2_4_l1_compare
 
+// Human-facing harness output goes straight to the terminal; the
+// disallowed-macros lint only polices library code.
+#![allow(clippy::disallowed_macros)]
+
 use dglmnet::glm::loss::LossKind;
 use dglmnet::harness::{self, RunConfig};
 use dglmnet::solver::compute::NativeCompute;

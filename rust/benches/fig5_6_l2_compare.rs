@@ -7,6 +7,10 @@
 //!
 //!     cargo bench --bench fig5_6_l2_compare
 
+// Human-facing harness output goes straight to the terminal; the
+// disallowed-macros lint only polices library code.
+#![allow(clippy::disallowed_macros)]
+
 use dglmnet::glm::loss::LossKind;
 use dglmnet::harness::{self, RunConfig};
 use dglmnet::solver::compute::NativeCompute;

@@ -17,6 +17,10 @@
 //!
 //!     cargo bench --bench fig7_8_speedup          # DGLMNET_SCALE=1 default
 
+// Human-facing harness output goes straight to the terminal; the
+// disallowed-macros lint only polices library code.
+#![allow(clippy::disallowed_macros)]
+
 use dglmnet::cluster::fabric::NetworkModel;
 use dglmnet::coordinator::{fit_distributed, DistributedConfig};
 use dglmnet::data::{synth, SynthConfig};

@@ -8,6 +8,10 @@
 //!
 //!     cargo bench --bench hotpath_micro
 
+// Human-facing harness output goes straight to the terminal; the
+// disallowed-macros lint only polices library code.
+#![allow(clippy::disallowed_macros)]
+
 use dglmnet::cluster::allreduce::{allreduce_sum, AllReduceAlgo};
 use dglmnet::cluster::fabric::{fabric, NetworkModel};
 use dglmnet::data::{synth, SynthConfig};

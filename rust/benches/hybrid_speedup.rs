@@ -7,6 +7,10 @@
 //!
 //!     cargo bench --bench hybrid_speedup
 
+// Human-facing harness output goes straight to the terminal; the
+// disallowed-macros lint only polices library code.
+#![allow(clippy::disallowed_macros)]
+
 use dglmnet::data::{synth, SynthConfig};
 use dglmnet::glm::regularizer::ElasticNet;
 use dglmnet::solver::subproblem::{cd_cycle, CycleBudget, HybridCd, SubproblemState};

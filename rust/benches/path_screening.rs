@@ -6,6 +6,10 @@
 //!
 //!     cargo bench --bench path_screening
 
+// Human-facing harness output goes straight to the terminal; the
+// disallowed-macros lint only polices library code.
+#![allow(clippy::disallowed_macros)]
+
 use dglmnet::data::Corpus;
 use dglmnet::glm::loss::LossKind;
 use dglmnet::solver::compute::NativeCompute;

@@ -8,6 +8,10 @@
 //!
 //!     cargo bench --bench serve_throughput
 
+// Human-facing harness output goes straight to the terminal; the
+// disallowed-macros lint only polices library code.
+#![allow(clippy::disallowed_macros)]
+
 use std::sync::Arc;
 use std::time::Duration;
 

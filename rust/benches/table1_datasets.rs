@@ -6,6 +6,10 @@
 //!
 //!     cargo bench --bench table1_datasets
 
+// Human-facing harness output goes straight to the terminal; the
+// disallowed-macros lint only polices library code.
+#![allow(clippy::disallowed_macros)]
+
 use dglmnet::harness;
 use dglmnet::util::bench::{bench, Table};
 

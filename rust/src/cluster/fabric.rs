@@ -8,7 +8,8 @@
 //! reproduction and the DESIGN.md substitution argument (we replace the
 //! paper's Gigabit Ethernet by an accounted in-memory fabric).
 
-use std::collections::HashMap;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -124,6 +125,9 @@ pub struct Endpoint {
     pending: HashMap<(usize, u64), Vec<Msg>>,
     stats: Arc<FabricStats>,
     model: NetworkModel,
+    /// Per-tag sent accounting: tag → (bytes, msgs). `RefCell` because the
+    /// inherent `send` takes `&self`; an endpoint is owned by one thread.
+    sent_tags: RefCell<BTreeMap<u64, (u64, u64)>>,
 }
 
 /// Build a fabric of `nodes` endpoints.
@@ -148,6 +152,7 @@ pub fn fabric(nodes: usize, model: NetworkModel) -> (Vec<Endpoint>, Arc<FabricSt
             pending: HashMap::new(),
             stats: Arc::clone(&stats),
             model,
+            sent_tags: RefCell::new(BTreeMap::new()),
         })
         .collect();
     (endpoints, stats)
@@ -162,6 +167,12 @@ impl Endpoint {
         let idx = self.rank * self.nodes + to;
         self.stats.bytes[idx].fetch_add(bytes as u64, Ordering::Relaxed);
         self.stats.msgs[idx].fetch_add(1, Ordering::Relaxed);
+        {
+            let mut tags = self.sent_tags.borrow_mut();
+            let e = tags.entry(tag).or_insert((0, 0));
+            e.0 += bytes as u64;
+            e.1 += 1;
+        }
         let cost = self.model.cost_secs(bytes);
         self.stats
             .sim_wire_ns
@@ -255,6 +266,14 @@ impl crate::cluster::transport::Transport for Endpoint {
 
     fn sent(&self) -> (u64, u64) {
         self.stats.sent_by(self.rank)
+    }
+
+    fn sent_by_tag(&self) -> Vec<(u64, u64, u64)> {
+        self.sent_tags
+            .borrow()
+            .iter()
+            .map(|(&tag, &(bytes, msgs))| (tag, bytes, msgs))
+            .collect()
     }
 
     fn global_traffic(&self) -> Option<(u64, u64)> {

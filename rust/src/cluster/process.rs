@@ -36,6 +36,14 @@
 //! parallelism, DESIGN.md §Hybrid parallelism); the done report gains the
 //! effective thread count and the per-thread update accounting.
 //!
+//! Protocol v5 adds observability (DESIGN.md §Observability): the train
+//! done report carries each rank's span journal (`spans`, compact
+//! `[iter, phase, t, dur, bytes, depth]` rows — the per-iteration phase
+//! timings behind `dglmnet trace-report`) and its per-phase transport
+//! breakdown (`comm_by_phase`), and an idle worker's control port answers
+//! a `{"op":"stats"}` line with a metrics-registry snapshot instead of
+//! treating it as a garbage job spec.
+//!
 //! Datasets are recipes, not payloads: synthetic corpora are deterministic
 //! in `(name, scale, seed)`, and libsvm paths must be readable by every
 //! process. Engine is native-only here (the XLA runtime is per-process and
@@ -56,6 +64,7 @@ use crate::coordinator::worker::{
 use crate::data::Splits;
 use crate::glm::loss::LossKind;
 use crate::glm::regularizer::ElasticNet;
+use crate::obs::span::SpanRecord;
 use crate::solver::compute::NativeCompute;
 use crate::solver::linesearch::LineSearchConfig;
 use crate::solver::path::PathResult;
@@ -569,6 +578,28 @@ fn write_line(s: &mut TcpStream, j: &Json) -> std::io::Result<()> {
     s.flush()
 }
 
+/// Answer for an admin control frame on an idle worker's listen port
+/// (protocol v5), or `None` if the line is not one. `{"op":"stats"}` gets
+/// the process-wide metrics-registry snapshot — same payload as the serve
+/// admin endpoint — so operators can poll workers between jobs.
+fn control_reply(line: &str) -> Option<Json> {
+    let v = json::parse(line.trim()).ok()?;
+    match v.get("op").and_then(|j| j.as_str())? {
+        "stats" => {
+            let mut reply = Json::obj();
+            reply
+                .set("ok", true)
+                .set("metrics", crate::obs::metrics::global().snapshot());
+            Some(reply)
+        }
+        op => {
+            let mut reply = Json::obj();
+            reply.set("ok", false).set("error", format!("unknown op '{op}'"));
+            Some(reply)
+        }
+    }
+}
+
 /// `dglmnet worker --listen ADDR`: serve exactly one training job, then
 /// exit. Returns the job's rank on success.
 pub fn run_worker_process(listen: &str, overrides: WorkerOverrides) -> anyhow::Result<usize> {
@@ -583,19 +614,22 @@ pub fn run_worker_on(
     listener: TcpListener,
     overrides: WorkerOverrides,
 ) -> anyhow::Result<usize> {
-    // Printed (and flushed) before accepting so launchers can scrape the
-    // resolved port when listening on :0.
-    println!("worker: listening on {}", listener.local_addr()?);
+    // Emitted (and flushed) before accepting so launchers can scrape the
+    // resolved port when listening on :0 — this exact line is part of the
+    // worker's stdout contract, so it bypasses the leveled logger.
+    crate::obs::log::emit(&format!("worker: listening on {}", listener.local_addr()?));
     std::io::stdout().flush().ok();
 
     // Keep accepting until a valid job spec arrives: a stray connection
     // (port scanner, health checker) must neither wedge the worker (reads
     // are bounded — SO_RCVTIMEO is per socket, so setting it via the write
-    // half covers the reader clone) nor kill it.
+    // half covers the reader clone) nor kill it. A `{"op":"stats"}` line
+    // (protocol v5) is answered with a metrics snapshot and the worker
+    // keeps waiting for a job.
     let (spec, mut ctrl_w) = loop {
         let (ctrl, peer) = listener.accept()?;
         let mut ctrl_r = BufReader::new(ctrl.try_clone()?);
-        let ctrl_w = ctrl;
+        let mut ctrl_w = ctrl;
         ctrl_w.set_read_timeout(Some(Duration::from_secs(60))).ok();
         let mut line = String::new();
         let parsed = ctrl_r
@@ -607,26 +641,40 @@ pub fn run_worker_on(
                 ctrl_w.set_read_timeout(None).ok();
                 break (spec, ctrl_w);
             }
-            Ok(_) => eprintln!("worker: ignoring job from {peer}: assigned coordinator rank 0"),
-            Err(e) => eprintln!("worker: ignoring connection from {peer}: {e}"),
+            Ok(_) => crate::obs_warn!(
+                "worker",
+                format!("ignoring job from {peer}: assigned coordinator rank 0")
+            ),
+            Err(e) => {
+                if let Some(reply) = control_reply(&line) {
+                    write_line(&mut ctrl_w, &reply).ok();
+                } else {
+                    crate::obs_warn!("worker", format!("ignoring connection from {peer}: {e}"));
+                }
+            }
         }
     };
+    crate::obs::log::set_rank(spec.rank);
+    crate::obs::metrics::global().counter("worker.jobs_accepted").inc();
     let mut ack = Json::obj();
     ack.set("ok", true).set("rank", spec.rank);
     write_line(&mut ctrl_w, &ack)?;
-    println!(
-        "worker: rank {}/{} | mode={} dataset={} scale={} loss={} λ1={} λ2={} alb={}",
-        spec.rank,
-        spec.cluster.len(),
-        spec.mode.name(),
-        spec.dataset,
-        spec.scale,
-        spec.loss,
-        spec.l1,
-        spec.l2,
-        spec.alb_kappa
-            .map(|k| format!("κ={k}"))
-            .unwrap_or_else(|| "off".into()),
+    crate::obs_info!(
+        "worker",
+        format!(
+            "rank {}/{} | mode={} dataset={} scale={} loss={} λ1={} λ2={} alb={}",
+            spec.rank,
+            spec.cluster.len(),
+            spec.mode.name(),
+            spec.dataset,
+            spec.scale,
+            spec.loss,
+            spec.l1,
+            spec.l2,
+            spec.alb_kappa
+                .map(|k| format!("κ={k}"))
+                .unwrap_or_else(|| "off".into()),
+        )
     );
 
     let splits = crate::harness::load_splits(&spec.dataset, spec.scale, spec.seed)?;
@@ -659,18 +707,41 @@ pub fn run_worker_on(
                             .map(|&u| Json::Num(u as f64))
                             .collect(),
                     ),
+                )
+                // Protocol v5: the span journal (rank implied by sender) and
+                // the per-phase transport breakdown.
+                .set(
+                    "spans",
+                    Json::Arr(run.output.spans.iter().map(SpanRecord::to_compact).collect()),
+                )
+                .set(
+                    "comm_by_phase",
+                    Json::Arr(
+                        run.output
+                            .comm_by_phase
+                            .iter()
+                            .map(|(p, b, m)| {
+                                Json::Arr(vec![
+                                    Json::from(p.as_str()),
+                                    Json::from(*b),
+                                    Json::from(*m),
+                                ])
+                            })
+                            .collect(),
+                    ),
                 );
             write_line(&mut ctrl_w, &done)?;
             drop(transport); // joins the writer threads: the gather frame is flushed
-            println!(
-                "worker: rank {} done after {} iterations",
-                spec.rank, run.output.iters
+            crate::obs_info!(
+                "worker",
+                format!("rank {} done after {} iterations", spec.rank, run.output.iters),
             );
         }
         JobMode::Path => {
             if overrides.slow_factor.is_some() || overrides.straggler_delay.is_some() {
-                eprintln!(
-                    "worker: --slow-factor/--straggler-delay-ms do not apply to \
+                crate::obs_warn!(
+                    "worker",
+                    "--slow-factor/--straggler-delay-ms do not apply to \
                      path jobs (BSP sweep, no chaos injection) — ignoring"
                 );
             }
@@ -696,11 +767,14 @@ pub fn run_worker_on(
                 .set("sync_wait_secs", 0.0);
             write_line(&mut ctrl_w, &done)?;
             drop(transport);
-            println!(
-                "worker: rank {} done after {} λ points ({} iterations)",
-                spec.rank,
-                run.output.points.len(),
-                total_iters
+            crate::obs_info!(
+                "worker",
+                format!(
+                    "rank {} done after {} λ points ({} iterations)",
+                    spec.rank,
+                    run.output.points.len(),
+                    total_iters
+                ),
             );
         }
     }
@@ -806,11 +880,19 @@ pub fn train_cluster(
     }
     let beta = run.partition.unshard_weights(&blocks);
 
-    // Collect accounting + per-rank load reports.
+    // Collect accounting + per-rank load reports, and merge the v5 span
+    // journals / per-phase comm breakdowns shipped in each done report.
     let mut comm_bytes = run.output.sent_bytes;
     let mut comm_msgs = run.output.sent_msgs;
     let mut barrier_wait_secs = run.output.sync_wait_secs;
     let mut per_rank: Vec<RankLoad> = vec![RankLoad::from_output(&run.output)];
+    let mut spans: Vec<SpanRecord> = run.output.spans.clone();
+    let mut phase_acc: std::collections::BTreeMap<String, (u64, u64)> = run
+        .output
+        .comm_by_phase
+        .iter()
+        .map(|(p, b, m)| (p.clone(), (*b, *m)))
+        .collect();
     for br in ctrls.iter_mut() {
         let done = read_done_report(br)?;
         let field = |k: &str| done.get(k).and_then(|j| j.as_f64()).unwrap_or(0.0);
@@ -825,6 +907,25 @@ pub fn train_cluster(
         comm_bytes += field("sent_bytes") as u64;
         comm_msgs += field("sent_msgs") as u64;
         barrier_wait_secs += field("sync_wait_secs");
+        let worker_rank = field("rank") as usize;
+        if let Some(Json::Arr(xs)) = done.get("spans") {
+            spans.extend(xs.iter().filter_map(|v| SpanRecord::from_compact(worker_rank, v)));
+        }
+        if let Some(Json::Arr(xs)) = done.get("comm_by_phase") {
+            for row in xs {
+                if let Json::Arr(cols) = row {
+                    if let (Some(p), Some(b), Some(m)) = (
+                        cols.first().and_then(|c| c.as_str()),
+                        cols.get(1).and_then(|c| c.as_f64()),
+                        cols.get(2).and_then(|c| c.as_f64()),
+                    ) {
+                        let e = phase_acc.entry(p.to_string()).or_insert((0, 0));
+                        e.0 += b as u64;
+                        e.1 += m as u64;
+                    }
+                }
+            }
+        }
         per_rank.push(RankLoad {
             rank: field("rank") as usize,
             cd_updates: field("cd_updates") as u64,
@@ -862,6 +963,8 @@ pub fn train_cluster(
         barrier_wait_secs,
         peak_node_f64_slots: 4 * n + 2 * max_block,
         per_rank,
+        spans,
+        comm_by_phase: phase_acc.into_iter().map(|(p, (b, m))| (p, b, m)).collect(),
     })
 }
 
@@ -1218,6 +1321,32 @@ mod tests {
             assert_eq!(load.cutoffs, 0);
         }
 
+        // Protocol v5: every rank's done report shipped a span journal that
+        // covers every (iteration, phase) pair at depth 0.
+        for r in 0..3usize {
+            for it in 1..=fit.iters as u64 {
+                for ph in crate::obs::runlog::PHASES {
+                    assert!(
+                        fit.spans.iter().any(|sp| sp.rank == r
+                            && sp.iter == it
+                            && sp.phase == ph
+                            && sp.depth == 0),
+                        "rank {r} iter {it}: missing '{ph}' span in the merged journal"
+                    );
+                }
+            }
+        }
+        // The per-phase comm rows cover the training traffic; only the
+        // final β gather frames (sent after the worker loop returns) ride
+        // outside the attribution.
+        let phase_bytes: u64 = fit.comm_by_phase.iter().map(|(_, b, _)| b).sum();
+        assert!(phase_bytes > 0, "no bytes attributed to phases");
+        assert!(
+            phase_bytes <= fit.comm_bytes,
+            "phase bytes {phase_bytes} exceed total {}",
+            fit.comm_bytes
+        );
+
         // Oracle: identical math to the single-process reference.
         let splits = crate::harness::load_splits("epsilon_like", 0.05, 3).unwrap();
         assert_eq!(fit.beta.len(), splits.train.p());
@@ -1242,6 +1371,47 @@ mod tests {
             fit.objective,
             seq.objective
         );
+    }
+
+    /// An idle worker's control port answers a `{"op":"stats"}` probe
+    /// (protocol v5) with a metrics snapshot, rejects unknown ops, and
+    /// still serves the real job shipped afterwards.
+    #[test]
+    fn idle_worker_answers_stats_probe_then_serves_the_job() {
+        use std::net::{TcpListener, TcpStream};
+        let w1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a1 = w1.local_addr().unwrap().to_string();
+        let mut s = spec();
+        s.cluster = vec!["127.0.0.1:0".into(), a1.clone()];
+        s.max_iters = 2;
+
+        let h =
+            std::thread::spawn(move || run_worker_on(w1, WorkerOverrides::default()).unwrap());
+
+        // Probe stats before any job exists.
+        let probe = |body: &str| -> Json {
+            let mut conn = TcpStream::connect(&a1).unwrap();
+            conn.write_all(body.as_bytes()).unwrap();
+            conn.write_all(b"\n").unwrap();
+            let mut br = BufReader::new(conn);
+            let mut line = String::new();
+            br.read_line(&mut line).unwrap();
+            json::parse(line.trim()).unwrap()
+        };
+        let v = probe("{\"op\":\"stats\"}");
+        assert!(matches!(v.get("ok"), Some(Json::Bool(true))), "{}", v.dump());
+        assert!(
+            v.get("metrics").and_then(|m| m.get("counters")).is_some(),
+            "stats reply must carry a registry snapshot: {}",
+            v.dump()
+        );
+        let v = probe("{\"op\":\"wander\"}");
+        assert!(matches!(v.get("ok"), Some(Json::Bool(false))), "{}", v.dump());
+
+        // The worker is still idle and healthy: ship it a real job.
+        let fit = train_cluster(&s, None).unwrap();
+        assert_eq!(h.join().unwrap(), 1);
+        assert!(fit.objective.is_finite());
     }
 
     /// The same in-test cluster under ALB with an injected straggler: the

@@ -26,7 +26,7 @@
 //! the fabric's.
 
 use crate::cluster::transport::{frame_bytes, Transport};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -41,8 +41,11 @@ const MAGIC: u32 = 0x4D4C_4764;
 /// screen) — a `path` job sweeps the λ1 grid with warm starts + KKT
 /// screening and gathers one β per grid point. v4: per-rank `threads`
 /// (hybrid intra-rank CD pool) plus per-thread update accounting in the
-/// done report.
-pub const PROTOCOL_VERSION: u32 = 4;
+/// done report. v5: the done report gained the span journal (`spans`, the
+/// per-iteration phase timings each rank recorded) and the per-phase comm
+/// breakdown (`comm_by_phase`), and the control port answers a `stats`
+/// op with a metrics-registry snapshot.
+pub const PROTOCOL_VERSION: u32 = 5;
 
 /// Dial / handshake tuning.
 #[derive(Clone, Copy, Debug)]
@@ -89,6 +92,9 @@ pub struct TcpTransport {
     /// Per-destination sent accounting (bytes, msgs), index = peer rank.
     sent_bytes: Vec<u64>,
     sent_msgs: Vec<u64>,
+    /// Per-tag sent accounting: tag → (bytes, msgs). Lets the worker
+    /// attribute traffic to solver phases (tags are phase-scoped).
+    sent_tags: BTreeMap<u64, (u64, u64)>,
     /// Kept so Drop can shut the read halves down and wake the readers.
     streams: Vec<Option<TcpStream>>,
     reader_threads: Vec<std::thread::JoinHandle<()>>,
@@ -299,6 +305,7 @@ impl TcpTransport {
             dead: vec![false; size],
             sent_bytes: vec![0; size],
             sent_msgs: vec![0; size],
+            sent_tags: BTreeMap::new(),
             streams,
             reader_threads,
             writer_threads,
@@ -338,7 +345,7 @@ fn reader_loop(mut s: TcpStream, from: usize, tx: Sender<Inbound>) {
         let tag = u64::from_le_bytes(header[0..8].try_into().unwrap());
         let len64 = u64::from_le_bytes(header[8..16].try_into().unwrap());
         if len64 > MAX_FRAME_DOUBLES {
-            eprintln!("tcp: dropping link to rank {from}: corrupt frame length {len64}");
+            crate::obs_warn!("tcp", format!("dropping link to rank {from}: corrupt frame length {len64}"));
             break;
         }
         let len = len64 as usize;
@@ -395,8 +402,12 @@ impl Transport for TcpTransport {
 
     fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) {
         assert!(to != self.rank, "self-send over TCP");
-        self.sent_bytes[to] += frame_bytes(data.len());
+        let bytes = frame_bytes(data.len());
+        self.sent_bytes[to] += bytes;
         self.sent_msgs[to] += 1;
+        let e = self.sent_tags.entry(tag).or_insert((0, 0));
+        e.0 += bytes;
+        e.1 += 1;
         self.writers[to]
             .as_ref()
             .expect("no connection to peer")
@@ -449,6 +460,13 @@ impl Transport for TcpTransport {
             self.sent_bytes.iter().sum(),
             self.sent_msgs.iter().sum(),
         )
+    }
+
+    fn sent_by_tag(&self) -> Vec<(u64, u64, u64)> {
+        self.sent_tags
+            .iter()
+            .map(|(&tag, &(bytes, msgs))| (tag, bytes, msgs))
+            .collect()
     }
 
     fn global_traffic(&self) -> Option<(u64, u64)> {
@@ -541,6 +559,7 @@ mod tests {
                 let back = t1.recv_from(0, 8);
                 assert_eq!(back, vec![6.0]);
                 assert_eq!(t1.sent(), (16 + 24, 1));
+                assert_eq!(t1.sent_by_tag(), vec![(7, 16 + 24, 1)]);
             });
             let got = t0.recv_from(1, 7);
             assert_eq!(got, vec![1.0, 2.0, 3.0]);

@@ -57,6 +57,15 @@ pub trait Transport: Send {
     /// shared 16 + 8·len accounting formula.
     fn sent(&self) -> (u64, u64);
 
+    /// Per-tag send accounting: `(tag, bytes, messages)` for every tag this
+    /// endpoint sent on, ascending by tag and summing to [`sent`]. Backends
+    /// that do not track tags return an empty vec (the default); both
+    /// in-tree backends override it, which is what lets the worker
+    /// attribute traffic to solver phases (the comm-by-phase breakdown).
+    fn sent_by_tag(&self) -> Vec<(u64, u64, u64)> {
+        Vec::new()
+    }
+
     /// Cluster-wide `(bytes, messages)` across all links, when the backend
     /// can observe them (the in-process fabric can; TCP endpoints only see
     /// their own traffic and return `None`).

@@ -130,6 +130,26 @@ impl RankLoad {
             updates_per_thread: o.updates_per_thread.clone(),
         }
     }
+
+    /// The run-log `rank` record (one `--trace-out` NDJSON line; see
+    /// `obs::runlog`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::Json::obj();
+        o.set("type", "rank")
+            .set("rank", self.rank)
+            .set("cd_updates", self.cd_updates)
+            .set("full_passes", self.full_passes)
+            .set("cutoffs", self.cutoffs)
+            .set("sent_bytes", self.sent_bytes)
+            .set("sent_msgs", self.sent_msgs)
+            .set("sync_wait_secs", self.sync_wait_secs)
+            .set("threads", self.threads);
+        o.set(
+            "updates_per_thread",
+            crate::util::json::Json::from(self.updates_per_thread.clone()),
+        );
+        o
+    }
 }
 
 /// Result of a distributed fit.
@@ -153,6 +173,12 @@ pub struct ClusterFitResult {
     pub peak_node_f64_slots: usize,
     /// Per-rank pass / cut-off / traffic accounting (index = rank).
     pub per_rank: Vec<RankLoad>,
+    /// Merged span journals from every rank (per-iteration phase timings;
+    /// the run-log pipeline behind `--trace-out`).
+    pub spans: Vec<crate::obs::span::SpanRecord>,
+    /// Sent traffic attributed to solver phases, merged across ranks:
+    /// `(phase, bytes, msgs)` sorted by phase name.
+    pub comm_by_phase: Vec<(String, u64, u64)>,
 }
 
 /// Shared prep: partition, shards, and the per-worker base config.
@@ -246,6 +272,9 @@ fn assemble_result(
     let comm_msgs: u64 = outputs.iter().map(|o| o.sent_msgs).sum();
     let barrier_wait_secs: f64 = outputs.iter().map(|o| o.sync_wait_secs).sum();
     let per_rank: Vec<RankLoad> = outputs.iter().map(RankLoad::from_output).collect();
+    let spans: Vec<crate::obs::span::SpanRecord> =
+        outputs.iter().flat_map(|o| o.spans.iter().cloned()).collect();
+    let comm_by_phase = merge_comm_by_phase(&outputs);
 
     let mut trace = outputs
         .iter()
@@ -271,7 +300,26 @@ fn assemble_result(
         barrier_wait_secs,
         peak_node_f64_slots: peak,
         per_rank,
+        spans,
+        comm_by_phase,
     }
+}
+
+/// Sum every rank's per-phase traffic attribution into one cluster-wide
+/// `(phase, bytes, msgs)` breakdown, sorted by phase name.
+fn merge_comm_by_phase(outputs: &[WorkerOutput]) -> Vec<(String, u64, u64)> {
+    let mut acc: std::collections::BTreeMap<&str, (u64, u64)> =
+        std::collections::BTreeMap::new();
+    for o in outputs {
+        for (phase, bytes, msgs) in &o.comm_by_phase {
+            let e = acc.entry(phase.as_str()).or_insert((0, 0));
+            e.0 += bytes;
+            e.1 += msgs;
+        }
+    }
+    acc.into_iter()
+        .map(|(p, (b, m))| (p.to_string(), b, m))
+        .collect()
 }
 
 /// Train d-GLMNET (or d-GLMNET-ALB when `alb_kappa` is set) on a simulated
@@ -894,6 +942,66 @@ mod tests {
             assert_eq!(a.beta, b.beta, "hybrid path sweep must be deterministic");
         }
         assert_eq!(res.path.best, again.path.best);
+    }
+
+    #[test]
+    fn spans_cover_every_rank_iteration_and_reconcile_sync() {
+        let train = ds(150, 20, 21);
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let pen = ElasticNet::new(0.3, 0.1);
+        let cfg = DistributedConfig {
+            nodes: 3,
+            max_iters: 4,
+            tol: 0.0,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let fit = fit_distributed(&train, None, &compute, &pen, &cfg);
+        // Every rank × iteration records all four top-level phases.
+        for rank in 0..3usize {
+            for iter in 1..=4u64 {
+                for phase in crate::obs::runlog::PHASES {
+                    assert!(
+                        fit.spans.iter().any(|s| s.rank == rank
+                            && s.iter == iter
+                            && s.phase == phase
+                            && s.depth == 0),
+                        "missing span {phase} for rank {rank} iter {iter}"
+                    );
+                }
+            }
+        }
+        // The journal's sync total reconciles with the RankLoad sync-wait
+        // aggregate within 1% (plus a tiny absolute slack: the span wraps
+        // the timed region by two extra Instant reads).
+        for load in &fit.per_rank {
+            let journal_sync: f64 = fit
+                .spans
+                .iter()
+                .filter(|s| s.rank == load.rank && s.phase == "sync" && s.depth == 0)
+                .map(|s| s.dur_s)
+                .sum();
+            let diff = (journal_sync - load.sync_wait_secs).abs();
+            assert!(
+                diff <= 0.01 * load.sync_wait_secs.max(1e-6) + 2e-4,
+                "rank {}: journal sync {journal_sync}s vs rank-load {}s",
+                load.rank,
+                load.sync_wait_secs
+            );
+            // Top-level span byte deltas telescope to the rank's sent total.
+            let span_bytes: u64 = fit
+                .spans
+                .iter()
+                .filter(|s| s.rank == load.rank && s.depth == 0)
+                .map(|s| s.bytes)
+                .sum();
+            assert_eq!(span_bytes, load.sent_bytes, "rank {}", load.rank);
+        }
+        // The per-phase traffic attribution partitions the cluster totals.
+        let phase_bytes: u64 = fit.comm_by_phase.iter().map(|e| e.1).sum();
+        let phase_msgs: u64 = fit.comm_by_phase.iter().map(|e| e.2).sum();
+        assert_eq!(phase_bytes, fit.comm_bytes);
+        assert_eq!(phase_msgs, fit.comm_msgs);
     }
 
     #[test]

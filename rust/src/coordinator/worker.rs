@@ -23,6 +23,7 @@ use crate::cluster::allreduce::{
 use crate::cluster::transport::Transport;
 use crate::glm::regularizer::{ElasticNet, Penalty1D};
 use crate::metrics;
+use crate::obs::span::{Journal, SpanRecord};
 use crate::solver::compute::GlmCompute;
 use crate::solver::linesearch::{line_search, LineSearchConfig};
 use crate::solver::path;
@@ -119,6 +120,13 @@ pub struct WorkerOutput {
     /// Coordinate updates per sub-block thread across the run (a single
     /// entry equal to `cd_updates` on the classic path).
     pub updates_per_thread: Vec<u64>,
+    /// Span journal drained at the end of the run: per-iteration phase
+    /// timings (`cd`/`sync`/`linesearch`/`comm`, hybrid `cd_wave`s) with
+    /// transport bytes attributed to each top-level span.
+    pub spans: Vec<SpanRecord>,
+    /// Sent traffic attributed to solver phases via the tag-allocation log
+    /// and the transport's per-tag accounting: `(phase, bytes, msgs)`.
+    pub comm_by_phase: Vec<(String, u64, u64)>,
 }
 
 /// Outcome of one iteration's ALB subproblem (see [`run_alb_subproblem`]).
@@ -153,6 +161,7 @@ pub fn run_alb_subproblem(
     hybrid: Option<&mut HybridCd>,
     quorum: &mut AlbQuorum<'_>,
     t: &mut dyn Transport,
+    journal: Option<(&Journal, u64)>,
 ) -> AlbOutcome {
     let p_local = x.ncols;
     if p_local == 0 {
@@ -166,7 +175,7 @@ pub fn run_alb_subproblem(
         };
     }
     if let Some(h) = hybrid {
-        return run_alb_subproblem_hybrid(h, beta, w, z, mu, penalty, cfg, state, quorum, t);
+        return run_alb_subproblem_hybrid(h, beta, w, z, mu, penalty, cfg, state, quorum, t, journal);
     }
     let max_updates = cfg.max_passes.max(1) * p_local;
     let mut updates = 0usize;
@@ -226,6 +235,7 @@ fn run_alb_subproblem_hybrid(
     state: &mut SubproblemState,
     quorum: &mut AlbQuorum<'_>,
     t: &mut dyn Transport,
+    journal: Option<(&Journal, u64)>,
 ) -> AlbOutcome {
     let p_local: usize = h.ranges.iter().map(|r| r.len()).sum();
     let max_passes = cfg.max_passes.max(1);
@@ -250,7 +260,11 @@ fn run_alb_subproblem_hybrid(
             break; // every sub-block exhausted its pass allowance
         }
         inject_delay(cfg, wave_budget, p_local);
+        let wave_span = journal.map(|(j, it)| j.start(it, "cd_wave"));
         let outs = h.wave(beta, w, z, mu, cfg.nu, penalty, &budgets, None, quorum.stop_flag());
+        if let (Some((j, _)), Some(sp)) = (journal, wave_span) {
+            j.finish(sp);
+        }
         let mut cut_mid_wave = false;
         for (k, o) in outs.iter().enumerate() {
             sub_done[k] += o.updates;
@@ -321,17 +335,27 @@ pub fn run_worker(
     let mut retired_alb_tags: Vec<u64> = Vec::new();
 
     // Tag allocator: SPMD-deterministic (every rank performs the identical
-    // sequence of collectives).
+    // sequence of collectives). Each allocation is logged with the solver
+    // phase it was made in so the transport's per-tag accounting can be
+    // attributed back to phases at the end of the run.
     let tag = Cell::new(0u64);
+    let phase = Cell::new("init");
+    let tag_phases: RefCell<Vec<(u64, &'static str)>> = RefCell::new(Vec::new());
     let next_tag = || {
         let t = tag.get();
         tag.set(t + TAG_STRIDE);
+        tag_phases.borrow_mut().push((t, phase.get()));
         t
     };
 
     let ep_cell = RefCell::new(transport);
 
+    // Span journal: every outer iteration's phases are timed and drained
+    // into the WorkerOutput (the run-log pipeline behind `--trace-out`).
+    let journal = Journal::with_default_capacity(rank);
+
     // --- initial objective ---
+    let init_span = journal.start(0, "init");
     let mut loss = shared.compute.stats(y, &margins, &mut w, &mut z);
     let mut reg = {
         let mut r = [shared.penalty.value(&beta)];
@@ -355,12 +379,17 @@ pub fn run_worker(
         test_x,
         shared,
     );
+    journal.finish_with_bytes(init_span, ep_cell.borrow().sent().0);
 
     let mut stall = 0usize;
     let mut iters = 0usize;
     for it in 1..=cfg.max_iters {
         iters = it;
+        let itn = it as u64;
         // ---- Algorithm 4 step 4: local subproblem (with optional ALB) ----
+        phase.set("cd");
+        let mut bytes_before = ep_cell.borrow().sent().0;
+        let cd_span = journal.start(itn, "cd");
         state.reset();
         match shared.alb {
             None => {
@@ -385,7 +414,9 @@ pub fn run_worker(
                     }
                     Some(h) => {
                         inject_delay(cfg, p_local, p_local);
+                        let wave = journal.start(itn, "cd_wave");
                         h.bsp_pass(&beta, &w, &z, mu, cfg.nu, shared.penalty, &mut state);
+                        journal.finish(wave);
                     }
                 }
                 cd_updates += p_local as u64;
@@ -417,6 +448,7 @@ pub fn run_worker(
                     hybrid.as_mut(),
                     &mut quorum,
                     *ep_cell.borrow_mut(),
+                    Some((&journal, itn)),
                 );
                 cd_updates += out.updates as u64;
                 full_passes += out.full_passes as u64;
@@ -426,15 +458,32 @@ pub fn run_worker(
             }
         }
 
+        {
+            let b = ep_cell.borrow().sent().0;
+            journal.finish_with_bytes(cd_span, b - bytes_before);
+            bytes_before = b;
+        }
+
         // ---- step 6: AllReduce XΔβ ----
         // Timed: under BSP this blocking collective is where fast ranks
         // wait out stragglers (the "barrier wait" the comm report exposes).
+        // The span covers exactly the region summed into `sync_wait`, so
+        // trace-report can reconcile the journal against the RankLoad sum.
+        phase.set("sync");
+        let sync_span = journal.start(itn, "sync");
         let sync_t0 = Instant::now();
         let mut dmargins = state.t.clone();
         allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut dmargins, cfg.allreduce);
         sync_wait += sync_t0.elapsed();
+        {
+            let b = ep_cell.borrow().sent().0;
+            journal.finish_with_bytes(sync_span, b - bytes_before);
+            bytes_before = b;
+        }
 
         // ---- step 7: global line search (redundant on every node) ----
+        phase.set("linesearch");
+        let ls_span = journal.start(itn, "linesearch");
         // ∇L(β)ᵀΔβ from the cached working set: g_i = −w_i z_i exactly
         // (z = −g/w with the same floored w), so no extra stats pass.
         let mut grad_dot = 0.0;
@@ -480,8 +529,15 @@ pub fn run_worker(
                 mu = (mu / cfg.eta2).max(1.0);
             }
         }
+        {
+            let b = ep_cell.borrow().sent().0;
+            journal.finish_with_bytes(ls_span, b - bytes_before);
+            bytes_before = b;
+        }
 
         // ---- bookkeeping: new stats + objective (SPMD-identical) ----
+        phase.set("comm");
+        let comm_span = journal.start(itn, "comm");
         loss = shared.compute.stats(y, &margins, &mut w, &mut z);
         reg = {
             let mut r = [shared.penalty.value(&beta)];
@@ -535,6 +591,7 @@ pub fn run_worker(
             test_x,
             shared,
         );
+        journal.finish_with_bytes(comm_span, ep_cell.borrow().sent().0 - bytes_before);
 
         // ---- convergence (identical decision on every node) ----
         if rel_drop.abs() < cfg.tol {
@@ -548,6 +605,9 @@ pub fn run_worker(
     }
 
     let (sent_bytes, sent_msgs) = ep_cell.borrow().sent();
+    let comm_by_phase =
+        attribute_comm_to_phases(&tag_phases.borrow(), ep_cell.borrow().sent_by_tag());
+    let spans = journal.drain();
     let (threads, updates_per_thread) = match &hybrid {
         Some(h) => (h.threads(), h.updates_per_thread.clone()),
         None => (1, vec![cd_updates]),
@@ -565,7 +625,32 @@ pub fn run_worker(
         sync_wait_secs: sync_wait.as_secs_f64(),
         threads,
         updates_per_thread,
+        spans,
+        comm_by_phase,
     }
+}
+
+/// Map the transport's per-tag accounting onto solver phases using the
+/// worker's tag-allocation log (ascending `(tag, phase)` pairs): a sent tag
+/// belongs to the phase that allocated the greatest logged tag ≤ it. Tags
+/// outside the log (none in practice — every collective tag comes from
+/// `next_tag`) fall into `"other"`.
+fn attribute_comm_to_phases(
+    tag_phases: &[(u64, &'static str)],
+    by_tag: Vec<(u64, u64, u64)>,
+) -> Vec<(String, u64, u64)> {
+    let mut acc: std::collections::BTreeMap<&str, (u64, u64)> =
+        std::collections::BTreeMap::new();
+    for (tag, bytes, msgs) in by_tag {
+        let idx = tag_phases.partition_point(|e| e.0 <= tag);
+        let phase = if idx == 0 { "other" } else { tag_phases[idx - 1].1 };
+        let e = acc.entry(phase).or_insert((0, 0));
+        e.0 += bytes;
+        e.1 += msgs;
+    }
+    acc.into_iter()
+        .map(|(p, (b, m))| (p.to_string(), b, m))
+        .collect()
 }
 
 /// Inputs of one distributed λ-path sweep (job-spec v3 `path` mode): the λ1
@@ -965,6 +1050,29 @@ mod tests {
         assert!(
             quarter < full,
             "proration broken: quarter {quarter:?} vs full {full:?}"
+        );
+    }
+
+    #[test]
+    fn comm_attribution_maps_tags_to_allocating_phase() {
+        let log: [(u64, &'static str); 4] =
+            [(0, "init"), (64, "cd"), (128, "sync"), (192, "comm")];
+        let by_tag = vec![
+            (0, 100, 2),  // exact allocation
+            (64, 50, 1),  // exact allocation
+            (70, 10, 1),  // between allocations → the phase that owns tag 64
+            (128, 40, 1),
+            (200, 8, 1), // after the last allocation → last phase
+        ];
+        let got = attribute_comm_to_phases(&log, by_tag);
+        assert_eq!(
+            got,
+            vec![
+                ("cd".to_string(), 60, 2),
+                ("comm".to_string(), 8, 1),
+                ("init".to_string(), 100, 2),
+                ("sync".to_string(), 40, 1),
+            ]
         );
     }
 

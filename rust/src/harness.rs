@@ -177,7 +177,9 @@ pub fn run_lbfgs(splits: &Splits, rc: &RunConfig) -> Trace {
 /// Print the paper-figure series for a set of traces: relative
 /// suboptimality, test auPRC and nnz at each checkpoint time.
 pub fn print_convergence(dataset: &str, traces: &[&Trace], f_star: f64) {
-    println!("\n== {dataset}: relative suboptimality (f - f*)/f* vs time ==");
+    crate::obs::log::emit(&format!(
+        "\n== {dataset}: relative suboptimality (f - f*)/f* vs time =="
+    ));
     let mut t = Table::new(&["algorithm", "t(s)", "rel.subopt", "auPRC", "nnz"]);
     for tr in traces {
         for p in checkpoints(&tr.points) {
@@ -201,7 +203,7 @@ pub fn print_rank_loads(ranks: &[RankLoad]) {
     if ranks.is_empty() {
         return;
     }
-    println!("\n== per-rank load (Table 2, asynchronous-aware) ==");
+    crate::obs::log::emit("\n== per-rank load (Table 2, asynchronous-aware) ==");
     let mut t = Table::new(&[
         "rank",
         "cd updates",
@@ -243,7 +245,7 @@ pub fn print_rank_loads(ranks: &[RankLoad]) {
 /// and the CD-update cost of each point, with the validation-best marked.
 /// Shared by `dglmnet path` and the path test suites.
 pub fn print_path_table(res: &crate::solver::path::PathResult) {
-    println!("\n== λ-path sweep (validation-selected, §8.2) ==");
+    crate::obs::log::emit("\n== λ-path sweep (validation-selected, §8.2) ==");
     let mut t = Table::new(&["λ1", "objective", "nnz", "val auPRC", "iters", "cd updates", ""]);
     for (i, p) in res.points.iter().enumerate() {
         t.row(&[

@@ -19,6 +19,10 @@
 //!   and a newline-delimited-JSON TCP endpoint (`dglmnet serve`), so a model
 //!   trained with `train --save-model` can be promoted and scored against
 //!   live traffic without a restart.
+//! - **obs**: cluster-wide observability — structured leveled logging, span
+//!   tracing of every outer iteration's phases, a counters/gauges/histogram
+//!   registry, and the merged run-log pipeline behind `train --trace-out` /
+//!   `dglmnet trace-report` (import [`obs::prelude`] for the whole kit).
 //!
 //! See DESIGN.md for the system inventory and experiment index.
 
@@ -29,7 +33,10 @@ pub mod solver;
 pub mod glm;
 pub mod harness;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod sparse;
 pub mod util;
+
+pub use obs::prelude;

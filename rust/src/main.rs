@@ -9,6 +9,7 @@
 //!   predict      score a libsvm file with a saved model (batch/offline)
 //!   serve        online scoring endpoint with micro-batching and hot-swap
 //!   bench-serve  load-generate against a serve endpoint (QPS, p50/p99)
+//!   trace-report render timing breakdowns from a `--trace-out` run log
 //!   summary      print the Table-1 style dataset summary
 //!
 //! Example (the end-to-end train → promote → serve story):
@@ -27,6 +28,11 @@
 //! Hybrid parallelism (add to either shape): `--threads 4` splits every
 //! rank's feature block across 4 pool threads — the cluster behaves like
 //! M·4 blocks, same convergence theory, more of the box used.
+
+// The launcher is the one place that talks to a human terminal directly:
+// subcommand output and CLI errors go through plain println!/eprintln!.
+// Library code must use `obs::log` (enforced by clippy's disallowed-macros).
+#![allow(clippy::disallowed_macros)]
 
 use std::sync::Arc;
 
@@ -66,6 +72,7 @@ fn main() {
         "predict" => cmd_predict(&rest),
         "serve" => cmd_serve(&rest),
         "bench-serve" => cmd_bench_serve(&rest),
+        "trace-report" => cmd_trace_report(&rest),
         "summary" => cmd_summary(&rest),
         "--help" | "-h" | "help" => {
             usage();
@@ -90,6 +97,7 @@ fn usage() {
          predict      score a libsvm file with a saved model\n  \
          serve        online scoring endpoint (micro-batched, hot-swappable)\n  \
          bench-serve  load-generate against a serve endpoint\n  \
+         trace-report render per-iteration/per-rank timing from a --trace-out run log\n  \
          summary      print dataset summaries (Table 1)\n"
     );
 }
@@ -154,8 +162,37 @@ fn train_cli() -> Cli {
     .switch("no-adaptive-mu", "freeze μ at --mu0 (Fig 1 ablation)")
     .flag("seed", "1", "random seed")
     .flag("trace", "", "write the convergence trace JSON to this path")
+    .flag(
+        "trace-out",
+        "",
+        "write the merged run log (run header + per-rank loads + spans) as \
+         NDJSON to this path; render it with `dglmnet trace-report`",
+    )
+    .flag(
+        "log-level",
+        "",
+        "structured-log verbosity: error | warn | info | debug | trace \
+         (default: DGLMNET_LOG env, else info)",
+    )
     .flag("save-model", "", "write the trained model JSON to this path")
     .flag("eval-every", "1", "test-metric cadence (0 = never)")
+}
+
+/// Apply a `--log-level` value to the global `obs::log` filter. Empty means
+/// "leave it to `DGLMNET_LOG` / the default"; a bad name is a usage error.
+fn apply_log_level(value: &str) -> Result<(), String> {
+    if value.is_empty() {
+        return Ok(());
+    }
+    match dglmnet::obs::log::Level::parse(value) {
+        Some(lvl) => {
+            dglmnet::obs::log::set_level(lvl);
+            Ok(())
+        }
+        None => Err(format!(
+            "unknown log level '{value}' (error | warn | info | debug | trace)"
+        )),
+    }
 }
 
 fn cmd_train(argv: &[String]) -> i32 {
@@ -172,6 +209,10 @@ fn cmd_train(argv: &[String]) -> i32 {
         }
     };
 
+    if let Err(e) = apply_log_level(args.get("log-level")) {
+        eprintln!("{e}");
+        return 2;
+    }
     let kind = match LossKind::parse(args.get("loss")) {
         Some(k) => k,
         None => {
@@ -402,6 +443,16 @@ fn cmd_train(argv: &[String]) -> i32 {
         result.barrier_wait_secs,
         result.peak_node_f64_slots as f64 * 8.0 / (1024.0 * 1024.0),
     );
+    if !result.comm_by_phase.is_empty() {
+        let parts: Vec<String> = result
+            .comm_by_phase
+            .iter()
+            .map(|(phase, bytes, msgs)| {
+                format!("{phase} {:.2} MiB/{msgs} msgs", *bytes as f64 / (1024.0 * 1024.0))
+            })
+            .collect();
+        println!("comm by tag: {}", parts.join(" | "));
+    }
     harness::print_rank_loads(&result.per_rank);
     harness::print_convergence(
         &splits.train.name,
@@ -416,6 +467,28 @@ fn cmd_train(argv: &[String]) -> i32 {
             return 1;
         }
         println!("trace written to {trace_path}");
+    }
+    let trace_out = args.get("trace-out");
+    if !trace_out.is_empty() {
+        let mut header = dglmnet::util::json::Json::obj();
+        header
+            .set("dataset", splits.train.name.as_str())
+            .set("nodes", cfg.nodes)
+            .set("iters", result.iters)
+            .set("comm_bytes", result.comm_bytes)
+            .set("comm_msgs", result.comm_msgs);
+        let ranks: Vec<_> = result.per_rank.iter().map(|r| r.to_json()).collect();
+        let body = dglmnet::obs::runlog::render(&header, &ranks, &result.spans);
+        if let Err(e) = std::fs::write(trace_out, body) {
+            eprintln!("failed to write run log: {e}");
+            return 1;
+        }
+        println!(
+            "run log written to {trace_out} ({} spans from {} ranks); \
+             render with `dglmnet trace-report {trace_out}`",
+            result.spans.len(),
+            result.per_rank.len(),
+        );
     }
     let model_path = args.get("save-model");
     if !model_path.is_empty() {
@@ -688,6 +761,12 @@ fn cmd_worker(argv: &[String]) -> i32 {
         "",
         "override this rank's intra-rank CD thread count (hybrid mode) — \
          right-size one node to its cores without the coordinator's help",
+    )
+    .flag(
+        "log-level",
+        "",
+        "structured-log verbosity: error | warn | info | debug | trace \
+         (default: DGLMNET_LOG env, else info)",
     );
     let args = match cli.parse(argv) {
         Ok(a) => a,
@@ -700,6 +779,10 @@ fn cmd_worker(argv: &[String]) -> i32 {
             return 2;
         }
     };
+    if let Err(e) = apply_log_level(args.get("log-level")) {
+        eprintln!("{e}");
+        return 2;
+    }
     let mut overrides = process::WorkerOverrides::default();
     if !args.get("slow-factor").is_empty() {
         match args.get("slow-factor").parse::<f64>() {
@@ -1070,6 +1153,52 @@ fn cmd_bench_serve(argv: &[String]) -> i32 {
         h.stop();
     }
     0
+}
+
+fn cmd_trace_report(argv: &[String]) -> i32 {
+    let cli = Cli::new(
+        "dglmnet trace-report",
+        "render per-rank phase totals, the per-iteration × per-rank \
+         breakdown, and the iteration-skew table from a run log written by \
+         `train --trace-out`",
+    )
+    .flag("file", "", "run-log NDJSON path (may also be given positionally)");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(CliError::HelpRequested) => {
+            println!("{}", cli.help_text());
+            return 0;
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli.help_text());
+            return 2;
+        }
+    };
+    let path = if !args.get("file").is_empty() {
+        args.get("file").to_string()
+    } else if let Some(p) = args.positional().first() {
+        p.clone()
+    } else {
+        eprintln!("usage: dglmnet trace-report <run.ndjson>\n\n{}", cli.help_text());
+        return 2;
+    };
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("failed to read {path}: {e}");
+            return 1;
+        }
+    };
+    match dglmnet::obs::runlog::parse(&text) {
+        Ok(log) => {
+            print!("{}", dglmnet::obs::runlog::report(&log));
+            0
+        }
+        Err(e) => {
+            eprintln!("failed to parse run log {path}: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_summary(argv: &[String]) -> i32 {

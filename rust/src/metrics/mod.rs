@@ -5,7 +5,11 @@
 //! heavily imbalanced. We implement auPRC exactly as defined there (sweep
 //! the threshold over predicted scores), plus ROC AUC, log-loss and accuracy
 //! for cross-checks. The [`latency`] submodule holds the lock-free p50/p99
-//! histogram the serve subsystem reports through.
+//! histogram the serve subsystem reports through; the same histogram type is
+//! what [`crate::obs::metrics`]'s registry hands out, so training-side span
+//! telemetry and serving-side latency share one quantile implementation.
+//! Cluster-wide observability (structured logs, spans, counters/gauges) is
+//! [`crate::obs`] — import `obs::prelude` for the whole kit.
 
 pub mod latency;
 

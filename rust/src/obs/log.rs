@@ -1,0 +1,305 @@
+//! Std-only leveled structured logger — the single narration channel for
+//! library code (the `println!` family is clippy-banned outside `main.rs`
+//! and the sanctioned sinks in this module; see `clippy.toml`).
+//!
+//! Records carry a target (subsystem name), a level, a message, and typed
+//! key/value fields, and render either as aligned text or as NDJSON — one
+//! JSON object per line — on stderr, so protocol stdout (the worker's
+//! scrapeable `listening` line, serve's NDJSON responses) stays clean.
+//! A per-process rank prefix makes multi-process cluster logs mergeable.
+//!
+//! Control surface:
+//! * `DGLMNET_LOG=level[,json]` — e.g. `DGLMNET_LOG=debug` or
+//!   `DGLMNET_LOG=trace,json` (read once, lazily).
+//! * `--log-level` on the CLIs calls [`set_level`] and wins over the env.
+//!
+//! Call sites use the `obs_error!`/`obs_warn!`/`obs_info!`/`obs_debug!`/
+//! `obs_trace!` macros: `crate::obs_warn!("tcp", "dropping link",
+//! from = rank, len = len64);` — fields are anything `Into<Json>`.
+
+use std::sync::atomic::{AtomicI64, AtomicU8, Ordering};
+use std::sync::{Once, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Severity, ordered: a configured level enables itself and everything
+/// more severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+
+    /// Parse a level name (case-insensitive). `None` on unknown names.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Trace,
+        }
+    }
+}
+
+/// Output shape for log records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    Text,
+    Ndjson,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static FORMAT: AtomicU8 = AtomicU8::new(0); // 0 = text, 1 = ndjson
+static RANK: AtomicI64 = AtomicI64::new(-1); // -1 = no rank prefix
+static ENV_INIT: Once = Once::new();
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Apply `DGLMNET_LOG=level[,json]` once; later explicit `set_*` calls win.
+fn ensure_env_init() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("DGLMNET_LOG") {
+            for part in spec.split(',') {
+                if let Some(l) = Level::parse(part) {
+                    LEVEL.store(l as u8, Ordering::Relaxed);
+                } else if part.trim().eq_ignore_ascii_case("json") {
+                    FORMAT.store(1, Ordering::Relaxed);
+                }
+            }
+        }
+        // Pin the epoch so the first record's timestamp is ~0.
+        let _ = epoch();
+    });
+}
+
+pub fn set_level(l: Level) {
+    ensure_env_init();
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    ensure_env_init();
+    Level::from_u8(LEVEL.load(Ordering::Relaxed))
+}
+
+pub fn set_format(f: Format) {
+    ensure_env_init();
+    FORMAT.store(if f == Format::Ndjson { 1 } else { 0 }, Ordering::Relaxed);
+}
+
+/// Tag every subsequent record with this cluster rank.
+pub fn set_rank(rank: usize) {
+    RANK.store(rank as i64, Ordering::Relaxed);
+}
+
+/// Is `l` currently enabled? The macros check this before formatting.
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Render one record as aligned text (no trailing newline).
+pub fn format_text(
+    t_s: f64,
+    l: Level,
+    rank: i64,
+    target: &str,
+    msg: &str,
+    fields: &[(&str, Json)],
+) -> String {
+    let mut s = format!("[{t_s:9.3}] {:<5} ", l.name().to_ascii_uppercase());
+    if rank >= 0 {
+        s.push_str(&format!("[rank {rank}] "));
+    }
+    s.push_str(target);
+    s.push_str(": ");
+    s.push_str(msg);
+    for (k, v) in fields {
+        // Strings print bare (k=value); everything else as compact JSON.
+        match v {
+            Json::Str(x) => s.push_str(&format!(" {k}={x}")),
+            other => s.push_str(&format!(" {k}={}", other.dump())),
+        }
+    }
+    s
+}
+
+/// Render one record as a single NDJSON object (no trailing newline).
+pub fn format_ndjson(
+    t_s: f64,
+    l: Level,
+    rank: i64,
+    target: &str,
+    msg: &str,
+    fields: &[(&str, Json)],
+) -> String {
+    let mut o = Json::obj();
+    o.set("t", t_s).set("level", l.name()).set("target", target).set("msg", msg);
+    if rank >= 0 {
+        o.set("rank", rank);
+    }
+    for (k, v) in fields {
+        o.set(k, v.clone());
+    }
+    o.dump()
+}
+
+/// Emit one structured record (the macros are the intended entry point).
+pub fn log(l: Level, target: &str, msg: &str, fields: &[(&str, Json)]) {
+    if !enabled(l) {
+        return;
+    }
+    let t_s = epoch().elapsed().as_secs_f64();
+    let rank = RANK.load(Ordering::Relaxed);
+    let line = if FORMAT.load(Ordering::Relaxed) == 1 {
+        format_ndjson(t_s, l, rank, target, msg, fields)
+    } else {
+        format_text(t_s, l, rank, target, msg, fields)
+    };
+    emit_stderr(&line);
+}
+
+/// Sanctioned stderr sink (log records, user-facing errors routed by lib
+/// code). The one place stderr printing is allowed outside `main.rs`.
+#[allow(clippy::disallowed_macros)]
+pub fn emit_stderr(line: &str) {
+    eprintln!("{line}");
+}
+
+/// Sanctioned stdout sink for *user-facing* output produced inside the
+/// library: report tables, bench rows, and the worker's scrapeable
+/// `listening` line. Diagnostic narration belongs in [`log`], not here.
+#[allow(clippy::disallowed_macros)]
+pub fn emit(line: &str) {
+    println!("{line}");
+}
+
+/// Leveled structured logging: `obs_log!(level, target, msg, k = v, ...)`.
+/// Prefer the per-level wrappers below.
+#[macro_export]
+macro_rules! obs_log {
+    ($lvl:expr, $target:expr, $msg:expr $(, $k:ident = $v:expr)* $(,)?) => {
+        if $crate::obs::log::enabled($lvl) {
+            $crate::obs::log::log(
+                $lvl,
+                $target,
+                &$msg,
+                &[$((stringify!($k), $crate::util::json::Json::from($v))),*],
+            );
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! obs_error {
+    ($($a:tt)*) => { $crate::obs_log!($crate::obs::log::Level::Error, $($a)*) };
+}
+#[macro_export]
+macro_rules! obs_warn {
+    ($($a:tt)*) => { $crate::obs_log!($crate::obs::log::Level::Warn, $($a)*) };
+}
+#[macro_export]
+macro_rules! obs_info {
+    ($($a:tt)*) => { $crate::obs_log!($crate::obs::log::Level::Info, $($a)*) };
+}
+#[macro_export]
+macro_rules! obs_debug {
+    ($($a:tt)*) => { $crate::obs_log!($crate::obs::log::Level::Debug, $($a)*) };
+}
+#[macro_export]
+macro_rules! obs_trace {
+    ($($a:tt)*) => { $crate::obs_log!($crate::obs::log::Level::Trace, $($a)*) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("DEBUG"), Some(Level::Debug));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Error < Level::Trace);
+    }
+
+    #[test]
+    fn text_format_includes_rank_and_fields() {
+        let s = format_text(
+            1.5,
+            Level::Warn,
+            2,
+            "tcp",
+            "dropping link",
+            &[("from", Json::from(3u64)), ("why", Json::from("corrupt"))],
+        );
+        assert!(s.contains("WARN"), "{s}");
+        assert!(s.contains("[rank 2]"), "{s}");
+        assert!(s.contains("tcp: dropping link"), "{s}");
+        assert!(s.contains("from=3"), "{s}");
+        assert!(s.contains("why=corrupt"), "{s}");
+    }
+
+    #[test]
+    fn ndjson_format_is_parseable() {
+        let s = format_ndjson(
+            0.25,
+            Level::Info,
+            0,
+            "worker",
+            "done",
+            &[("iters", Json::from(12u64))],
+        );
+        let v = crate::util::json::parse(&s).unwrap();
+        assert_eq!(v.get("level").unwrap().as_str(), Some("info"));
+        assert_eq!(v.get("target").unwrap().as_str(), Some("worker"));
+        assert_eq!(v.get("iters").unwrap().as_f64(), Some(12.0));
+        assert_eq!(v.get("rank").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn ndjson_format_omits_unset_rank() {
+        let s = format_ndjson(0.0, Level::Error, -1, "t", "m", &[]);
+        let v = crate::util::json::parse(&s).unwrap();
+        assert!(v.get("rank").is_none());
+    }
+
+    #[test]
+    fn enabled_gates_by_severity() {
+        let prev = level();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(prev);
+    }
+}

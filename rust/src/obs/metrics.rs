@@ -1,0 +1,201 @@
+//! Named metrics registry: counters, gauges, and latency histograms.
+//!
+//! Thin and std-only: instruments get-or-create a named handle once
+//! (one `Mutex`-guarded map lookup), then record through lock-free
+//! atomics — [`Counter`] is a monotonic `AtomicU64`, [`Gauge`] stores
+//! `f64` bits in an `AtomicU64`, and the histogram type is the existing
+//! lock-free [`LatencyHistogram`](crate::metrics::latency::LatencyHistogram)
+//! from the serving path. [`Registry::snapshot`] renders everything as one
+//! JSON object — the payload behind the worker protocol's `stats` control
+//! frame and `dglmnet serve`'s `{"op":"stats"}` admin endpoint.
+//!
+//! [`global()`] is the process-wide registry used by subsystems without a
+//! natural owner (transport link health, worker job counts); components
+//! with their own lifecycle can hold a private `Registry`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::metrics::latency::LatencyHistogram;
+use crate::util::json::Json;
+
+/// Monotonic counter handle (cheap to clone; clones share the cell).
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge handle (bits in an `AtomicU64`).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Named counters/gauges/histograms with a consistent JSON snapshot.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Counter>>,
+    gauges: Mutex<BTreeMap<String, Gauge>>,
+    histograms: Mutex<BTreeMap<String, Arc<LatencyHistogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create the counter `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Counter(Arc::new(AtomicU64::new(0))))
+            .clone()
+    }
+
+    /// Get or create the gauge `name` (initial value 0.0).
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Gauge(Arc::new(AtomicU64::new(0f64.to_bits()))))
+            .clone()
+    }
+
+    /// Get or create the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<LatencyHistogram> {
+        Arc::clone(
+            self.histograms
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(LatencyHistogram::new())),
+        )
+    }
+
+    /// One JSON object over every instrument:
+    /// `{"counters":{..},"gauges":{..},"histograms":{..}}`. Counters are
+    /// monotone, so two snapshots taken around concurrent recording bound
+    /// each counter's true value from below and above.
+    pub fn snapshot(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            counters.set(k, c.get());
+        }
+        let mut gauges = Json::obj();
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            gauges.set(k, g.get());
+        }
+        let mut hists = Json::obj();
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            hists.set(k, h.to_json());
+        }
+        let mut o = Json::obj();
+        o.set("counters", counters).set("gauges", gauges).set("histograms", hists);
+        o
+    }
+}
+
+/// The process-wide registry.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("jobs");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Same name → same cell.
+        assert_eq!(r.counter("jobs").get(), 5);
+        let g = r.gauge("objective");
+        g.set(0.482913);
+        assert_eq!(r.gauge("objective").get(), 0.482913);
+    }
+
+    #[test]
+    fn snapshot_shape_is_parseable() {
+        let r = Registry::new();
+        r.counter("a").add(2);
+        r.gauge("b").set(1.5);
+        r.histogram("lat").record_ns(1_000_000);
+        let s = r.snapshot().dump();
+        let v = crate::util::json::parse(&s).unwrap();
+        assert_eq!(v.get("counters").unwrap().get("a").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("gauges").unwrap().get("b").unwrap().as_f64(), Some(1.5));
+        let lat = v.get("histograms").unwrap().get("lat").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn snapshots_are_consistent_under_concurrent_recorders() {
+        let r = Registry::new();
+        let c = r.counter("hits");
+        let threads = 4;
+        let per_thread = 10_000u64;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..per_thread {
+                        c.inc();
+                    }
+                });
+            }
+            // Snapshots taken mid-storm must be monotone non-decreasing
+            // and never exceed the eventual total.
+            let mut last = 0.0;
+            for _ in 0..50 {
+                let snap = r.snapshot();
+                let v = snap
+                    .get("counters")
+                    .and_then(|c| c.get("hits"))
+                    .and_then(|x| x.as_f64())
+                    .unwrap();
+                assert!(v >= last, "counter went backwards: {v} < {last}");
+                assert!(v <= (threads * per_thread) as f64);
+                last = v;
+            }
+        });
+        assert_eq!(c.get(), threads * per_thread);
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        let name = "obs.metrics.test.global";
+        let c = global().counter(name);
+        let before = c.get();
+        global().counter(name).inc();
+        assert_eq!(c.get(), before + 1);
+    }
+}

@@ -1,0 +1,35 @@
+//! Observability: the cluster-side telemetry layer.
+//!
+//! Four pieces, threaded through every layer of the stack:
+//!
+//! * [`log`] — std-only leveled structured logger (text or NDJSON on
+//!   stderr, per-rank prefix, `DGLMNET_LOG`/`--log-level` control) behind
+//!   the `obs_error!`/`obs_warn!`/`obs_info!`/`obs_debug!`/`obs_trace!`
+//!   macros. The `println!` family is clippy-banned in library code
+//!   (`clippy.toml`); `log::emit` is the sanctioned stdout sink for
+//!   user-facing tables.
+//! * [`span`] — monotonic-clock span tracing with a lock-free per-rank
+//!   ring-buffer journal; the worker loop times each outer iteration's
+//!   phases (`cd`, `sync`, `linesearch`, `comm`, hybrid `cd_wave`s) and
+//!   attributes transport bytes to them.
+//! * [`metrics`] — named counters/gauges plus the serving path's
+//!   lock-free latency histogram, snapshot as JSON; behind the worker
+//!   protocol's `stats` control frame and serve's `{"op":"stats"}` op.
+//! * [`runlog`] — the merged per-run NDJSON file (`--trace-out`) and the
+//!   `dglmnet trace-report` renderer over it.
+//!
+//! Instrumentation call sites should `use crate::obs::prelude::*;` and get
+//! everything in one line.
+
+pub mod log;
+pub mod metrics;
+pub mod runlog;
+pub mod span;
+
+/// One-line import for instrumentation call sites.
+pub mod prelude {
+    pub use super::log::{self as obslog, Format as LogFormat, Level};
+    pub use super::metrics::{global as global_metrics, Counter, Gauge, Registry};
+    pub use super::runlog;
+    pub use super::span::{ActiveSpan, Journal, SpanRecord};
+}

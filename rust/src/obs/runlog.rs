@@ -1,0 +1,324 @@
+//! The merged run log: one NDJSON file per cluster run, and the
+//! `dglmnet trace-report` rendering over it.
+//!
+//! Line shapes (one JSON object per line, keyed by `"type"`):
+//! * `run` — one header: dataset, cluster width, iterations, comm totals.
+//! * `rank` — one per rank: the `RankLoad` aggregate (cd updates, passes,
+//!   cutoffs, sent bytes/msgs, sync wait, threads).
+//! * `span` — one per recorded span (see [`SpanRecord`]): rank, iter,
+//!   phase, start, duration, bytes, depth.
+//!
+//! The coordinator writes this file via `--trace-out` after merging every
+//! rank's journal (shipped in the job-spec v5 done report for real
+//! processes, returned in `WorkerOutput` in-process). `trace-report`
+//! parses it back and renders per-rank phase totals, the per-iteration ×
+//! per-rank breakdown, the iteration skew table, and a reconciliation of
+//! journal sync time against the `RankLoad` sync-wait column.
+
+use std::collections::BTreeMap;
+
+use crate::obs::span::SpanRecord;
+use crate::util::bench::Table;
+use crate::util::json::{self, Json};
+
+/// The outer-loop phases every iteration is split into (top-level spans;
+/// `cd_wave` sub-spans nest under `cd` and are excluded from totals).
+pub const PHASES: [&str; 4] = ["cd", "sync", "linesearch", "comm"];
+
+/// A parsed run log.
+pub struct RunLog {
+    pub header: Json,
+    pub ranks: Vec<Json>,
+    pub spans: Vec<SpanRecord>,
+}
+
+/// Render the NDJSON body: header line, rank lines, span lines.
+pub fn render(header: &Json, ranks: &[Json], spans: &[SpanRecord]) -> String {
+    let mut out = String::new();
+    let mut h = header.clone();
+    if h.get("type").is_none() {
+        h.set("type", "run");
+    }
+    out.push_str(&h.dump());
+    out.push('\n');
+    for r in ranks {
+        let mut r = r.clone();
+        if r.get("type").is_none() {
+            r.set("type", "rank");
+        }
+        out.push_str(&r.dump());
+        out.push('\n');
+    }
+    for s in spans {
+        out.push_str(&s.to_json().dump());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse an NDJSON run log. Unknown record types are skipped (forward
+/// compatibility); malformed JSON or malformed known records are errors.
+pub fn parse(src: &str) -> Result<RunLog, String> {
+    let mut header = None;
+    let mut ranks = Vec::new();
+    let mut spans = Vec::new();
+    for (lineno, line) in src.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        match v.get("type").and_then(|t| t.as_str()) {
+            Some("run") => header = Some(v),
+            Some("rank") => ranks.push(v),
+            Some("span") => spans.push(
+                SpanRecord::from_json(&v)
+                    .ok_or_else(|| format!("line {}: malformed span record", lineno + 1))?,
+            ),
+            Some(_) => {} // future record types
+            None => return Err(format!("line {}: record without a type", lineno + 1)),
+        }
+    }
+    let header = header.ok_or("missing run header record")?;
+    ranks.sort_by_key(|r| r.get("rank").and_then(|x| x.as_f64()).unwrap_or(-1.0) as i64);
+    Ok(RunLog { header, ranks, spans })
+}
+
+fn num(v: &Json, key: &str) -> f64 {
+    v.get(key).and_then(|x| x.as_f64()).unwrap_or(0.0)
+}
+
+fn ms(secs: f64) -> String {
+    format!("{:.3}", secs * 1e3)
+}
+
+/// Per-(iter, rank) phase durations, top-level spans only.
+type PhaseGrid = BTreeMap<(u64, usize), [f64; PHASES.len()]>;
+
+fn phase_grid(spans: &[SpanRecord]) -> PhaseGrid {
+    let mut grid: PhaseGrid = BTreeMap::new();
+    for s in spans {
+        if s.depth != 0 {
+            continue;
+        }
+        if let Some(p) = PHASES.iter().position(|p| *p == s.phase) {
+            grid.entry((s.iter, s.rank)).or_default()[p] += s.dur_s;
+        }
+    }
+    grid
+}
+
+/// Render the full `trace-report` text for a parsed run log.
+pub fn report(log: &RunLog) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace-report: dataset={} nodes={} iters={} | {} spans from {} ranks\n",
+        log.header.get("dataset").and_then(|d| d.as_str()).unwrap_or("?"),
+        num(&log.header, "nodes"),
+        num(&log.header, "iters"),
+        log.spans.len(),
+        log.ranks.len(),
+    ));
+
+    let grid = phase_grid(&log.spans);
+    let ranks: Vec<usize> = {
+        let mut r: Vec<usize> = grid.keys().map(|(_, rank)| *rank).collect();
+        r.sort_unstable();
+        r.dedup();
+        r
+    };
+
+    // Per-rank phase totals + comm bytes attributed by spans.
+    let mut totals: BTreeMap<usize, [f64; PHASES.len()]> = BTreeMap::new();
+    let mut bytes_by_rank: BTreeMap<usize, u64> = BTreeMap::new();
+    for ((_, rank), phases) in &grid {
+        let t = totals.entry(*rank).or_default();
+        for (i, d) in phases.iter().enumerate() {
+            t[i] += d;
+        }
+    }
+    for s in &log.spans {
+        *bytes_by_rank.entry(s.rank).or_default() += s.bytes;
+    }
+    out.push_str("\n== per-rank phase totals (s) ==\n");
+    let mut t = Table::new(&["rank", "cd", "sync", "linesearch", "comm", "total", "sent MiB"]);
+    for rank in &ranks {
+        let p = totals.get(rank).copied().unwrap_or_default();
+        let total: f64 = p.iter().sum();
+        t.row(&[
+            rank.to_string(),
+            format!("{:.3}", p[0]),
+            format!("{:.3}", p[1]),
+            format!("{:.3}", p[2]),
+            format!("{:.3}", p[3]),
+            format!("{total:.3}"),
+            format!(
+                "{:.2}",
+                bytes_by_rank.get(rank).copied().unwrap_or(0) as f64 / (1024.0 * 1024.0)
+            ),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    // Reconciliation: the journal's sync total vs the RankLoad aggregate.
+    for r in &log.ranks {
+        let rank = num(r, "rank") as usize;
+        let load_sync = num(r, "sync_wait_secs");
+        let journal_sync = totals.get(&rank).map(|p| p[1]).unwrap_or(0.0);
+        let delta_pct = if load_sync > 0.0 {
+            (journal_sync - load_sync).abs() / load_sync * 100.0
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "sync reconcile rank {rank}: journal {journal_sync:.4}s vs rank-load {load_sync:.4}s (Δ {delta_pct:.2}%)\n",
+        ));
+    }
+
+    // Per-iteration × per-rank breakdown.
+    out.push_str("\n== per-iteration per-rank phase breakdown (ms) ==\n");
+    let mut t = Table::new(&["iter", "rank", "cd", "sync", "linesearch", "comm", "total"]);
+    for ((iter, rank), p) in &grid {
+        let total: f64 = p.iter().sum();
+        t.row(&[
+            iter.to_string(),
+            rank.to_string(),
+            ms(p[0]),
+            ms(p[1]),
+            ms(p[2]),
+            ms(p[3]),
+            ms(total),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    // Iteration skew: the BSP straggler story, per iteration.
+    out.push_str("\n== iteration skew (max-min rank total, ms) ==\n");
+    let mut t = Table::new(&["iter", "fastest", "slowest", "skew", "slow rank"]);
+    let iters: Vec<u64> = {
+        let mut v: Vec<u64> = grid.keys().map(|(it, _)| *it).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    for iter in iters {
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        let mut slow_rank = 0usize;
+        for rank in &ranks {
+            if let Some(p) = grid.get(&(iter, *rank)) {
+                let total: f64 = p.iter().sum();
+                min = min.min(total);
+                if total > max {
+                    max = total;
+                    slow_rank = *rank;
+                }
+            }
+        }
+        if !min.is_finite() || !max.is_finite() {
+            continue;
+        }
+        t.row(&[
+            iter.to_string(),
+            ms(min),
+            ms(max),
+            ms(max - min),
+            slow_rank.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(rank: usize, iter: u64, phase: &str, start_s: f64, dur_s: f64) -> SpanRecord {
+        SpanRecord {
+            rank,
+            iter,
+            phase: phase.to_string(),
+            start_s,
+            dur_s,
+            bytes: 128,
+            depth: 0,
+        }
+    }
+
+    fn sample_log() -> (Json, Vec<Json>, Vec<SpanRecord>) {
+        let mut header = Json::obj();
+        header.set("dataset", "epsilon_like").set("nodes", 2usize).set("iters", 2usize);
+        let ranks = (0..2usize)
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("rank", r).set("sync_wait_secs", 0.010).set("cd_updates", 100usize);
+                o
+            })
+            .collect();
+        let mut spans = Vec::new();
+        for rank in 0..2usize {
+            for iter in 1..=2u64 {
+                let base = iter as f64;
+                spans.push(span(rank, iter, "cd", base, 0.020));
+                spans.push(span(rank, iter, "sync", base + 0.02, 0.005));
+                spans.push(span(rank, iter, "linesearch", base + 0.025, 0.003));
+                spans.push(span(rank, iter, "comm", base + 0.028, 0.002));
+            }
+        }
+        (header, ranks, spans)
+    }
+
+    #[test]
+    fn ndjson_roundtrip_preserves_everything() {
+        let (header, ranks, spans) = sample_log();
+        let body = render(&header, &ranks, &spans);
+        let log = parse(&body).unwrap();
+        assert_eq!(log.ranks.len(), 2);
+        assert_eq!(log.spans.len(), spans.len());
+        assert_eq!(log.spans, spans);
+        assert_eq!(
+            log.header.get("dataset").unwrap().as_str(),
+            Some("epsilon_like")
+        );
+        // Render → parse → render is a fixed point.
+        assert_eq!(render(&log.header, &log.ranks, &log.spans), body);
+    }
+
+    #[test]
+    fn parse_rejects_garbage_and_missing_header() {
+        assert!(parse("not json\n").is_err());
+        assert!(parse("{\"type\":\"span\"}\n").is_err(), "malformed span");
+        let only_rank = "{\"rank\":0,\"type\":\"rank\"}\n";
+        assert!(parse(only_rank).is_err(), "missing run header");
+        // Unknown types are tolerated once a header exists.
+        let ok = "{\"type\":\"run\"}\n{\"type\":\"future-thing\",\"x\":1}\n";
+        assert!(parse(ok).is_ok());
+    }
+
+    #[test]
+    fn report_contains_breakdown_and_skew() {
+        let (header, ranks, spans) = sample_log();
+        let log = parse(&render(&header, &ranks, &spans)).unwrap();
+        let rep = report(&log);
+        assert!(rep.contains("per-rank phase totals"), "{rep}");
+        assert!(rep.contains("per-iteration per-rank phase breakdown"), "{rep}");
+        assert!(rep.contains("iteration skew"), "{rep}");
+        assert!(rep.contains("linesearch"), "{rep}");
+        // Both ranks report 5 ms journal sync vs 10 ms rank-load sync per
+        // iteration... journal total = 2 iters × 5 ms = 10 ms → Δ 0%.
+        assert!(rep.contains("sync reconcile rank 0"), "{rep}");
+        assert!(rep.contains("(Δ 0.00%)"), "{rep}");
+    }
+
+    #[test]
+    fn nested_spans_do_not_double_count_totals() {
+        let (header, ranks, mut spans) = sample_log();
+        let mut wave = span(0, 1, "cd", 1.001, 0.019);
+        wave.phase = "cd_wave".into();
+        wave.depth = 1;
+        spans.push(wave);
+        let log = parse(&render(&header, &ranks, &spans)).unwrap();
+        let grid = phase_grid(&log.spans);
+        assert_eq!(grid[&(1, 0)][0], 0.020, "cd total must exclude nested waves");
+    }
+}

@@ -1,0 +1,362 @@
+//! Span tracing: monotonic-clock phase timings collected into a lock-free
+//! per-rank ring-buffer journal.
+//!
+//! The worker loop opens one span per phase per outer iteration (`cd`,
+//! `sync`, `linesearch`, `comm`, plus `cd_wave` sub-spans under hybrid
+//! threading) and records the wall time and the transport bytes the phase
+//! moved. Journals are bounded: a record past capacity is counted in
+//! `dropped()` instead of reallocating — recording never blocks or
+//! allocates, so the overhead per span is two `Instant::now()` calls and
+//! one relaxed `fetch_add` (≪ 1 µs against multi-ms phases).
+//!
+//! At the end of a run each rank drains its journal into the
+//! [`WorkerOutput`](crate::coordinator::WorkerOutput); multi-process
+//! workers ship the records in the job-spec v5 done report, and the
+//! coordinator merges all ranks into one run log (`--trace-out`,
+//! rendered by `dglmnet trace-report` — see [`runlog`](super::runlog)).
+//!
+//! Timestamps are f64 seconds relative to the journal's creation (its
+//! *epoch* — one per rank, all started at job begin), which survives the
+//! JSON `f64` number model exactly, unlike nanosecond integers.
+
+use std::cell::Cell;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// One finished span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanRecord {
+    /// Rank whose journal recorded this span.
+    pub rank: usize,
+    /// Outer iteration the span belongs to (0 = setup / initial eval).
+    pub iter: u64,
+    /// Phase name: `cd`, `cd_wave`, `sync`, `linesearch`, `comm`, ...
+    pub phase: String,
+    /// Start, seconds since the journal epoch.
+    pub start_s: f64,
+    /// Duration in seconds.
+    pub dur_s: f64,
+    /// Transport bytes attributed to the phase (0 when not measured).
+    pub bytes: u64,
+    /// Nesting depth at start (0 = top level) on the recording thread.
+    pub depth: u32,
+}
+
+impl SpanRecord {
+    /// Full object form, used for the merged run-log NDJSON.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("type", "span")
+            .set("rank", self.rank)
+            .set("iter", self.iter)
+            .set("phase", self.phase.as_str())
+            .set("t", self.start_s)
+            .set("dur", self.dur_s)
+            .set("bytes", self.bytes)
+            .set("depth", self.depth as u64);
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Option<SpanRecord> {
+        Some(SpanRecord {
+            rank: v.get("rank")?.as_f64()? as usize,
+            iter: v.get("iter")?.as_f64()? as u64,
+            phase: v.get("phase")?.as_str()?.to_string(),
+            start_s: v.get("t")?.as_f64()?,
+            dur_s: v.get("dur")?.as_f64()?,
+            bytes: v.get("bytes")?.as_f64()? as u64,
+            depth: v.get("depth")?.as_f64()? as u32,
+        })
+    }
+
+    /// Compact array form `[iter, phase, t, dur, bytes, depth]` for the
+    /// done report (the rank is implied by the report's sender).
+    pub fn to_compact(&self) -> Json {
+        Json::Arr(vec![
+            Json::from(self.iter),
+            Json::from(self.phase.as_str()),
+            Json::from(self.start_s),
+            Json::from(self.dur_s),
+            Json::from(self.bytes),
+            Json::from(self.depth as u64),
+        ])
+    }
+
+    pub fn from_compact(rank: usize, v: &Json) -> Option<SpanRecord> {
+        let a = match v {
+            Json::Arr(a) if a.len() == 6 => a,
+            _ => return None,
+        };
+        Some(SpanRecord {
+            rank,
+            iter: a[0].as_f64()? as u64,
+            phase: a[1].as_str()?.to_string(),
+            start_s: a[2].as_f64()?,
+            dur_s: a[3].as_f64()?,
+            bytes: a[4].as_f64()? as u64,
+            depth: a[5].as_f64()? as u32,
+        })
+    }
+}
+
+/// An open span: created by [`Journal::start`], closed by
+/// [`Journal::finish`] (or `finish_with_bytes`). Start and finish must
+/// happen on the same thread for the nesting depth to be meaningful.
+#[must_use = "finish the span via Journal::finish"]
+pub struct ActiveSpan {
+    iter: u64,
+    phase: &'static str,
+    t0: Instant,
+    depth: u32,
+}
+
+thread_local! {
+    /// Per-thread open-span count: the depth recorded on each span.
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+struct Slot {
+    filled: AtomicBool,
+    rec: UnsafeCell<Option<SpanRecord>>,
+}
+
+/// Bounded multi-producer span journal: writers claim a slot with one
+/// `fetch_add` and publish with a release store; `drain` reads with
+/// acquire loads, so records written before a drain are fully visible.
+pub struct Journal {
+    rank: usize,
+    epoch: Instant,
+    slots: Box<[Slot]>,
+    head: AtomicUsize,
+    dropped: AtomicUsize,
+}
+
+// Slots are published through the per-slot `filled` release/acquire pair.
+unsafe impl Sync for Journal {}
+
+/// Default capacity: comfortably above max_iters × (phases + hybrid waves).
+pub const DEFAULT_CAPACITY: usize = 1 << 14;
+
+impl Journal {
+    pub fn new(rank: usize, capacity: usize) -> Journal {
+        assert!(capacity > 0, "journal capacity must be positive");
+        Journal {
+            rank,
+            epoch: Instant::now(),
+            slots: (0..capacity)
+                .map(|_| Slot {
+                    filled: AtomicBool::new(false),
+                    rec: UnsafeCell::new(None),
+                })
+                .collect(),
+            head: AtomicUsize::new(0),
+            dropped: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn with_default_capacity(rank: usize) -> Journal {
+        Journal::new(rank, DEFAULT_CAPACITY)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Seconds elapsed since the journal epoch.
+    pub fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Open a span for `phase` of outer iteration `iter`.
+    pub fn start(&self, iter: u64, phase: &'static str) -> ActiveSpan {
+        let depth = DEPTH.with(|d| {
+            let v = d.get();
+            d.set(v + 1);
+            v
+        });
+        ActiveSpan {
+            iter,
+            phase,
+            t0: Instant::now(),
+            depth,
+        }
+    }
+
+    pub fn finish(&self, span: ActiveSpan) {
+        self.finish_with_bytes(span, 0);
+    }
+
+    /// Close `span`, attributing `bytes` of transport traffic to it.
+    pub fn finish_with_bytes(&self, span: ActiveSpan, bytes: u64) {
+        let dur_s = span.t0.elapsed().as_secs_f64();
+        let start_s = span.t0.duration_since(self.epoch).as_secs_f64();
+        DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        self.record(SpanRecord {
+            rank: self.rank,
+            iter: span.iter,
+            phase: span.phase.to_string(),
+            start_s,
+            dur_s,
+            bytes,
+            depth: span.depth,
+        });
+    }
+
+    /// Push a pre-built record (events, tests). Lock-free; drops past
+    /// capacity.
+    pub fn record(&self, rec: SpanRecord) {
+        let idx = self.head.fetch_add(1, Ordering::Relaxed);
+        if idx >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let slot = &self.slots[idx];
+        // SAFETY: fetch_add hands each writer a distinct index, so this
+        // slot is written exactly once; readers only look after `filled`
+        // is set with release ordering.
+        unsafe {
+            *slot.rec.get() = Some(rec);
+        }
+        slot.filled.store(true, Ordering::Release);
+    }
+
+    /// Records accepted so far (excludes dropped).
+    pub fn len(&self) -> usize {
+        self.head.load(Ordering::Relaxed).min(self.slots.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Records rejected because the journal was full.
+    pub fn dropped(&self) -> usize {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot every published record, ordered by start time. Records
+    /// claimed but not yet published (a concurrent writer mid-`record`)
+    /// are skipped, so draining is safe at any time.
+    pub fn drain(&self) -> Vec<SpanRecord> {
+        let n = self.len();
+        let mut out = Vec::with_capacity(n);
+        for slot in self.slots.iter().take(n) {
+            if slot.filled.load(Ordering::Acquire) {
+                // SAFETY: `filled` was set with release ordering after the
+                // one-time write, so the record is fully initialized.
+                if let Some(rec) = unsafe { (*slot.rec.get()).clone() } {
+                    out.push(rec);
+                }
+            }
+        }
+        out.sort_by(|a, b| a.start_s.total_cmp(&b.start_s));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool::ScopedPool;
+
+    #[test]
+    fn span_records_duration_and_depth() {
+        let j = Journal::new(3, 16);
+        let outer = j.start(1, "cd");
+        let inner = j.start(1, "cd_wave");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        j.finish_with_bytes(inner, 40);
+        j.finish(outer);
+        let recs = j.drain();
+        assert_eq!(recs.len(), 2);
+        // Sorted by start: outer opened first.
+        assert_eq!(recs[0].phase, "cd");
+        assert_eq!(recs[0].depth, 0);
+        assert_eq!(recs[1].phase, "cd_wave");
+        assert_eq!(recs[1].depth, 1);
+        assert_eq!(recs[1].bytes, 40);
+        assert!(recs[1].dur_s >= 0.002);
+        assert!(recs[0].dur_s >= recs[1].dur_s);
+        assert_eq!(recs[0].rank, 3);
+    }
+
+    #[test]
+    fn nesting_depth_restored_after_finish() {
+        let j = Journal::new(0, 16);
+        let a = j.start(1, "cd");
+        j.finish(a);
+        let b = j.start(2, "sync");
+        j.finish(b);
+        let recs = j.drain();
+        assert_eq!(recs[0].depth, 0);
+        assert_eq!(recs[1].depth, 0);
+    }
+
+    #[test]
+    fn capacity_overflow_counts_drops() {
+        let j = Journal::new(0, 4);
+        for i in 0..10u64 {
+            let s = j.start(i, "cd");
+            j.finish(s);
+        }
+        assert_eq!(j.len(), 4);
+        assert_eq!(j.dropped(), 6);
+        assert_eq!(j.drain().len(), 4);
+    }
+
+    #[test]
+    fn concurrent_recording_under_scoped_pool_loses_nothing() {
+        let threads = 4;
+        let per_thread = 50u64;
+        let j = Journal::new(0, (threads as usize) * per_thread as usize);
+        let pool = ScopedPool::new(threads as usize);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..threads)
+            .map(|t| {
+                let j = &j;
+                Box::new(move || {
+                    for i in 0..per_thread {
+                        let s = j.start(i, "cd_wave");
+                        j.finish_with_bytes(s, t as u64);
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run(jobs);
+        let recs = j.drain();
+        assert_eq!(recs.len(), (threads * per_thread) as usize);
+        assert_eq!(j.dropped(), 0);
+        // Per-thread ordering: each thread's spans (keyed by its bytes
+        // stamp) must appear in increasing iter order after the global
+        // start_s sort — start times on one thread are monotone.
+        for t in 0..threads {
+            let iters: Vec<u64> = recs
+                .iter()
+                .filter(|r| r.bytes == t as u64)
+                .map(|r| r.iter)
+                .collect();
+            assert_eq!(iters.len(), per_thread as usize);
+            assert!(iters.windows(2).all(|w| w[0] < w[1]), "thread {t}: {iters:?}");
+        }
+    }
+
+    #[test]
+    fn json_and_compact_roundtrip() {
+        let rec = SpanRecord {
+            rank: 2,
+            iter: 7,
+            phase: "linesearch".into(),
+            start_s: 1.25,
+            dur_s: 0.03125,
+            bytes: 4096,
+            depth: 1,
+        };
+        assert_eq!(SpanRecord::from_json(&rec.to_json()).unwrap(), rec);
+        let compact = rec.to_compact();
+        let parsed = crate::util::json::parse(&compact.dump()).unwrap();
+        assert_eq!(SpanRecord::from_compact(2, &parsed).unwrap(), rec);
+        assert!(SpanRecord::from_compact(2, &Json::from(vec![1.0])).is_none());
+    }
+}

@@ -130,6 +130,8 @@ impl GlmCompute for XlaCompute {
 }
 
 #[cfg(test)]
+// Test-only skip notices, printed straight to the harness's stderr.
+#[allow(clippy::disallowed_macros)]
 mod tests {
     use super::*;
     use crate::runtime::service::Runtime;

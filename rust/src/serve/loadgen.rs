@@ -87,7 +87,7 @@ impl LoadgenReport {
     }
 
     pub fn print(&self) {
-        println!(
+        crate::obs::log::emit(&format!(
             "bench-serve: {} threads × {} req | {:.0} req/s, {:.0} rows/s | \
              latency p50 {:.3}ms p99 {:.3}ms max {:.3}ms",
             self.threads,
@@ -97,7 +97,7 @@ impl LoadgenReport {
             self.hist.quantile_ns(0.50) as f64 / 1e6,
             self.hist.quantile_ns(0.99) as f64 / 1e6,
             self.hist.max_ns() as f64 / 1e6,
-        );
+        ));
     }
 }
 

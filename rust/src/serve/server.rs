@@ -9,6 +9,8 @@
 //! ← {"ok":true,"version":1,"engine":"native","requests":…,"latency":{…},"batcher":{…}}
 //! → {"op":"swap-model","path":"new_model.json"}     ("path" optional: reload)
 //! ← {"ok":true,"version":2,"nnz":1234}
+//! → {"op":"stats"}
+//! ← {"ok":true,"server":{…},"metrics":{"counters":{…},"gauges":{…},"histograms":{…}}}
 //! ```
 //!
 //! Rows are arrays of `[feature, value]` pairs. Errors come back as
@@ -270,6 +272,7 @@ fn handle_request(line: &str, shared: &ServerShared) -> Json {
             r
         }
         "health" => Ok(op_health(shared)),
+        "stats" => Ok(op_stats(shared)),
         "swap-model" => op_swap(&req, shared),
         "" => Err("missing op".to_string()),
         other => Err(format!("unknown op '{other}'")),
@@ -346,6 +349,27 @@ fn op_health(shared: &ServerShared) -> Json {
         .set("connections", shared.conns.load(Ordering::Relaxed))
         .set("latency", shared.latency.to_json())
         .set("batcher", shared.batcher.stats().to_json());
+    o
+}
+
+/// The NDJSON admin stats endpoint: the process-wide metrics-registry
+/// snapshot (`obs::metrics::global()`) plus this server's own counters —
+/// the same payload shape the worker protocol's `{"op":"stats"}` control
+/// frame answers with, so one poller speaks to both.
+fn op_stats(shared: &ServerShared) -> Json {
+    let mut server = Json::obj();
+    server
+        .set("engine", shared.engine)
+        .set("uptime_s", shared.started.elapsed().as_secs_f64())
+        .set("requests", shared.requests.load(Ordering::Relaxed))
+        .set("errors", shared.errors.load(Ordering::Relaxed))
+        .set("swaps", shared.swaps.load(Ordering::Relaxed))
+        .set("connections", shared.conns.load(Ordering::Relaxed))
+        .set("latency", shared.latency.to_json());
+    let mut o = Json::obj();
+    o.set("ok", true)
+        .set("server", server)
+        .set("metrics", crate::obs::metrics::global().snapshot());
     o
 }
 
@@ -439,6 +463,16 @@ impl ServeClient {
         Ok(reply)
     }
 
+    /// Fetch the admin stats payload: server counters + the process-wide
+    /// metrics-registry snapshot.
+    pub fn stats(&mut self) -> Result<Json, String> {
+        let mut req = Json::obj();
+        req.set("op", "stats");
+        let reply = self.roundtrip(&req)?;
+        expect_ok(&reply)?;
+        Ok(reply)
+    }
+
     /// Promote a model: from `path`, or re-read the server's current source.
     pub fn swap_model(&mut self, path: Option<&str>) -> Result<u64, String> {
         let mut req = Json::obj();
@@ -504,6 +538,26 @@ mod tests {
         let health = c.health().unwrap();
         assert_eq!(health.get("version").unwrap().as_f64(), Some(1.0));
         assert!(health.get("requests").unwrap().as_f64().unwrap() >= 1.0);
+        h.stop();
+    }
+
+    #[test]
+    fn stats_op_returns_registry_snapshot_and_server_counters() {
+        let (_, mut h) = start(vec![0.0, 1.0]);
+        let mut c = ServeClient::connect(h.addr()).unwrap();
+        c.predict(&[vec![(1, 1.0)]]).unwrap();
+        let stats = c.stats().unwrap();
+        let server = stats.get("server").expect("server section");
+        assert!(server.get("requests").unwrap().as_f64().unwrap() >= 1.0);
+        assert_eq!(server.get("engine").unwrap().as_str(), Some("native"));
+        assert!(
+            server.get("latency").and_then(|l| l.get("count")).is_some(),
+            "stats must embed the predict latency histogram"
+        );
+        let metrics = stats.get("metrics").expect("metrics section");
+        for section in ["counters", "gauges", "histograms"] {
+            assert!(metrics.get(section).is_some(), "missing {section}");
+        }
         h.stop();
     }
 

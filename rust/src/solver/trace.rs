@@ -1,10 +1,16 @@
-//! Per-iteration training telemetry.
+//! Per-iteration training telemetry: the *convergence* series.
 //!
 //! The paper's evaluation plots everything against wall-clock time: relative
 //! objective suboptimality (Fig 2, 5), test auPRC (Fig 3, 6), number of
 //! non-zero weights (Fig 4). A `Trace` collects exactly those series, plus
 //! the line-search/μ internals used in the Fig 1 ablation, and serializes to
 //! JSON for the bench harnesses.
+//!
+//! This is the per-run *curve*; the cluster-side observability layer —
+//! structured logs, phase spans, counters, and the `--trace-out` run-log
+//! pipeline that `dglmnet trace-report` renders — lives in [`crate::obs`]
+//! (re-exported as `obs::prelude`). `Trace.comm_bytes` here is fed from the
+//! transport's byte accounting, not estimated.
 
 use crate::util::json::Json;
 

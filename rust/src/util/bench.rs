@@ -68,7 +68,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) ->
         name: name.to_string(),
         samples: times,
     };
-    println!("{}", s.report());
+    crate::obs::log::emit(&s.report());
     s
 }
 
@@ -92,7 +92,7 @@ pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Summary 
         name: name.to_string(),
         samples: times,
     };
-    println!("{}", s.report());
+    crate::obs::log::emit(&s.report());
     s
 }
 
@@ -115,7 +115,9 @@ impl Table {
         self.rows.push(cells.to_vec());
     }
 
-    pub fn print(&self) {
+    /// The aligned table as a string (one trailing newline) — used where
+    /// the table is embedded in a larger report (`obs::runlog::report`).
+    pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
             for (i, c) in row.iter().enumerate() {
@@ -129,15 +131,23 @@ impl Table {
             }
             s
         };
-        println!("{}", line(&self.headers));
-        let mut sep = String::from("|");
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push('|');
         for w in &widths {
-            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
         }
-        println!("{sep}");
+        out.push('\n');
         for row in &self.rows {
-            println!("{}", line(row));
+            out.push_str(&line(row));
+            out.push('\n');
         }
+        out
+    }
+
+    pub fn print(&self) {
+        let rendered = self.render();
+        crate::obs::log::emit(rendered.trim_end_matches('\n'));
     }
 }
 
@@ -166,6 +176,10 @@ mod tests {
     fn table_prints_aligned() {
         let mut t = Table::new(&["dataset", "n"]);
         t.row(&["webspam_like".to_string(), "30000".to_string()]);
+        let r = t.render();
+        assert!(r.contains("| dataset      | n     |"), "{r}");
+        assert!(r.contains("| webspam_like | 30000 |"), "{r}");
+        assert_eq!(r.lines().count(), 3);
         t.print(); // smoke: no panic
     }
 

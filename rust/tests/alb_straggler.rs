@@ -213,6 +213,7 @@ fn straggler_cursor_resumes_mid_block_across_iterations_over_both_backends() {
                 None,
                 &mut quorum,
                 eps[0].as_mut(),
+                None,
             );
             assert_eq!(out.updates, 4, "{name} iter {it}: one chunk exactly");
             assert!(!out.reported, "{name} iter {it}: straggler was cut off");
@@ -276,6 +277,7 @@ fn hybrid_straggler_runs_one_wave_and_subblock_cursors_resume() {
                 Some(&mut hybrid),
                 &mut quorum,
                 eps[0].as_mut(),
+                None,
             );
             // One wave: chunk=4 coordinates on each of the 2 sub-blocks.
             assert_eq!(out.updates, 8, "{name} iter {it}: one wave exactly");

@@ -263,6 +263,39 @@ fn byte_accounting_matches_closed_form() {
     }
 }
 
+#[test]
+fn per_tag_accounting_partitions_totals() {
+    for (name, make) in BACKENDS {
+        spmd(make(2), move |t| match t.rank() {
+            1 => {
+                t.send(0, 3, vec![1.0, 2.0]);
+                t.send(0, 3, vec![3.0]);
+                t.send(0, 10, vec![0.0; 4]);
+                // Ascending by tag, (tag, bytes, msgs).
+                assert_eq!(
+                    t.sent_by_tag(),
+                    vec![
+                        (3, frame_bytes(2) + frame_bytes(1), 2),
+                        (10, frame_bytes(4), 1),
+                    ],
+                    "{name}"
+                );
+                // The per-tag rows partition the endpoint totals.
+                let (bytes, msgs) = t.sent();
+                let by_tag = t.sent_by_tag();
+                assert_eq!(by_tag.iter().map(|e| e.1).sum::<u64>(), bytes, "{name}");
+                assert_eq!(by_tag.iter().map(|e| e.2).sum::<u64>(), msgs, "{name}");
+            }
+            _ => {
+                assert_eq!(t.recv_from(1, 3), vec![1.0, 2.0], "{name}");
+                assert_eq!(t.recv_from(1, 3), vec![3.0], "{name}");
+                assert_eq!(t.recv_from(1, 10).len(), 4, "{name}");
+                assert!(t.sent_by_tag().is_empty(), "{name}: receiver sent nothing");
+            }
+        });
+    }
+}
+
 // ---------------------------------------------------------------------------
 // 5. Rank/size identity
 // ---------------------------------------------------------------------------
