@@ -159,6 +159,58 @@ case "$SCENARIO" in
     done
     ;;
 
+  chaos-e2e)
+    # Fault tolerance end to end: a checkpointed cluster survives a worker
+    # that kills itself mid-run (--die-after), because the dead rank's
+    # restart rejoins on the same port and the coordinator re-ships a
+    # resume job from the latest checkpoint. A control run without
+    # checkpoints must fail fast with the typed peer-loss error.
+    # A slow runner must not push the restart past the probe deadline.
+    export DGLMNET_REJOIN_WINDOW_SECS=30
+    rm -rf ckpts && mkdir -p ckpts
+    "$BIN" worker --listen 127.0.0.1:7161 --die-after 2 > worker1.log 2>&1 &
+    W1=$!
+    "$BIN" worker --listen 127.0.0.1:7162 --rejoin > worker2.log 2>&1 &
+    sleep 1
+    "$BIN" train \
+      --cluster 127.0.0.1:7160,127.0.0.1:7161,127.0.0.1:7162 \
+      --dataset epsilon_like --scale 0.1 --seed 1 \
+      --loss logistic --l1 0.5 --max-iters 10 --eval-every 0 \
+      --checkpoint-dir ckpts --checkpoint-every 1 \
+      > chaos.log 2>&1 &
+    COORD=$!
+
+    # Rank 1 kills itself at the start of iteration 3; its "restart" comes
+    # back on the same port inside the coordinator's rejoin window.
+    wait "$W1" || true
+    "$BIN" worker --listen 127.0.0.1:7161 --rejoin > worker1b.log 2>&1 &
+
+    wait "$COORD"
+    cat chaos.log
+    grep -q "^done:" chaos.log
+    grep -q "recovery attempt" chaos.log
+    # The surviving worker rode its --rejoin loop back to the accept loop
+    # instead of dying with the job.
+    grep -q "rejoining for a resume job" worker2.log
+    ls ckpts/ | grep -q "^ckpt-"
+    wait
+
+    # Control: the same death without checkpoints is fatal — and typed.
+    "$BIN" worker --listen 127.0.0.1:7165 --die-after 2 > worker3.log 2>&1 &
+    "$BIN" worker --listen 127.0.0.1:7166 > worker4.log 2>&1 &
+    sleep 1
+    if "$BIN" train \
+      --cluster 127.0.0.1:7164,127.0.0.1:7165,127.0.0.1:7166 \
+      --dataset epsilon_like --scale 0.1 --seed 1 \
+      --loss logistic --l1 0.5 --max-iters 10 --eval-every 0 \
+      > chaos_fatal.log 2>&1; then
+      echo "train must fail when a rank dies without checkpoints" >&2
+      exit 1
+    fi
+    grep -q "hung up" chaos_fatal.log
+    wait || true
+    ;;
+
   *)
     echo "unknown scenario '$SCENARIO'" >&2
     exit 2

@@ -25,7 +25,7 @@
 //!   iteration k+1 before every rank has left iteration k's CD loop (the
 //!   XΔβ AllReduce between them completes only once all ranks contribute).
 
-use crate::cluster::transport::Transport;
+use crate::cluster::transport::{Transport, TransportError};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 /// The κ→threshold rule shared by every quorum implementation: at least
@@ -159,10 +159,14 @@ impl AlbController {
 /// per iteration, never replayed into a later quorum.
 pub struct RemoteQuorum {
     tag: u64,
+    kappa: f64,
     threshold: usize,
     /// seen[r] = rank r's pass-done frame observed (or r == self after
     /// `report_full_pass`).
     seen: Vec<bool>,
+    /// excluded[r] = rank r is known permanently lost — it no longer counts
+    /// toward the quorum universe and is never polled or broadcast to.
+    excluded: Vec<bool>,
     reports: usize,
 }
 
@@ -170,38 +174,93 @@ impl RemoteQuorum {
     pub fn new(nodes: usize, kappa: f64, tag: u64) -> RemoteQuorum {
         RemoteQuorum {
             tag,
+            kappa,
             threshold: quorum_threshold(nodes, kappa),
             seen: vec![false; nodes],
+            excluded: vec![false; nodes],
             reports: 0,
         }
     }
 
+    /// Exclude a permanently lost rank from the quorum: it stops counting
+    /// toward (and being counted in) the threshold, which is recomputed as
+    /// ⌈κ·survivors⌉ — the same rule over the shrunken cluster, so a fit
+    /// that re-shards a dead rank's block across survivors keeps the same
+    /// slow-node protection. A report already observed from the rank is
+    /// discarded (its pass can no longer contribute to the iteration).
+    /// Idempotent; excluding every peer leaves a self-quorum of one.
+    pub fn exclude(&mut self, rank: usize) {
+        if self.excluded[rank] {
+            return;
+        }
+        self.excluded[rank] = true;
+        if self.seen[rank] {
+            self.seen[rank] = false;
+            self.reports -= 1;
+        }
+        let survivors = self.excluded.iter().filter(|&&e| !e).count();
+        self.threshold = quorum_threshold(survivors.max(1), self.kappa);
+    }
+
+    /// Ranks this quorum has written off as permanently lost.
+    pub fn excluded_ranks(&self) -> Vec<usize> {
+        (0..self.excluded.len())
+            .filter(|&r| self.excluded[r])
+            .collect()
+    }
+
     /// This node finished one full pass over its block: broadcast it.
     /// Idempotent — repeated calls neither re-broadcast nor re-count.
-    pub fn report_full_pass(&mut self, t: &mut dyn Transport) {
+    /// A peer whose link is down is excluded on the spot rather than
+    /// failing the broadcast — the quorum keeps serving the survivors
+    /// (the iteration's blocking collective is where its death is fatal).
+    pub fn report_full_pass(&mut self, t: &mut dyn Transport) -> Result<(), TransportError> {
         let me = t.rank();
         if !self.seen[me] {
             self.seen[me] = true;
             self.reports += 1;
             for to in (0..t.size()).filter(|&r| r != me) {
-                t.send(to, self.tag, Vec::new());
-            }
-        }
-    }
-
-    /// Poll peers' pass-done frames; true once the κ quorum is met.
-    /// Duplicate frames from one rank are drained but never double-counted.
-    pub fn should_stop(&mut self, t: &mut dyn Transport) -> bool {
-        let me = t.rank();
-        for from in (0..t.size()).filter(|&r| r != me) {
-            while t.try_recv_from(from, self.tag).is_some() {
-                if !self.seen[from] {
-                    self.seen[from] = true;
-                    self.reports += 1;
+                if self.excluded[to] {
+                    continue;
+                }
+                if let Err(TransportError::PeerGone { peer }) = t.send(to, self.tag, Vec::new()) {
+                    self.exclude(peer);
                 }
             }
         }
-        self.reports >= self.threshold
+        Ok(())
+    }
+
+    /// Poll peers' pass-done frames; `Ok(true)` once the κ quorum is met.
+    /// Duplicate frames from one rank are drained but never double-counted.
+    /// A peer observed dead mid-poll is excluded (see [`exclude`]); only a
+    /// transport with no live peer left at all errors out.
+    ///
+    /// [`exclude`]: Self::exclude
+    pub fn should_stop(&mut self, t: &mut dyn Transport) -> Result<bool, TransportError> {
+        let me = t.rank();
+        for from in (0..t.size()).filter(|&r| r != me) {
+            if self.excluded[from] {
+                continue;
+            }
+            loop {
+                match t.try_recv_from(from, self.tag) {
+                    Ok(Some(_)) => {
+                        if !self.seen[from] {
+                            self.seen[from] = true;
+                            self.reports += 1;
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(TransportError::PeerGone { peer }) => {
+                        self.exclude(peer);
+                        break;
+                    }
+                    Err(e @ TransportError::AllPeersGone) => return Err(e),
+                }
+            }
+        }
+        Ok(self.reports >= self.threshold)
     }
 
     /// Distinct ranks whose full pass this quorum has observed so far.
@@ -224,7 +283,10 @@ impl RemoteQuorum {
 pub fn drain_retired_tag(t: &mut dyn Transport, tag: u64) {
     let me = t.rank();
     for from in (0..t.size()).filter(|&r| r != me) {
-        while t.try_recv_from(from, tag).is_some() {}
+        // A dead peer errors once its pending frames are exhausted — which
+        // for a drain is success, not failure: there is nothing left to
+        // discard and never will be.
+        while let Ok(Some(_)) = t.try_recv_from(from, tag) {}
     }
 }
 
@@ -272,16 +334,19 @@ pub enum AlbQuorum<'a> {
 }
 
 impl AlbQuorum<'_> {
-    pub fn report_full_pass(&mut self, t: &mut dyn Transport) {
+    pub fn report_full_pass(&mut self, t: &mut dyn Transport) -> Result<(), TransportError> {
         match self {
-            AlbQuorum::Shared(c) => c.report_full_pass(),
+            AlbQuorum::Shared(c) => {
+                c.report_full_pass();
+                Ok(())
+            }
             AlbQuorum::Remote(q) => q.report_full_pass(t),
         }
     }
 
-    pub fn should_stop(&mut self, t: &mut dyn Transport) -> bool {
+    pub fn should_stop(&mut self, t: &mut dyn Transport) -> Result<bool, TransportError> {
         match self {
-            AlbQuorum::Shared(c) => c.should_stop(),
+            AlbQuorum::Shared(c) => Ok(c.should_stop()),
             AlbQuorum::Remote(q) => q.should_stop(t),
         }
     }
@@ -449,13 +514,13 @@ mod tests {
                 assert_eq!(q.threshold(), 3);
                 if rank < 3 {
                     // Three fast nodes report; each must observe the quorum.
-                    q.report_full_pass(&mut ep);
-                    while !q.should_stop(&mut ep) {
+                    q.report_full_pass(&mut ep).unwrap();
+                    while !q.should_stop(&mut ep).unwrap() {
                         std::thread::yield_now();
                     }
                 } else {
                     // The straggler never reports but still sees the stop.
-                    while !q.should_stop(&mut ep) {
+                    while !q.should_stop(&mut ep).unwrap() {
                         std::thread::yield_now();
                     }
                 }
@@ -474,14 +539,18 @@ mod tests {
         let (e1, e0) = (eps.pop().unwrap(), eps.pop().unwrap());
         let mut e0 = e0;
         // Three late straggler frames on a retired tag, one on a live tag.
-        e1.send(0, 100, Vec::new());
-        e1.send(0, 100, Vec::new());
-        e1.send(0, 100, Vec::new());
-        e1.send(0, 200, vec![1.0]);
+        e1.send(0, 100, Vec::new()).unwrap();
+        e1.send(0, 100, Vec::new()).unwrap();
+        e1.send(0, 100, Vec::new()).unwrap();
+        e1.send(0, 200, vec![1.0]).unwrap();
         drain_retired_tag(&mut e0, 100);
-        assert_eq!(e0.try_recv_from(1, 100), None, "retired frames discarded");
         assert_eq!(
-            e0.try_recv_from(1, 200),
+            e0.try_recv_from(1, 100).unwrap(),
+            None,
+            "retired frames discarded"
+        );
+        assert_eq!(
+            e0.try_recv_from(1, 200).unwrap(),
             Some(vec![1.0]),
             "live-tag frames survive the drain"
         );
@@ -498,17 +567,78 @@ mod tests {
         let mut q = mode.begin_iteration(2, 10);
         assert_eq!(q.threshold(), 1);
         assert!(q.stop_flag().is_some());
-        assert!(!q.should_stop(&mut ep));
-        q.report_full_pass(&mut ep);
-        assert!(q.should_stop(&mut ep));
+        assert!(!q.should_stop(&mut ep).unwrap());
+        q.report_full_pass(&mut ep).unwrap();
+        assert!(q.should_stop(&mut ep).unwrap());
 
         // M = 1 remote quorum: own report is the whole quorum.
         let mode = AlbMode::Transport { kappa: 1.0 };
         let mut q = mode.begin_iteration(1, 20);
         assert!(q.stop_flag().is_none());
-        assert!(!q.should_stop(&mut ep));
-        q.report_full_pass(&mut ep);
-        assert!(q.should_stop(&mut ep));
+        assert!(!q.should_stop(&mut ep).unwrap());
+        q.report_full_pass(&mut ep).unwrap();
+        assert!(q.should_stop(&mut ep).unwrap());
+    }
+
+    #[test]
+    fn exclusion_shrinks_the_quorum_universe() {
+        // M = 4, κ = 0.75 → threshold 3. Excluding one rank recomputes the
+        // rule over 3 survivors: ⌈0.75·3⌉ = 3 (every survivor must report).
+        let mut q = RemoteQuorum::new(4, 0.75, 0);
+        assert_eq!(q.threshold(), 3);
+        q.exclude(3);
+        assert_eq!(q.threshold(), 3);
+        assert_eq!(q.excluded_ranks(), vec![3]);
+        // κ = 0.5: 4 → 2, exclude → ⌈0.5·3⌉ = 2, exclude again → ⌈0.5·2⌉ = 1.
+        let mut q = RemoteQuorum::new(4, 0.5, 0);
+        assert_eq!(q.threshold(), 2);
+        q.exclude(1);
+        assert_eq!(q.threshold(), 2);
+        q.exclude(2);
+        assert_eq!(q.threshold(), 1);
+        q.exclude(2); // idempotent
+        assert_eq!(q.threshold(), 1);
+        assert_eq!(q.excluded_ranks(), vec![1, 2]);
+    }
+
+    #[test]
+    fn exclusion_discards_the_dead_ranks_report() {
+        use crate::cluster::fabric::{fabric, NetworkModel};
+        let m = 4;
+        let (mut eps, _) = fabric(m, NetworkModel::default());
+        let mut e0 = eps.remove(0);
+        // Ranks 1 and 2 report, then rank 1 is written off: its counted
+        // report must be withdrawn, and with κ = 1.0 over 3 survivors the
+        // quorum needs all three — one live report is not enough.
+        let mut q1 = RemoteQuorum::new(m, 1.0, 9);
+        let mut q2 = RemoteQuorum::new(m, 1.0, 9);
+        q1.report_full_pass(&mut eps[0]).unwrap();
+        q2.report_full_pass(&mut eps[1]).unwrap();
+        let mut q = RemoteQuorum::new(m, 1.0, 9);
+        assert!(!q.should_stop(&mut e0).unwrap());
+        assert_eq!(q.reports(), 2);
+        q.exclude(1);
+        assert_eq!(q.reports(), 1);
+        assert_eq!(q.threshold(), 3);
+        assert!(!q.should_stop(&mut e0).unwrap());
+    }
+
+    #[test]
+    fn dead_peer_is_auto_excluded_on_broadcast() {
+        use crate::cluster::fabric::{fabric, NetworkModel};
+        // 2 ranks, κ = 1.0 → threshold 2. Rank 1 dies before reporting;
+        // rank 0's broadcast notices, excludes it, and its own report then
+        // satisfies the recomputed self-quorum of 1 — the job survives.
+        let (mut eps, _) = fabric(2, NetworkModel::default());
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        drop(e1);
+        let mut q = RemoteQuorum::new(2, 1.0, 5);
+        assert_eq!(q.threshold(), 2);
+        q.report_full_pass(&mut e0).unwrap();
+        assert_eq!(q.excluded_ranks(), vec![1]);
+        assert_eq!(q.threshold(), 1);
+        assert!(q.should_stop(&mut e0).unwrap());
     }
 
     #[test]

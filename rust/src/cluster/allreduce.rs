@@ -13,7 +13,7 @@
 //! must use distinct bases per logical collective (the coordinator derives
 //! them from the iteration counter).
 
-use crate::cluster::transport::Transport;
+use crate::cluster::transport::{Transport, TransportError};
 
 /// Which collective algorithm to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,7 +41,14 @@ impl AllReduceAlgo {
 
 /// In-place allreduce-sum of `data` across all endpoints (SPMD: every rank
 /// calls this with its local contribution; all ranks return the global sum).
-pub fn allreduce_sum(t: &mut dyn Transport, tag_base: u64, data: &mut [f64], algo: AllReduceAlgo) {
+/// Errors with the transport's typed error if a peer dies mid-collective —
+/// `data` is then left partially reduced and must not be used.
+pub fn allreduce_sum(
+    t: &mut dyn Transport,
+    tag_base: u64,
+    data: &mut [f64],
+    algo: AllReduceAlgo,
+) -> Result<(), TransportError> {
     match algo {
         AllReduceAlgo::Naive => naive(t, tag_base, data),
         AllReduceAlgo::Ring => ring(t, tag_base, data),
@@ -57,70 +64,74 @@ pub fn allreduce_sum(t: &mut dyn Transport, tag_base: u64, data: &mut [f64], alg
 /// keeps that contract pinned to the public entry point — the
 /// `scalar_matches_one_element_vector_under_both_algos` regression test
 /// checks it against both algorithms.
-pub fn allreduce_scalar(t: &mut dyn Transport, tag_base: u64, x: f64) -> f64 {
+pub fn allreduce_scalar(
+    t: &mut dyn Transport,
+    tag_base: u64,
+    x: f64,
+) -> Result<f64, TransportError> {
     let mut v = [x];
-    allreduce_sum(t, tag_base, &mut v, AllReduceAlgo::Naive);
-    v[0]
+    allreduce_sum(t, tag_base, &mut v, AllReduceAlgo::Naive)?;
+    Ok(v[0])
 }
 
 /// AllReduce with max instead of sum (used for the virtual cluster clock:
 /// the slowest node's compute time bounds the iteration).
-pub fn allreduce_max(t: &mut dyn Transport, tag_base: u64, x: f64) -> f64 {
+pub fn allreduce_max(t: &mut dyn Transport, tag_base: u64, x: f64) -> Result<f64, TransportError> {
     let m = t.size();
     if m == 1 {
-        return x;
+        return Ok(x);
     }
     if t.rank() == 0 {
         let mut best = x;
         for from in 1..m {
-            let part = t.recv_from(from, tag_base);
+            let part = t.recv_from(from, tag_base)?;
             best = best.max(part[0]);
         }
         for to in 1..m {
-            t.send(to, tag_base + 1, vec![best]);
+            t.send(to, tag_base + 1, vec![best])?;
         }
-        best
+        Ok(best)
     } else {
-        t.send(0, tag_base, vec![x]);
-        t.recv_from(0, tag_base + 1)[0]
+        t.send(0, tag_base, vec![x])?;
+        Ok(t.recv_from(0, tag_base + 1)?[0])
     }
 }
 
-fn naive(t: &mut dyn Transport, tag_base: u64, data: &mut [f64]) {
+fn naive(t: &mut dyn Transport, tag_base: u64, data: &mut [f64]) -> Result<(), TransportError> {
     let m = t.size();
     if m == 1 {
-        return;
+        return Ok(());
     }
     if t.rank() == 0 {
         for from in 1..m {
-            let part = t.recv_from(from, tag_base);
+            let part = t.recv_from(from, tag_base)?;
             debug_assert_eq!(part.len(), data.len());
             for (d, p) in data.iter_mut().zip(part.iter()) {
                 *d += p;
             }
         }
         for to in 1..m {
-            t.send(to, tag_base + 1, data.to_vec());
+            t.send(to, tag_base + 1, data.to_vec())?;
         }
     } else {
-        t.send(0, tag_base, data.to_vec());
-        let total = t.recv_from(0, tag_base + 1);
+        t.send(0, tag_base, data.to_vec())?;
+        let total = t.recv_from(0, tag_base + 1)?;
         data.copy_from_slice(&total);
     }
+    Ok(())
 }
 
 /// Ring allreduce: reduce-scatter then allgather. Chunk c ends up fully
 /// reduced at rank (c + 1) mod M after M−1 reduce steps, then circulates.
-fn ring(t: &mut dyn Transport, tag_base: u64, data: &mut [f64]) {
+fn ring(t: &mut dyn Transport, tag_base: u64, data: &mut [f64]) -> Result<(), TransportError> {
     let m = t.size();
     if m == 1 {
-        return;
+        return Ok(());
     }
     let n = data.len();
     if n < m {
         // Degenerate chunking — fall back to naive.
-        naive(t, tag_base, data);
-        return;
+        return naive(t, tag_base, data);
     }
     let rank = t.rank();
     let next = (rank + 1) % m;
@@ -136,8 +147,8 @@ fn ring(t: &mut dyn Transport, tag_base: u64, data: &mut [f64]) {
         let send_c = (rank + m - s) % m;
         let recv_c = (rank + m - s - 1) % m;
         let (slo, shi) = bounds(send_c);
-        t.send(next, tag_base + s as u64, data[slo..shi].to_vec());
-        let part = t.recv_from(prev, tag_base + s as u64);
+        t.send(next, tag_base + s as u64, data[slo..shi].to_vec())?;
+        let part = t.recv_from(prev, tag_base + s as u64)?;
         let (rlo, rhi) = bounds(recv_c);
         debug_assert_eq!(part.len(), rhi - rlo);
         for (d, p) in data[rlo..rhi].iter_mut().zip(part.iter()) {
@@ -149,11 +160,12 @@ fn ring(t: &mut dyn Transport, tag_base: u64, data: &mut [f64]) {
         let send_c = (rank + 1 + m - s) % m;
         let recv_c = (rank + m - s) % m;
         let (slo, shi) = bounds(send_c);
-        t.send(next, tag_base + (m + s) as u64, data[slo..shi].to_vec());
-        let part = t.recv_from(prev, tag_base + (m + s) as u64);
+        t.send(next, tag_base + (m + s) as u64, data[slo..shi].to_vec())?;
+        let part = t.recv_from(prev, tag_base + (m + s) as u64)?;
         let (rlo, rhi) = bounds(recv_c);
         data[rlo..rhi].copy_from_slice(&part);
     }
+    Ok(())
 }
 
 /// Number of distinct tags one allreduce call may consume — callers space
@@ -187,7 +199,7 @@ mod tests {
                 s.spawn(move |_| {
                     let mut ep = ep;
                     let mut data = inp;
-                    allreduce_sum(&mut ep, 1000, &mut data, algo);
+                    allreduce_sum(&mut ep, 1000, &mut data, algo).unwrap();
                     prop::all_close(&data, &want, 1e-12)
                         .unwrap_or_else(|e| panic!("rank {}: {e}", ep.rank));
                 });
@@ -231,7 +243,7 @@ mod tests {
                 s.spawn(move |_| {
                     let mut ep = ep;
                     let rank = ep.rank as f64;
-                    let total = allreduce_scalar(&mut ep, 0, rank + 1.0);
+                    let total = allreduce_scalar(&mut ep, 0, rank + 1.0).unwrap();
                     assert_eq!(total, 10.0); // 1+2+3+4
                 });
             }
@@ -250,7 +262,7 @@ mod tests {
                     s.spawn(move |_| {
                         let mut ep = ep;
                         let mut data = vec![1.0; n];
-                        allreduce_sum(&mut ep, 0, &mut data, algo);
+                        allreduce_sum(&mut ep, 0, &mut data, algo).unwrap();
                     });
                 }
             })
@@ -292,11 +304,13 @@ mod tests {
                     s.spawn(move |_| {
                         let mut ep = ep;
                         let x = (ep.rank as f64 + 1.0) * 0.25;
-                        let scalar = allreduce_scalar(&mut ep, 0, x);
+                        let scalar = allreduce_scalar(&mut ep, 0, x).unwrap();
                         let mut v_naive = [x];
-                        allreduce_sum(&mut ep, TAG_STRIDE, &mut v_naive, AllReduceAlgo::Naive);
+                        allreduce_sum(&mut ep, TAG_STRIDE, &mut v_naive, AllReduceAlgo::Naive)
+                            .unwrap();
                         let mut v_ring = [x];
-                        allreduce_sum(&mut ep, 2 * TAG_STRIDE, &mut v_ring, AllReduceAlgo::Ring);
+                        allreduce_sum(&mut ep, 2 * TAG_STRIDE, &mut v_ring, AllReduceAlgo::Ring)
+                            .unwrap();
                         assert_eq!(scalar, v_naive[0], "scalar vs naive, m={m}");
                         assert_eq!(scalar, v_ring[0], "scalar vs ring, m={m}");
                         let want: f64 = (1..=m).map(|r| r as f64 * 0.25).sum();
@@ -318,8 +332,8 @@ mod tests {
                     let mut ep = ep;
                     let mut a = vec![ep.rank as f64];
                     let mut b = vec![10.0 * (ep.rank as f64 + 1.0)];
-                    allreduce_sum(&mut ep, 0, &mut a, AllReduceAlgo::Naive);
-                    allreduce_sum(&mut ep, TAG_STRIDE, &mut b, AllReduceAlgo::Naive);
+                    allreduce_sum(&mut ep, 0, &mut a, AllReduceAlgo::Naive).unwrap();
+                    allreduce_sum(&mut ep, TAG_STRIDE, &mut b, AllReduceAlgo::Naive).unwrap();
                     assert_eq!(a, vec![3.0]); // 0+1+2
                     assert_eq!(b, vec![60.0]); // 10+20+30
                 });

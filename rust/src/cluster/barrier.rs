@@ -4,28 +4,31 @@
 //! generation reset, is gone). Gather to rank 0 then broadcast:
 //! 2(M−1) empty frames.
 
-use crate::cluster::transport::Transport;
+use crate::cluster::transport::{Transport, TransportError};
 
 /// Message-based barrier over a [`Transport`]: every rank blocks until all
 /// M ranks have entered. Consumes tags `tag_base` and `tag_base + 1`;
 /// callers must space distinct barriers by at least 2 tags (the coordinator
 /// uses the shared `TAG_STRIDE` allocator, which leaves plenty of room).
-pub fn transport_barrier(t: &mut dyn Transport, tag_base: u64) {
+/// A peer dying while the barrier is held propagates as the transport's
+/// typed error — the barrier can never complete once a rank is gone.
+pub fn transport_barrier(t: &mut dyn Transport, tag_base: u64) -> Result<(), TransportError> {
     let m = t.size();
     if m == 1 {
-        return;
+        return Ok(());
     }
     if t.rank() == 0 {
         for from in 1..m {
-            t.recv_from(from, tag_base);
+            t.recv_from(from, tag_base)?;
         }
         for to in 1..m {
-            t.send(to, tag_base + 1, Vec::new());
+            t.send(to, tag_base + 1, Vec::new())?;
         }
     } else {
-        t.send(0, tag_base, Vec::new());
-        t.recv_from(0, tag_base + 1);
+        t.send(0, tag_base, Vec::new())?;
+        t.recv_from(0, tag_base + 1)?;
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -48,10 +51,10 @@ mod tests {
                 // Stagger arrivals so the barrier actually has to hold.
                 std::thread::sleep(std::time::Duration::from_millis(5 * ep.rank as u64));
                 arrived.fetch_add(1, Ordering::SeqCst);
-                transport_barrier(&mut ep, 100);
+                transport_barrier(&mut ep, 100).unwrap();
                 assert_eq!(arrived.load(Ordering::SeqCst), m);
                 // Reusable: a second barrier on fresh tags also completes.
-                transport_barrier(&mut ep, 200);
+                transport_barrier(&mut ep, 200).unwrap();
             }));
         }
         for h in handles {

@@ -1,0 +1,496 @@
+//! Deterministic per-iteration checkpoints — the persistence half of the
+//! elastic fault-tolerance story (DESIGN.md §Failure model).
+//!
+//! A checkpoint captures everything the SPMD train loop needs to resume an
+//! interrupted fit *bit-identically* (the hybrid-parallelism PR made every
+//! execution shape deterministic, which is what makes exact resume
+//! feasible): the SPMD-identical globals (outer iteration, adaptive-μ
+//! state, stall counter, current objective, the synced margin vector Xβ)
+//! plus every rank's private block (β^m, the cyclic CD cursor, and the
+//! hybrid sub-block cursors). Working stats (w, z, loss) are *derived* from
+//! the margins by the same deterministic code on resume, and the
+//! regularizer value re-allreduces to the same bits, so none of them are
+//! stored.
+//!
+//! Rank 0 writes one file per checkpointed iteration — `ckpt-{iter:08}.bin`
+//! under `--checkpoint-dir` — via a temp-file + rename so a crash mid-write
+//! can never leave a half-written file under the final name. On recovery
+//! the coordinator takes [`latest`](Checkpoint::latest): newest file that
+//! parses completely (older complete checkpoints survive as fallbacks).
+//!
+//! The format is a tiny fixed little-endian binary layout (no serde — the
+//! container bakes in no such dependency): magic `DGCK`, format version,
+//! the globals, the margin vector, then the per-rank blocks, closed by an
+//! end marker. A `lambda_idx` slot is reserved so a future PR can extend
+//! checkpointing to λ-path sweeps without a format break (path jobs
+//! currently reject `--checkpoint-dir` up front).
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// File magic: "DGCK".
+const MAGIC: [u8; 4] = *b"DGCK";
+/// Format version (bump on layout changes).
+const FORMAT_VERSION: u32 = 1;
+/// Trailing end marker proving the write ran to completion.
+const END_MARKER: u64 = 0x444B_4345_4E44_4B43;
+
+/// Reserved fixed tag the coordinator uses to ship each surviving rank its
+/// [`ResumePoint`] right after mesh formation, before the worker's
+/// `TAG_STRIDE` allocator starts. Spaced well clear of the other reserved
+/// tags near `u64::MAX` (poison, gather).
+pub const RESUME_TAG: u64 = u64::MAX - 24;
+
+/// One rank's private slice of a checkpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankBlock {
+    /// Cyclic CD cursor into the rank's block (mid-block under ALB).
+    pub cursor: usize,
+    /// Hybrid sub-block cursors (empty on the classic single-thread path).
+    pub sub_cursors: Vec<usize>,
+    /// The rank's local weights β^m.
+    pub beta: Vec<f64>,
+}
+
+/// A complete cluster checkpoint: the SPMD globals plus all M rank blocks.
+/// Holding *every* rank's β is what makes re-shard-on-exclusion possible —
+/// the coordinator can reassemble the full β and re-partition it across
+/// M−1 survivors without the dead rank's cooperation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Outer iteration this state is the end of (resume starts at iter+1).
+    pub iter: usize,
+    /// Convergence stall counter at the end of that iteration.
+    pub stall: usize,
+    /// Adaptive-μ value entering the next iteration.
+    pub mu: f64,
+    /// Objective f(β) at the end of the iteration.
+    pub f_cur: f64,
+    /// Reserved for λ-path position (0 for train jobs).
+    pub lambda_idx: u64,
+    /// The synced margin vector Xβ (SPMD-identical on every rank).
+    pub margins: Vec<f64>,
+    /// Per-rank private state, indexed by rank.
+    pub ranks: Vec<RankBlock>,
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Sequential little-endian reader over a checkpoint image.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "truncated checkpoint: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        let s = self.take(8)?;
+        Ok(f64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn usize_bounded(&mut self, what: &str, max: u64) -> Result<usize, String> {
+        let v = self.u64()?;
+        if v > max {
+            return Err(format!("{what} {v} exceeds sanity bound {max}"));
+        }
+        Ok(v as usize)
+    }
+}
+
+/// Sanity bound on vector lengths read from disk — generous for any real
+/// dataset, small enough that a corrupt length can't trigger an OOM
+/// allocation before the truncation check fires.
+const MAX_LEN: u64 = 1 << 40;
+
+impl Checkpoint {
+    /// Serialize to the fixed little-endian layout (bit-exact round-trip:
+    /// f64 travels as raw `to_le_bytes`).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(
+            64 + 8 * self.margins.len()
+                + self
+                    .ranks
+                    .iter()
+                    .map(|r| 24 + 8 * (r.sub_cursors.len() + r.beta.len()))
+                    .sum::<usize>(),
+        );
+        buf.extend_from_slice(&MAGIC);
+        buf.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        push_u64(&mut buf, self.iter as u64);
+        push_u64(&mut buf, self.stall as u64);
+        push_u64(&mut buf, self.lambda_idx);
+        push_f64(&mut buf, self.mu);
+        push_f64(&mut buf, self.f_cur);
+        push_u64(&mut buf, self.margins.len() as u64);
+        for &m in &self.margins {
+            push_f64(&mut buf, m);
+        }
+        push_u64(&mut buf, self.ranks.len() as u64);
+        for r in &self.ranks {
+            push_u64(&mut buf, r.cursor as u64);
+            push_u64(&mut buf, r.sub_cursors.len() as u64);
+            for &c in &r.sub_cursors {
+                push_u64(&mut buf, c as u64);
+            }
+            push_u64(&mut buf, r.beta.len() as u64);
+            for &b in &r.beta {
+                push_f64(&mut buf, b);
+            }
+        }
+        push_u64(&mut buf, END_MARKER);
+        buf
+    }
+
+    /// Parse a checkpoint image; any truncation, bad magic, or missing end
+    /// marker is an error (the recovery scan treats it as "incomplete —
+    /// fall back to an older file").
+    pub fn from_bytes(buf: &[u8]) -> Result<Checkpoint, String> {
+        let mut r = Reader { buf, pos: 0 };
+        if r.take(4)? != MAGIC {
+            return Err("bad checkpoint magic".to_string());
+        }
+        let version = u32::from_le_bytes(r.take(4)?.try_into().unwrap());
+        if version != FORMAT_VERSION {
+            return Err(format!(
+                "checkpoint format v{version}, this build reads v{FORMAT_VERSION}"
+            ));
+        }
+        let iter = r.usize_bounded("iter", MAX_LEN)?;
+        let stall = r.usize_bounded("stall", MAX_LEN)?;
+        let lambda_idx = r.u64()?;
+        let mu = r.f64()?;
+        let f_cur = r.f64()?;
+        let n = r.usize_bounded("margin length", MAX_LEN)?;
+        let mut margins = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            margins.push(r.f64()?);
+        }
+        let m = r.usize_bounded("rank count", 1 << 20)?;
+        let mut ranks = Vec::with_capacity(m.min(1 << 10));
+        for _ in 0..m {
+            let cursor = r.usize_bounded("cursor", MAX_LEN)?;
+            let k = r.usize_bounded("sub-cursor count", 1 << 20)?;
+            let mut sub_cursors = Vec::with_capacity(k.min(1 << 10));
+            for _ in 0..k {
+                sub_cursors.push(r.usize_bounded("sub-cursor", MAX_LEN)?);
+            }
+            let p = r.usize_bounded("beta length", MAX_LEN)?;
+            let mut beta = Vec::with_capacity(p.min(1 << 20));
+            for _ in 0..p {
+                beta.push(r.f64()?);
+            }
+            ranks.push(RankBlock {
+                cursor,
+                sub_cursors,
+                beta,
+            });
+        }
+        if r.u64()? != END_MARKER {
+            return Err("checkpoint end marker missing (incomplete write)".to_string());
+        }
+        Ok(Checkpoint {
+            iter,
+            stall,
+            mu,
+            f_cur,
+            lambda_idx,
+            margins,
+            ranks,
+        })
+    }
+
+    /// File name a checkpoint of iteration `iter` is stored under —
+    /// zero-padded so lexicographic order is iteration order.
+    pub fn file_name(iter: usize) -> String {
+        format!("ckpt-{iter:08}.bin")
+    }
+
+    /// Atomically persist under `dir` (created if missing): the image goes
+    /// to a dot-prefixed temp file first, then an atomic rename publishes
+    /// it — a crash mid-write can never leave a torn file under the final
+    /// name, so `latest` only ever sees complete or absent checkpoints.
+    pub fn write_atomic(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        fs::create_dir_all(dir)?;
+        let final_path = dir.join(Self::file_name(self.iter));
+        let tmp_path = dir.join(format!(".ckpt-{:08}.tmp", self.iter));
+        {
+            let mut f = fs::File::create(&tmp_path)?;
+            f.write_all(&self.to_bytes())?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp_path, &final_path)?;
+        Ok(final_path)
+    }
+
+    /// Newest complete checkpoint under `dir`: scan `ckpt-*.bin` names
+    /// descending and return the first that parses end-to-end, skipping
+    /// anything truncated or corrupt. `None` if the directory holds no
+    /// loadable checkpoint (or doesn't exist).
+    pub fn latest(dir: &Path) -> Option<(PathBuf, Checkpoint)> {
+        let entries = fs::read_dir(dir).ok()?;
+        let mut names: Vec<String> = entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.starts_with("ckpt-") && n.ends_with(".bin"))
+            .collect();
+        names.sort_unstable();
+        for name in names.into_iter().rev() {
+            let path = dir.join(&name);
+            if let Ok(bytes) = fs::read(&path) {
+                if let Ok(ck) = Checkpoint::from_bytes(&bytes) {
+                    return Some((path, ck));
+                }
+            }
+        }
+        None
+    }
+
+    /// Extract the resume payload for one rank (globals + that rank's
+    /// private block).
+    pub fn resume_point(&self, rank: usize) -> ResumePoint {
+        let b = &self.ranks[rank];
+        ResumePoint {
+            iter: self.iter,
+            stall: self.stall,
+            mu: self.mu,
+            f_cur: self.f_cur,
+            margins: self.margins.clone(),
+            cursor: b.cursor,
+            sub_cursors: b.sub_cursors.clone(),
+            beta: b.beta.clone(),
+        }
+    }
+}
+
+/// What one rank needs to resume mid-fit — the coordinator derives one per
+/// surviving rank from the loaded [`Checkpoint`] (re-sharding first if a
+/// rank was excluded) and ships it over [`RESUME_TAG`] on the TCP path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResumePoint {
+    pub iter: usize,
+    pub stall: usize,
+    pub mu: f64,
+    pub f_cur: f64,
+    pub margins: Vec<f64>,
+    pub cursor: usize,
+    pub sub_cursors: Vec<usize>,
+    pub beta: Vec<f64>,
+}
+
+impl ResumePoint {
+    /// Encode as one f64 vector for a transport send: the header counters
+    /// ride as exact small integers (all < 2^53), the float payload as raw
+    /// values — `unflatten` restores every field bit-for-bit.
+    pub fn flatten(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(
+            7 + self.margins.len() + self.sub_cursors.len() + self.beta.len(),
+        );
+        v.push(self.iter as f64);
+        v.push(self.stall as f64);
+        v.push(self.mu);
+        v.push(self.f_cur);
+        v.push(self.margins.len() as f64);
+        v.extend_from_slice(&self.margins);
+        v.push(self.cursor as f64);
+        v.push(self.sub_cursors.len() as f64);
+        v.extend(self.sub_cursors.iter().map(|&c| c as f64));
+        v.push(self.beta.len() as f64);
+        v.extend_from_slice(&self.beta);
+        v
+    }
+
+    /// Inverse of [`flatten`](Self::flatten).
+    pub fn unflatten(v: &[f64]) -> Result<ResumePoint, String> {
+        fn scalar(v: &[f64], pos: &mut usize, what: &str) -> Result<f64, String> {
+            let x = *v
+                .get(*pos)
+                .ok_or_else(|| format!("resume payload truncated at {what}"))?;
+            *pos += 1;
+            Ok(x)
+        }
+        fn count(v: &[f64], pos: &mut usize, what: &str) -> Result<usize, String> {
+            let x = scalar(v, pos, what)?;
+            if !(x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x < MAX_LEN as f64) {
+                return Err(format!("resume payload: bad {what} {x}"));
+            }
+            Ok(x as usize)
+        }
+        fn slice(v: &[f64], pos: &mut usize, n: usize, what: &str) -> Result<Vec<f64>, String> {
+            if *pos + n > v.len() {
+                return Err(format!("resume payload truncated in {what}"));
+            }
+            let out = v[*pos..*pos + n].to_vec();
+            *pos += n;
+            Ok(out)
+        }
+        let mut pos = 0usize;
+        let iter = count(v, &mut pos, "iter")?;
+        let stall = count(v, &mut pos, "stall")?;
+        let mu = scalar(v, &mut pos, "mu")?;
+        let f_cur = scalar(v, &mut pos, "f_cur")?;
+        let n = count(v, &mut pos, "margin length")?;
+        let margins = slice(v, &mut pos, n, "margins")?;
+        let cursor = count(v, &mut pos, "cursor")?;
+        let k = count(v, &mut pos, "sub-cursor count")?;
+        let mut sub_cursors = Vec::with_capacity(k.min(1 << 10));
+        for _ in 0..k {
+            sub_cursors.push(count(v, &mut pos, "sub-cursor")?);
+        }
+        let p = count(v, &mut pos, "beta length")?;
+        let beta = slice(v, &mut pos, p, "beta")?;
+        if pos != v.len() {
+            return Err(format!(
+                "resume payload has {} trailing values",
+                v.len() - pos
+            ));
+        }
+        Ok(ResumePoint {
+            iter,
+            stall,
+            mu,
+            f_cur,
+            margins,
+            cursor,
+            sub_cursors,
+            beta,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            iter: 12,
+            stall: 1,
+            mu: 0.5,
+            f_cur: 0.482_913_771,
+            lambda_idx: 0,
+            margins: vec![0.25, -1.5, f64::MIN_POSITIVE, 3.75e300],
+            ranks: vec![
+                RankBlock {
+                    cursor: 3,
+                    sub_cursors: vec![],
+                    beta: vec![0.1, -0.2, 0.0],
+                },
+                RankBlock {
+                    cursor: 0,
+                    sub_cursors: vec![1, 0],
+                    beta: vec![1.5e-17, 2.0],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip_is_bit_exact() {
+        let ck = sample();
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back, ck);
+        // Bit-exactness beyond PartialEq: raw bit patterns survive.
+        assert_eq!(
+            back.margins[2].to_bits(),
+            f64::MIN_POSITIVE.to_bits()
+        );
+    }
+
+    #[test]
+    fn truncated_and_corrupt_images_are_rejected() {
+        let bytes = sample().to_bytes();
+        for cut in [0, 3, 4, 10, bytes.len() - 8, bytes.len() - 1] {
+            assert!(
+                Checkpoint::from_bytes(&bytes[..cut]).is_err(),
+                "cut at {cut} accepted"
+            );
+        }
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Checkpoint::from_bytes(&bad).is_err(), "bad magic accepted");
+        let mut bad = bytes;
+        let last = bad.len() - 1;
+        bad[last] ^= 0xff;
+        assert!(
+            Checkpoint::from_bytes(&bad).is_err(),
+            "bad end marker accepted"
+        );
+    }
+
+    #[test]
+    fn latest_prefers_newest_complete_file() {
+        let dir = std::env::temp_dir().join(format!("dgck-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let mut ck = sample();
+        ck.iter = 4;
+        ck.write_atomic(&dir).unwrap();
+        ck.iter = 8;
+        ck.f_cur = 0.25;
+        ck.write_atomic(&dir).unwrap();
+        // A torn newer write under the final name must be skipped.
+        fs::write(dir.join(Checkpoint::file_name(12)), b"DGCKgarbage").unwrap();
+        let (path, got) = Checkpoint::latest(&dir).unwrap();
+        assert_eq!(got.iter, 8);
+        assert_eq!(got.f_cur, 0.25);
+        assert!(path.ends_with(Checkpoint::file_name(8)));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_on_missing_or_empty_dir_is_none() {
+        let dir = std::env::temp_dir().join(format!("dgck-none-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        assert!(Checkpoint::latest(&dir).is_none());
+        fs::create_dir_all(&dir).unwrap();
+        assert!(Checkpoint::latest(&dir).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_point_flatten_roundtrip() {
+        let ck = sample();
+        for rank in 0..ck.ranks.len() {
+            let rp = ck.resume_point(rank);
+            let back = ResumePoint::unflatten(&rp.flatten()).unwrap();
+            assert_eq!(back, rp);
+        }
+    }
+
+    #[test]
+    fn unflatten_rejects_malformed_payloads() {
+        let rp = sample().resume_point(1);
+        let flat = rp.flatten();
+        assert!(ResumePoint::unflatten(&flat[..flat.len() - 1]).is_err());
+        let mut extra = flat.clone();
+        extra.push(0.0);
+        assert!(ResumePoint::unflatten(&extra).is_err());
+        let mut nan_count = flat;
+        nan_count[0] = f64::NAN; // iter
+        assert!(ResumePoint::unflatten(&nan_count).is_err());
+    }
+}

@@ -14,6 +14,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
+use crate::cluster::transport::TransportError;
+
 /// A tagged message between nodes. Payloads are f64 vectors (the only thing
 /// d-GLMNET ever ships: XΔβ chunks, regularizer partial sums, scalars).
 #[derive(Debug)]
@@ -144,15 +146,25 @@ pub fn fabric(nodes: usize, model: NetworkModel) -> (Vec<Endpoint>, Arc<FabricSt
     let endpoints = receivers
         .into_iter()
         .enumerate()
-        .map(|(rank, receiver)| Endpoint {
-            rank,
-            nodes,
-            senders: senders.clone(),
-            receiver,
-            pending: HashMap::new(),
-            stats: Arc::clone(&stats),
-            model,
-            sent_tags: RefCell::new(BTreeMap::new()),
+        .map(|(rank, receiver)| {
+            // Replace the self-sender with a disconnected one: no collective
+            // self-sends (the TCP backend asserts the same), and it means a
+            // mailbox's live senders are exactly the surviving peers — so a
+            // fully-dead peer set surfaces as `AllPeersGone` instead of a
+            // hang on a channel the rank itself keeps alive.
+            let mut senders = senders.clone();
+            let (dead_tx, _) = channel();
+            senders[rank] = dead_tx;
+            Endpoint {
+                rank,
+                nodes,
+                senders,
+                receiver,
+                pending: HashMap::new(),
+                stats: Arc::clone(&stats),
+                model,
+                sent_tags: RefCell::new(BTreeMap::new()),
+            }
         })
         .collect();
     (endpoints, stats)
@@ -162,8 +174,21 @@ impl Endpoint {
     /// Send a tagged payload to `to`. Accounts bytes under the shared
     /// [`frame_bytes`](crate::cluster::transport::frame_bytes) formula
     /// (8 per f64 + a fixed 16-byte header, mirroring an MPI envelope).
-    pub fn send(&self, to: usize, tag: u64, data: Vec<f64>) {
+    /// A dropped peer endpoint (its mailbox receiver is gone) surfaces as
+    /// [`TransportError::PeerGone`]; nothing is accounted for failed sends.
+    pub fn send(&self, to: usize, tag: u64, data: Vec<f64>) -> Result<(), TransportError> {
         let bytes = crate::cluster::transport::frame_bytes(data.len()) as usize;
+        if self
+            .senders[to]
+            .send(Msg {
+                from: self.rank,
+                tag,
+                data,
+            })
+            .is_err()
+        {
+            return Err(TransportError::PeerGone { peer: to });
+        }
         let idx = self.rank * self.nodes + to;
         self.stats.bytes[idx].fetch_add(bytes as u64, Ordering::Relaxed);
         self.stats.msgs[idx].fetch_add(1, Ordering::Relaxed);
@@ -180,13 +205,7 @@ impl Endpoint {
         if self.model.sleep && cost > 0.0 {
             std::thread::sleep(std::time::Duration::from_secs_f64(cost));
         }
-        self.senders[to]
-            .send(Msg {
-                from: self.rank,
-                tag,
-                data,
-            })
-            .expect("fabric peer hung up");
+        Ok(())
     }
 
     /// Pop the oldest parked message for `(from, tag)`, if any.
@@ -203,15 +222,22 @@ impl Endpoint {
     }
 
     /// Blocking receive of the next message from `from` with tag `tag`;
-    /// other messages arriving meanwhile are parked.
-    pub fn recv_from(&mut self, from: usize, tag: u64) -> Vec<f64> {
+    /// other messages arriving meanwhile are parked. When every peer
+    /// endpoint has been dropped (the shared mailbox has no live senders)
+    /// this errors with [`TransportError::AllPeersGone`] — the mpsc fabric
+    /// cannot attribute the hang-up to one rank, only observe that nothing
+    /// can ever arrive again. Parked messages stay deliverable regardless.
+    pub fn recv_from(&mut self, from: usize, tag: u64) -> Result<Vec<f64>, TransportError> {
         if let Some(data) = self.take_pending((from, tag)) {
-            return data;
+            return Ok(data);
         }
         loop {
-            let msg = self.receiver.recv().expect("fabric peer hung up");
+            let msg = match self.receiver.recv() {
+                Ok(m) => m,
+                Err(_) => return Err(TransportError::AllPeersGone),
+            };
             if msg.from == from && msg.tag == tag {
-                return msg.data;
+                return Ok(msg.data);
             }
             self.pending
                 .entry((msg.from, msg.tag))
@@ -222,20 +248,33 @@ impl Endpoint {
 
     /// Non-blocking receive: drains the mailbox, parking mismatches, and
     /// returns the first message matching `(from, tag)` if one has arrived.
-    pub fn try_recv_from(&mut self, from: usize, tag: u64) -> Option<Vec<f64>> {
+    /// `Ok(None)` means nothing yet; [`TransportError::AllPeersGone`] means
+    /// nothing pending matches and no sender is left alive to produce more.
+    pub fn try_recv_from(
+        &mut self,
+        from: usize,
+        tag: u64,
+    ) -> Result<Option<Vec<f64>>, TransportError> {
         if let Some(data) = self.take_pending((from, tag)) {
-            return Some(data);
+            return Ok(Some(data));
         }
-        while let Ok(msg) = self.receiver.try_recv() {
-            if msg.from == from && msg.tag == tag {
-                return Some(msg.data);
+        loop {
+            match self.receiver.try_recv() {
+                Ok(msg) => {
+                    if msg.from == from && msg.tag == tag {
+                        return Ok(Some(msg.data));
+                    }
+                    self.pending
+                        .entry((msg.from, msg.tag))
+                        .or_default()
+                        .push(msg);
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => return Ok(None),
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    return Err(TransportError::AllPeersGone)
+                }
             }
-            self.pending
-                .entry((msg.from, msg.tag))
-                .or_default()
-                .push(msg);
         }
-        None
     }
 
     pub fn stats(&self) -> &Arc<FabricStats> {
@@ -252,15 +291,19 @@ impl crate::cluster::transport::Transport for Endpoint {
         self.nodes
     }
 
-    fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) {
-        Endpoint::send(self, to, tag, data);
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) -> Result<(), TransportError> {
+        Endpoint::send(self, to, tag, data)
     }
 
-    fn recv_from(&mut self, from: usize, tag: u64) -> Vec<f64> {
+    fn recv_from(&mut self, from: usize, tag: u64) -> Result<Vec<f64>, TransportError> {
         Endpoint::recv_from(self, from, tag)
     }
 
-    fn try_recv_from(&mut self, from: usize, tag: u64) -> Option<Vec<f64>> {
+    fn try_recv_from(
+        &mut self,
+        from: usize,
+        tag: u64,
+    ) -> Result<Option<Vec<f64>>, TransportError> {
         Endpoint::try_recv_from(self, from, tag)
     }
 
@@ -293,13 +336,13 @@ mod tests {
         let mut e0 = eps.pop().unwrap();
         thread::scope(|s| {
             s.spawn(move |_| {
-                e1.send(0, 7, vec![1.0, 2.0, 3.0]);
-                let back = e1.recv_from(0, 8);
+                e1.send(0, 7, vec![1.0, 2.0, 3.0]).unwrap();
+                let back = e1.recv_from(0, 8).unwrap();
                 assert_eq!(back, vec![6.0]);
             });
-            let got = e0.recv_from(1, 7);
+            let got = e0.recv_from(1, 7).unwrap();
             assert_eq!(got, vec![1.0, 2.0, 3.0]);
-            e0.send(1, 8, vec![got.iter().sum()]);
+            e0.send(1, 8, vec![got.iter().sum()]).unwrap();
         })
         .unwrap();
         // 2 messages: 16+24 and 16+8 bytes.
@@ -317,12 +360,12 @@ mod tests {
         thread::scope(|s| {
             s.spawn(move |_| {
                 // Send tag 2 first, then tag 1.
-                e1.send(0, 2, vec![2.0]);
-                e1.send(0, 1, vec![1.0]);
+                e1.send(0, 2, vec![2.0]).unwrap();
+                e1.send(0, 1, vec![1.0]).unwrap();
             });
             // Ask for tag 1 first: tag-2 message must be parked, not lost.
-            assert_eq!(e0.recv_from(1, 1), vec![1.0]);
-            assert_eq!(e0.recv_from(1, 2), vec![2.0]);
+            assert_eq!(e0.recv_from(1, 1).unwrap(), vec![1.0]);
+            assert_eq!(e0.recv_from(1, 2).unwrap(), vec![2.0]);
         })
         .unwrap();
     }
@@ -334,14 +377,14 @@ mod tests {
         let mut e0 = eps.pop().unwrap();
         thread::scope(|s| {
             s.spawn(move |_| {
-                e1.send(0, 5, vec![1.0]);
-                e1.send(0, 5, vec![2.0]);
+                e1.send(0, 5, vec![1.0]).unwrap();
+                e1.send(0, 5, vec![2.0]).unwrap();
                 // force parking by sending an unrelated tag in between reads
-                e1.send(0, 9, vec![9.0]);
+                e1.send(0, 9, vec![9.0]).unwrap();
             });
-            assert_eq!(e0.recv_from(1, 9), vec![9.0]); // parks both tag-5 msgs
-            assert_eq!(e0.recv_from(1, 5), vec![1.0]);
-            assert_eq!(e0.recv_from(1, 5), vec![2.0]);
+            assert_eq!(e0.recv_from(1, 9).unwrap(), vec![9.0]); // parks both tag-5 msgs
+            assert_eq!(e0.recv_from(1, 5).unwrap(), vec![1.0]);
+            assert_eq!(e0.recv_from(1, 5).unwrap(), vec![2.0]);
         })
         .unwrap();
     }
@@ -367,11 +410,11 @@ mod tests {
         thread::scope(|s| {
             s.spawn(move |_| {
                 for _ in 0..10 {
-                    e1.send(0, 1, vec![0.0]);
+                    e1.send(0, 1, vec![0.0]).unwrap();
                 }
             });
             for _ in 0..10 {
-                e0.recv_from(1, 1);
+                e0.recv_from(1, 1).unwrap();
             }
         })
         .unwrap();
@@ -381,10 +424,33 @@ mod tests {
     #[test]
     fn stats_reset() {
         let (eps, stats) = fabric(2, NetworkModel::default());
-        eps[0].send(1, 0, vec![1.0]);
+        eps[0].send(1, 0, vec![1.0]).unwrap();
         assert!(stats.total_bytes() > 0);
         stats.reset();
         assert_eq!(stats.total_bytes(), 0);
         assert_eq!(stats.total_msgs(), 0);
+    }
+
+    #[test]
+    fn dropped_endpoint_is_a_typed_error_and_pending_data_survives() {
+        let (mut eps, stats) = fabric(2, NetworkModel::default());
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        // Rank 1 parks one frame in rank 0's mailbox, then dies.
+        e1.send(0, 3, vec![7.0]).unwrap();
+        drop(e1);
+        // Sends to the dead endpoint fail typed, with no accounting.
+        let before = stats.total_msgs();
+        assert_eq!(
+            e0.send(1, 1, vec![0.0]),
+            Err(TransportError::PeerGone { peer: 1 })
+        );
+        assert_eq!(stats.total_msgs(), before);
+        // Already-shipped data is still deliverable...
+        assert_eq!(e0.recv_from(1, 3).unwrap(), vec![7.0]);
+        // ...then a drained, sender-less mailbox surfaces as AllPeersGone
+        // (both blocking and non-blocking flavors; never a panic).
+        assert_eq!(e0.recv_from(1, 3), Err(TransportError::AllPeersGone));
+        assert_eq!(e0.try_recv_from(1, 4), Err(TransportError::AllPeersGone));
     }
 }

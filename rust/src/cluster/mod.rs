@@ -8,6 +8,7 @@
 pub mod alb;
 pub mod allreduce;
 pub mod barrier;
+pub mod checkpoint;
 pub mod fabric;
 pub mod process;
 pub mod tcp;
@@ -18,6 +19,7 @@ pub use alb::{
 };
 pub use allreduce::{allreduce_scalar, allreduce_sum, AllReduceAlgo, TAG_STRIDE};
 pub use barrier::transport_barrier;
+pub use checkpoint::{Checkpoint, ResumePoint};
 pub use fabric::{fabric, Endpoint, FabricStats, NetworkModel};
 pub use tcp::{bind_loopback, TcpOptions, TcpTransport};
-pub use transport::{frame_bytes, Transport};
+pub use transport::{frame_bytes, Transport, TransportError};

@@ -44,6 +44,16 @@
 //! a `{"op":"stats"}` line with a metrics-registry snapshot instead of
 //! treating it as a garbage job spec.
 //!
+//! Protocol v6 makes peer death survivable (DESIGN.md §Failure model): the
+//! transport returns typed [`TransportError`]s instead of panicking, the
+//! spec gains `checkpoint_dir`/`checkpoint_every` (rank 0 persists
+//! deterministic per-iteration checkpoints) and `resume` (rank 0 ships each
+//! rank its slice of the latest complete checkpoint on [`RESUME_TAG`] right
+//! after mesh formation), an idle worker's control port answers
+//! `{"op":"ping"}` liveness probes, and the coordinator reacts to a lost
+//! rank by re-shipping a resume job — re-sharding the feature blocks of any
+//! rank that never rejoins across the survivors.
+//!
 //! Datasets are recipes, not payloads: synthetic corpora are deterministic
 //! in `(name, scale, seed)`, and libsvm paths must be readable by every
 //! process. Engine is native-only here (the XLA runtime is per-process and
@@ -54,8 +64,9 @@
 
 use crate::cluster::alb::AlbMode;
 use crate::cluster::allreduce::AllReduceAlgo;
+use crate::cluster::checkpoint::{Checkpoint, ResumePoint, RESUME_TAG};
 use crate::cluster::tcp::{dial_with_backoff, TcpOptions, TcpTransport, PROTOCOL_VERSION};
-use crate::cluster::transport::Transport;
+use crate::cluster::transport::{Transport, TransportError};
 use crate::coordinator::driver::{ClusterFitResult, ClusterPathResult, RankLoad};
 use crate::coordinator::worker::{
     run_worker, run_worker_path, PathJob, PathWorkerOutput, WorkerConfig, WorkerOutput,
@@ -71,8 +82,9 @@ use crate::solver::path::PathResult;
 use crate::sparse::FeaturePartition;
 use crate::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::time::Duration;
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::path::Path;
+use std::time::{Duration, Instant};
 
 /// Reserved tag for the final β^m gather — far above anything the worker's
 /// `TAG_STRIDE` allocator can reach within a run. Path jobs send their
@@ -92,6 +104,41 @@ pub const MAX_THREADS_PER_RANK: usize = 1024;
 /// Shared range check for one per-rank thread count.
 pub fn thread_count_in_range(t: usize) -> bool {
     (1..=MAX_THREADS_PER_RANK).contains(&t)
+}
+
+/// Hard ceiling on one injected straggler delay, in seconds. Keeps specs
+/// honest AND keeps `Duration::from_secs_f64` away from its panic domain
+/// (it panics on huge finite inputs, not just NaN/negative).
+pub const MAX_STRAGGLER_DELAY_SECS: f64 = 3_600.0;
+
+/// Upper bound on `checkpoint_every` — catches garbage specs early.
+pub const MAX_CHECKPOINT_EVERY: usize = 1 << 30;
+
+/// How many times the coordinator re-ships a resume job after losing a
+/// peer mid-training before giving up.
+pub const MAX_RECOVERY_ATTEMPTS: usize = 2;
+
+/// Saturating seconds→`Duration` for chaos delays. Every spec built
+/// in-process (CLI flags, tests) bypasses `from_json` validation, and
+/// `Duration::from_secs_f64` panics on NaN, negative, or huge finite
+/// input — this is the single conversion point all of them go through.
+pub fn bounded_delay(secs: f64) -> Duration {
+    if secs.is_finite() && secs > 0.0 {
+        Duration::from_secs_f64(secs.min(MAX_STRAGGLER_DELAY_SECS))
+    } else {
+        Duration::ZERO
+    }
+}
+
+/// How long the coordinator's recovery sweep waits for workers to answer a
+/// rejoin probe. Overridable via `DGLMNET_REJOIN_WINDOW_SECS` (tests and
+/// impatient operators), clamped to [0, `MAX_STRAGGLER_DELAY_SECS`].
+pub fn rejoin_window() -> Duration {
+    std::env::var("DGLMNET_REJOIN_WINDOW_SECS")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .map(bounded_delay)
+        .unwrap_or(Duration::from_secs(10))
 }
 
 /// What a job spec asks the cluster to do.
@@ -180,6 +227,19 @@ pub struct JobSpec {
     /// entries mean 1 = classic single-threaded). Rank r splits its block
     /// into `threads[r]` sub-blocks run as pool waves.
     pub threads: Vec<usize>,
+    /// Protocol v6: where rank 0 persists per-iteration checkpoints (see
+    /// `cluster::checkpoint`). Only rank 0 touches the path; it still ships
+    /// to every rank so a promoted survivor knows where to look.
+    pub checkpoint_dir: Option<String>,
+    /// Protocol v6: checkpoint every k-th outer iteration (0 = off). Gates
+    /// a collective gather, so it must be SPMD-identical — it ships in the
+    /// spec and never via local overrides.
+    pub checkpoint_every: usize,
+    /// Protocol v6: this job continues from the latest complete checkpoint.
+    /// Rank 0 ships each rank its resume slice on [`RESUME_TAG`] right
+    /// after mesh formation; every worker blocks on its own before
+    /// training.
+    pub resume: bool,
 }
 
 impl JobSpec {
@@ -227,9 +287,14 @@ impl JobSpec {
             .set(
                 "threads",
                 Json::Arr(self.threads.iter().map(|&t| Json::Num(t as f64)).collect()),
-            );
+            )
+            .set("checkpoint_every", self.checkpoint_every)
+            .set("resume", self.resume);
         if let Some(kappa) = self.alb_kappa {
             o.set("alb_kappa", kappa);
+        }
+        if let Some(dir) = &self.checkpoint_dir {
+            o.set("checkpoint_dir", dir.as_str());
         }
         o
     }
@@ -300,8 +365,14 @@ impl JobSpec {
             }
         };
         let straggler_delays = num_list("straggler_delays")?;
-        if straggler_delays.iter().any(|d| !d.is_finite() || *d < 0.0) {
-            return Err("straggler_delays must be finite and non-negative".into());
+        if straggler_delays
+            .iter()
+            .any(|d| !d.is_finite() || *d < 0.0 || *d > MAX_STRAGGLER_DELAY_SECS)
+        {
+            return Err(format!(
+                "straggler_delays must be finite, non-negative, and at most \
+                 {MAX_STRAGGLER_DELAY_SECS}s"
+            ));
         }
         let slow_factors = num_list("slow_factors")?;
         if slow_factors.iter().any(|f| !f.is_finite() || *f <= 0.0) {
@@ -358,6 +429,30 @@ impl JobSpec {
         {
             return Err("virtual_time does not support hybrid threads (> 1)".into());
         }
+        let checkpoint_dir = match v.get("checkpoint_dir") {
+            None => None,
+            Some(j) => Some(
+                j.as_str()
+                    .ok_or_else(|| "non-string 'checkpoint_dir'".to_string())?
+                    .to_string(),
+            ),
+        };
+        let ck_every = num("checkpoint_every")?;
+        if !ck_every.is_finite()
+            || ck_every < 0.0
+            || ck_every.fract() != 0.0
+            || ck_every > MAX_CHECKPOINT_EVERY as f64
+        {
+            return Err(format!(
+                "checkpoint_every {ck_every} must be an integer in [0, {MAX_CHECKPOINT_EVERY}]"
+            ));
+        }
+        let checkpoint_every = ck_every as usize;
+        let resume = matches!(v.get("resume"), Some(Json::Bool(true)));
+        if mode == JobMode::Path && (checkpoint_every > 0 || checkpoint_dir.is_some() || resume)
+        {
+            return Err("path jobs do not support checkpoint/resume".into());
+        }
         let spec = JobSpec {
             rank: num("rank")? as usize,
             cluster,
@@ -384,6 +479,9 @@ impl JobSpec {
             lambda_grid,
             screen: matches!(v.get("screen"), Some(Json::Bool(true))),
             threads,
+            checkpoint_dir,
+            checkpoint_every,
+            resume,
         };
         if spec.rank >= spec.cluster.len() {
             return Err(format!(
@@ -417,12 +515,15 @@ impl JobSpec {
             },
             chunk: self.chunk.max(1),
             threads: self.threads.get(self.rank).copied().unwrap_or(1).max(1),
-            straggler_delay: Duration::from_secs_f64(
+            straggler_delay: bounded_delay(
                 self.straggler_delays.get(self.rank).copied().unwrap_or(0.0),
             ),
             virtual_time: self.virtual_time,
             slow_factor: self.slow_factors.get(self.rank).copied().unwrap_or(1.0),
             network: crate::cluster::fabric::NetworkModel::default(),
+            checkpoint_dir: self.checkpoint_dir.clone(),
+            checkpoint_every: self.checkpoint_every,
+            die_after_iters: None,
         }
     }
 }
@@ -440,6 +541,11 @@ pub struct WorkerOverrides {
     /// lets an operator right-size one node to its core count without the
     /// coordinator's cooperation.
     pub threads: Option<usize>,
+    /// Chaos injection: abort this rank's training loop right after the
+    /// k-th outer iteration, simulating an abrupt crash (the transport is
+    /// dropped, peers observe a hang-up). Drives the fault-tolerance tests
+    /// without an external `kill`.
+    pub die_after_iters: Option<usize>,
 }
 
 impl WorkerOverrides {
@@ -452,6 +558,9 @@ impl WorkerOverrides {
         }
         if let Some(t) = self.threads {
             cfg.threads = t.max(1);
+        }
+        if let Some(k) = self.die_after_iters {
+            cfg.die_after_iters = Some(k);
         }
     }
 }
@@ -469,7 +578,7 @@ struct RankRun {
 /// materialized it pass it in rather than loading a second copy).
 fn solve_rank(
     spec: &JobSpec,
-    listener: TcpListener,
+    listener: &TcpListener,
     splits: &Splits,
     overrides: &WorkerOverrides,
 ) -> anyhow::Result<RankRun> {
@@ -496,6 +605,26 @@ fn solve_rank(
         TcpTransport::with_listener(spec.rank, &spec.cluster, listener, mesh_options())?;
     let mut wcfg = spec.worker_config();
     overrides.apply(&mut wcfg);
+
+    // Protocol v6 resume: right after mesh formation (before any training
+    // collective), rank 0 reads the latest complete checkpoint and ships
+    // each rank its slice; every other rank blocks on its own.
+    let resume: Option<ResumePoint> = if spec.resume {
+        Some(if spec.rank == 0 {
+            let points = load_resume_points(spec, splits.train.p(), &partition)?;
+            for (r, rp) in points.iter().enumerate().skip(1) {
+                transport.send(r, RESUME_TAG, rp.flatten())?;
+            }
+            points.into_iter().next().expect("m >= 1 resume slices")
+        } else {
+            let payload = transport.recv_from(0, RESUME_TAG)?;
+            ResumePoint::unflatten(&payload)
+                .map_err(|e| anyhow::anyhow!("bad resume payload from rank 0: {e}"))?
+        })
+    } else {
+        None
+    };
+
     let shared = WorkerShared {
         compute: &compute,
         penalty: &penalty,
@@ -505,12 +634,76 @@ fn solve_rank(
         cfg: &wcfg,
         nodes: m,
     };
-    let output = run_worker(spec.rank, &shard, test_shard.as_ref(), &mut transport, &shared);
+    let output = run_worker(
+        spec.rank,
+        &shard,
+        test_shard.as_ref(),
+        &mut transport,
+        &shared,
+        resume.as_ref(),
+    )?;
     Ok(RankRun {
         output,
         transport,
         partition,
     })
+}
+
+/// Rank 0's side of a resume: load the latest complete checkpoint and cut
+/// it into one [`ResumePoint`] per current rank. When the cluster shape is
+/// unchanged this restores every rank bit-identically (β blocks, margins,
+/// μ, cursors). When ranks were lost, the full β is reassembled under the
+/// checkpoint's partition and re-sharded across the survivors — margins
+/// are global (Xβ with β unchanged), so the objective continues exactly;
+/// only the cyclic cursors restart.
+fn load_resume_points(
+    spec: &JobSpec,
+    p: usize,
+    partition: &FeaturePartition,
+) -> anyhow::Result<Vec<ResumePoint>> {
+    let m = spec.cluster.len();
+    let dir = spec
+        .checkpoint_dir
+        .as_deref()
+        .ok_or_else(|| anyhow::anyhow!("resume job without checkpoint_dir"))?;
+    let (path, ck) = Checkpoint::latest(Path::new(dir))
+        .ok_or_else(|| anyhow::anyhow!("no complete checkpoint under {dir}"))?;
+    crate::obs_info!(
+        "ckpt",
+        format!(
+            "resuming from {} (iteration {}, {} rank blocks, cluster of {m})",
+            path.display(),
+            ck.iter,
+            ck.ranks.len()
+        )
+    );
+    if ck.ranks.len() == m {
+        return Ok((0..m).map(|r| ck.resume_point(r)).collect());
+    }
+    // Re-shard: the checkpoint was written by a different cluster shape.
+    let old = FeaturePartition::hashed(p, ck.ranks.len(), spec.seed);
+    anyhow::ensure!(
+        old.blocks
+            .iter()
+            .zip(ck.ranks.iter())
+            .all(|(b, rb)| b.len() == rb.beta.len()),
+        "checkpoint {} does not match dataset width {p}",
+        path.display()
+    );
+    let blocks: Vec<Vec<f64>> = ck.ranks.iter().map(|rb| rb.beta.clone()).collect();
+    let full = old.unshard_weights(&blocks);
+    Ok((0..m)
+        .map(|r| ResumePoint {
+            iter: ck.iter,
+            stall: ck.stall,
+            mu: ck.mu,
+            f_cur: ck.f_cur,
+            margins: ck.margins.clone(),
+            cursor: 0,
+            sub_cursors: Vec::new(),
+            beta: partition.blocks[r].iter().map(|&j| full[j]).collect(),
+        })
+        .collect())
 }
 
 /// Everything one rank of a path job produces: the per-λ outputs, the
@@ -526,7 +719,7 @@ struct PathRankRun {
 /// validation split, scored SPMD on every rank.
 fn solve_rank_path(
     spec: &JobSpec,
-    listener: TcpListener,
+    listener: &TcpListener,
     splits: &Splits,
     overrides: &WorkerOverrides,
 ) -> anyhow::Result<PathRankRun> {
@@ -564,7 +757,7 @@ fn solve_rank_path(
         &splits.train.y,
         &wcfg,
         &job,
-    );
+    )?;
     Ok(PathRankRun {
         output,
         transport,
@@ -592,6 +785,13 @@ fn control_reply(line: &str) -> Option<Json> {
                 .set("metrics", crate::obs::metrics::global().snapshot());
             Some(reply)
         }
+        // Protocol v6: liveness probe — the coordinator's recovery sweep
+        // uses it to tell a rejoined worker from a permanently lost rank.
+        "ping" => {
+            let mut reply = Json::obj();
+            reply.set("ok", true).set("op", "ping");
+            Some(reply)
+        }
         op => {
             let mut reply = Json::obj();
             reply.set("ok", false).set("error", format!("unknown op '{op}'"));
@@ -600,12 +800,56 @@ fn control_reply(line: &str) -> Option<Json> {
     }
 }
 
-/// `dglmnet worker --listen ADDR`: serve exactly one training job, then
-/// exit. Returns the job's rank on success.
-pub fn run_worker_process(listen: &str, overrides: WorkerOverrides) -> anyhow::Result<usize> {
+/// Surface a setsockopt failure instead of swallowing it: a socket whose
+/// reads cannot be bounded can wedge the owner on a half-dead peer, and
+/// that is worth a log line even when training proceeds.
+fn set_read_timeout_logged(s: &TcpStream, who: &str, dur: Option<Duration>) {
+    if let Err(e) = s.set_read_timeout(dur) {
+        crate::obs_warn!("net", format!("{who}: set_read_timeout({dur:?}) failed: {e}"));
+    }
+}
+
+/// `dglmnet worker --listen ADDR`: serve one training job — or, with
+/// `rejoin`, keep serving until a job completes cleanly — then exit.
+/// Returns the last job's rank on success.
+pub fn run_worker_process(
+    listen: &str,
+    overrides: WorkerOverrides,
+    rejoin: bool,
+) -> anyhow::Result<usize> {
     let listener = TcpListener::bind(listen)
         .map_err(|e| anyhow::anyhow!("bind {listen}: {e}"))?;
-    run_worker_on(listener, overrides)
+    if rejoin {
+        run_worker_rejoin(listener, overrides)
+    } else {
+        run_worker_on(listener, overrides)
+    }
+}
+
+/// The rejoin handshake (protocol v6): serve jobs on the same listener
+/// until one completes cleanly. A job that dies of peer loss sends the
+/// worker back to the accept loop — same address, same port — where it
+/// answers the coordinator's `{"op":"ping"}` recovery probe and waits for
+/// the re-shipped resume job instead of killing the process. Any error
+/// that is NOT a typed transport error stays fatal (a broken dataset
+/// recipe will not get better by retrying).
+pub fn run_worker_rejoin(
+    listener: TcpListener,
+    overrides: WorkerOverrides,
+) -> anyhow::Result<usize> {
+    loop {
+        match serve_one_job(&listener, &overrides) {
+            Ok(rank) => return Ok(rank),
+            Err(e) if e.downcast_ref::<TransportError>().is_some() => {
+                crate::obs::metrics::global().counter("worker.rejoins").inc();
+                crate::obs_warn!(
+                    "worker",
+                    format!("job failed ({e}); rejoining for a resume job")
+                );
+            }
+            Err(e) => return Err(e),
+        }
+    }
 }
 
 /// Serve one job on an already-bound listener (lets tests and embedders
@@ -614,6 +858,10 @@ pub fn run_worker_on(
     listener: TcpListener,
     overrides: WorkerOverrides,
 ) -> anyhow::Result<usize> {
+    serve_one_job(&listener, &overrides)
+}
+
+fn serve_one_job(listener: &TcpListener, overrides: &WorkerOverrides) -> anyhow::Result<usize> {
     // Emitted (and flushed) before accepting so launchers can scrape the
     // resolved port when listening on :0 — this exact line is part of the
     // worker's stdout contract, so it bypasses the leveled logger.
@@ -630,7 +878,7 @@ pub fn run_worker_on(
         let (ctrl, peer) = listener.accept()?;
         let mut ctrl_r = BufReader::new(ctrl.try_clone()?);
         let mut ctrl_w = ctrl;
-        ctrl_w.set_read_timeout(Some(Duration::from_secs(60))).ok();
+        set_read_timeout_logged(&ctrl_w, "worker control", Some(Duration::from_secs(60)));
         let mut line = String::new();
         let parsed = ctrl_r
             .read_line(&mut line)
@@ -638,7 +886,7 @@ pub fn run_worker_on(
             .and_then(|_| JobSpec::from_json(&line));
         match parsed {
             Ok(spec) if spec.rank != 0 => {
-                ctrl_w.set_read_timeout(None).ok();
+                set_read_timeout_logged(&ctrl_w, "worker control", None);
                 break (spec, ctrl_w);
             }
             Ok(_) => crate::obs_warn!(
@@ -680,9 +928,9 @@ pub fn run_worker_on(
     let splits = crate::harness::load_splits(&spec.dataset, spec.scale, spec.seed)?;
     match spec.mode {
         JobMode::Train => {
-            let run = solve_rank(&spec, listener, &splits, &overrides)?;
+            let run = solve_rank(&spec, listener, &splits, overrides)?;
             let mut transport = run.transport;
-            transport.send(0, GATHER_TAG, run.output.beta_local.clone());
+            transport.send(0, GATHER_TAG, run.output.beta_local.clone())?;
             // Report traffic AFTER the gather send so the coordinator's
             // totals really cover every frame this rank put on the wire.
             let (sent_bytes, sent_msgs) = transport.sent();
@@ -745,12 +993,12 @@ pub fn run_worker_on(
                      path jobs (BSP sweep, no chaos injection) — ignoring"
                 );
             }
-            let run = solve_rank_path(&spec, listener, &splits, &overrides)?;
+            let run = solve_rank_path(&spec, listener, &splits, overrides)?;
             let mut transport = run.transport;
             // One frame per λ point, in grid order, all on the gather tag
             // (FIFO per (peer, tag) keeps them ordered on the wire).
             for pt in &run.output.points {
-                transport.send(0, GATHER_TAG, pt.beta_local.clone());
+                transport.send(0, GATHER_TAG, pt.beta_local.clone())?;
             }
             let (sent_bytes, sent_msgs) = transport.sent();
             let total_iters: usize = run.output.points.iter().map(|p| p.iters).sum();
@@ -807,7 +1055,7 @@ fn ship_job(
         write_line(&mut s, &spec_r.to_json())?;
         // Ack must arrive promptly; the later done-report read is unbounded
         // (training takes as long as it takes), so clear the timeout after.
-        s.set_read_timeout(Some(opts.connect_timeout)).ok();
+        set_read_timeout_logged(&s, "coordinator control", Some(opts.connect_timeout));
         let mut br = BufReader::new(s);
         let mut ack = String::new();
         br.read_line(&mut ack)
@@ -820,7 +1068,7 @@ fn ship_job(
             "worker {addr} rejected the job: {}",
             ack.dump()
         );
-        br.get_ref().set_read_timeout(None).ok();
+        set_read_timeout_logged(br.get_ref(), "coordinator control", None);
         ctrls.push(br);
     }
     Ok((cluster, listener, ctrls))
@@ -838,6 +1086,15 @@ fn read_done_report(br: &mut BufReader<TcpStream>) -> anyhow::Result<Json> {
 /// the M nodes, and reassemble the global model. `preloaded` lets a caller
 /// that already materialized the spec's dataset recipe (the CLI does, for
 /// its banner and final test scoring) avoid a second full load.
+///
+/// Protocol v6: when the spec checkpoints (`checkpoint_dir` set and
+/// `checkpoint_every > 0`), a run that dies of peer loss is retried from
+/// the latest complete checkpoint: the coordinator probes every worker
+/// address with `{"op":"ping"}` for the rejoin window, drops the ranks
+/// that never answer, and re-ships a `resume` job to the survivors (the
+/// feature blocks re-shard across them; see [`load_resume_points`]). Any
+/// other error — and any failure once [`MAX_RECOVERY_ATTEMPTS`] is spent —
+/// stays fatal.
 pub fn train_cluster(
     spec0: &JobSpec,
     preloaded: Option<&Splits>,
@@ -853,6 +1110,144 @@ pub fn train_cluster(
             &owned_splits
         }
     };
+    let mut spec = spec0.clone();
+    let mut attempt = 0usize;
+    loop {
+        match train_cluster_once(&spec, splits) {
+            Ok(res) => return Ok(res),
+            Err(e) => {
+                let peer_gone = e.downcast_ref::<TransportError>().is_some();
+                let resumable = spec.checkpoint_every > 0 && spec.checkpoint_dir.is_some();
+                if !peer_gone || !resumable || attempt >= MAX_RECOVERY_ATTEMPTS {
+                    return Err(e);
+                }
+                attempt += 1;
+                crate::obs::metrics::global().counter("cluster.recoveries").inc();
+                crate::obs_warn!(
+                    "cluster",
+                    format!(
+                        "rank failure ({e}); recovery attempt {attempt}/{MAX_RECOVERY_ATTEMPTS}"
+                    )
+                );
+                spec = recover_spec(&spec)?;
+            }
+        }
+    }
+}
+
+/// Probe every worker address of a failed job, keep the survivors, and
+/// build the resume spec that re-ships to them. The coordinator itself
+/// (rank 0) always survives; a cluster where every worker is gone shrinks
+/// to a single-rank resume, which is still a valid mesh.
+fn recover_spec(spec: &JobSpec) -> anyhow::Result<JobSpec> {
+    // Probe in parallel: a permanently dead rank burns its whole rejoin
+    // window, and sequential probes would stack those timeouts.
+    let survivors: Vec<bool> = std::thread::scope(|scope| {
+        let handles: Vec<_> = spec.cluster[1..]
+            .iter()
+            .map(|addr| scope.spawn(move || probe_worker(addr)))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or(false)).collect()
+    });
+    let mut keep = vec![0usize];
+    let mut lost = Vec::new();
+    for (i, up) in survivors.iter().enumerate() {
+        if *up {
+            keep.push(i + 1);
+        } else {
+            lost.push(i + 1);
+        }
+    }
+    if lost.is_empty() {
+        // Every worker answers the probe: the crashed rank came back on its
+        // old address (`--rejoin`). The re-shipped job is not a retry of an
+        // identical one — `resume` makes the cluster start from the latest
+        // checkpoint — and MAX_RECOVERY_ATTEMPTS still bounds a rank that
+        // keeps dying deterministically.
+        crate::obs_warn!(
+            "cluster",
+            format!(
+                "all {} workers answered the liveness probe; \
+                 re-shipping a resume job to the full cluster",
+                spec.cluster.len() - 1
+            )
+        );
+        let mut next = spec.clone();
+        next.resume = true;
+        return Ok(next);
+    }
+    crate::obs_warn!(
+        "cluster",
+        format!(
+            "excluding unresponsive ranks {lost:?}; resuming with {} of {} ranks",
+            keep.len(),
+            spec.cluster.len()
+        )
+    );
+    let pick_or = |xs: &Vec<f64>, i: usize, default: f64| -> f64 {
+        xs.get(i).copied().unwrap_or(default)
+    };
+    let mut next = spec.clone();
+    next.cluster = keep.iter().map(|&i| spec.cluster[i].clone()).collect();
+    if !spec.straggler_delays.is_empty() {
+        next.straggler_delays =
+            keep.iter().map(|&i| pick_or(&spec.straggler_delays, i, 0.0)).collect();
+    }
+    if !spec.slow_factors.is_empty() {
+        next.slow_factors = keep.iter().map(|&i| pick_or(&spec.slow_factors, i, 1.0)).collect();
+    }
+    if !spec.threads.is_empty() {
+        next.threads = keep.iter().map(|&i| spec.threads.get(i).copied().unwrap_or(1)).collect();
+    }
+    next.resume = true;
+    Ok(next)
+}
+
+/// Liveness probe for one worker address: dial, send `{"op":"ping"}`, and
+/// require an `ok` reply. Retries until the rejoin window closes so a
+/// `--rejoin` worker that is still tearing down its dead job's sockets has
+/// time to get back to its accept loop.
+fn probe_worker(addr: &str) -> bool {
+    let deadline = Instant::now() + rejoin_window();
+    loop {
+        if ping_once(addr) {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+fn ping_once(addr: &str) -> bool {
+    let Some(target) = addr.to_socket_addrs().ok().and_then(|mut a| a.next()) else {
+        return false;
+    };
+    let Ok(mut s) = TcpStream::connect_timeout(&target, Duration::from_millis(500)) else {
+        return false;
+    };
+    set_read_timeout_logged(&s, "recovery probe", Some(Duration::from_secs(2)));
+    let mut ping = Json::obj();
+    ping.set("op", "ping");
+    if write_line(&mut s, &ping).is_err() {
+        return false;
+    }
+    let mut br = BufReader::new(s);
+    let mut line = String::new();
+    if br.read_line(&mut line).is_err() || line.trim().is_empty() {
+        return false;
+    }
+    matches!(
+        json::parse(line.trim()).ok().as_ref().and_then(|j| j.get("ok")),
+        Some(Json::Bool(true))
+    )
+}
+
+/// One attempt at the distributed fit — ship, train as rank 0, gather,
+/// reassemble. Peer loss surfaces as a [`TransportError`] inside the
+/// `anyhow` chain, which [`train_cluster`]'s recovery loop downcasts.
+fn train_cluster_once(spec0: &JobSpec, splits: &Splits) -> anyhow::Result<ClusterFitResult> {
     let m = spec0.cluster.len();
     let (cluster, listener, mut ctrls) = ship_job(spec0)?;
 
@@ -862,14 +1257,14 @@ pub fn train_cluster(
         cluster,
         ..spec0.clone()
     };
-    let run = solve_rank(&spec, listener, splits, &WorkerOverrides::default())?;
+    let run = solve_rank(&spec, &listener, splits, &WorkerOverrides::default())?;
     let mut transport = run.transport;
 
     // Gather β blocks.
     let mut blocks: Vec<Vec<f64>> = Vec::with_capacity(m);
     blocks.push(run.output.beta_local.clone());
     for r in 1..m {
-        let block = transport.recv_from(r, GATHER_TAG);
+        let block = transport.recv_from(r, GATHER_TAG)?;
         anyhow::ensure!(
             block.len() == run.partition.blocks[r].len(),
             "rank {r} gathered {} weights, expected {}",
@@ -990,6 +1385,10 @@ pub fn path_cluster(
         spec0.straggler_delays.is_empty() && spec0.slow_factors.is_empty() && !spec0.virtual_time,
         "path jobs do not support straggler/slow-factor chaos or the virtual clock"
     );
+    anyhow::ensure!(
+        spec0.checkpoint_dir.is_none() && spec0.checkpoint_every == 0 && !spec0.resume,
+        "path jobs do not support checkpoints or resume (protocol v6 is train-mode only)"
+    );
     let owned_splits;
     let splits = match preloaded {
         Some(s) => s,
@@ -1008,7 +1407,7 @@ pub fn path_cluster(
         cluster,
         ..spec0.clone()
     };
-    let run = solve_rank_path(&spec, listener, splits, &WorkerOverrides::default())?;
+    let run = solve_rank_path(&spec, &listener, splits, &WorkerOverrides::default())?;
     let mut transport = run.transport;
 
     // Gather per-λ β blocks: each worker sends one frame per grid point on
@@ -1020,7 +1419,7 @@ pub fn path_cluster(
     }
     for r in 1..m {
         for point_blocks in per_lambda.iter_mut() {
-            let block = transport.recv_from(r, GATHER_TAG);
+            let block = transport.recv_from(r, GATHER_TAG)?;
             anyhow::ensure!(
                 block.len() == run.partition.blocks[r].len(),
                 "rank {r} gathered {} weights, expected {}",
@@ -1089,6 +1488,9 @@ mod tests {
             lambda_grid: Vec::new(),
             screen: false,
             threads: Vec::new(),
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            resume: false,
         }
     }
 
@@ -1111,6 +1513,9 @@ mod tests {
         s.straggler_delays = vec![0.0, 0.04];
         s.slow_factors = vec![1.0, 2.5];
         s.threads = vec![1, 1];
+        s.checkpoint_dir = Some("/tmp/ckpts".into());
+        s.checkpoint_every = 2;
+        s.resume = true;
         let text = s.to_json().dump();
         let back = JobSpec::from_json(&text).unwrap();
         assert_eq!(back.rank, s.rank);
@@ -1137,6 +1542,9 @@ mod tests {
         assert_eq!(back.lambda_grid, s.lambda_grid);
         assert_eq!(back.screen, s.screen);
         assert_eq!(back.threads, s.threads);
+        assert_eq!(back.checkpoint_dir, s.checkpoint_dir);
+        assert_eq!(back.checkpoint_every, s.checkpoint_every);
+        assert_eq!(back.resume, s.resume);
     }
 
     #[test]
@@ -1251,6 +1659,51 @@ mod tests {
         let mut j = spec().to_json();
         j.set("slow_factors", Json::Arr(vec![Json::Num(0.0)]));
         assert!(JobSpec::from_json(&j.dump()).is_err());
+        // Protocol v6: delays past the Duration-overflow guard are rejected
+        // at the wire, not clamped deep inside `Duration::from_secs_f64`.
+        for bad in [f64::NAN, f64::INFINITY, MAX_STRAGGLER_DELAY_SECS + 1.0, 1e300] {
+            let mut j = spec().to_json();
+            j.set("straggler_delays", Json::Arr(vec![Json::Num(bad)]));
+            assert!(
+                JobSpec::from_json(&j.dump()).is_err(),
+                "straggler delay {bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn job_spec_rejects_bad_checkpoint_values() {
+        for bad in [-1.0, 2.5, f64::NAN, f64::INFINITY, (MAX_CHECKPOINT_EVERY as f64) * 2.0] {
+            let mut j = spec().to_json();
+            j.set("checkpoint_every", bad);
+            assert!(
+                JobSpec::from_json(&j.dump()).is_err(),
+                "checkpoint_every {bad} must be rejected"
+            );
+        }
+        let mut j = spec().to_json();
+        j.set("checkpoint_dir", 7u64);
+        assert!(JobSpec::from_json(&j.dump()).is_err(), "non-string checkpoint_dir");
+        // Path jobs never checkpoint or resume.
+        let mut j = path_spec().to_json();
+        j.set("checkpoint_every", 1u64);
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+        let mut j = path_spec().to_json();
+        j.set("checkpoint_dir", "/tmp/ckpts");
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+        let mut j = path_spec().to_json();
+        j.set("resume", true);
+        assert!(JobSpec::from_json(&j.dump()).is_err());
+    }
+
+    #[test]
+    fn bounded_delay_saturates_the_panic_domain() {
+        assert_eq!(bounded_delay(0.5), Duration::from_millis(500));
+        assert_eq!(bounded_delay(0.0), Duration::ZERO);
+        assert_eq!(bounded_delay(-3.0), Duration::ZERO);
+        assert_eq!(bounded_delay(f64::NAN), Duration::ZERO);
+        assert_eq!(bounded_delay(f64::INFINITY), Duration::from_secs(3600));
+        assert_eq!(bounded_delay(1e300), Duration::from_secs(3600));
     }
 
     #[test]
@@ -1280,14 +1733,17 @@ mod tests {
             slow_factor: Some(2.0),
             straggler_delay: Some(Duration::from_millis(5)),
             threads: Some(4),
+            die_after_iters: Some(3),
         };
         ov.apply(&mut cfg);
         assert_eq!(cfg.slow_factor, 2.0);
         assert_eq!(cfg.straggler_delay, Duration::from_millis(5));
         assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.die_after_iters, Some(3));
         WorkerOverrides::default().apply(&mut cfg);
         assert_eq!(cfg.slow_factor, 2.0, "empty overrides change nothing");
         assert_eq!(cfg.threads, 4, "empty overrides change nothing");
+        assert_eq!(cfg.die_after_iters, Some(3), "empty overrides change nothing");
     }
 
     /// Full in-test cluster: 1 coordinator + 2 workers as threads of this

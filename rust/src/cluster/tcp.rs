@@ -25,7 +25,7 @@
 //! waits on a full socket buffer. Receive-side tag parking is identical to
 //! the fabric's.
 
-use crate::cluster::transport::{frame_bytes, Transport};
+use crate::cluster::transport::{frame_bytes, Transport, TransportError};
 use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -44,8 +44,13 @@ const MAGIC: u32 = 0x4D4C_4764;
 /// done report. v5: the done report gained the span journal (`spans`, the
 /// per-iteration phase timings each rank recorded) and the per-phase comm
 /// breakdown (`comm_by_phase`), and the control port answers a `stats`
-/// op with a metrics-registry snapshot.
-pub const PROTOCOL_VERSION: u32 = 5;
+/// op with a metrics-registry snapshot. v6: elastic fault tolerance — the
+/// job spec gained `checkpoint_dir`/`checkpoint_every` plus a `resume`
+/// flag (the coordinator re-ships a resume job from the latest complete
+/// checkpoint after a rank failure; resume state travels on the reserved
+/// RESUME tag), the control port answers a `ping` liveness op, and peer
+/// death surfaces as a typed `TransportError` instead of a panic.
+pub const PROTOCOL_VERSION: u32 = 6;
 
 /// Dial / handshake tuning.
 #[derive(Clone, Copy, Debug)]
@@ -187,6 +192,15 @@ pub fn dial_with_backoff(addr: &str, opts: &TcpOptions) -> anyhow::Result<TcpStr
     }
 }
 
+/// Set SO_RCVTIMEO, surfacing failure instead of swallowing it: a socket
+/// that silently keeps blocking reads would turn the bounded handshake
+/// back into an unexplained hang.
+fn set_read_timeout_logged(s: &TcpStream, who: &str, dur: Option<Duration>) {
+    if let Err(e) = s.set_read_timeout(dur) {
+        crate::obs_warn!("net", format!("{who}: set_read_timeout({dur:?}) failed: {e}"));
+    }
+}
+
 /// Accept one connection, giving up at `deadline` — a peer that died
 /// before dialing in must not hang mesh formation forever.
 fn accept_with_deadline(listener: &TcpListener, deadline: Instant) -> anyhow::Result<TcpStream> {
@@ -219,15 +233,16 @@ impl TcpTransport {
     pub fn connect(rank: usize, addrs: &[String], opts: TcpOptions) -> anyhow::Result<TcpTransport> {
         let listener = TcpListener::bind(&addrs[rank])
             .map_err(|e| anyhow::anyhow!("bind {}: {e}", addrs[rank]))?;
-        Self::with_listener(rank, addrs, listener, opts)
+        Self::with_listener(rank, addrs, &listener, opts)
     }
 
     /// Form the mesh over an already-bound listener (the worker runtime
-    /// reuses its control listener for mesh accepts).
+    /// reuses its control listener for mesh accepts — and, since `--rejoin`,
+    /// keeps it alive across jobs, hence the borrow).
     pub fn with_listener(
         rank: usize,
         addrs: &[String],
-        listener: TcpListener,
+        listener: &TcpListener,
         opts: TcpOptions,
     ) -> anyhow::Result<TcpTransport> {
         let size = addrs.len();
@@ -240,20 +255,20 @@ impl TcpTransport {
             let mut s = dial_with_backoff(&addrs[peer], &opts)?;
             s.set_nodelay(true).ok();
             // Bounded handshake: a dead peer must not hang mesh formation.
-            s.set_read_timeout(Some(opts.connect_timeout)).ok();
+            set_read_timeout_logged(&s, "mesh handshake (dial)", Some(opts.connect_timeout));
             write_handshake(&mut s, rank, size)?;
             let got = read_handshake(&mut s, size)?;
             if got != peer {
                 anyhow::bail!("dialed {} expecting rank {peer}, got rank {got}", addrs[peer]);
             }
-            s.set_read_timeout(None).ok();
+            set_read_timeout_logged(&s, "mesh handshake (dial)", None);
             conns[peer] = Some(s);
         }
         let accept_deadline = Instant::now() + opts.connect_timeout;
         for _ in rank + 1..size {
-            let mut s = accept_with_deadline(&listener, accept_deadline)?;
+            let mut s = accept_with_deadline(listener, accept_deadline)?;
             s.set_nodelay(true).ok();
-            s.set_read_timeout(Some(opts.connect_timeout)).ok();
+            set_read_timeout_logged(&s, "mesh handshake (accept)", Some(opts.connect_timeout));
             let peer = read_handshake(&mut s, size)?;
             if peer <= rank {
                 anyhow::bail!("accepted unexpected dial from lower rank {peer}");
@@ -262,7 +277,7 @@ impl TcpTransport {
                 anyhow::bail!("rank {peer} connected twice");
             }
             write_handshake(&mut s, rank, size)?;
-            s.set_read_timeout(None).ok();
+            set_read_timeout_logged(&s, "mesh handshake (accept)", None);
             conns[peer] = Some(s);
         }
 
@@ -400,47 +415,60 @@ impl Transport for TcpTransport {
         self.size
     }
 
-    fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) {
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) -> Result<(), TransportError> {
         assert!(to != self.rank, "self-send over TCP");
         let bytes = frame_bytes(data.len());
+        let sent = match self.writers[to].as_ref() {
+            // A closed queue means the writer thread exited on a broken
+            // stream: the peer is gone.
+            Some(w) => w.send((tag, data)).is_ok(),
+            None => false,
+        };
+        if !sent {
+            self.dead[to] = true;
+            return Err(TransportError::PeerGone { peer: to });
+        }
         self.sent_bytes[to] += bytes;
         self.sent_msgs[to] += 1;
         let e = self.sent_tags.entry(tag).or_insert((0, 0));
         e.0 += bytes;
         e.1 += 1;
-        self.writers[to]
-            .as_ref()
-            .expect("no connection to peer")
-            .send((tag, data))
-            .expect("tcp peer hung up");
+        Ok(())
     }
 
-    fn recv_from(&mut self, from: usize, tag: u64) -> Vec<f64> {
+    fn recv_from(&mut self, from: usize, tag: u64) -> Result<Vec<f64>, TransportError> {
         if let Some(data) = self.take_pending((from, tag)) {
-            return data;
+            return Ok(data);
         }
         if self.dead[from] {
-            panic!("tcp peer {from} hung up");
+            return Err(TransportError::PeerGone { peer: from });
         }
         loop {
-            let msg = self.inbox.recv().expect("all tcp peers hung up");
+            let msg = match self.inbox.recv() {
+                Ok(m) => m,
+                Err(_) => return Err(TransportError::AllPeersGone),
+            };
             if msg.tag == POISON_TAG {
                 self.dead[msg.from] = true;
                 if msg.from == from {
-                    panic!("tcp peer {from} hung up");
+                    return Err(TransportError::PeerGone { peer: from });
                 }
                 continue;
             }
             if msg.from == from && msg.tag == tag {
-                return msg.data;
+                return Ok(msg.data);
             }
             self.pending.entry((msg.from, msg.tag)).or_default().push(msg);
         }
     }
 
-    fn try_recv_from(&mut self, from: usize, tag: u64) -> Option<Vec<f64>> {
+    fn try_recv_from(
+        &mut self,
+        from: usize,
+        tag: u64,
+    ) -> Result<Option<Vec<f64>>, TransportError> {
         if let Some(data) = self.take_pending((from, tag)) {
-            return Some(data);
+            return Ok(Some(data));
         }
         while let Ok(msg) = self.inbox.try_recv() {
             if msg.tag == POISON_TAG {
@@ -448,11 +476,17 @@ impl Transport for TcpTransport {
                 continue;
             }
             if msg.from == from && msg.tag == tag {
-                return Some(msg.data);
+                return Ok(Some(msg.data));
             }
             self.pending.entry((msg.from, msg.tag)).or_default().push(msg);
         }
-        None
+        // The reader posts its poison strictly after every real frame, so
+        // once the flag is set with nothing pending the peer can never
+        // satisfy this request.
+        if self.dead[from] {
+            return Err(TransportError::PeerGone { peer: from });
+        }
+        Ok(None)
     }
 
     fn sent(&self) -> (u64, u64) {
@@ -538,34 +572,67 @@ mod tests {
     #[test]
     fn two_rank_roundtrip_with_accounting() {
         let (addrs, listeners) = bind_loopback(2).unwrap();
-        let mut ts: Vec<Option<TcpTransport>> = vec![None, None];
+        let mut ts = mesh(&addrs, listeners);
+        let mut t1 = ts.pop().unwrap();
+        let mut t0 = ts.pop().unwrap();
+        std::thread::scope(|sc| {
+            sc.spawn(move || {
+                t1.send(0, 7, vec![1.0, 2.0, 3.0]).unwrap();
+                let back = t1.recv_from(0, 8).unwrap();
+                assert_eq!(back, vec![6.0]);
+                assert_eq!(t1.sent(), (16 + 24, 1));
+                assert_eq!(t1.sent_by_tag(), vec![(7, 16 + 24, 1)]);
+            });
+            let got = t0.recv_from(1, 7).unwrap();
+            assert_eq!(got, vec![1.0, 2.0, 3.0]);
+            t0.send(1, 8, vec![got.iter().sum()]).unwrap();
+            assert_eq!(t0.sent(), (16 + 8, 1));
+        });
+    }
+
+    /// Form a full mesh over pre-bound listeners; returns transports by rank.
+    fn mesh(addrs: &[String], listeners: Vec<TcpListener>) -> Vec<TcpTransport> {
+        let mut ts: Vec<Option<TcpTransport>> = (0..addrs.len()).map(|_| None).collect();
         std::thread::scope(|sc| {
             let mut handles = Vec::new();
             for (rank, l) in listeners.into_iter().enumerate() {
-                let addrs = addrs.clone();
                 handles.push(sc.spawn(move || {
-                    TcpTransport::with_listener(rank, &addrs, l, TcpOptions::default()).unwrap()
+                    TcpTransport::with_listener(rank, addrs, &l, TcpOptions::default()).unwrap()
                 }));
             }
             for (rank, h) in handles.into_iter().enumerate() {
                 ts[rank] = Some(h.join().unwrap());
             }
         });
-        let mut t1 = ts.pop().unwrap().unwrap();
-        let mut t0 = ts.pop().unwrap().unwrap();
-        std::thread::scope(|sc| {
-            sc.spawn(move || {
-                t1.send(0, 7, vec![1.0, 2.0, 3.0]);
-                let back = t1.recv_from(0, 8);
-                assert_eq!(back, vec![6.0]);
-                assert_eq!(t1.sent(), (16 + 24, 1));
-                assert_eq!(t1.sent_by_tag(), vec![(7, 16 + 24, 1)]);
-            });
-            let got = t0.recv_from(1, 7);
-            assert_eq!(got, vec![1.0, 2.0, 3.0]);
-            t0.send(1, 8, vec![got.iter().sum()]);
-            assert_eq!(t0.sent(), (16 + 8, 1));
-        });
+        ts.into_iter().map(|o| o.unwrap()).collect()
+    }
+
+    #[test]
+    fn peer_death_is_a_typed_error_and_pending_data_survives() {
+        let (addrs, listeners) = bind_loopback(2).unwrap();
+        let mut ts = mesh(&addrs, listeners);
+        let mut t1 = ts.pop().unwrap();
+        let mut t0 = ts.pop().unwrap();
+        // Rank 1 sends one last frame, then dies (Drop flushes the queue
+        // before shutting the socket down).
+        t1.send(0, 5, vec![9.0]).unwrap();
+        drop(t1);
+        // The frame already on the wire is still delivered...
+        assert_eq!(t0.recv_from(1, 5).unwrap(), vec![9.0]);
+        // ...then the death surfaces as a typed error, not a panic, on
+        // every receive flavor — and sticks.
+        assert_eq!(
+            t0.recv_from(1, 5),
+            Err(TransportError::PeerGone { peer: 1 })
+        );
+        assert_eq!(
+            t0.try_recv_from(1, 6),
+            Err(TransportError::PeerGone { peer: 1 })
+        );
+        assert_eq!(
+            t0.recv_from(1, 7),
+            Err(TransportError::PeerGone { peer: 1 })
+        );
     }
 
     #[test]
@@ -579,15 +646,15 @@ mod tests {
         drop(l0); // rank 0 not listening yet
         let addrs1 = addrs.clone();
         let h1 = std::thread::spawn(move || {
-            TcpTransport::with_listener(1, &addrs1, l1, TcpOptions::default()).unwrap()
+            TcpTransport::with_listener(1, &addrs1, &l1, TcpOptions::default()).unwrap()
         });
         std::thread::sleep(Duration::from_millis(150));
         let l0 = TcpListener::bind(&addr0).unwrap();
         let t0 =
-            TcpTransport::with_listener(0, &addrs, l0, TcpOptions::default()).unwrap();
+            TcpTransport::with_listener(0, &addrs, &l0, TcpOptions::default()).unwrap();
         let mut t1 = h1.join().unwrap();
         let mut t0 = t0;
-        t0.send(1, 1, vec![42.0]);
-        assert_eq!(t1.recv_from(0, 1), vec![42.0]);
+        t0.send(1, 1, vec![42.0]).unwrap();
+        assert_eq!(t1.recv_from(0, 1).unwrap(), vec![42.0]);
     }
 }

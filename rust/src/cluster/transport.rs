@@ -26,8 +26,43 @@
 //!    (16 bytes = the frame header: tag + length, mirroring an MPI
 //!    envelope). Both backends use the same formula, so the Table 2
 //!    communication numbers are backend-independent.
+//! 4. **Typed peer-death errors**: a hung-up, crashed, or poisoned peer is
+//!    reported as `Err(TransportError)` from `send`/`recv_from`/
+//!    `try_recv_from` — never a panic. Messages already parked from a peer
+//!    remain deliverable after it dies; the error fires only once the
+//!    pending data for the requested `(peer, tag)` is exhausted. This is
+//!    what lets the coordinator observe a dead rank as a recoverable event
+//!    (checkpoint/resume) instead of a process abort.
 //!
 //! [`sent`]: Transport::sent
+
+/// A peer-failure event observed at the transport layer.
+///
+/// Both backends map their native failure signals onto these variants: the
+/// TCP mesh's poison frames (a reader thread observing EOF / a broken
+/// stream) and closed writer channels, and the fabric's disconnected mpsc
+/// channels. The solver and coordinator treat them as "rank X is gone" —
+/// recoverable via checkpoint/resume when enabled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportError {
+    /// A specific peer hung up (socket closed, process died, endpoint
+    /// dropped) and no pending data from it can satisfy the request.
+    PeerGone { peer: usize },
+    /// Every peer is gone: the shared inbox has no live senders left, so no
+    /// request against any rank can ever complete.
+    AllPeersGone,
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::PeerGone { peer } => write!(f, "peer rank {peer} hung up"),
+            TransportError::AllPeersGone => write!(f, "all peers hung up"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
 
 /// A cluster interconnect endpoint owned by one rank.
 ///
@@ -42,16 +77,20 @@ pub trait Transport: Send {
     fn size(&self) -> usize;
 
     /// Send a tagged payload to rank `to`. Must not deadlock against a peer
-    /// that is not currently receiving (backends buffer or queue).
-    fn send(&mut self, to: usize, tag: u64, data: Vec<f64>);
+    /// that is not currently receiving (backends buffer or queue). Errors
+    /// with [`TransportError::PeerGone`] when the peer's link is down.
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) -> Result<(), TransportError>;
 
     /// Blocking receive of the next message from `from` with tag `tag`.
     /// Messages with other `(from, tag)` keys arriving meanwhile are parked.
-    fn recv_from(&mut self, from: usize, tag: u64) -> Vec<f64>;
+    /// Errors once `from` is known dead and nothing pending matches.
+    fn recv_from(&mut self, from: usize, tag: u64) -> Result<Vec<f64>, TransportError>;
 
-    /// Non-blocking variant: returns `None` when no matching message has
-    /// arrived yet (used by the transport-level ALB quorum).
-    fn try_recv_from(&mut self, from: usize, tag: u64) -> Option<Vec<f64>>;
+    /// Non-blocking variant: `Ok(None)` when no matching message has
+    /// arrived yet (used by the transport-level ALB quorum);
+    /// `Err(PeerGone)` once `from` is known dead with nothing pending.
+    fn try_recv_from(&mut self, from: usize, tag: u64)
+        -> Result<Option<Vec<f64>>, TransportError>;
 
     /// `(bytes, messages)` sent by this endpoint since creation, under the
     /// shared 16 + 8·len accounting formula.

@@ -64,6 +64,12 @@ pub struct DistributedConfig {
     pub virtual_time: bool,
     /// Per-node compute-speed multipliers under the virtual clock.
     pub slow_factors: Vec<f64>,
+    /// Where rank 0 persists per-iteration checkpoints (None = off). See
+    /// `cluster::checkpoint` for the format and DESIGN.md §Failure model.
+    pub checkpoint_dir: Option<String>,
+    /// Checkpoint every k-th outer iteration (0 = off). SPMD-identical:
+    /// it gates a collective gather.
+    pub checkpoint_every: usize,
 }
 
 impl Default for DistributedConfig {
@@ -90,6 +96,8 @@ impl Default for DistributedConfig {
             threads: 1,
             virtual_time: false,
             slow_factors: Vec::new(),
+            checkpoint_dir: None,
+            checkpoint_every: 0,
         }
     }
 }
@@ -234,6 +242,9 @@ fn plan_cluster(
         virtual_time: cfg.virtual_time,
         slow_factor: 1.0,
         network: cfg.network,
+        checkpoint_dir: cfg.checkpoint_dir.clone(),
+        checkpoint_every: cfg.checkpoint_every,
+        die_after_iters: None,
     };
     ClusterPlan {
         partition,
@@ -362,7 +373,10 @@ pub fn fit_distributed(
                     nodes,
                 };
                 let mut ep = ep;
-                run_worker(rank, shard, test_shard, &mut ep, &shared)
+                // In-process ranks share our fate: a dead peer here means a
+                // panicked thread, which the join below already surfaces.
+                run_worker(rank, shard, test_shard, &mut ep, &shared, None)
+                    .expect("in-process peer hung up")
             }));
         }
         for h in handles {
@@ -410,7 +424,7 @@ pub fn fit_distributed_tcp(
             let addrs = addrs.clone();
             handles.push(scope.spawn(move |_| {
                 let mut t =
-                    TcpTransport::with_listener(rank, &addrs, listener, TcpOptions::default())
+                    TcpTransport::with_listener(rank, &addrs, &listener, TcpOptions::default())
                         .expect("tcp mesh formation failed");
                 let shared = WorkerShared {
                     compute,
@@ -421,7 +435,8 @@ pub fn fit_distributed_tcp(
                     cfg: &wcfg,
                     nodes: cfg.nodes,
                 };
-                run_worker(rank, shard, test_shard, &mut t, &shared)
+                run_worker(rank, shard, test_shard, &mut t, &shared, None)
+                    .expect("in-process peer hung up")
             }));
         }
         for h in handles {
@@ -542,6 +557,7 @@ pub fn fit_path_distributed(
                     screen,
                 };
                 run_worker_path(rank, shard, &mut ep, compute, y, &wcfg, &job)
+                    .expect("in-process peer hung up")
             }));
         }
         for h in handles {
@@ -593,7 +609,7 @@ pub fn fit_path_distributed_tcp(
             let addrs = addrs.clone();
             handles.push(scope.spawn(move |_| {
                 let mut t =
-                    TcpTransport::with_listener(rank, &addrs, listener, TcpOptions::default())
+                    TcpTransport::with_listener(rank, &addrs, &listener, TcpOptions::default())
                         .expect("tcp mesh formation failed");
                 let job = PathJob {
                     lambdas,
@@ -603,6 +619,7 @@ pub fn fit_path_distributed_tcp(
                     screen,
                 };
                 run_worker_path(rank, shard, &mut t, compute, y, &wcfg, &job)
+                    .expect("in-process peer hung up")
             }));
         }
         for h in handles {

@@ -20,7 +20,8 @@ use crate::cluster::alb::{AlbMode, AlbQuorum};
 use crate::cluster::allreduce::{
     allreduce_max, allreduce_scalar, allreduce_sum, AllReduceAlgo, TAG_STRIDE,
 };
-use crate::cluster::transport::Transport;
+use crate::cluster::checkpoint::{Checkpoint, RankBlock, ResumePoint};
+use crate::cluster::transport::{Transport, TransportError};
 use crate::glm::regularizer::{ElasticNet, Penalty1D};
 use crate::metrics;
 use crate::obs::span::{Journal, SpanRecord};
@@ -90,6 +91,17 @@ pub struct WorkerConfig {
     pub slow_factor: f64,
     /// Wire model used to charge communication under the virtual clock.
     pub network: crate::cluster::fabric::NetworkModel,
+    /// Where rank 0 persists iteration checkpoints (None = rank 0 does not
+    /// write; non-zero ranks never write regardless — they only feed the
+    /// gather).
+    pub checkpoint_dir: Option<String>,
+    /// Checkpoint every k-th outer iteration (0 = checkpointing off). Must
+    /// be SPMD-identical across ranks: it gates a collective gather.
+    pub checkpoint_every: usize,
+    /// Chaos injection: abort training right after the k-th outer
+    /// iteration, simulating an abrupt crash of this rank (the caller
+    /// drops the transport; peers observe a hang-up mid-collective).
+    pub die_after_iters: Option<usize>,
 }
 
 /// The result each worker returns to the driver.
@@ -162,17 +174,17 @@ pub fn run_alb_subproblem(
     quorum: &mut AlbQuorum<'_>,
     t: &mut dyn Transport,
     journal: Option<(&Journal, u64)>,
-) -> AlbOutcome {
+) -> Result<AlbOutcome, TransportError> {
     let p_local = x.ncols;
     if p_local == 0 {
         // An empty block is a trivially complete pass: report it so this
         // rank never starves the κ quorum (possible when p < M).
-        quorum.report_full_pass(t);
-        return AlbOutcome {
+        quorum.report_full_pass(t)?;
+        return Ok(AlbOutcome {
             updates: 0,
             full_passes: 1,
             reported: true,
-        };
+        });
     }
     if let Some(h) = hybrid {
         return run_alb_subproblem_hybrid(h, beta, w, z, mu, penalty, cfg, state, quorum, t, journal);
@@ -200,21 +212,21 @@ pub fn run_alb_subproblem(
         );
         updates += out.updates;
         if !reported && updates >= p_local {
-            quorum.report_full_pass(t);
+            quorum.report_full_pass(t)?;
             reported = true;
         }
         if out.updates < chunk {
             break; // the shared stop flag fired mid-chunk
         }
-        if updates >= max_updates || quorum.should_stop(t) {
+        if updates >= max_updates || quorum.should_stop(t)? {
             break;
         }
     }
-    AlbOutcome {
+    Ok(AlbOutcome {
         updates,
         full_passes: updates / p_local,
         reported,
-    }
+    })
 }
 
 /// The hybrid variant of the ALB subproblem: waves of up to `chunk`
@@ -236,7 +248,7 @@ fn run_alb_subproblem_hybrid(
     quorum: &mut AlbQuorum<'_>,
     t: &mut dyn Transport,
     journal: Option<(&Journal, u64)>,
-) -> AlbOutcome {
+) -> Result<AlbOutcome, TransportError> {
     let p_local: usize = h.ranges.iter().map(|r| r.len()).sum();
     let max_passes = cfg.max_passes.max(1);
     h.reset();
@@ -274,32 +286,40 @@ fn run_alb_subproblem_hybrid(
             }
         }
         if !reported && updates >= p_local {
-            quorum.report_full_pass(t);
+            quorum.report_full_pass(t)?;
             reported = true;
         }
-        if cut_mid_wave || quorum.should_stop(t) {
+        if cut_mid_wave || quorum.should_stop(t)? {
             break;
         }
     }
     h.reduce_into(state);
-    AlbOutcome {
+    Ok(AlbOutcome {
         updates,
         full_passes: updates / p_local,
         reported,
-    }
+    })
 }
 
 /// Run the full training loop for one node. `x` is the node's shard X^m;
 /// `test_x` the same feature block of the test matrix (for auPRC traces).
 /// `transport` is the node's attachment to the cluster — fabric endpoint or
 /// TCP mesh, the worker cannot tell.
+///
+/// `resume` restarts the loop mid-fit from a [`Checkpoint`]-derived
+/// [`ResumePoint`] (same value on every rank modulo the per-rank block):
+/// with an unchanged cluster shape the continuation is bit-identical to
+/// the uninterrupted run (DESIGN.md §Failure model). A peer dying mid-fit
+/// surfaces as `Err(TransportError)` — the coordinator's recovery loop,
+/// not the worker, decides whether that is fatal.
 pub fn run_worker(
     rank: usize,
     x: &Csc,
     test_x: Option<&Csc>,
     transport: &mut dyn Transport,
     shared: &WorkerShared<'_>,
-) -> WorkerOutput {
+    resume: Option<&ResumePoint>,
+) -> Result<WorkerOutput, TransportError> {
     debug_assert_eq!(rank, transport.rank());
     let cfg = shared.cfg;
     let n = x.nrows;
@@ -318,6 +338,35 @@ pub fn run_worker(
     // `state` stays the single source of truth for the post-CD flow — the
     // waves merge into it via the deterministic ordered reduction.
     let mut hybrid = (cfg.threads > 1 && p_local > 0).then(|| HybridCd::new(x, cfg.threads));
+    // Restore checkpointed state: β, the synced margins, μ, and the cyclic
+    // cursors. Working stats (w, z) and the regularizer are re-derived
+    // below by the same deterministic code an uninterrupted run uses.
+    let start_iter = match resume {
+        None => 0,
+        Some(rp) => {
+            assert_eq!(
+                rp.beta.len(),
+                p_local,
+                "resume β block does not match this rank's shard"
+            );
+            assert_eq!(rp.margins.len(), n, "resume margins do not match dataset");
+            beta.copy_from_slice(&rp.beta);
+            margins.copy_from_slice(&rp.margins);
+            mu = rp.mu;
+            state.cursor = rp.cursor;
+            if let Some(h) = hybrid.as_mut() {
+                // Only a shape-identical resume restores mid-block cursors;
+                // a re-sharded or re-threaded continuation starts its
+                // cursors at 0 (still correct, no longer bit-identical).
+                if rp.sub_cursors.len() == h.states.len() {
+                    for (s, &c) in h.states.iter_mut().zip(rp.sub_cursors.iter()) {
+                        s.cursor = c;
+                    }
+                }
+            }
+            rp.iter
+        }
+    };
     let started = Instant::now();
     // Virtual cluster clock state.
     let mut sim_clock = 0.0f64;
@@ -355,21 +404,27 @@ pub fn run_worker(
     let journal = Journal::with_default_capacity(rank);
 
     // --- initial objective ---
-    let init_span = journal.start(0, "init");
+    let init_span = journal.start(start_iter as u64, "init");
     let mut loss = shared.compute.stats(y, &margins, &mut w, &mut z);
     let mut reg = {
         let mut r = [shared.penalty.value(&beta)];
-        allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut r, AllReduceAlgo::Naive);
+        allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut r, AllReduceAlgo::Naive)?;
         r[0]
     };
-    let mut f_cur = loss + reg;
+    // On resume the checkpointed objective is authoritative (it equals the
+    // recomputed value bit-for-bit when the cluster shape is unchanged, and
+    // keeps the convergence test exact when it is not).
+    let mut f_cur = match resume {
+        Some(rp) => rp.f_cur,
+        None => loss + reg,
+    };
 
     let mut trace = (rank == 0).then(|| Trace::new("d-glmnet-dist", "distributed"));
     record_point(
         &mut trace,
         &started,
         None,
-        0,
+        start_iter,
         f_cur,
         &beta,
         1.0,
@@ -378,14 +433,20 @@ pub fn run_worker(
         &next_tag,
         test_x,
         shared,
-    );
+    )?;
     journal.finish_with_bytes(init_span, ep_cell.borrow().sent().0);
 
-    let mut stall = 0usize;
-    let mut iters = 0usize;
-    for it in 1..=cfg.max_iters {
+    let mut stall = resume.map_or(0, |rp| rp.stall);
+    let mut iters = start_iter;
+    for it in (start_iter + 1)..=cfg.max_iters {
         iters = it;
         let itn = it as u64;
+        // Chaos injection: die mid-protocol. Peers are (or will be) blocked
+        // in this iteration's collectives and see the hang-up as a typed
+        // error once the caller drops the transport.
+        if cfg.die_after_iters.is_some_and(|k| it > k) {
+            return Err(TransportError::PeerGone { peer: rank });
+        }
         // ---- Algorithm 4 step 4: local subproblem (with optional ALB) ----
         phase.set("cd");
         let mut bytes_before = ep_cell.borrow().sent().0;
@@ -449,7 +510,7 @@ pub fn run_worker(
                     &mut quorum,
                     *ep_cell.borrow_mut(),
                     Some((&journal, itn)),
-                );
+                )?;
                 cd_updates += out.updates as u64;
                 full_passes += out.full_passes as u64;
                 if !out.reported {
@@ -473,7 +534,7 @@ pub fn run_worker(
         let sync_span = journal.start(itn, "sync");
         let sync_t0 = Instant::now();
         let mut dmargins = state.t.clone();
-        allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut dmargins, cfg.allreduce);
+        allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut dmargins, cfg.allreduce)?;
         sync_wait += sync_t0.elapsed();
         {
             let b = ep_cell.borrow().sent().0;
@@ -490,6 +551,11 @@ pub fn run_worker(
         for i in 0..n {
             grad_dot += -w[i] * z[i] * dmargins[i];
         }
+        // The line-search callback cannot return a Result through the
+        // solver seam, so a transport failure inside it is stashed and
+        // re-raised as soon as the search returns (the zeros handed back
+        // in the meantime are discarded with the whole iteration).
+        let ls_err: Cell<Option<TransportError>> = Cell::new(None);
         let reg_ray = |alphas: &[f64]| -> Vec<f64> {
             let mut out = vec![0.0; alphas.len()];
             for (local, d) in state.delta_beta.iter().enumerate() {
@@ -498,7 +564,12 @@ pub fn run_worker(
                     out[k] += shared.penalty.value_1d(b + a * d);
                 }
             }
-            allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut out, AllReduceAlgo::Naive);
+            if let Err(e) =
+                allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut out, AllReduceAlgo::Naive)
+            {
+                ls_err.set(Some(e));
+                return vec![0.0; alphas.len()];
+            }
             out
         };
         let ls = line_search(
@@ -512,6 +583,9 @@ pub fn run_worker(
             grad_dot,
             &reg_ray,
         );
+        if let Some(e) = ls_err.take() {
+            return Err(e);
+        }
 
         // ---- steps 8-9: apply the step ----
         if ls.alpha > 0.0 {
@@ -541,7 +615,7 @@ pub fn run_worker(
         loss = shared.compute.stats(y, &margins, &mut w, &mut z);
         reg = {
             let mut r = [shared.penalty.value(&beta)];
-            allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut r, AllReduceAlgo::Naive);
+            allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut r, AllReduceAlgo::Naive)?;
             r[0]
         };
         let f_new = loss + reg;
@@ -553,7 +627,7 @@ pub fn run_worker(
             let cpu_now = crate::util::cputime::thread_cpu_secs();
             let my_compute = (cpu_now - cpu_mark) * cfg.slow_factor;
             cpu_mark = cpu_now;
-            let slowest = allreduce_max(*ep_cell.borrow_mut(), next_tag(), my_compute);
+            let slowest = allreduce_max(*ep_cell.borrow_mut(), next_tag(), my_compute)?;
             // Per-node wire traffic this iteration. When the backend can
             // observe all links (fabric), charge the SPMD-uniform share:
             // global delta divided by M (each node's sends are sequential).
@@ -590,17 +664,93 @@ pub fn run_worker(
             &next_tag,
             test_x,
             shared,
-        );
+        )?;
         journal.finish_with_bytes(comm_span, ep_cell.borrow().sent().0 - bytes_before);
 
         // ---- convergence (identical decision on every node) ----
         if rel_drop.abs() < cfg.tol {
             stall += 1;
-            if stall >= cfg.patience {
-                break;
-            }
         } else {
             stall = 0;
+        }
+        let stop = stall >= cfg.patience;
+
+        // ---- iteration checkpoint (collective gather to rank 0) ----
+        // `checkpoint_every` is SPMD-identical, so every rank takes this
+        // branch together; rank 0 assembles the full `Checkpoint` and
+        // persists it atomically. Disk trouble is survivable (warn and keep
+        // training); peer death during the gather is not (typed error, like
+        // any other collective).
+        if cfg.checkpoint_every > 0 && it % cfg.checkpoint_every == 0 && !stop {
+            phase.set("ckpt");
+            let ck_span = journal.start(itn, "ckpt");
+            let ck_tag = next_tag();
+            let sub_cursors: Vec<usize> = match &hybrid {
+                Some(h) => h.states.iter().map(|s| s.cursor).collect(),
+                None => Vec::new(),
+            };
+            if rank == 0 {
+                let mut ranks = vec![RankBlock {
+                    cursor: state.cursor,
+                    sub_cursors,
+                    beta: beta.clone(),
+                }];
+                let mut ok = true;
+                for from in 1..shared.nodes {
+                    let p = ep_cell.borrow_mut().recv_from(from, ck_tag)?;
+                    match decode_rank_block(&p) {
+                        Some(b) => ranks.push(b),
+                        None => {
+                            crate::obs_warn!(
+                                "ckpt",
+                                format!("rank {from} sent a malformed checkpoint block"),
+                                iter = it
+                            );
+                            ok = false;
+                        }
+                    }
+                }
+                if ok {
+                    if let Some(dir) = cfg.checkpoint_dir.as_deref() {
+                        let ck = Checkpoint {
+                            iter: it,
+                            stall,
+                            mu,
+                            f_cur,
+                            lambda_idx: 0,
+                            margins: margins.clone(),
+                            ranks,
+                        };
+                        match ck.write_atomic(std::path::Path::new(dir)) {
+                            Ok(path) => {
+                                crate::obs::metrics::global().counter("ckpt.written").inc();
+                                crate::obs_debug!(
+                                    "ckpt",
+                                    format!("wrote checkpoint {}", path.display()),
+                                    iter = it
+                                );
+                            }
+                            Err(e) => crate::obs_warn!(
+                                "ckpt",
+                                format!("checkpoint write failed: {e}"),
+                                iter = it
+                            ),
+                        }
+                    }
+                }
+            } else {
+                let mut payload = Vec::with_capacity(2 + sub_cursors.len() + beta.len());
+                payload.push(state.cursor as f64);
+                payload.push(sub_cursors.len() as f64);
+                payload.extend(sub_cursors.iter().map(|&c| c as f64));
+                payload.extend_from_slice(&beta);
+                ep_cell.borrow_mut().send(0, ck_tag, payload)?;
+            }
+            journal.finish(ck_span);
+        }
+
+        if stop {
+            break;
         }
     }
 
@@ -612,7 +762,7 @@ pub fn run_worker(
         Some(h) => (h.threads(), h.updates_per_thread.clone()),
         None => (1, vec![cd_updates]),
     };
-    WorkerOutput {
+    Ok(WorkerOutput {
         rank,
         beta_local: beta,
         trace,
@@ -627,7 +777,27 @@ pub fn run_worker(
         updates_per_thread,
         spans,
         comm_by_phase,
-    }
+    })
+}
+
+/// Decode one rank's checkpoint-gather payload
+/// `[cursor, k, sub_cursors[0..k], beta...]`. Returns `None` on anything
+/// malformed so the coordinator skips the write instead of persisting a
+/// corrupt checkpoint.
+fn decode_rank_block(p: &[f64]) -> Option<RankBlock> {
+    let as_count = |v: f64| -> Option<usize> {
+        if v.is_finite() && v >= 0.0 && v.fract() == 0.0 && v < (1u64 << 40) as f64 {
+            Some(v as usize)
+        } else {
+            None
+        }
+    };
+    let cursor = as_count(*p.first()?)?;
+    let k = as_count(*p.get(1)?)?;
+    let sub = p.get(2..2 + k)?;
+    let sub_cursors = sub.iter().map(|&c| as_count(c)).collect::<Option<Vec<_>>>()?;
+    let beta = p.get(2 + k..)?.to_vec();
+    Some(RankBlock { cursor, sub_cursors, beta })
 }
 
 /// Map the transport's per-tag accounting onto solver phases using the
@@ -719,7 +889,7 @@ pub fn run_worker_path(
     y: &[f64],
     cfg: &WorkerConfig,
     job: &PathJob<'_>,
-) -> PathWorkerOutput {
+) -> Result<PathWorkerOutput, TransportError> {
     debug_assert_eq!(rank, transport.rank());
     assert!(!job.lambdas.is_empty(), "path sweep needs a non-empty λ grid");
     let n = x.nrows;
@@ -778,7 +948,7 @@ pub fn run_worker_path(
 
         let mut reg = {
             let mut r = [pen.value(&beta)];
-            allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut r, AllReduceAlgo::Naive);
+            allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut r, AllReduceAlgo::Naive)?;
             r[0]
         };
         let mut f_cur = loss + reg;
@@ -821,11 +991,14 @@ pub fn run_worker_path(
                 };
                 updates_local += did as u64;
                 let mut dmargins = state.t.clone();
-                allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut dmargins, cfg.allreduce);
+                allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut dmargins, cfg.allreduce)?;
                 let mut grad_dot = 0.0;
                 for i in 0..n {
                     grad_dot += -w[i] * z[i] * dmargins[i];
                 }
+                // Same stash-and-reraise dance as the train loop: the
+                // line-search callback has no Result channel of its own.
+                let ls_err: Cell<Option<TransportError>> = Cell::new(None);
                 let reg_ray = |alphas: &[f64]| -> Vec<f64> {
                     let mut out = vec![0.0; alphas.len()];
                     for (local, d) in state.delta_beta.iter().enumerate() {
@@ -834,7 +1007,15 @@ pub fn run_worker_path(
                             out[k] += pen.value_1d(b + a * d);
                         }
                     }
-                    allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut out, AllReduceAlgo::Naive);
+                    if let Err(e) = allreduce_sum(
+                        *ep_cell.borrow_mut(),
+                        next_tag(),
+                        &mut out,
+                        AllReduceAlgo::Naive,
+                    ) {
+                        ls_err.set(Some(e));
+                        return vec![0.0; alphas.len()];
+                    }
                     out
                 };
                 let ls = line_search(
@@ -848,6 +1029,9 @@ pub fn run_worker_path(
                     grad_dot,
                     &reg_ray,
                 );
+                if let Some(e) = ls_err.take() {
+                    return Err(e);
+                }
                 if ls.alpha > 0.0 {
                     for (b, d) in beta.iter_mut().zip(state.delta_beta.iter()) {
                         *b += ls.alpha * d;
@@ -866,7 +1050,12 @@ pub fn run_worker_path(
                 loss = compute.stats(y, &margins, &mut w, &mut z);
                 reg = {
                     let mut r = [pen.value(&beta)];
-                    allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut r, AllReduceAlgo::Naive);
+                    allreduce_sum(
+                        *ep_cell.borrow_mut(),
+                        next_tag(),
+                        &mut r,
+                        AllReduceAlgo::Naive,
+                    )?;
                     r[0]
                 };
                 let f_new = loss + reg;
@@ -893,7 +1082,7 @@ pub fn run_worker_path(
                 path::kkt_violations(&active, &grads, l1, path::KKT_SLACK)
             };
             let total =
-                allreduce_scalar(*ep_cell.borrow_mut(), next_tag(), viol.len() as f64);
+                allreduce_scalar(*ep_cell.borrow_mut(), next_tag(), viol.len() as f64)?;
             if total == 0.0 {
                 break;
             }
@@ -909,11 +1098,11 @@ pub fn run_worker_path(
         // Validation scoring: partial margins X_val^m β^m, allreduced, then
         // the auPRC derived identically on every rank (SPMD selection).
         let mut vscores = job.val_x.mul_vec(&beta);
-        allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut vscores, cfg.allreduce);
+        allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut vscores, cfg.allreduce)?;
         let val_auprc = metrics::auprc(job.val_y, &vscores);
         // Global nnz + update count in one small collective.
         let mut acc = [metrics::nnz_weights(&beta) as f64, updates_local as f64];
-        allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut acc, AllReduceAlgo::Naive);
+        allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut acc, AllReduceAlgo::Naive)?;
         cd_updates_total += updates_local;
         points.push(PathPointLocal {
             lambda1: l1,
@@ -930,14 +1119,14 @@ pub fn run_worker_path(
     let auprcs: Vec<f64> = points.iter().map(|p| p.val_auprc).collect();
     let best = path::nan_safe_argmax(&auprcs).expect("non-empty grid");
     let (sent_bytes, sent_msgs) = ep_cell.borrow().sent();
-    PathWorkerOutput {
+    Ok(PathWorkerOutput {
         rank,
         points,
         best,
         cd_updates_local: cd_updates_total,
         sent_bytes,
         sent_msgs,
-    }
+    })
 }
 
 /// Injected straggler sleep, prorated to the fraction of a pass executed.
@@ -966,10 +1155,10 @@ fn record_point(
     next_tag: &dyn Fn() -> u64,
     test_x: Option<&Csc>,
     shared: &WorkerShared<'_>,
-) {
+) -> Result<(), TransportError> {
     // Global nnz: allreduce the local count.
     let mut nnz = [metrics::nnz_weights(beta_local) as f64];
-    allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut nnz, AllReduceAlgo::Naive);
+    allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut nnz, AllReduceAlgo::Naive)?;
 
     // Test scores: allreduce partial margins X_test^m β^m.
     let auprc = match (test_x, shared.test_y) {
@@ -982,7 +1171,7 @@ fn record_point(
                 next_tag(),
                 &mut scores,
                 shared.cfg.allreduce,
-            );
+            )?;
             Some(metrics::auprc(ty, &scores))
         }
         _ => None,
@@ -999,6 +1188,7 @@ fn record_point(
             auprc,
         });
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -1025,6 +1215,9 @@ mod tests {
             virtual_time: false,
             slow_factor: 1.0,
             network: crate::cluster::fabric::NetworkModel::default(),
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            die_after_iters: None,
         }
     }
 

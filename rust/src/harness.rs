@@ -274,6 +274,16 @@ pub fn delays_with_straggler(
     delays
 }
 
+/// Fresh per-run checkpoint directory under the system temp dir — the chaos
+/// suite's standard location for `--checkpoint-dir`-style runs. Unique per
+/// (process, tag) so parallel tests never share state; the caller owns
+/// cleanup.
+pub fn checkpoint_dir_for(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("dglmnet-ckpt-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create checkpoint dir");
+    dir
+}
+
 /// Subsample a trace to ≤ 8 display checkpoints (first, last, log-spaced).
 fn checkpoints(points: &[crate::solver::trace::TracePoint]) -> Vec<&crate::solver::trace::TracePoint> {
     if points.len() <= 8 {
@@ -348,6 +358,14 @@ mod tests {
         let compute = NativeCompute::new(LossKind::Logistic);
         let short = run_dglmnet(&s, &rc, &compute, None);
         assert!(f_star <= short.objective + 1e-9);
+    }
+
+    #[test]
+    fn checkpoint_dir_is_created_and_tagged() {
+        let d = checkpoint_dir_for("harness-unit");
+        assert!(d.is_dir());
+        assert!(d.file_name().unwrap().to_string_lossy().contains("harness-unit"));
+        std::fs::remove_dir_all(&d).ok();
     }
 
     #[test]

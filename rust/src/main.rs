@@ -176,6 +176,25 @@ fn train_cli() -> Cli {
     )
     .flag("save-model", "", "write the trained model JSON to this path")
     .flag("eval-every", "1", "test-metric cadence (0 = never)")
+    .flag(
+        "checkpoint-dir",
+        "",
+        "persist per-iteration checkpoints under this directory (written by \
+         rank 0). With --cluster, a job that loses a rank resumes \
+         automatically from the latest complete checkpoint across the \
+         surviving workers",
+    )
+    .flag(
+        "checkpoint-every",
+        "",
+        "checkpoint every k-th outer iteration (default 1 when \
+         --checkpoint-dir is set; 0 disables)",
+    )
+    .switch(
+        "resume",
+        "with --cluster: start from the latest complete checkpoint under \
+         --checkpoint-dir instead of from zero",
+    )
 }
 
 /// Apply a `--log-level` value to the global `obs::log` filter. Empty means
@@ -277,9 +296,11 @@ fn cmd_train(argv: &[String]) -> i32 {
         }
     }
     let straggler_delays = match parse_f64_list(args.get("straggler-delays-ms")) {
+        // bounded_delay: stay out of `Duration::from_secs_f64`'s panic
+        // domain even for absurd-but-finite values.
         Ok(ms) => ms
             .into_iter()
-            .map(|m| std::time::Duration::from_secs_f64(m / 1000.0))
+            .map(|m| process::bounded_delay(m / 1000.0))
             .collect::<Vec<_>>(),
         Err(e) => {
             eprintln!("--straggler-delays-ms: {e}");
@@ -318,6 +339,38 @@ fn cmd_train(argv: &[String]) -> i32 {
         );
         return 2;
     }
+    let checkpoint_dir = if args.get("checkpoint-dir").is_empty() {
+        None
+    } else {
+        Some(args.get("checkpoint-dir").to_string())
+    };
+    let checkpoint_every = if args.get("checkpoint-every").is_empty() {
+        usize::from(checkpoint_dir.is_some())
+    } else {
+        match args.get("checkpoint-every").parse::<usize>() {
+            Ok(k) if k <= process::MAX_CHECKPOINT_EVERY => k,
+            _ => {
+                eprintln!(
+                    "--checkpoint-every must be an integer in [0, {}]",
+                    process::MAX_CHECKPOINT_EVERY
+                );
+                return 2;
+            }
+        }
+    };
+    if checkpoint_every > 0 && checkpoint_dir.is_none() {
+        eprintln!("--checkpoint-every needs --checkpoint-dir");
+        return 2;
+    }
+    let resume = args.get_bool("resume");
+    if resume && checkpoint_dir.is_none() {
+        eprintln!("--resume needs --checkpoint-dir");
+        return 2;
+    }
+    if resume && cluster.is_empty() {
+        eprintln!("--resume needs --cluster (in-process runs always start from zero)");
+        return 2;
+    }
     let cfg = DistributedConfig {
         nodes: if cluster.is_empty() {
             args.get_usize("nodes")
@@ -337,6 +390,8 @@ fn cmd_train(argv: &[String]) -> i32 {
         straggler_delays: straggler_delays.clone(),
         virtual_time,
         slow_factors: slow_factors.clone(),
+        checkpoint_dir: checkpoint_dir.clone(),
+        checkpoint_every,
         ..Default::default()
     };
 
@@ -389,6 +444,9 @@ fn cmd_train(argv: &[String]) -> i32 {
             lambda_grid: Vec::new(),
             screen: false,
             threads: threads.clone(),
+            checkpoint_dir: checkpoint_dir.clone(),
+            checkpoint_every,
+            resume,
         };
         match process::train_cluster(&spec, Some(&splits)) {
             Ok(r) => r,
@@ -667,6 +725,9 @@ fn cmd_path(argv: &[String]) -> i32 {
             lambda_grid: lambdas.clone(),
             screen,
             threads: threads.clone(),
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            resume: false,
         };
         match process::path_cluster(&spec, Some(&splits)) {
             Ok(r) => r,
@@ -762,6 +823,19 @@ fn cmd_worker(argv: &[String]) -> i32 {
         "override this rank's intra-rank CD thread count (hybrid mode) — \
          right-size one node to its cores without the coordinator's help",
     )
+    .switch(
+        "rejoin",
+        "keep serving after a job dies of peer loss: stay on the same \
+         listen address, answer the coordinator's liveness probes, and \
+         accept the re-shipped resume job (protocol v6)",
+    )
+    .flag(
+        "die-after",
+        "",
+        "chaos injection: crash this rank right after the k-th outer \
+         iteration (drops the mesh, peers observe a hang-up) — drives the \
+         fault-tolerance tests without an external kill",
+    )
     .flag(
         "log-level",
         "",
@@ -795,9 +869,10 @@ fn cmd_worker(argv: &[String]) -> i32 {
     }
     if !args.get("straggler-delay-ms").is_empty() {
         match args.get("straggler-delay-ms").parse::<f64>() {
+            // bounded_delay keeps even absurd finite values out of
+            // `Duration::from_secs_f64`'s panic domain.
             Ok(ms) if ms.is_finite() && ms >= 0.0 => {
-                overrides.straggler_delay =
-                    Some(std::time::Duration::from_secs_f64(ms / 1000.0));
+                overrides.straggler_delay = Some(process::bounded_delay(ms / 1000.0));
             }
             _ => {
                 eprintln!("--straggler-delay-ms must be a non-negative number");
@@ -817,7 +892,16 @@ fn cmd_worker(argv: &[String]) -> i32 {
             }
         }
     }
-    match process::run_worker_process(args.get("listen"), overrides) {
+    if !args.get("die-after").is_empty() {
+        match args.get("die-after").parse::<usize>() {
+            Ok(k) => overrides.die_after_iters = Some(k),
+            Err(_) => {
+                eprintln!("--die-after must be a non-negative integer");
+                return 2;
+            }
+        }
+    }
+    match process::run_worker_process(args.get("listen"), overrides, args.get_bool("rejoin")) {
         Ok(_) => 0,
         Err(e) => {
             eprintln!("worker failed: {e}");

@@ -53,7 +53,7 @@ fn tcp_endpoints(m: usize) -> Vec<Box<dyn Transport>> {
         for (rank, listener) in listeners.into_iter().enumerate() {
             let addrs = addrs.clone();
             handles.push(s.spawn(move || {
-                TcpTransport::with_listener(rank, &addrs, listener, TcpOptions::default())
+                TcpTransport::with_listener(rank, &addrs, &listener, TcpOptions::default())
                     .expect("tcp mesh")
             }));
         }
@@ -72,7 +72,7 @@ const BACKENDS: [Backend; 2] = [("fabric", fabric_endpoints), ("tcp", tcp_endpoi
 fn await_reports(name: &str, q: &mut RemoteQuorum, t: &mut dyn Transport, want: usize) {
     let deadline = std::time::Instant::now() + Duration::from_secs(10);
     loop {
-        q.should_stop(t);
+        q.should_stop(t).unwrap();
         if q.reports() >= want {
             return;
         }
@@ -103,7 +103,7 @@ fn quorum_fires_at_exactly_ceil_kappa_m_over_both_backends() {
 
             // threshold − 1 ranks report: NOBODY may stop yet.
             for r in 0..threshold - 1 {
-                quorums[r].report_full_pass(eps[r].as_mut());
+                quorums[r].report_full_pass(eps[r].as_mut()).unwrap();
             }
             for r in 0..m {
                 // Wait until every frame sent so far has been observed, so
@@ -113,7 +113,7 @@ fn quorum_fires_at_exactly_ceil_kappa_m_over_both_backends() {
                 // threshold − 1 reports.
                 await_reports(name, &mut quorums[r], eps[r].as_mut(), threshold - 1);
                 assert!(
-                    !quorums[r].should_stop(eps[r].as_mut()),
+                    !quorums[r].should_stop(eps[r].as_mut()).unwrap(),
                     "{name} κ={kappa}: rank {r} stopped at {} < ⌈κM⌉ = {threshold}",
                     threshold - 1
                 );
@@ -121,10 +121,10 @@ fn quorum_fires_at_exactly_ceil_kappa_m_over_both_backends() {
 
             // One more report reaches the threshold: EVERYBODY stops —
             // for κ < 1 that includes rank M−1, which never reported.
-            quorums[threshold - 1].report_full_pass(eps[threshold - 1].as_mut());
+            quorums[threshold - 1].report_full_pass(eps[threshold - 1].as_mut()).unwrap();
             for r in 0..m {
                 let deadline = std::time::Instant::now() + Duration::from_secs(10);
-                while !quorums[r].should_stop(eps[r].as_mut()) {
+                while !quorums[r].should_stop(eps[r].as_mut()).unwrap() {
                     assert!(
                         std::time::Instant::now() < deadline,
                         "{name} κ={kappa}: rank {r} never observed the quorum"
@@ -160,6 +160,9 @@ fn straggler_cfg(chunk: usize) -> WorkerConfig {
         virtual_time: false,
         slow_factor: 1.0,
         network: NetworkModel::default(),
+        checkpoint_dir: None,
+        checkpoint_every: 0,
+        die_after_iters: None,
     }
 }
 
@@ -188,13 +191,13 @@ fn straggler_cursor_resumes_mid_block_across_iterations_over_both_backends() {
             let tag = (it + 1) * TAG_STRIDE;
             // The fast peer (rank 1) completes its pass and broadcasts.
             let mut peer = RemoteQuorum::new(m, 0.5, tag);
-            peer.report_full_pass(eps[1].as_mut());
+            peer.report_full_pass(eps[1].as_mut()).unwrap();
             // Rank 0 is the straggler: wait until the quorum is visible so
             // the schedule is deterministic on both backends, then run its
             // subproblem — the do-while loop grants exactly one chunk.
             let mut quorum = mode.begin_iteration(m, tag);
             let deadline = std::time::Instant::now() + Duration::from_secs(10);
-            while !quorum.should_stop(eps[0].as_mut()) {
+            while !quorum.should_stop(eps[0].as_mut()).unwrap() {
                 assert!(
                     std::time::Instant::now() < deadline,
                     "{name}: quorum frame never arrived"
@@ -214,7 +217,8 @@ fn straggler_cursor_resumes_mid_block_across_iterations_over_both_backends() {
                 &mut quorum,
                 eps[0].as_mut(),
                 None,
-            );
+            )
+            .unwrap();
             assert_eq!(out.updates, 4, "{name} iter {it}: one chunk exactly");
             assert!(!out.reported, "{name} iter {it}: straggler was cut off");
             assert_eq!(out.full_passes, 0, "{name} iter {it}");
@@ -255,10 +259,10 @@ fn hybrid_straggler_runs_one_wave_and_subblock_cursors_resume() {
             state.reset();
             let tag = (it + 1) * TAG_STRIDE;
             let mut peer = RemoteQuorum::new(m, 0.5, tag);
-            peer.report_full_pass(eps[1].as_mut());
+            peer.report_full_pass(eps[1].as_mut()).unwrap();
             let mut quorum = mode.begin_iteration(m, tag);
             let deadline = std::time::Instant::now() + Duration::from_secs(10);
-            while !quorum.should_stop(eps[0].as_mut()) {
+            while !quorum.should_stop(eps[0].as_mut()).unwrap() {
                 assert!(
                     std::time::Instant::now() < deadline,
                     "{name}: quorum frame never arrived"
@@ -278,7 +282,8 @@ fn hybrid_straggler_runs_one_wave_and_subblock_cursors_resume() {
                 &mut quorum,
                 eps[0].as_mut(),
                 None,
-            );
+            )
+            .unwrap();
             // One wave: chunk=4 coordinates on each of the 2 sub-blocks.
             assert_eq!(out.updates, 8, "{name} iter {it}: one wave exactly");
             assert!(!out.reported, "{name} iter {it}: straggler was cut off");
@@ -604,13 +609,13 @@ fn prop_duplicate_pass_done_frames_never_double_count() {
         for r in 1..m {
             let dups = rng.below(4); // 0..=3 raw frames from rank r
             for _ in 0..dups {
-                eps[r].send(0, tag, Vec::new());
+                eps[r].send(0, tag, Vec::new()).unwrap();
             }
             if dups > 0 {
                 distinct += 1;
             }
         }
-        q.should_stop(&mut eps[0]); // drains everything that arrived
+        q.should_stop(&mut eps[0]).unwrap(); // drains everything that arrived
         if q.reports() != distinct {
             return Err(format!(
                 "m={m}: counted {} reports from {distinct} distinct ranks",
@@ -618,7 +623,7 @@ fn prop_duplicate_pass_done_frames_never_double_count() {
             ));
         }
         let want_stop = distinct >= q.threshold();
-        if q.should_stop(&mut eps[0]) != want_stop {
+        if q.should_stop(&mut eps[0]).unwrap() != want_stop {
             return Err(format!(
                 "m={m} κ={kappa}: stop={} with {distinct}/{} reports",
                 !want_stop,
@@ -637,7 +642,7 @@ fn prop_report_full_pass_is_idempotent() {
         let mut q = RemoteQuorum::new(m, 1.0, 7);
         let repeats = 1 + rng.below(5);
         for _ in 0..repeats {
-            q.report_full_pass(&mut eps[0]);
+            q.report_full_pass(&mut eps[0]).unwrap();
         }
         if q.reports() != 1 {
             return Err(format!("own report counted {} times", q.reports()));
@@ -675,11 +680,11 @@ fn prop_reports_are_monotone_and_stop_is_sticky() {
         let mut stopped = false;
         for ev in events {
             if ev == 0 {
-                q.report_full_pass(&mut eps[0]);
+                q.report_full_pass(&mut eps[0]).unwrap();
             } else {
-                eps[ev].send(0, tag, Vec::new());
+                eps[ev].send(0, tag, Vec::new()).unwrap();
             }
-            let stop_now = q.should_stop(&mut eps[0]);
+            let stop_now = q.should_stop(&mut eps[0]).unwrap();
             if q.reports() < last_reports {
                 return Err(format!(
                     "reports regressed {last_reports} -> {}",
@@ -712,23 +717,23 @@ fn prop_retired_tag_frames_never_leak_into_next_quorum() {
 
         // Iteration A: everyone reports, the quorum fires and is retired.
         let mut qa = RemoteQuorum::new(m, 1.0, tag_a);
-        qa.report_full_pass(&mut eps[0]);
+        qa.report_full_pass(&mut eps[0]).unwrap();
         for r in 1..m {
-            eps[r].send(0, tag_a, Vec::new());
+            eps[r].send(0, tag_a, Vec::new()).unwrap();
         }
-        if !qa.should_stop(&mut eps[0]) {
+        if !qa.should_stop(&mut eps[0]).unwrap() {
             return Err("iteration A quorum did not fire".into());
         }
 
         // Late stragglers keep spraying frames on the RETIRED tag...
         for r in 1..m {
             for _ in 0..rng.below(3) {
-                eps[r].send(0, tag_a, Vec::new());
+                eps[r].send(0, tag_a, Vec::new()).unwrap();
             }
         }
         // ...which must be invisible to iteration B's quorum.
         let mut qb = RemoteQuorum::new(m, 1.0, tag_b);
-        qb.should_stop(&mut eps[0]);
+        qb.should_stop(&mut eps[0]).unwrap();
         if qb.reports() != 0 {
             return Err(format!(
                 "B counted {} reports from retired-tag frames",
@@ -738,9 +743,9 @@ fn prop_retired_tag_frames_never_leak_into_next_quorum() {
         // Genuine B-frames still count exactly once per rank.
         let fresh = 1 + rng.below(m - 1); // 1..=m−1 ranks report for B
         for r in 1..=fresh {
-            eps[r].send(0, tag_b, Vec::new());
+            eps[r].send(0, tag_b, Vec::new()).unwrap();
         }
-        qb.should_stop(&mut eps[0]);
+        qb.should_stop(&mut eps[0]).unwrap();
         if qb.reports() != fresh {
             return Err(format!("B saw {} of {fresh} fresh reports", qb.reports()));
         }

@@ -1,0 +1,227 @@
+//! Chaos suite for the elastic fault-tolerance layer (protocol v6): peer
+//! death surfaces as a typed [`TransportError`] instead of a panic, the
+//! per-iteration checkpoints make it survivable, and a `--rejoin` worker
+//! picks the job back up inside the coordinator's recovery window.
+//!
+//! The clusters here are real: every rank runs the actual process entry
+//! points over loopback sockets, with the death injected through the same
+//! `WorkerOverrides::die_after_iters` knob the CLI exposes as `--die-after`.
+
+use dglmnet::cluster::checkpoint::{Checkpoint, RankBlock, ResumePoint};
+use dglmnet::cluster::process::{
+    run_worker_on, run_worker_rejoin, train_cluster, JobMode, JobSpec, WorkerOverrides,
+};
+use dglmnet::cluster::{AllReduceAlgo, TransportError};
+use dglmnet::glm::loss::LossKind;
+use dglmnet::glm::regularizer::ElasticNet;
+use dglmnet::harness;
+use dglmnet::solver::compute::NativeCompute;
+use dglmnet::solver::dglmnet as dg;
+use dglmnet::solver::dglmnet::DGlmnetConfig;
+use dglmnet::util::prop;
+use std::net::TcpListener;
+
+/// The cluster-oracle job (epsilon_like @ 0.05, 3 ranks, 7 BSP iterations)
+/// with the fault-tolerance fields left off — each test flips on what it
+/// needs.
+fn chaos_spec(cluster: Vec<String>) -> JobSpec {
+    JobSpec {
+        rank: 0,
+        cluster,
+        dataset: "epsilon_like".into(),
+        scale: 0.05,
+        seed: 3,
+        loss: "logistic".into(),
+        l1: 0.5,
+        l2: 0.1,
+        max_iters: 7,
+        mu0: 1.0,
+        adaptive_mu: true,
+        tol: 1e-7,
+        patience: 2,
+        eval_every: 0,
+        allreduce: AllReduceAlgo::Ring,
+        alb_kappa: None,
+        max_passes: 4,
+        chunk: 64,
+        virtual_time: false,
+        straggler_delays: Vec::new(),
+        slow_factors: Vec::new(),
+        mode: JobMode::Train,
+        lambda_grid: Vec::new(),
+        screen: false,
+        threads: Vec::new(),
+        checkpoint_dir: None,
+        checkpoint_every: 0,
+        resume: false,
+    }
+}
+
+/// Without checkpoints a dead rank is fatal — but it must die as a typed
+/// transport error on every rank, never a panic or a hang: the coordinator
+/// job fails with a downcastable [`TransportError`], the chaos rank reports
+/// its own injected death, and the innocent bystander rank sees its peer
+/// disappear mid-collective.
+#[test]
+fn peer_death_without_checkpoints_is_a_typed_transport_error() {
+    let w1 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let w2 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let a1 = w1.local_addr().unwrap().to_string();
+    let a2 = w2.local_addr().unwrap().to_string();
+    let s = chaos_spec(vec!["127.0.0.1:0".into(), a1, a2]);
+
+    let chaos = WorkerOverrides { die_after_iters: Some(1), ..Default::default() };
+    let h1 = std::thread::spawn(move || run_worker_on(w1, chaos));
+    let h2 = std::thread::spawn(move || run_worker_on(w2, WorkerOverrides::default()));
+
+    let err = train_cluster(&s, None).expect_err("a dead rank must fail the job");
+    assert!(
+        err.downcast_ref::<TransportError>().is_some(),
+        "coordinator error is untyped: {err:#}"
+    );
+
+    let e1 = h1.join().unwrap().expect_err("rank 1 was told to die");
+    assert_eq!(
+        e1.downcast_ref::<TransportError>(),
+        Some(&TransportError::PeerGone { peer: 1 }),
+        "rank 1 must report its own injected death"
+    );
+    let e2 = h2.join().unwrap().expect_err("rank 2 lost its peer");
+    assert!(
+        e2.downcast_ref::<TransportError>().is_some(),
+        "rank 2 error is untyped: {e2:#}"
+    );
+}
+
+/// The headline recovery scenario: rank 1 crashes at the start of iteration
+/// 2, comes back on the same port with the chaos knob removed (a restarted
+/// `--rejoin` worker), rank 2 never exits (its `--rejoin` loop sends it
+/// back to the accept loop where it answers the recovery probe), and the
+/// coordinator re-ships a resume job from the iteration-1 checkpoint. The
+/// resumed fit must land on the uninterrupted single-process optimum.
+#[test]
+fn checkpointed_cluster_survives_death_and_a_rejoining_worker_resumes() {
+    let w1 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let w1_back = w1.try_clone().unwrap(); // the restart keeps the port alive
+    let w2 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let a1 = w1.local_addr().unwrap().to_string();
+    let a2 = w2.local_addr().unwrap().to_string();
+
+    let dir = harness::checkpoint_dir_for("chaos-rejoin");
+    let mut s = chaos_spec(vec!["127.0.0.1:0".into(), a1, a2]);
+    s.checkpoint_dir = Some(dir.to_string_lossy().to_string());
+    s.checkpoint_every = 1;
+
+    let h1 = std::thread::spawn(move || {
+        let chaos = WorkerOverrides { die_after_iters: Some(1), ..Default::default() };
+        let err = run_worker_on(w1, chaos).expect_err("rank 1 was told to die");
+        assert!(err.downcast_ref::<TransportError>().is_some(), "{err:#}");
+        run_worker_rejoin(w1_back, WorkerOverrides::default()).unwrap()
+    });
+    let h2 = std::thread::spawn(move || {
+        run_worker_rejoin(w2, WorkerOverrides::default()).unwrap()
+    });
+
+    let fit = train_cluster(&s, None).expect("recovery must complete the job");
+    assert_eq!(h1.join().unwrap(), 1);
+    assert_eq!(h2.join().unwrap(), 2);
+
+    assert!(
+        dir.read_dir().unwrap().next().is_some(),
+        "no checkpoint files were written to {dir:?}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Resume restores β, margins, cursors, μ and the stall counter
+    // bit-identically from the checkpoint, so the recovered run solves the
+    // same optimization as an uninterrupted one — hold it to the cluster
+    // oracle's bound against the single-process reference.
+    let splits = harness::load_splits("epsilon_like", 0.05, 3).unwrap();
+    let seq = dg::fit(
+        &splits.train,
+        &NativeCompute::new(LossKind::Logistic),
+        &ElasticNet::new(0.5, 0.1),
+        &DGlmnetConfig {
+            nodes: 3,
+            max_iters: 7,
+            tol: 1e-7,
+            patience: 2,
+            seed: 3,
+            eval_every: 0,
+            ..Default::default()
+        },
+        None,
+    );
+    assert!(
+        (fit.objective - seq.objective).abs() / seq.objective.abs() < 1e-6,
+        "resumed cluster objective {} vs uninterrupted reference {}",
+        fit.objective,
+        seq.objective
+    );
+}
+
+/// Checkpoints are exact state transfer, not approximations: a write →
+/// `latest` → `resume_point` → `flatten` → `unflatten` round trip must
+/// preserve every f64 bit for every rank, or "resume" would silently mean
+/// "restart from somewhere nearby".
+#[test]
+fn checkpoint_roundtrip_is_bit_identical() {
+    prop::check("checkpoint round-trip preserves every bit", 40, |rng| {
+        let m = 1 + rng.below(4);
+        let ranks: Vec<RankBlock> = (0..m)
+            .map(|_| {
+                let k = 1 + rng.below(3);
+                RankBlock {
+                    cursor: rng.below(1000),
+                    sub_cursors: (0..k).map(|_| rng.below(1000)).collect(),
+                    beta: prop::dense_vec(rng, 1 + rng.below(6), 10.0),
+                }
+            })
+            .collect();
+        let ck = Checkpoint {
+            iter: 1 + rng.below(500),
+            stall: rng.below(5),
+            mu: rng.range_f64(1e-9, 64.0),
+            f_cur: rng.range_f64(-1e6, 1e6),
+            lambda_idx: rng.below(128) as u64,
+            margins: prop::dense_vec(rng, 1 + rng.below(8), 100.0),
+            ranks,
+        };
+
+        let dir = harness::checkpoint_dir_for("chaos-roundtrip");
+        let path = ck.write_atomic(&dir).map_err(|e| e.to_string())?;
+        let (latest_path, back) = Checkpoint::latest(&dir).ok_or("latest() found nothing")?;
+        std::fs::remove_dir_all(&dir).ok();
+        if latest_path != path {
+            return Err(format!("latest picked {latest_path:?}, wrote {path:?}"));
+        }
+
+        if back.iter != ck.iter || back.stall != ck.stall || back.lambda_idx != ck.lambda_idx {
+            return Err("header drift across the round trip".into());
+        }
+        if back.mu.to_bits() != ck.mu.to_bits() || back.f_cur.to_bits() != ck.f_cur.to_bits() {
+            return Err("scalar drift across the round trip".into());
+        }
+        if back.margins.len() != ck.margins.len()
+            || back.margins.iter().zip(&ck.margins).any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return Err("margin drift across the round trip".into());
+        }
+
+        for r in 0..m {
+            let fa = ck.resume_point(r).flatten();
+            let fb = back.resume_point(r).flatten();
+            if fa.len() != fb.len() {
+                return Err(format!("rank {r}: resume point length {} vs {}", fa.len(), fb.len()));
+            }
+            if fa.iter().zip(&fb).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err(format!("rank {r}: resume point bit drift"));
+            }
+            let again = ResumePoint::unflatten(&fa)?.flatten();
+            if again.iter().zip(&fa).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err(format!("rank {r}: unflatten∘flatten is not the identity"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -35,7 +35,7 @@ fn tcp_endpoints(m: usize) -> Vec<Box<dyn Transport>> {
         for (rank, listener) in listeners.into_iter().enumerate() {
             let addrs = addrs.clone();
             handles.push(s.spawn(move || {
-                TcpTransport::with_listener(rank, &addrs, listener, TcpOptions::default())
+                TcpTransport::with_listener(rank, &addrs, &listener, TcpOptions::default())
                     .expect("tcp mesh")
             }));
         }
@@ -68,19 +68,19 @@ fn tagged_out_of_order_delivery() {
     for (name, make) in BACKENDS {
         spmd(make(2), |t| match t.rank() {
             1 => {
-                t.send(0, 2, vec![2.0]);
-                t.send(0, 1, vec![1.0]);
-                t.send(0, 1, vec![1.5]);
+                t.send(0, 2, vec![2.0]).unwrap();
+                t.send(0, 1, vec![1.0]).unwrap();
+                t.send(0, 1, vec![1.5]).unwrap();
             }
             _ => {
                 // Ask for tag 1 first: the tag-2 message must be parked.
-                assert_eq!(t.recv_from(1, 1), vec![1.0], "{name}");
+                assert_eq!(t.recv_from(1, 1).unwrap(), vec![1.0], "{name}");
                 // FIFO within a tag.
-                assert_eq!(t.recv_from(1, 1), vec![1.5], "{name}");
-                assert_eq!(t.recv_from(1, 2), vec![2.0], "{name}");
+                assert_eq!(t.recv_from(1, 1).unwrap(), vec![1.5], "{name}");
+                assert_eq!(t.recv_from(1, 2).unwrap(), vec![2.0], "{name}");
                 // And nothing else is pending.
-                assert_eq!(t.try_recv_from(1, 1), None, "{name}");
-                assert_eq!(t.try_recv_from(1, 2), None, "{name}");
+                assert_eq!(t.try_recv_from(1, 1).unwrap(), None, "{name}");
+                assert_eq!(t.try_recv_from(1, 2).unwrap(), None, "{name}");
             }
         });
     }
@@ -90,12 +90,12 @@ fn tagged_out_of_order_delivery() {
 fn try_recv_eventually_sees_the_message() {
     for (name, make) in BACKENDS {
         spmd(make(2), |t| match t.rank() {
-            1 => t.send(0, 9, vec![4.25]),
+            1 => t.send(0, 9, vec![4.25]).unwrap(),
             _ => {
                 // TCP delivery is asynchronous: poll until it lands.
                 let mut got = None;
                 for _ in 0..10_000 {
-                    got = t.try_recv_from(1, 9);
+                    got = t.try_recv_from(1, 9).unwrap();
                     if got.is_some() {
                         break;
                     }
@@ -121,10 +121,10 @@ fn barrier_holds_until_all_ranks_arrive() {
             // Stagger arrivals so the barrier actually has to hold.
             std::thread::sleep(std::time::Duration::from_millis(10 * t.rank() as u64));
             arrived2.fetch_add(1, Ordering::SeqCst);
-            transport_barrier(t, 0);
+            transport_barrier(t, 0).unwrap();
             assert_eq!(arrived2.load(Ordering::SeqCst), m, "{name}");
             // Barriers are reusable on fresh tags.
-            transport_barrier(t, TAG_STRIDE);
+            transport_barrier(t, TAG_STRIDE).unwrap();
         });
     }
 }
@@ -150,8 +150,8 @@ fn naive_and_ring_allreduce_agree() {
                 spmd(make(m), move |t| {
                     let mut a = input(t.rank());
                     let mut b = input(t.rank());
-                    allreduce_sum(t, 0, &mut a, AllReduceAlgo::Naive);
-                    allreduce_sum(t, TAG_STRIDE, &mut b, AllReduceAlgo::Ring);
+                    allreduce_sum(t, 0, &mut a, AllReduceAlgo::Naive).unwrap();
+                    allreduce_sum(t, TAG_STRIDE, &mut b, AllReduceAlgo::Ring).unwrap();
                     for i in 0..n {
                         assert!(
                             (a[i] - want[i]).abs() < 1e-12,
@@ -180,7 +180,7 @@ fn allreduce_max_returns_global_max_everywhere() {
                 // Rank r contributes r·1.5 — rank 0's contribution is the
                 // smallest, so the root must actually look at its peers.
                 let mine = t.rank() as f64 * 1.5;
-                let got = allreduce_max(t, 0, mine);
+                let got = allreduce_max(t, 0, mine).unwrap();
                 let want = (m - 1) as f64 * 1.5;
                 assert_eq!(got, want, "{name} m={m} rank={}", t.rank());
             });
@@ -194,11 +194,11 @@ fn scalar_reduction_is_algo_independent() {
         let m = 3;
         spmd(make(m), move |t| {
             let x = t.rank() as f64 + 0.5;
-            let scalar = allreduce_scalar(t, 0, x);
+            let scalar = allreduce_scalar(t, 0, x).unwrap();
             let mut v1 = [x];
-            allreduce_sum(t, TAG_STRIDE, &mut v1, AllReduceAlgo::Naive);
+            allreduce_sum(t, TAG_STRIDE, &mut v1, AllReduceAlgo::Naive).unwrap();
             let mut v2 = [x];
-            allreduce_sum(t, 2 * TAG_STRIDE, &mut v2, AllReduceAlgo::Ring);
+            allreduce_sum(t, 2 * TAG_STRIDE, &mut v2, AllReduceAlgo::Ring).unwrap();
             assert_eq!(scalar, v1[0], "{name}");
             assert_eq!(scalar, v2[0], "{name}");
             assert_eq!(scalar, 0.5 + 1.5 + 2.5, "{name}");
@@ -220,7 +220,7 @@ fn byte_accounting_matches_closed_form() {
         let n = 5;
         spmd(make(m), move |t| {
             let mut data = vec![1.0; n];
-            allreduce_sum(t, 0, &mut data, AllReduceAlgo::Naive);
+            allreduce_sum(t, 0, &mut data, AllReduceAlgo::Naive).unwrap();
             let (bytes, msgs) = t.sent();
             let want_msgs = if t.rank() == 0 { (m - 1) as u64 } else { 1 };
             assert_eq!(msgs, want_msgs, "{name} naive msgs rank {}", t.rank());
@@ -239,7 +239,7 @@ fn byte_accounting_matches_closed_form() {
         let n = 8;
         spmd(make(m), move |t| {
             let mut data = vec![1.0; n];
-            allreduce_sum(t, 0, &mut data, AllReduceAlgo::Ring);
+            allreduce_sum(t, 0, &mut data, AllReduceAlgo::Ring).unwrap();
             let (bytes, msgs) = t.sent();
             let want_msgs = 2 * (m - 1) as u64;
             assert_eq!(msgs, want_msgs, "{name} ring msgs rank {}", t.rank());
@@ -254,7 +254,7 @@ fn byte_accounting_matches_closed_form() {
         // Barriers cost one empty frame per participant direction.
         let m = 3;
         spmd(make(m), move |t| {
-            transport_barrier(t, 0);
+            transport_barrier(t, 0).unwrap();
             let (bytes, msgs) = t.sent();
             let want_msgs = if t.rank() == 0 { (m - 1) as u64 } else { 1 };
             assert_eq!(msgs, want_msgs, "{name} barrier msgs rank {}", t.rank());
@@ -268,9 +268,9 @@ fn per_tag_accounting_partitions_totals() {
     for (name, make) in BACKENDS {
         spmd(make(2), move |t| match t.rank() {
             1 => {
-                t.send(0, 3, vec![1.0, 2.0]);
-                t.send(0, 3, vec![3.0]);
-                t.send(0, 10, vec![0.0; 4]);
+                t.send(0, 3, vec![1.0, 2.0]).unwrap();
+                t.send(0, 3, vec![3.0]).unwrap();
+                t.send(0, 10, vec![0.0; 4]).unwrap();
                 // Ascending by tag, (tag, bytes, msgs).
                 assert_eq!(
                     t.sent_by_tag(),
@@ -287,9 +287,9 @@ fn per_tag_accounting_partitions_totals() {
                 assert_eq!(by_tag.iter().map(|e| e.2).sum::<u64>(), msgs, "{name}");
             }
             _ => {
-                assert_eq!(t.recv_from(1, 3), vec![1.0, 2.0], "{name}");
-                assert_eq!(t.recv_from(1, 3), vec![3.0], "{name}");
-                assert_eq!(t.recv_from(1, 10).len(), 4, "{name}");
+                assert_eq!(t.recv_from(1, 3).unwrap(), vec![1.0, 2.0], "{name}");
+                assert_eq!(t.recv_from(1, 3).unwrap(), vec![3.0], "{name}");
+                assert_eq!(t.recv_from(1, 10).unwrap().len(), 4, "{name}");
                 assert!(t.sent_by_tag().is_empty(), "{name}: receiver sent nothing");
             }
         });
