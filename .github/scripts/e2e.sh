@@ -211,6 +211,49 @@ case "$SCENARIO" in
     wait || true
     ;;
 
+  convert-e2e)
+    # Out-of-core ingestion end to end: convert the corpus to a binary
+    # shard directory, train a 3-rank cluster from `shards:<dir>` (each
+    # worker reads only its own block file), and pin the objective to the
+    # text-ingest run of the identical job — the converter's hashed
+    # partition matches the text path's, so the fits must agree.
+    rm -rf shards-e2e
+    "$BIN" convert --dataset epsilon_like --scale 0.1 --seed 1 \
+      --blocks 3 --out shards-e2e | tee convert.log
+    grep -q "^convert:" convert.log
+    test -f shards-e2e/header.bin
+    test -f shards-e2e/block-0002.bin
+
+    spawn_workers 7170 2
+    "$BIN" train \
+      --cluster "$(cluster_list 7170 2)" \
+      --dataset "shards:$PWD/shards-e2e" --scale 0.1 --seed 1 \
+      --loss logistic --l1 0.5 --max-iters 10 --eval-every 0 \
+      | tee train_shards.log
+    wait
+    grep -q "^done:" train_shards.log
+
+    spawn_workers 7180 2
+    "$BIN" train \
+      --cluster "$(cluster_list 7180 2)" \
+      --dataset epsilon_like --scale 0.1 --seed 1 \
+      --loss logistic --l1 0.5 --max-iters 10 --eval-every 0 \
+      | tee train_text.log
+    wait
+    grep -q "^done:" train_text.log
+
+    objS=$(objective_of train_shards.log)
+    objT=$(objective_of train_text.log)
+    awk -v a="$objS" -v b="$objT" 'BEGIN {
+      if (a == "" || b == "") { print "missing objective"; exit 1 }
+      d = (a - b) / a; if (d < 0) d = -d
+      if (d > 1e-6) {
+        printf "shard-ingest objective drifted: shards %s vs text %s (rel gap %g)\n", a, b, d
+        exit 1
+      }
+    }'
+    ;;
+
   *)
     echo "unknown scenario '$SCENARIO'" >&2
     exit 2

@@ -1,0 +1,159 @@
+//! Ingestion benchmark: text libsvm parse vs binary shard-block load.
+//!
+//! Times three ways to get the training data into a rank's memory:
+//!
+//!   1. `text parse`   — read + parse the whole libsvm text file (what every
+//!      rank of a text-ingest cluster does before sharding, protocol ≤ v6);
+//!   2. `block load`   — open the shard header and load one rank's block
+//!      plus the shared labels (the protocol-v7 out-of-core path);
+//!   3. `full rebuild` — reassemble the complete splits from a shard
+//!      directory (`load_splits_full`, the single-node consumption path).
+//!
+//! Alongside wall time it reports bytes read from disk per variant, which is
+//! the quantity the out-of-core claim is about: a rank's block file is a
+//! ~1/M slice of the corpus, so both time and I/O shrink with the block
+//! count. Each run appends a JSON record to `BENCH_shard_load.json` at the
+//! repo root so the numbers accumulate into a trajectory across commits.
+//!
+//! Run with:
+//!
+//!     cargo bench --bench shard_load
+//!
+//! `DGLMNET_SCALE` scales the synthetic corpus (default 0.25).
+#![allow(clippy::disallowed_macros)]
+
+use std::path::Path;
+
+use dglmnet::data::shards::{self, PartitionKind};
+use dglmnet::sparse::libsvm::{self, LibsvmData};
+use dglmnet::util::bench::{bench, fmt_dur, Table};
+use dglmnet::util::json::{self, Json};
+
+const SEED: u64 = 7;
+const BLOCKS: usize = 4;
+
+fn main() {
+    let scale: f64 = std::env::var("DGLMNET_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.25);
+
+    let splits = dglmnet::harness::load_splits("epsilon_like", scale, SEED).expect("corpus");
+    let (n, p, nnz) = (splits.train.n(), splits.train.p(), splits.train.nnz());
+    println!("shard_load: epsilon_like scale={scale} n={n} p={p} nnz={nnz} blocks={BLOCKS}");
+
+    let tmp = std::env::temp_dir().join(format!("dglmnet-shard-load-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).expect("create temp dir");
+
+    // The text baseline: the train split serialized as libsvm text, exactly
+    // what `dglmnet convert` would ingest.
+    let text_path = tmp.join("train.libsvm");
+    let text = LibsvmData {
+        x: splits.train.x.clone(),
+        y: splits.train.y.clone(),
+    };
+    libsvm::write_file(&text_path, &text).expect("write libsvm text");
+    let text_bytes = std::fs::metadata(&text_path).expect("stat text file").len();
+
+    // The binary shards, converted from the same recipe with the same
+    // hashed partition the cluster path derives.
+    let shard_dir = tmp.join("shards");
+    shards::convert_recipe("epsilon_like", scale, SEED, BLOCKS, PartitionKind::Hashed, &shard_dir)
+        .expect("convert");
+
+    // Bytes read per variant, measured once outside the timing loops.
+    let header = shards::open_header(&shard_dir).expect("open header");
+    let (_, block_stats) = header.load_block(&shard_dir, 0).expect("load block 0");
+    let (_, label_stats) = header.load_labels(&shard_dir).expect("load labels");
+    let block_bytes = block_stats.bytes_read + label_stats.bytes_read;
+    let full_bytes: u64 = {
+        let mut total = label_stats.bytes_read;
+        for rk in 0..header.num_blocks() {
+            let (_, s) = header.load_block(&shard_dir, rk).expect("load block");
+            total += s.bytes_read;
+        }
+        total
+    };
+
+    let parse = bench("text parse", 1, 5, || {
+        let d = libsvm::read_file(&text_path).expect("parse libsvm");
+        std::hint::black_box(d.x.nnz());
+    });
+    let block = bench("block load (rank 0 + labels)", 1, 5, || {
+        let h = shards::open_header(&shard_dir).expect("open header");
+        let (csc, _) = h.load_block(&shard_dir, 0).expect("load block 0");
+        let (y, _) = h.load_labels(&shard_dir).expect("load labels");
+        std::hint::black_box((csc.nnz(), y.len()));
+    });
+    let full = bench("full rebuild (all blocks)", 1, 5, || {
+        let s = shards::load_splits_full(&shard_dir).expect("load full splits");
+        std::hint::black_box(s.train.nnz());
+    });
+
+    let mut table = Table::new(&["variant", "median", "bytes read"]);
+    table.row(&[
+        "text parse".into(),
+        fmt_dur(parse.median()),
+        format!("{text_bytes}"),
+    ]);
+    table.row(&[
+        "block load (rank 0 + labels)".into(),
+        fmt_dur(block.median()),
+        format!("{block_bytes}"),
+    ]);
+    table.row(&[
+        "full rebuild (all blocks)".into(),
+        fmt_dur(full.median()),
+        format!("{full_bytes}"),
+    ]);
+    table.print();
+    println!(
+        "block load vs text parse: {:.1}x faster, {:.1}x fewer bytes",
+        parse.median() / block.median().max(1e-12),
+        text_bytes as f64 / (block_bytes as f64).max(1.0),
+    );
+
+    append_record(Path::new("BENCH_shard_load.json"), |rec| {
+        rec.set("bench", "shard_load")
+            .set("scale", scale)
+            .set("n", n)
+            .set("p", p)
+            .set("nnz", nnz)
+            .set("blocks", BLOCKS)
+            .set("text_parse_s", parse.median())
+            .set("block_load_s", block.median())
+            .set("full_rebuild_s", full.median())
+            .set("text_bytes", text_bytes)
+            .set("block_bytes", block_bytes)
+            .set("full_bytes", full_bytes)
+            .set(
+                "unix_ts",
+                std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .map(|d| d.as_secs())
+                    .unwrap_or(0),
+            );
+    });
+
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+/// Append one record to a JSON-array trajectory file, creating it on first
+/// use. A malformed existing file is replaced rather than crashing the bench.
+fn append_record(path: &Path, fill: impl FnOnce(&mut Json)) {
+    let mut records = match std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| json::parse(&text).ok())
+    {
+        Some(Json::Arr(items)) => items,
+        _ => Vec::new(),
+    };
+    let mut rec = Json::obj();
+    fill(&mut rec);
+    records.push(rec);
+    match std::fs::write(path, Json::Arr(records).dump()) {
+        Ok(()) => println!("appended record to {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

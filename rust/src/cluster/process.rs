@@ -54,6 +54,19 @@
 //! rank by re-shipping a resume job — re-sharding the feature blocks of any
 //! rank that never rejoins across the survivors.
 //!
+//! Protocol v7 makes ingestion out-of-core (DESIGN.md §Shard format): a
+//! `dataset` recipe of `shards:<dir>` points every rank at a binary shard
+//! directory written by `dglmnet convert`. Each rank then reads *only its
+//! own feature-block file plus the shared labels* — no rank parses the text
+//! or materializes the full p-column matrix — and the global
+//! [`FeaturePartition`] comes from the shard header instead of being
+//! re-derived, so the cluster size must equal the directory's block count.
+//! The train done report gains `loaded_cols`/`loaded_bytes` so the
+//! coordinator can account per-rank ingestion. Shard datasets pin the
+//! partition to the block files: exclusion-style recovery (re-sharding
+//! across survivors) is rejected for them, while full-cluster resume works
+//! unchanged. Path jobs stay text-only.
+//!
 //! Datasets are recipes, not payloads: synthetic corpora are deterministic
 //! in `(name, scale, seed)`, and libsvm paths must be readable by every
 //! process. Engine is native-only here (the XLA runtime is per-process and
@@ -79,7 +92,7 @@ use crate::obs::span::SpanRecord;
 use crate::solver::compute::NativeCompute;
 use crate::solver::linesearch::LineSearchConfig;
 use crate::solver::path::PathResult;
-use crate::sparse::FeaturePartition;
+use crate::sparse::{Csc, FeaturePartition};
 use crate::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -408,6 +421,12 @@ impl JobSpec {
             if matches!(v.get("virtual_time"), Some(Json::Bool(true))) {
                 return Err("path jobs do not support virtual_time".into());
             }
+            // Protocol v7: out-of-core ingestion is train-mode only.
+            if crate::data::shards::shard_recipe(&s("dataset")?).is_some() {
+                return Err(
+                    "path jobs do not support shards:<dir> datasets (train-mode only)".into(),
+                );
+            }
         }
         let threads_raw = num_list("threads")?;
         let mut threads = Vec::with_capacity(threads_raw.len());
@@ -565,21 +584,141 @@ impl WorkerOverrides {
     }
 }
 
-/// Everything one rank produces: the worker output, the still-open mesh (for
-/// the gather), and the partition (for assembly).
+/// Everything one rank produces: the worker output and the still-open mesh
+/// (for the gather).
 struct RankRun {
     output: WorkerOutput,
     transport: TcpTransport,
-    partition: FeaturePartition,
 }
 
-/// Shard this rank's feature block and run the SPMD training loop over the
-/// mesh. `splits` must come from the spec's recipe (callers that already
-/// materialized it pass it in rather than loading a second copy).
+/// Everything one rank needs to train, however the dataset was ingested.
+/// Text recipes materialize the full splits and slice out this rank's
+/// block; `shards:<dir>` recipes (protocol v7) read only this rank's block
+/// file plus the shared labels, so no rank ever holds the full p-column
+/// matrix.
+struct RankData {
+    /// This rank's feature block of the train matrix, column-sharded.
+    shard: Csc,
+    /// Full train labels (shared by every rank).
+    y: Vec<f64>,
+    /// This rank's feature block of the test matrix, when `eval_every > 0`.
+    test_shard: Option<Csc>,
+    test_y: Option<Vec<f64>>,
+    /// The global feature partition — identical on every rank.
+    partition: FeaturePartition,
+    /// Number of training rows.
+    n: usize,
+    /// Train-split display name (threaded into the trace).
+    train_name: String,
+    /// Ingestion accounting: columns this rank materialized...
+    loaded_cols: usize,
+    /// ...and the bytes it read (block + labels [+ test rows]) to do so.
+    loaded_bytes: u64,
+}
+
+/// Build one rank's training inputs from the spec's dataset recipe.
+///
+/// `shards:<dir>` (protocol v7): open the checksummed header, require the
+/// directory's block count to match the cluster size, and read exactly this
+/// rank's block file + the shared label shard (+ the test row shard when
+/// the spec evaluates). The partition comes from the header, not from
+/// re-hashing, so every rank agrees with the converter byte-for-byte.
+///
+/// Anything else: materialize the splits (or borrow `preloaded` when the
+/// caller already did), derive the hashed partition, and slice.
+fn prepare_rank_data(spec: &JobSpec, preloaded: Option<&Splits>) -> anyhow::Result<RankData> {
+    let m = spec.cluster.len();
+    if let Some(dir) = crate::data::shards::shard_recipe(&spec.dataset) {
+        let dir = Path::new(dir);
+        let header = crate::data::shards::open_header(dir)?;
+        anyhow::ensure!(
+            header.num_blocks() == m,
+            "shard directory {} holds {} feature blocks but the cluster has {m} ranks — \
+             a shards dataset pins the partition to its block files; \
+             re-run `dglmnet convert ... --blocks {m}`",
+            dir.display(),
+            header.num_blocks(),
+        );
+        let (shard, block_stats) = header.load_block(dir, spec.rank)?;
+        let (y, label_stats) = header.load_labels(dir)?;
+        let mut loaded_bytes = block_stats.bytes_read + label_stats.bytes_read;
+        let (test_shard, test_y) = if spec.eval_every > 0 {
+            let (test, stats) = header.load_rows(dir, "test")?;
+            loaded_bytes += stats.bytes_read;
+            let tx = test.to_csc();
+            (Some(header.partition.shard(&tx, spec.rank)), Some(test.y))
+        } else {
+            (None, None)
+        };
+        let loaded_cols = shard.ncols;
+        crate::obs_info!(
+            "shards",
+            format!(
+                "rank {} loaded block {}/{m} from {}: {} of {} columns, {} bytes",
+                spec.rank,
+                spec.rank,
+                dir.display(),
+                loaded_cols,
+                header.p,
+                loaded_bytes,
+            )
+        );
+        Ok(RankData {
+            shard,
+            y,
+            test_shard,
+            test_y,
+            n: header.n,
+            train_name: format!("{}-train", header.name),
+            partition: header.partition,
+            loaded_cols,
+            loaded_bytes,
+        })
+    } else {
+        let owned;
+        let splits = match preloaded {
+            Some(s) => s,
+            None => {
+                owned = crate::harness::load_splits(&spec.dataset, spec.scale, spec.seed)?;
+                &owned
+            }
+        };
+        let partition = FeaturePartition::hashed(splits.train.p(), m, spec.seed);
+        let x_csc = splits.train.to_csc();
+        // The text path materializes the whole matrix before slicing —
+        // exactly the cost the shard format exists to avoid — so its
+        // "bytes read" is the full CSC footprint.
+        let loaded_bytes = x_csc.storage_bytes() as u64;
+        let shard = partition.shard(&x_csc, spec.rank);
+        let (test_shard, test_y) = if spec.eval_every > 0 {
+            let tx = splits.test.to_csc();
+            (
+                Some(partition.shard(&tx, spec.rank)),
+                Some(splits.test.y.clone()),
+            )
+        } else {
+            (None, None)
+        };
+        Ok(RankData {
+            loaded_cols: shard.ncols,
+            shard,
+            y: splits.train.y.clone(),
+            test_shard,
+            test_y,
+            n: splits.train.n(),
+            train_name: splits.train.name.clone(),
+            partition,
+            loaded_bytes,
+        })
+    }
+}
+
+/// Run the SPMD training loop over the mesh with this rank's prepared
+/// block (see [`prepare_rank_data`]).
 fn solve_rank(
     spec: &JobSpec,
     listener: &TcpListener,
-    splits: &Splits,
+    data: &RankData,
     overrides: &WorkerOverrides,
 ) -> anyhow::Result<RankRun> {
     let m = spec.cluster.len();
@@ -587,19 +726,6 @@ fn solve_rank(
         .ok_or_else(|| anyhow::anyhow!("unknown loss '{}'", spec.loss))?;
     let compute = NativeCompute::new(kind);
     let penalty = ElasticNet::new(spec.l1, spec.l2);
-
-    let partition = FeaturePartition::hashed(splits.train.p(), m, spec.seed);
-    let x_csc = splits.train.to_csc();
-    let shard = partition.shard(&x_csc, spec.rank);
-    let (test_shard, test_y) = if spec.eval_every > 0 {
-        let tx = splits.test.to_csc();
-        (
-            Some(partition.shard(&tx, spec.rank)),
-            Some(splits.test.y.clone()),
-        )
-    } else {
-        (None, None)
-    };
 
     let mut transport =
         TcpTransport::with_listener(spec.rank, &spec.cluster, listener, mesh_options())?;
@@ -611,7 +737,7 @@ fn solve_rank(
     // each rank its slice; every other rank blocks on its own.
     let resume: Option<ResumePoint> = if spec.resume {
         Some(if spec.rank == 0 {
-            let points = load_resume_points(spec, splits.train.p(), &partition)?;
+            let points = load_resume_points(spec, &data.partition)?;
             for (r, rp) in points.iter().enumerate().skip(1) {
                 transport.send(r, RESUME_TAG, rp.flatten())?;
             }
@@ -628,25 +754,21 @@ fn solve_rank(
     let shared = WorkerShared {
         compute: &compute,
         penalty: &penalty,
-        y: &splits.train.y,
-        test_y: test_y.as_deref(),
+        y: &data.y,
+        test_y: data.test_y.as_deref(),
         alb: spec.alb_kappa.map(|kappa| AlbMode::Transport { kappa }),
         cfg: &wcfg,
         nodes: m,
     };
     let output = run_worker(
         spec.rank,
-        &shard,
-        test_shard.as_ref(),
+        &data.shard,
+        data.test_shard.as_ref(),
         &mut transport,
         &shared,
         resume.as_ref(),
     )?;
-    Ok(RankRun {
-        output,
-        transport,
-        partition,
-    })
+    Ok(RankRun { output, transport })
 }
 
 /// Rank 0's side of a resume: load the latest complete checkpoint and cut
@@ -655,13 +777,15 @@ fn solve_rank(
 /// μ, cursors). When ranks were lost, the full β is reassembled under the
 /// checkpoint's partition and re-sharded across the survivors — margins
 /// are global (Xβ with β unchanged), so the objective continues exactly;
-/// only the cyclic cursors restart.
+/// only the cyclic cursors restart. Shard datasets (protocol v7) cannot
+/// re-shard — their partition is pinned to the block files — so only the
+/// same-shape path is allowed for them.
 fn load_resume_points(
     spec: &JobSpec,
-    p: usize,
     partition: &FeaturePartition,
 ) -> anyhow::Result<Vec<ResumePoint>> {
     let m = spec.cluster.len();
+    let p = partition.num_features();
     let dir = spec
         .checkpoint_dir
         .as_deref()
@@ -681,6 +805,15 @@ fn load_resume_points(
         return Ok((0..m).map(|r| ck.resume_point(r)).collect());
     }
     // Re-shard: the checkpoint was written by a different cluster shape.
+    anyhow::ensure!(
+        crate::data::shards::shard_recipe(&spec.dataset).is_none(),
+        "checkpoint {} was written by a {}-rank cluster but this one has {m} ranks, \
+         and a shards:<dir> dataset pins the feature partition to its block files — \
+         re-run `dglmnet convert ... --blocks {}` or restore the full cluster",
+        path.display(),
+        ck.ranks.len(),
+        ck.ranks.len(),
+    );
     let old = FeaturePartition::hashed(p, ck.ranks.len(), spec.seed);
     anyhow::ensure!(
         old.blocks
@@ -925,10 +1058,12 @@ fn serve_one_job(listener: &TcpListener, overrides: &WorkerOverrides) -> anyhow:
         )
     );
 
-    let splits = crate::harness::load_splits(&spec.dataset, spec.scale, spec.seed)?;
     match spec.mode {
         JobMode::Train => {
-            let run = solve_rank(&spec, listener, &splits, overrides)?;
+            // Protocol v7: ingestion happens per rank — a shards:<dir>
+            // recipe reads only this rank's block file + the labels.
+            let data = prepare_rank_data(&spec, None)?;
+            let run = solve_rank(&spec, listener, &data, overrides)?;
             let mut transport = run.transport;
             transport.send(0, GATHER_TAG, run.output.beta_local.clone())?;
             // Report traffic AFTER the gather send so the coordinator's
@@ -946,6 +1081,9 @@ fn serve_one_job(listener: &TcpListener, overrides: &WorkerOverrides) -> anyhow:
                 .set("cutoffs", run.output.cutoffs)
                 .set("sync_wait_secs", run.output.sync_wait_secs)
                 .set("threads", run.output.threads)
+                // Protocol v7: per-rank ingestion accounting.
+                .set("loaded_cols", data.loaded_cols)
+                .set("loaded_bytes", data.loaded_bytes)
                 .set(
                     "updates_per_thread",
                     Json::Arr(
@@ -993,6 +1131,8 @@ fn serve_one_job(listener: &TcpListener, overrides: &WorkerOverrides) -> anyhow:
                      path jobs (BSP sweep, no chaos injection) — ignoring"
                 );
             }
+            // Path jobs are text-only (from_json rejects shards:<dir>).
+            let splits = crate::harness::load_splits(&spec.dataset, spec.scale, spec.seed)?;
             let run = solve_rank_path(&spec, listener, &splits, overrides)?;
             let mut transport = run.transport;
             // One frame per λ point, in grid order, all on the gather tag
@@ -1101,13 +1241,19 @@ pub fn train_cluster(
 ) -> anyhow::Result<ClusterFitResult> {
     anyhow::ensure!(spec0.rank == 0, "coordinator must be rank 0");
     anyhow::ensure!(spec0.mode == JobMode::Train, "train_cluster needs a train-mode spec");
+    // Protocol v7: a shards:<dir> recipe never materializes the full
+    // splits — rank 0 loads only its own block inside prepare_rank_data.
     let owned_splits;
-    let splits = match preloaded {
-        Some(s) => s,
-        None => {
-            owned_splits =
-                crate::harness::load_splits(&spec0.dataset, spec0.scale, spec0.seed)?;
-            &owned_splits
+    let splits: Option<&Splits> = if crate::data::shards::shard_recipe(&spec0.dataset).is_some() {
+        None
+    } else {
+        match preloaded {
+            Some(s) => Some(s),
+            None => {
+                owned_splits =
+                    crate::harness::load_splits(&spec0.dataset, spec0.scale, spec0.seed)?;
+                Some(&owned_splits)
+            }
         }
     };
     let mut spec = spec0.clone();
@@ -1247,7 +1393,11 @@ fn ping_once(addr: &str) -> bool {
 /// One attempt at the distributed fit — ship, train as rank 0, gather,
 /// reassemble. Peer loss surfaces as a [`TransportError`] inside the
 /// `anyhow` chain, which [`train_cluster`]'s recovery loop downcasts.
-fn train_cluster_once(spec0: &JobSpec, splits: &Splits) -> anyhow::Result<ClusterFitResult> {
+/// `splits` is `None` for shards datasets (no full materialization).
+fn train_cluster_once(
+    spec0: &JobSpec,
+    splits: Option<&Splits>,
+) -> anyhow::Result<ClusterFitResult> {
     let m = spec0.cluster.len();
     let (cluster, listener, mut ctrls) = ship_job(spec0)?;
 
@@ -1257,7 +1407,8 @@ fn train_cluster_once(spec0: &JobSpec, splits: &Splits) -> anyhow::Result<Cluste
         cluster,
         ..spec0.clone()
     };
-    let run = solve_rank(&spec, &listener, splits, &WorkerOverrides::default())?;
+    let data = prepare_rank_data(&spec, splits)?;
+    let run = solve_rank(&spec, &listener, &data, &WorkerOverrides::default())?;
     let mut transport = run.transport;
 
     // Gather β blocks.
@@ -1266,21 +1417,24 @@ fn train_cluster_once(spec0: &JobSpec, splits: &Splits) -> anyhow::Result<Cluste
     for r in 1..m {
         let block = transport.recv_from(r, GATHER_TAG)?;
         anyhow::ensure!(
-            block.len() == run.partition.blocks[r].len(),
+            block.len() == data.partition.blocks[r].len(),
             "rank {r} gathered {} weights, expected {}",
             block.len(),
-            run.partition.blocks[r].len()
+            data.partition.blocks[r].len()
         );
         blocks.push(block);
     }
-    let beta = run.partition.unshard_weights(&blocks);
+    let beta = data.partition.unshard_weights(&blocks);
 
     // Collect accounting + per-rank load reports, and merge the v5 span
     // journals / per-phase comm breakdowns shipped in each done report.
     let mut comm_bytes = run.output.sent_bytes;
     let mut comm_msgs = run.output.sent_msgs;
     let mut barrier_wait_secs = run.output.sync_wait_secs;
-    let mut per_rank: Vec<RankLoad> = vec![RankLoad::from_output(&run.output)];
+    let mut rank0_load = RankLoad::from_output(&run.output);
+    rank0_load.loaded_cols = data.loaded_cols;
+    rank0_load.loaded_bytes = data.loaded_bytes;
+    let mut per_rank: Vec<RankLoad> = vec![rank0_load];
     let mut spans: Vec<SpanRecord> = run.output.spans.clone();
     let mut phase_acc: std::collections::BTreeMap<String, (u64, u64)> = run
         .output
@@ -1331,16 +1485,18 @@ fn train_cluster_once(spec0: &JobSpec, splits: &Splits) -> anyhow::Result<Cluste
             sync_wait_secs: field("sync_wait_secs"),
             threads: (field("threads") as usize).max(1),
             updates_per_thread,
+            loaded_cols: field("loaded_cols") as usize,
+            loaded_bytes: field("loaded_bytes") as u64,
         });
     }
     per_rank.sort_by_key(|l| l.rank);
     drop(transport);
 
     let mut trace = run.output.trace.expect("rank 0 produces the trace");
-    trace.dataset = splits.train.name.clone();
+    trace.dataset = data.train_name.clone();
     trace.comm_bytes = comm_bytes;
-    let n = splits.train.n();
-    let max_block = run
+    let n = data.n;
+    let max_block = data
         .partition
         .blocks
         .iter()
@@ -1388,6 +1544,10 @@ pub fn path_cluster(
     anyhow::ensure!(
         spec0.checkpoint_dir.is_none() && spec0.checkpoint_every == 0 && !spec0.resume,
         "path jobs do not support checkpoints or resume (protocol v6 is train-mode only)"
+    );
+    anyhow::ensure!(
+        crate::data::shards::shard_recipe(&spec0.dataset).is_none(),
+        "path jobs do not support shards:<dir> datasets (train-mode only)"
     );
     let owned_splits;
     let splits = match preloaded {
@@ -1626,6 +1786,21 @@ mod tests {
     }
 
     #[test]
+    fn path_job_spec_rejects_shard_datasets() {
+        // Protocol v7: out-of-core ingestion is train-mode only; a worker
+        // must reject a path job naming a shard directory at the wire, not
+        // fail later inside load_splits.
+        let mut j = path_spec().to_json();
+        j.set("dataset", "shards:/tmp/never-read");
+        let err = JobSpec::from_json(&j.dump()).unwrap_err();
+        assert!(err.contains("shards"), "unhelpful error: {err}");
+        // The same recipe on a train job parses fine (nothing is read yet).
+        let mut j = spec().to_json();
+        j.set("dataset", "shards:/tmp/never-read");
+        assert!(JobSpec::from_json(&j.dump()).is_ok());
+    }
+
+    #[test]
     fn job_spec_bsp_roundtrips_without_alb_kappa() {
         let s = spec();
         let text = s.to_json().dump();
@@ -1827,6 +2002,15 @@ mod tests {
             fit.objective,
             seq.objective
         );
+
+        // Protocol v7 ingestion accounting on the text path: every rank
+        // sharded the full materialized matrix, so it reports its hashed
+        // block width and a non-zero byte count.
+        let part = FeaturePartition::hashed(splits.train.p(), 3, 3);
+        for (r, load) in fit.per_rank.iter().enumerate() {
+            assert_eq!(load.loaded_cols, part.blocks[r].len(), "rank {r} loaded_cols");
+            assert!(load.loaded_bytes > 0, "rank {r} loaded_bytes");
+        }
     }
 
     /// An idle worker's control port answers a `{"op":"stats"}` probe

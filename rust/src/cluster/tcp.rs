@@ -49,8 +49,12 @@ const MAGIC: u32 = 0x4D4C_4764;
 /// flag (the coordinator re-ships a resume job from the latest complete
 /// checkpoint after a rank failure; resume state travels on the reserved
 /// RESUME tag), the control port answers a `ping` liveness op, and peer
-/// death surfaces as a typed `TransportError` instead of a panic.
-pub const PROTOCOL_VERSION: u32 = 6;
+/// death surfaces as a typed `TransportError` instead of a panic. v7:
+/// out-of-core ingestion — the `dataset` recipe may name a binary shard
+/// directory (`shards:<dir>`), in which case each rank loads only its own
+/// feature-block file plus the shared labels, and the done report gains
+/// `loaded_cols`/`loaded_bytes` per-rank ingestion accounting.
+pub const PROTOCOL_VERSION: u32 = 7;
 
 /// Dial / handshake tuning.
 #[derive(Clone, Copy, Debug)]

@@ -122,6 +122,14 @@ pub struct RankLoad {
     pub threads: usize,
     /// Coordinate updates per sub-block thread (single entry = classic).
     pub updates_per_thread: Vec<u64>,
+    /// Feature columns this rank materialized (protocol v7 out-of-core
+    /// ingestion: a shards:<dir> rank loads only its own block, so this is
+    /// strictly below p on any multi-rank cluster). 0 on fabric runs.
+    pub loaded_cols: usize,
+    /// Bytes read to ingest this rank's data (block file + labels for a
+    /// shard dataset; the full CSC footprint for a text recipe). 0 on
+    /// fabric runs.
+    pub loaded_bytes: u64,
 }
 
 impl RankLoad {
@@ -136,6 +144,10 @@ impl RankLoad {
             sync_wait_secs: o.sync_wait_secs,
             threads: o.threads,
             updates_per_thread: o.updates_per_thread.clone(),
+            // Ingestion accounting is a process-cluster concept (protocol
+            // v7); in-process fabric ranks share one materialized matrix.
+            loaded_cols: 0,
+            loaded_bytes: 0,
         }
     }
 
@@ -151,7 +163,9 @@ impl RankLoad {
             .set("sent_bytes", self.sent_bytes)
             .set("sent_msgs", self.sent_msgs)
             .set("sync_wait_secs", self.sync_wait_secs)
-            .set("threads", self.threads);
+            .set("threads", self.threads)
+            .set("loaded_cols", self.loaded_cols)
+            .set("loaded_bytes", self.loaded_bytes);
         o.set(
             "updates_per_thread",
             crate::util::json::Json::from(self.updates_per_thread.clone()),

@@ -1,9 +1,11 @@
-//! Datasets: in-memory container + splits (Table 1 summaries) and synthetic
+//! Datasets: in-memory container + splits (Table 1 summaries), synthetic
 //! generators standing in for the paper's corpora (see DESIGN.md
-//! §Substitutions).
+//! §Substitutions), and the binary columnar shard format for out-of-core
+//! cluster ingestion (DESIGN.md §Shard format).
 
 pub mod dataset;
 pub mod preprocess;
+pub mod shards;
 pub mod synth;
 
 pub use dataset::{Dataset, Splits, Summary};

@@ -1,0 +1,1113 @@
+//! Binary columnar shard format — the out-of-core ingestion seam.
+//!
+//! The text path (`harness::load_splits` → `FeaturePartition::shard`) makes
+//! every rank parse the *entire* libsvm file and then slice out its feature
+//! block, which caps dataset size at one node's memory. `dglmnet convert`
+//! writes the train split once as per-feature-block CSC segments so a
+//! cluster rank can read *only its own block file plus the labels* — the
+//! ingestion model of Trofimov & Genkin's system and of Mahajan et al.
+//!
+//! A shard directory holds:
+//!
+//! ```text
+//! header.bin            DGSH | ver | name | base | n p nnz | seed kind M |
+//!                       M × (len, sorted global col ids)          | fnv64
+//! block-0000.bin ...    DGSB | ver | block n ncols nnz |
+//!                       colptr u64[ncols+1] rowidx u32[nnz] values f64[nnz]
+//!                                                                 | fnv64
+//! labels.bin            DGSL | ver | n | y f64[n]                 | fnv64
+//! rows-test.bin         DGSR | ver | n p nnz | CSR rows + labels  | fnv64
+//! rows-validation.bin   (same layout as rows-test.bin)
+//! ```
+//!
+//! All integers are fixed-width little-endian (mmap-friendly); every file
+//! ends in an FNV-1a 64 checksum over all preceding bytes, so truncation and
+//! bit flips are rejected before any structural validation runs. The header
+//! carries the *full* partition (~8 bytes per feature), so any rank can
+//! rebuild the global `FeaturePartition` from `header.bin` alone while its
+//! matrix payload stays one block wide. Versioning rule: any layout change
+//! bumps `FORMAT_VERSION` and readers reject other versions outright —
+//! shard directories are cheap to regenerate from the source text.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::data::dataset::{Dataset, Splits};
+use crate::sparse::csc::Csc;
+use crate::sparse::csr::Csr;
+use crate::sparse::libsvm::MAX_FEATURE_INDEX;
+use crate::sparse::partition::FeaturePartition;
+
+/// Dataset-recipe prefix that selects this loader: `shards:<dir>`.
+pub const RECIPE_PREFIX: &str = "shards:";
+
+/// Bumped on any layout change; readers reject every other version.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Upper bound on the block count a shard directory may declare.
+pub const MAX_BLOCKS: usize = 4096;
+
+const HEADER_MAGIC: [u8; 4] = *b"DGSH";
+const BLOCK_MAGIC: [u8; 4] = *b"DGSB";
+const LABELS_MAGIC: [u8; 4] = *b"DGSL";
+const ROWS_MAGIC: [u8; 4] = *b"DGSR";
+
+/// No single length field may exceed this (1 TiB of elements) — bounds every
+/// allocation a hostile file could request.
+const MAX_LEN: u64 = 1 << 40;
+const MAX_NAME_LEN: u64 = 4096;
+
+/// `Some(dir)` when a dataset recipe selects shard ingestion.
+pub fn shard_recipe(dataset: &str) -> Option<&str> {
+    dataset.strip_prefix(RECIPE_PREFIX)
+}
+
+/// How the converter assigned features to blocks (recorded in the header).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionKind {
+    /// `hash(j) mod M` — identical to the text cluster path, so a converted
+    /// run is bit-for-bit the same optimization problem per rank.
+    Hashed,
+    /// Contiguous index ranges.
+    Contiguous,
+    /// nnz-balanced (LPT) blocks.
+    NnzBalanced,
+}
+
+impl PartitionKind {
+    pub fn parse(s: &str) -> Option<PartitionKind> {
+        match s {
+            "hashed" => Some(PartitionKind::Hashed),
+            "contiguous" => Some(PartitionKind::Contiguous),
+            "nnz" => Some(PartitionKind::NnzBalanced),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PartitionKind::Hashed => "hashed",
+            PartitionKind::Contiguous => "contiguous",
+            PartitionKind::NnzBalanced => "nnz",
+        }
+    }
+
+    fn tag(self) -> u64 {
+        match self {
+            PartitionKind::Hashed => 0,
+            PartitionKind::Contiguous => 1,
+            PartitionKind::NnzBalanced => 2,
+        }
+    }
+
+    fn from_tag(t: u64) -> Result<PartitionKind> {
+        match t {
+            0 => Ok(PartitionKind::Hashed),
+            1 => Ok(PartitionKind::Contiguous),
+            2 => Ok(PartitionKind::NnzBalanced),
+            _ => bail!("shard header names unknown partition kind tag {t}"),
+        }
+    }
+}
+
+/// Parsed, validated `header.bin`.
+#[derive(Clone, Debug)]
+pub struct ShardHeader {
+    /// Base dataset name (without the `-train` suffix).
+    pub name: String,
+    /// Index base of the source text file (0 or 1) — provenance only; all
+    /// binary ids are 0-based.
+    pub index_base: u64,
+    /// Train rows.
+    pub n: usize,
+    /// Features (global).
+    pub p: usize,
+    /// Train nonzeros (global).
+    pub nnz: usize,
+    /// Seed the partition (and, for named corpora, the data) derives from.
+    pub seed: u64,
+    pub kind: PartitionKind,
+    /// Global feature partition, rebuilt from the header's block lists.
+    pub partition: FeaturePartition,
+}
+
+/// Bytes a loader actually pulled off disk — the out-of-core accounting the
+/// done report and the acceptance tests assert on.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadStats {
+    pub bytes_read: u64,
+}
+
+pub fn header_path(dir: &Path) -> PathBuf {
+    dir.join("header.bin")
+}
+
+pub fn block_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("block-{rank:04}.bin"))
+}
+
+pub fn labels_path(dir: &Path) -> PathBuf {
+    dir.join("labels.bin")
+}
+
+pub fn rows_path(dir: &Path, split: &str) -> PathBuf {
+    dir.join(format!("rows-{split}.bin"))
+}
+
+/// FNV-1a 64 over a byte slice — the per-file trailing checksum.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append the checksum and write atomically (tmp file + rename, like the
+/// DGCK checkpoints) so a crashed convert never leaves a half-written shard
+/// that passes its checksum. Returns the on-disk byte count.
+fn write_file_checked(path: &Path, mut body: Vec<u8>) -> Result<u64> {
+    let sum = fnv1a(&body);
+    push_u64(&mut body, sum);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("creating shard dir {}", parent.display()))?;
+        }
+    }
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow!("shard path {} has no file name", path.display()))?
+        .to_string_lossy()
+        .to_string();
+    let tmp = path.with_file_name(format!(".{file_name}.tmp"));
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating shard file {}", tmp.display()))?;
+        f.write_all(&body)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)
+        .with_context(|| format!("publishing shard file {}", path.display()))?;
+    Ok(body.len() as u64)
+}
+
+/// Read a shard file, verify checksum → magic → version (in that order),
+/// and return the raw bytes plus the count read.
+fn read_file_checked(path: &Path, magic: [u8; 4]) -> Result<(Vec<u8>, u64)> {
+    let raw =
+        fs::read(path).with_context(|| format!("reading shard file {}", path.display()))?;
+    ensure!(
+        raw.len() as u64 <= MAX_LEN,
+        "shard file {} is implausibly large ({} bytes)",
+        path.display(),
+        raw.len()
+    );
+    ensure!(
+        raw.len() >= 16,
+        "shard file {} too short ({} bytes) to hold magic, version and checksum",
+        path.display(),
+        raw.len()
+    );
+    let (body, tail) = raw.split_at(raw.len() - 8);
+    let want = u64::from_le_bytes(tail.try_into().unwrap());
+    let got = fnv1a(body);
+    ensure!(
+        got == want,
+        "shard file {} failed its checksum (stored {want:#018x}, computed {got:#018x}) — truncated or corrupt",
+        path.display()
+    );
+    ensure!(
+        body[..4] == magic,
+        "shard file {} has wrong magic {:?} (expected {:?})",
+        path.display(),
+        &body[..4],
+        &magic
+    );
+    let version = u32::from_le_bytes(body[4..8].try_into().unwrap());
+    ensure!(
+        version == FORMAT_VERSION,
+        "shard file {}: unsupported format version {version} (this build reads v{FORMAT_VERSION})",
+        path.display()
+    );
+    let bytes_read = raw.len() as u64;
+    Ok((raw, bytes_read))
+}
+
+/// Cursor over a checked file's payload (past magic+version, before the
+/// checksum), with every read bounds-checked.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    path: &'a Path,
+}
+
+impl<'a> Reader<'a> {
+    fn over(raw: &'a [u8], path: &'a Path) -> Reader<'a> {
+        Reader {
+            buf: &raw[..raw.len() - 8],
+            pos: 8,
+            path,
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| anyhow!("shard file {}: length overflow", self.path.display()))?;
+        ensure!(
+            end <= self.buf.len(),
+            "truncated shard file {}: wanted {n} bytes at offset {}, have {}",
+            self.path.display(),
+            self.pos,
+            self.buf.len()
+        );
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A u64 length/count field, rejected above `max` before it can drive an
+    /// allocation.
+    fn usize_bounded(&mut self, what: &str, max: u64) -> Result<usize> {
+        let v = self.u64()?;
+        ensure!(
+            v <= max,
+            "shard file {}: {what} {v} exceeds the bound {max}",
+            self.path.display()
+        );
+        Ok(v as usize)
+    }
+
+    /// Every payload byte must be consumed — trailing garbage is rejected.
+    fn done(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "shard file {}: {} trailing bytes after the payload",
+            self.path.display(),
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+/// The partition must be a disjoint cover of `0..p` with sorted blocks.
+fn validate_blocks(blocks: &[Vec<usize>], p: usize) -> Result<()> {
+    let mut seen = vec![false; p];
+    let mut covered = 0usize;
+    for (r, block) in blocks.iter().enumerate() {
+        let mut prev: Option<usize> = None;
+        for &j in block {
+            ensure!(j < p, "block {r} names feature {j} but the dataset has only {p}");
+            if let Some(q) = prev {
+                ensure!(j > q, "block {r} is not sorted strictly increasing at feature {j}");
+            }
+            prev = Some(j);
+            ensure!(!seen[j], "feature {j} appears in more than one block");
+            seen[j] = true;
+            covered += 1;
+        }
+    }
+    ensure!(
+        covered == p,
+        "blocks cover {covered} of {p} features — the partition must be a disjoint cover"
+    );
+    Ok(())
+}
+
+/// What `write_shards` put on disk, for the converter's summary line.
+#[derive(Clone, Debug)]
+pub struct ShardWriteReport {
+    pub files: usize,
+    pub bytes: u64,
+    /// Per-block column counts.
+    pub block_cols: Vec<usize>,
+    /// Per-block nonzero counts.
+    pub block_nnz: Vec<usize>,
+}
+
+/// Write a full shard directory for `splits` under `partition`.
+pub fn write_shards(
+    dir: &Path,
+    splits: &Splits,
+    partition: &FeaturePartition,
+    kind: PartitionKind,
+    seed: u64,
+    index_base: u64,
+) -> Result<ShardWriteReport> {
+    let train = &splits.train;
+    let (n, p, nnz) = (train.n(), train.p(), train.nnz());
+    ensure!(
+        p <= MAX_FEATURE_INDEX + 1,
+        "dataset has {p} features, above the supported bound {}",
+        MAX_FEATURE_INDEX + 1
+    );
+    ensure!(
+        partition.num_features() == p,
+        "partition covers {} features but the train split has {p}",
+        partition.num_features()
+    );
+    let m = partition.num_nodes();
+    ensure!(
+        (1..=MAX_BLOCKS).contains(&m),
+        "block count {m} out of range 1..={MAX_BLOCKS}"
+    );
+    ensure!(index_base <= 1, "index base must be 0 or 1, got {index_base}");
+    validate_blocks(&partition.blocks, p)?;
+
+    let name = train.name.strip_suffix("-train").unwrap_or(&train.name);
+    ensure!(
+        name.len() as u64 <= MAX_NAME_LEN,
+        "dataset name is longer than {MAX_NAME_LEN} bytes"
+    );
+    let mut files = 0usize;
+    let mut bytes = 0u64;
+
+    let mut b = Vec::new();
+    b.extend_from_slice(&HEADER_MAGIC);
+    push_u32(&mut b, FORMAT_VERSION);
+    push_u64(&mut b, name.len() as u64);
+    b.extend_from_slice(name.as_bytes());
+    push_u64(&mut b, index_base);
+    push_u64(&mut b, n as u64);
+    push_u64(&mut b, p as u64);
+    push_u64(&mut b, nnz as u64);
+    push_u64(&mut b, seed);
+    push_u64(&mut b, kind.tag());
+    push_u64(&mut b, m as u64);
+    for block in &partition.blocks {
+        push_u64(&mut b, block.len() as u64);
+        for &j in block {
+            push_u64(&mut b, j as u64);
+        }
+    }
+    bytes += write_file_checked(&header_path(dir), b)?;
+    files += 1;
+
+    let x_csc = train.to_csc();
+    let mut block_cols = Vec::with_capacity(m);
+    let mut block_nnz = Vec::with_capacity(m);
+    for r in 0..m {
+        let shard = partition.shard(&x_csc, r);
+        block_cols.push(shard.ncols);
+        block_nnz.push(shard.nnz());
+        let mut b = Vec::with_capacity(40 + 8 * (shard.ncols + 1) + 12 * shard.nnz());
+        b.extend_from_slice(&BLOCK_MAGIC);
+        push_u32(&mut b, FORMAT_VERSION);
+        push_u64(&mut b, r as u64);
+        push_u64(&mut b, shard.nrows as u64);
+        push_u64(&mut b, shard.ncols as u64);
+        push_u64(&mut b, shard.nnz() as u64);
+        for &cp in &shard.colptr {
+            push_u64(&mut b, cp as u64);
+        }
+        for &ri in &shard.rowidx {
+            push_u32(&mut b, ri);
+        }
+        for &v in &shard.values {
+            push_f64(&mut b, v);
+        }
+        bytes += write_file_checked(&block_path(dir, r), b)?;
+        files += 1;
+    }
+
+    let mut b = Vec::with_capacity(24 + 8 * n);
+    b.extend_from_slice(&LABELS_MAGIC);
+    push_u32(&mut b, FORMAT_VERSION);
+    push_u64(&mut b, n as u64);
+    for &v in &train.y {
+        push_f64(&mut b, v);
+    }
+    bytes += write_file_checked(&labels_path(dir), b)?;
+    files += 1;
+
+    for (split, ds) in [("test", &splits.test), ("validation", &splits.validation)] {
+        ensure!(
+            ds.p() == p,
+            "{split} split has {} features but train has {p}",
+            ds.p()
+        );
+        let mut b =
+            Vec::with_capacity(48 + 8 * (ds.n() + 2) + 12 * ds.nnz() + 8 * ds.n());
+        b.extend_from_slice(&ROWS_MAGIC);
+        push_u32(&mut b, FORMAT_VERSION);
+        push_u64(&mut b, ds.n() as u64);
+        push_u64(&mut b, p as u64);
+        push_u64(&mut b, ds.nnz() as u64);
+        for &rp in &ds.x.rowptr {
+            push_u64(&mut b, rp as u64);
+        }
+        for &ci in &ds.x.colidx {
+            push_u32(&mut b, ci);
+        }
+        for &v in &ds.x.values {
+            push_f64(&mut b, v);
+        }
+        for &v in &ds.y {
+            push_f64(&mut b, v);
+        }
+        bytes += write_file_checked(&rows_path(dir, split), b)?;
+        files += 1;
+    }
+
+    Ok(ShardWriteReport {
+        files,
+        bytes,
+        block_cols,
+        block_nnz,
+    })
+}
+
+/// Parse and validate `header.bin`. Reads ~8 bytes per global feature —
+/// never a matrix payload.
+pub fn open_header(dir: &Path) -> Result<ShardHeader> {
+    let path = header_path(dir);
+    let (raw, _) = read_file_checked(&path, HEADER_MAGIC)?;
+    let mut r = Reader::over(&raw, &path);
+    let name_len = r.usize_bounded("dataset name length", MAX_NAME_LEN)?;
+    let name = String::from_utf8(r.take(name_len)?.to_vec())
+        .map_err(|_| anyhow!("shard header holds a non-UTF-8 dataset name"))?;
+    let index_base = r.u64()?;
+    ensure!(index_base <= 1, "shard header index base {index_base} (must be 0 or 1)");
+    let n = r.usize_bounded("row count", MAX_LEN)?;
+    // Same bound the libsvm text parser enforces on raw indices.
+    let p = r.usize_bounded("feature count", (MAX_FEATURE_INDEX as u64) + 1)?;
+    let nnz = r.usize_bounded("nnz", MAX_LEN)?;
+    let seed = r.u64()?;
+    let kind = PartitionKind::from_tag(r.u64()?)?;
+    let m = r.usize_bounded("block count", MAX_BLOCKS as u64)?;
+    ensure!(m >= 1, "shard header declares zero blocks");
+    let mut blocks = Vec::with_capacity(m);
+    for _ in 0..m {
+        let len = r.usize_bounded("block length", p as u64)?;
+        let mut block = Vec::with_capacity(len);
+        for _ in 0..len {
+            block.push(r.usize_bounded("feature id", p as u64)?);
+        }
+        blocks.push(block);
+    }
+    r.done()?;
+    validate_blocks(&blocks, p)?;
+    let mut owner = vec![0usize; p];
+    for (rk, block) in blocks.iter().enumerate() {
+        for &j in block {
+            owner[j] = rk;
+        }
+    }
+    Ok(ShardHeader {
+        name,
+        index_base,
+        n,
+        p,
+        nnz,
+        seed,
+        kind,
+        partition: FeaturePartition { blocks, owner },
+    })
+}
+
+impl ShardHeader {
+    pub fn num_blocks(&self) -> usize {
+        self.partition.num_nodes()
+    }
+
+    /// Load one rank's CSC block — the only train-matrix bytes that rank
+    /// ever touches.
+    pub fn load_block(&self, dir: &Path, rank: usize) -> Result<(Csc, LoadStats)> {
+        ensure!(
+            rank < self.num_blocks(),
+            "rank {rank} out of range: shard dir holds {} blocks",
+            self.num_blocks()
+        );
+        let path = block_path(dir, rank);
+        let (raw, bytes_read) = read_file_checked(&path, BLOCK_MAGIC)?;
+        let mut r = Reader::over(&raw, &path);
+        let idx = r.u64()?;
+        ensure!(
+            idx == rank as u64,
+            "shard file {}: holds block {idx}, expected {rank}",
+            path.display()
+        );
+        let n = r.usize_bounded("block row count", MAX_LEN)?;
+        ensure!(
+            n == self.n,
+            "shard file {}: {n} rows but the header declares {}",
+            path.display(),
+            self.n
+        );
+        let ncols = r.usize_bounded("block column count", self.p as u64)?;
+        ensure!(
+            ncols == self.partition.blocks[rank].len(),
+            "shard file {}: {ncols} columns but the header's block {rank} lists {}",
+            path.display(),
+            self.partition.blocks[rank].len()
+        );
+        let nnz = r.usize_bounded("block nnz", self.nnz as u64)?;
+        let mut colptr = Vec::with_capacity(ncols + 1);
+        for _ in 0..=ncols {
+            colptr.push(r.usize_bounded("colptr entry", nnz as u64)?);
+        }
+        ensure!(
+            colptr[0] == 0 && colptr[ncols] == nnz,
+            "shard file {}: colptr must run 0..{nnz}",
+            path.display()
+        );
+        ensure!(
+            colptr.windows(2).all(|w| w[0] <= w[1]),
+            "shard file {}: colptr is not monotone",
+            path.display()
+        );
+        let mut rowidx = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            let ri = r.u32()?;
+            ensure!(
+                (ri as usize) < n,
+                "shard file {}: row id {ri} out of range (n={n})",
+                path.display()
+            );
+            rowidx.push(ri);
+        }
+        let mut values = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            values.push(r.f64()?);
+        }
+        r.done()?;
+        Ok((
+            Csc {
+                nrows: n,
+                ncols,
+                colptr,
+                rowidx,
+                values,
+            },
+            LoadStats { bytes_read },
+        ))
+    }
+
+    /// Load the shared train labels.
+    pub fn load_labels(&self, dir: &Path) -> Result<(Vec<f64>, LoadStats)> {
+        let path = labels_path(dir);
+        let (raw, bytes_read) = read_file_checked(&path, LABELS_MAGIC)?;
+        let mut r = Reader::over(&raw, &path);
+        let n = r.usize_bounded("label count", MAX_LEN)?;
+        ensure!(
+            n == self.n,
+            "shard file {}: {n} labels but the header declares {}",
+            path.display(),
+            self.n
+        );
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            y.push(r.f64()?);
+        }
+        r.done()?;
+        Ok((y, LoadStats { bytes_read }))
+    }
+
+    /// Load an eval split (`"test"` or `"validation"`) as full CSR rows —
+    /// the small held-out sets, not the train matrix.
+    pub fn load_rows(&self, dir: &Path, split: &str) -> Result<(Dataset, LoadStats)> {
+        ensure!(
+            split == "test" || split == "validation",
+            "unknown shard row split '{split}' (expected test|validation)"
+        );
+        let path = rows_path(dir, split);
+        let (raw, bytes_read) = read_file_checked(&path, ROWS_MAGIC)?;
+        let mut r = Reader::over(&raw, &path);
+        let n = r.usize_bounded("row count", MAX_LEN)?;
+        let p = r.usize_bounded("feature count", (MAX_FEATURE_INDEX as u64) + 1)?;
+        ensure!(
+            p == self.p,
+            "shard file {}: {p} features but the header declares {}",
+            path.display(),
+            self.p
+        );
+        let nnz = r.usize_bounded("nnz", MAX_LEN)?;
+        let mut rowptr = Vec::with_capacity(n + 1);
+        for _ in 0..=n {
+            rowptr.push(r.usize_bounded("rowptr entry", nnz as u64)?);
+        }
+        ensure!(
+            rowptr[0] == 0 && rowptr[n] == nnz,
+            "shard file {}: rowptr must run 0..{nnz}",
+            path.display()
+        );
+        ensure!(
+            rowptr.windows(2).all(|w| w[0] <= w[1]),
+            "shard file {}: rowptr is not monotone",
+            path.display()
+        );
+        let mut colidx = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            let ci = r.u32()?;
+            ensure!(
+                (ci as usize) < p,
+                "shard file {}: column id {ci} out of range (p={p})",
+                path.display()
+            );
+            colidx.push(ci);
+        }
+        let mut values = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            values.push(r.f64()?);
+        }
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            y.push(r.f64()?);
+        }
+        r.done()?;
+        let x = Csr {
+            nrows: n,
+            ncols: p,
+            rowptr,
+            colidx,
+            values,
+        };
+        Ok((
+            Dataset::new(format!("{}-{split}", self.name), x, y),
+            LoadStats { bytes_read },
+        ))
+    }
+}
+
+/// Assemble the *full* `Splits` from a shard directory — the single-process
+/// convenience path behind `load_splits("shards:<dir>")`. Cluster ranks use
+/// `load_block` instead and never call this.
+pub fn load_splits_full(dir: &Path) -> Result<Splits> {
+    let h = open_header(dir)?;
+    let (y, _) = h.load_labels(dir)?;
+    let mut colptr = vec![0usize; h.p + 1];
+    let mut shards = Vec::with_capacity(h.num_blocks());
+    for rk in 0..h.num_blocks() {
+        let (csc, _) = h.load_block(dir, rk)?;
+        for (k, &j) in h.partition.blocks[rk].iter().enumerate() {
+            colptr[j + 1] = csc.col_nnz(k);
+        }
+        shards.push(csc);
+    }
+    for j in 0..h.p {
+        colptr[j + 1] += colptr[j];
+    }
+    let total = colptr[h.p];
+    ensure!(
+        total == h.nnz,
+        "shard blocks hold {total} nonzeros but the header declares {}",
+        h.nnz
+    );
+    let mut rowidx = vec![0u32; total];
+    let mut values = vec![0f64; total];
+    for (rk, csc) in shards.iter().enumerate() {
+        for (k, &j) in h.partition.blocks[rk].iter().enumerate() {
+            let (rows, vals) = csc.col_raw(k);
+            let dst = colptr[j];
+            rowidx[dst..dst + rows.len()].copy_from_slice(rows);
+            values[dst..dst + vals.len()].copy_from_slice(vals);
+        }
+    }
+    let train_csc = Csc {
+        nrows: h.n,
+        ncols: h.p,
+        colptr,
+        rowidx,
+        values,
+    };
+    let train = Dataset::new(format!("{}-train", h.name), train_csc.to_csr(), y);
+    let (test, _) = h.load_rows(dir, "test")?;
+    let (validation, _) = h.load_rows(dir, "validation")?;
+    Ok(Splits {
+        train,
+        test,
+        validation,
+    })
+}
+
+/// What `convert_recipe` produced, for the CLI summary and the tests.
+#[derive(Clone, Debug)]
+pub struct ConvertReport {
+    pub name: String,
+    pub n: usize,
+    pub p: usize,
+    pub nnz: usize,
+    pub blocks: usize,
+    pub kind: PartitionKind,
+    pub write: ShardWriteReport,
+}
+
+/// `dglmnet convert` in library form: resolve any text dataset recipe, build
+/// the requested partition over its train split, and write a shard dir.
+pub fn convert_recipe(
+    dataset: &str,
+    scale: f64,
+    seed: u64,
+    blocks: usize,
+    kind: PartitionKind,
+    out: &Path,
+) -> Result<ConvertReport> {
+    ensure!(
+        shard_recipe(dataset).is_none(),
+        "'{dataset}' is already a shard directory — convert takes a libsvm path or a named corpus"
+    );
+    ensure!(
+        (1..=MAX_BLOCKS).contains(&blocks),
+        "--blocks must be in 1..={MAX_BLOCKS}, got {blocks}"
+    );
+    let splits = crate::harness::load_splits(dataset, scale, seed)?;
+    let p = splits.train.p();
+    let partition = match kind {
+        PartitionKind::Hashed => FeaturePartition::hashed(p, blocks, seed),
+        PartitionKind::Contiguous => FeaturePartition::contiguous(p, blocks),
+        PartitionKind::NnzBalanced => FeaturePartition::nnz_balanced(&splits.train.to_csc(), blocks),
+    };
+    // Named corpora are synthesized in memory (base 0); anything else came
+    // through the 1-based libsvm text reader.
+    let named = matches!(dataset, "epsilon_like" | "webspam_like" | "clickstream");
+    let index_base = if named { 0 } else { 1 };
+    let write = write_shards(out, &splits, &partition, kind, seed, index_base)?;
+    Ok(ConvertReport {
+        name: splits
+            .train
+            .name
+            .strip_suffix("-train")
+            .unwrap_or(&splits.train.name)
+            .to_string(),
+        n: splits.train.n(),
+        p,
+        nnz: splits.train.nnz(),
+        blocks,
+        kind,
+        write,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::libsvm::{self, IndexBase, LibsvmData};
+    use crate::util::prop;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dglmnet-shards-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    /// A tiny deterministic Splits built straight from row data.
+    fn splits_from_rows(
+        name: &str,
+        nc: usize,
+        rows: &[Vec<(usize, f64)>],
+        y: &[f64],
+    ) -> Splits {
+        let train = Dataset::new(
+            format!("{name}-train"),
+            crate::sparse::csr::Csr::from_rows(nc, rows),
+            y.to_vec(),
+        );
+        let eval = |tag: &str| {
+            Dataset::new(
+                format!("{name}-{tag}"),
+                crate::sparse::csr::Csr::from_rows(nc, &[vec![(0, 1.0)]]),
+                vec![1.0],
+            )
+        };
+        Splits {
+            train,
+            test: eval("test"),
+            validation: eval("validation"),
+        }
+    }
+
+    #[test]
+    fn prop_shard_roundtrip_bit_identical_to_text_parse() {
+        // The acceptance property: text parse → convert → load reproduces
+        // the parsed matrix *bit for bit*, under both libsvm index bases.
+        for (case, base) in [(0usize, IndexBase::Zero), (1, IndexBase::One)] {
+            let dir = tmp_dir(&format!("prop-{case}"));
+            prop::check("shard write→load round-trip", 25, |rng| {
+                let (nr, nc) = (1 + rng.below(10), 1 + rng.below(12));
+                let rows: Vec<Vec<(usize, f64)>> =
+                    (0..nr).map(|_| prop::sparse_vec(rng, nc, 6, 4.0)).collect();
+                let y: Vec<f64> = (0..nr)
+                    .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                    .collect();
+                let d = LibsvmData {
+                    x: crate::sparse::csr::Csr::from_rows(nc, &rows),
+                    y,
+                };
+                // Reference = the text parse of a real libsvm byte stream.
+                let mut text = Vec::new();
+                libsvm::write_with_base(&mut text, &d, base)
+                    .map_err(|e| format!("write: {e}"))?;
+                let parsed =
+                    libsvm::read(text.as_slice(), base, nc).map_err(|e| format!("read: {e}"))?;
+
+                let m = 1 + rng.below(4);
+                let splits = splits_from_rows("prop", nc, &rows, &parsed.y);
+                let partition = FeaturePartition::hashed(nc, m, 7);
+                let ibase = match base {
+                    IndexBase::Zero => 0,
+                    IndexBase::One => 1,
+                };
+                write_shards(&dir, &splits, &partition, PartitionKind::Hashed, 7, ibase)
+                    .map_err(|e| format!("write_shards: {e}"))?;
+
+                let h = open_header(&dir).map_err(|e| format!("open_header: {e}"))?;
+                if h.index_base != ibase || h.p != nc || h.n != nr {
+                    return Err(format!(
+                        "header mismatch: base {} p {} n {}",
+                        h.index_base, h.p, h.n
+                    ));
+                }
+                // Full reassembly is bit-identical to the text parse.
+                let full = load_splits_full(&dir).map_err(|e| format!("load_splits_full: {e}"))?;
+                if full.train.x != parsed.x {
+                    return Err("reassembled train matrix differs from text parse".into());
+                }
+                let same_bits = full
+                    .train
+                    .y
+                    .iter()
+                    .zip(parsed.y.iter())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                if !same_bits {
+                    return Err("labels differ from text parse".into());
+                }
+                // Every block is bit-identical to sharding the parsed matrix.
+                let x_csc = parsed.x.to_csc();
+                for r in 0..m {
+                    let (blk, stats) =
+                        h.load_block(&dir, r).map_err(|e| format!("load_block {r}: {e}"))?;
+                    if blk != partition.shard(&x_csc, r) {
+                        return Err(format!("block {r} differs from in-memory shard"));
+                    }
+                    if stats.bytes_read == 0 {
+                        return Err("block load reported zero bytes".into());
+                    }
+                }
+                Ok(())
+            });
+            let _ = fs::remove_dir_all(&dir);
+        }
+    }
+
+    fn demo_splits() -> (Splits, FeaturePartition) {
+        let rows = vec![
+            vec![(0, 1.0), (3, -2.0)],
+            vec![(1, 0.5)],
+            vec![(2, 3.25), (4, 1.0)],
+            vec![(0, -1.5), (4, 2.0)],
+        ];
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let splits = splits_from_rows("demo", 5, &rows, &y);
+        let partition = FeaturePartition::hashed(5, 2, 3);
+        (splits, partition)
+    }
+
+    #[test]
+    fn truncated_and_bit_flipped_files_are_rejected() {
+        let dir = tmp_dir("corrupt");
+        let (splits, partition) = demo_splits();
+        write_shards(&dir, &splits, &partition, PartitionKind::Hashed, 3, 0).unwrap();
+        let h = open_header(&dir).unwrap();
+        h.load_block(&dir, 0).unwrap();
+
+        for path in [
+            header_path(&dir),
+            block_path(&dir, 0),
+            labels_path(&dir),
+            rows_path(&dir, "test"),
+        ] {
+            let good = fs::read(&path).unwrap();
+            // Truncation at several depths, including mid-checksum.
+            for cut in [0usize, 3, 8, good.len() / 2, good.len() - 8, good.len() - 1] {
+                fs::write(&path, &good[..cut]).unwrap();
+                assert!(
+                    open_header(&dir).is_err()
+                        || h.load_block(&dir, 0).is_err()
+                        || h.load_labels(&dir).is_err()
+                        || h.load_rows(&dir, "test").is_err(),
+                    "truncation at {cut} of {} accepted",
+                    path.display()
+                );
+            }
+            // A single flipped bit anywhere must fail the checksum.
+            for at in [4usize, 12, good.len() / 2, good.len() - 9] {
+                let mut bad = good.clone();
+                bad[at] ^= 0x10;
+                fs::write(&path, &bad).unwrap();
+                let all = (
+                    open_header(&dir),
+                    h.load_block(&dir, 0),
+                    h.load_labels(&dir),
+                    h.load_rows(&dir, "test"),
+                );
+                assert!(
+                    all.0.is_err() || all.1.is_err() || all.2.is_err() || all.3.is_err(),
+                    "bit flip at {at} of {} accepted",
+                    path.display()
+                );
+            }
+            fs::write(&path, &good).unwrap();
+        }
+        // Restored directory loads cleanly again.
+        assert!(load_splits_full(&dir).is_ok());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// Re-checksum a tampered body so structural validation (not the
+    /// checksum) must catch it.
+    fn rewrite_checked(path: &Path, mut body: Vec<u8>) {
+        let sum = fnv1a(&body);
+        push_u64(&mut body, sum);
+        fs::write(path, body).unwrap();
+    }
+
+    #[test]
+    fn header_validator_rejects_bad_partitions_and_huge_dims() {
+        let dir = tmp_dir("validate");
+        let (splits, partition) = demo_splits();
+        write_shards(&dir, &splits, &partition, PartitionKind::Hashed, 3, 0).unwrap();
+        let good = fs::read(header_path(&dir)).unwrap();
+        let body = &good[..good.len() - 8];
+        // Layout past magic+ver: name_len(8) name(4:"demo") base n p nnz
+        // seed kind m …
+        let p_off = 8 + 8 + 4 + 8 + 8;
+
+        // Feature count above the libsvm bound.
+        let mut bad = body.to_vec();
+        bad[p_off..p_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        rewrite_checked(&header_path(&dir), bad);
+        let err = open_header(&dir).unwrap_err().to_string();
+        assert!(err.contains("feature count"), "got: {err}");
+
+        // Duplicate feature across blocks: patch the first id of block 0's
+        // list to equal its second (blocks start after m at a fixed offset).
+        let blocks_off = p_off + 8 * 5;
+        let len0 =
+            u64::from_le_bytes(body[blocks_off..blocks_off + 8].try_into().unwrap()) as usize;
+        if len0 >= 2 {
+            let mut bad = body.to_vec();
+            let first = blocks_off + 8;
+            let second = body[first + 8..first + 16].to_vec();
+            bad[first..first + 8].copy_from_slice(&second);
+            rewrite_checked(&header_path(&dir), bad);
+            let err = open_header(&dir).unwrap_err().to_string();
+            assert!(
+                err.contains("more than one block") || err.contains("sorted"),
+                "got: {err}"
+            );
+        }
+
+        fs::write(header_path(&dir), &good).unwrap();
+        assert!(open_header(&dir).is_ok());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn block_and_label_cross_checks_fire() {
+        let dir = tmp_dir("cross");
+        let (splits, partition) = demo_splits();
+        write_shards(&dir, &splits, &partition, PartitionKind::Hashed, 3, 0).unwrap();
+        let h = open_header(&dir).unwrap();
+        // Wrong-rank read: block 1's file served as block 0.
+        let blk1 = fs::read(block_path(&dir, 1)).unwrap();
+        fs::write(block_path(&dir, 0), &blk1).unwrap();
+        let err = h.load_block(&dir, 0).unwrap_err().to_string();
+        assert!(err.contains("holds block 1"), "got: {err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_version_is_rejected() {
+        let dir = tmp_dir("version");
+        let (splits, partition) = demo_splits();
+        write_shards(&dir, &splits, &partition, PartitionKind::Hashed, 3, 0).unwrap();
+        let good = fs::read(labels_path(&dir)).unwrap();
+        let mut body = good[..good.len() - 8].to_vec();
+        body[4..8].copy_from_slice(&99u32.to_le_bytes());
+        rewrite_checked(&labels_path(&dir), body);
+        let h = open_header(&dir).unwrap();
+        let err = h.load_labels(&dir).unwrap_err().to_string();
+        assert!(err.contains("unsupported format version 99"), "got: {err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn convert_recipe_matches_text_corpus() {
+        let dir = tmp_dir("convert");
+        let rep =
+            convert_recipe("epsilon_like", 0.03, 5, 3, PartitionKind::Hashed, &dir).unwrap();
+        assert_eq!(rep.blocks, 3);
+        // header + 3 blocks + labels + rows-test + rows-validation
+        assert_eq!(rep.write.files, 7);
+        let text = crate::harness::load_splits("epsilon_like", 0.03, 5).unwrap();
+        let full = load_splits_full(&dir).unwrap();
+        assert_eq!(full.train.x, text.train.x);
+        assert_eq!(full.train.y, text.train.y);
+        assert_eq!(full.test.x, text.test.x);
+        assert_eq!(full.validation.y, text.validation.y);
+        // Hashed partition in the header == what the text cluster path uses.
+        let h = open_header(&dir).unwrap();
+        let p = text.train.p();
+        assert_eq!(h.partition.blocks, FeaturePartition::hashed(p, 3, 5).blocks);
+        // Per-rank bytes: every block reads strictly less than the full set.
+        let total: u64 = (0..3)
+            .map(|r| h.load_block(&dir, r).unwrap().1.bytes_read)
+            .sum();
+        for r in 0..3 {
+            let (blk, stats) = h.load_block(&dir, r).unwrap();
+            assert!(blk.ncols < p);
+            assert!(stats.bytes_read < total);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn partition_kinds_roundtrip_and_parse() {
+        for kind in [
+            PartitionKind::Hashed,
+            PartitionKind::Contiguous,
+            PartitionKind::NnzBalanced,
+        ] {
+            assert_eq!(PartitionKind::parse(kind.name()), Some(kind));
+            assert_eq!(PartitionKind::from_tag(kind.tag()).unwrap(), kind);
+        }
+        assert_eq!(PartitionKind::parse("metis"), None);
+        assert!(PartitionKind::from_tag(9).is_err());
+    }
+
+    #[test]
+    fn shard_recipe_strips_prefix() {
+        assert_eq!(shard_recipe("shards:/data/eps"), Some("/data/eps"));
+        assert_eq!(shard_recipe("epsilon_like"), None);
+    }
+}

@@ -26,16 +26,24 @@ pub fn corpora(scale: f64, seed: u64) -> Vec<(&'static str, Splits)> {
     ]
 }
 
-/// Resolve a dataset argument: a named synthetic corpus or a path to a
-/// libsvm file (split 90/5/5). Deterministic in `(name, scale, seed)`, so
-/// every process of a multi-node cluster materializes the identical data —
-/// the cluster runtime (`cluster::process`) relies on this.
+/// Resolve a dataset argument: a named synthetic corpus, a binary shard
+/// directory (`shards:<dir>`, assembled in full — cluster ranks instead load
+/// only their block via `data::shards`), or a path to a libsvm file (split
+/// 90/5/5). Deterministic in `(name, scale, seed)`, so every process of a
+/// multi-node cluster materializes the identical data — the cluster runtime
+/// (`cluster::process`) relies on this. Named corpora use the same per-name
+/// seed derivation as [`corpora`] (`seed`, `seed+1`, `seed+2`), so a train
+/// run and a bench run at one seed see the same data.
 pub fn load_splits(name: &str, scale: f64, seed: u64) -> anyhow::Result<Splits> {
     match name {
         "epsilon_like" => Ok(Corpus::epsilon_like(scale, seed)),
-        "webspam_like" => Ok(Corpus::webspam_like(scale, seed)),
-        "clickstream" => Ok(Corpus::clickstream(scale, seed)),
-        path => {
+        "webspam_like" => Ok(Corpus::webspam_like(scale, seed + 1)),
+        "clickstream" => Ok(Corpus::clickstream(scale, seed + 2)),
+        recipe => {
+            if let Some(dir) = crate::data::shards::shard_recipe(recipe) {
+                return crate::data::shards::load_splits_full(std::path::Path::new(dir));
+            }
+            let path = recipe;
             let data = crate::sparse::libsvm::read_file(path)?;
             let n = data.y.len();
             let ds = crate::data::Dataset::new(
@@ -47,6 +55,11 @@ pub fn load_splits(name: &str, scale: f64, seed: u64) -> anyhow::Result<Splits> 
                 data.y,
             );
             let tenth = (n / 20).max(1);
+            anyhow::ensure!(
+                n > 2 * tenth,
+                "libsvm file {path} has only {n} example(s) — too few to carve \
+                 out test and validation splits (need at least 3)"
+            );
             Ok(ds.split(tenth, tenth))
         }
     }
@@ -340,6 +353,48 @@ mod tests {
             assert!(s.test.n() > 0);
             assert_eq!(s.test.n(), s.validation.n());
         }
+    }
+
+    #[test]
+    fn load_splits_uses_the_corpora_seed_derivation() {
+        // Regression: load_splits seeded all three corpora with the plain
+        // seed while corpora() used seed, seed+1, seed+2 — webspam_like and
+        // clickstream materialized different data in train vs bench runs.
+        // The derivation is pinned here: one seed, same data everywhere.
+        let (scale, seed) = (0.05, 9);
+        for (name, want) in corpora(scale, seed) {
+            let got = load_splits(name, scale, seed).unwrap();
+            assert_eq!(got.train.x, want.train.x, "{name} train matrix");
+            assert_eq!(got.train.y, want.train.y, "{name} train labels");
+            assert_eq!(got.test.x, want.test.x, "{name} test matrix");
+            assert_eq!(got.validation.y, want.validation.y, "{name} validation labels");
+        }
+    }
+
+    #[test]
+    fn load_splits_rejects_tiny_libsvm_files() {
+        // Regression: n ≤ 2 made `(n/20).max(1)` taken twice exhaust the
+        // file, leaving an empty train split (and a panic in Dataset::split).
+        let dir = std::env::temp_dir();
+        for n in 1..=2usize {
+            let path = dir.join(format!("dglmnet-tiny-{n}-{}.svm", std::process::id()));
+            let body = "+1 1:0.5\n".repeat(n);
+            std::fs::write(&path, body).unwrap();
+            let err = load_splits(&path.to_string_lossy(), 1.0, 1).unwrap_err();
+            assert!(
+                err.to_string().contains("too few"),
+                "n={n}: unexpected error {err}"
+            );
+            std::fs::remove_file(&path).ok();
+        }
+        // Three examples is the minimum that still yields a non-empty train.
+        let path = dir.join(format!("dglmnet-tiny-3-{}.svm", std::process::id()));
+        std::fs::write(&path, "+1 1:0.5\n-1 2:1.0\n+1 1:2.0\n").unwrap();
+        let s = load_splits(&path.to_string_lossy(), 1.0, 1).unwrap();
+        assert_eq!(s.train.n(), 1);
+        assert_eq!(s.test.n(), 1);
+        assert_eq!(s.validation.n(), 1);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

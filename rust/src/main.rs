@@ -5,6 +5,9 @@
 //!   path         sweep a λ1 grid with warm starts + KKT screening, pick the
 //!                validation-auPRC best (§8.2) — fabric, loopback TCP, or a
 //!                real multi-process cluster (--cluster)
+//!   convert      write a dataset as a binary columnar shard directory —
+//!                `train --cluster --dataset shards:<dir>` then has each
+//!                rank read only its own feature-block file (protocol v7)
 //!   worker       serve one rank of a multi-process TCP cluster, then exit
 //!   predict      score a libsvm file with a saved model (batch/offline)
 //!   serve        online scoring endpoint with micro-batching and hot-swap
@@ -68,6 +71,7 @@ fn main() {
     let code = match cmd {
         "train" => cmd_train(&rest),
         "path" => cmd_path(&rest),
+        "convert" => cmd_convert(&rest),
         "worker" => cmd_worker(&rest),
         "predict" => cmd_predict(&rest),
         "serve" => cmd_serve(&rest),
@@ -93,6 +97,8 @@ fn usage() {
          Subcommands:\n  \
          train        train a model (see `dglmnet train --help`)\n  \
          path         λ1-grid sweep with warm starts + KKT screening (§8.2)\n  \
+         convert      write a dataset as a binary columnar shard directory \
+         (out-of-core cluster ingestion)\n  \
          worker       serve one rank of a multi-process TCP cluster\n  \
          predict      score a libsvm file with a saved model\n  \
          serve        online scoring endpoint (micro-batched, hot-swappable)\n  \
@@ -241,13 +247,6 @@ fn cmd_train(argv: &[String]) -> i32 {
     };
     let scale = args.get_f64("scale");
     let seed = args.get_u64("seed");
-    let splits = match harness::load_splits(args.get("dataset"), scale, seed) {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("dataset error: {e}");
-            return 2;
-        }
-    };
     let pen = ElasticNet::new(args.get_f64("l1"), args.get_f64("l2"));
     let cluster: Vec<String> = if args.get("cluster").is_empty() {
         Vec::new()
@@ -271,6 +270,60 @@ fn cmd_train(argv: &[String]) -> i32 {
             return 2;
         }
     }
+    // Out-of-core ingestion (protocol v7): with --cluster and a shards:<dir>
+    // recipe, the coordinator never materializes the full matrix — each rank
+    // (rank 0 included) reads only its own feature-block file inside
+    // train_cluster. Banner dims and the final test scoring come from the
+    // shard header and the test row shard instead. Without --cluster,
+    // load_splits reassembles the directory in-process.
+    let out_of_core =
+        !cluster.is_empty() && dglmnet::data::shards::shard_recipe(args.get("dataset")).is_some();
+    let splits = if out_of_core {
+        None
+    } else {
+        match harness::load_splits(args.get("dataset"), scale, seed) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("dataset error: {e}");
+                return 2;
+            }
+        }
+    };
+    let mut shard_test: Option<dglmnet::data::Dataset> = None;
+    let (ds_name, n, p, nnz) = match &splits {
+        Some(s) => (s.train.name.clone(), s.train.n(), s.train.p(), s.train.nnz()),
+        None => {
+            let dir_str = dglmnet::data::shards::shard_recipe(args.get("dataset"))
+                .expect("out_of_core implies a shards: recipe");
+            let dir = std::path::Path::new(dir_str);
+            let header = match dglmnet::data::shards::open_header(dir) {
+                Ok(h) => h,
+                Err(e) => {
+                    eprintln!("dataset error: {e}");
+                    return 2;
+                }
+            };
+            if header.num_blocks() != cluster.len() {
+                eprintln!(
+                    "shard directory {} holds {} feature blocks but --cluster names {} ranks — \
+                     re-run `dglmnet convert ... --blocks {}`",
+                    dir.display(),
+                    header.num_blocks(),
+                    cluster.len(),
+                    cluster.len(),
+                );
+                return 2;
+            }
+            match header.load_rows(dir, "test") {
+                Ok((t, _)) => shard_test = Some(t),
+                Err(e) => {
+                    eprintln!("dataset error: {e}");
+                    return 2;
+                }
+            }
+            (format!("{}-train", header.name), header.n, header.p, header.nnz)
+        }
+    };
     // ALB selection: --alb-kappa κ in one flag, or the --alb switch with
     // the separate --kappa fraction. Either form works with --cluster (the
     // per-iteration quorum needs no shared memory).
@@ -397,10 +450,10 @@ fn cmd_train(argv: &[String]) -> i32 {
 
     println!(
         "train: dataset={} n={} p={} nnz={} | loss={} λ1={} λ2={} | M={} T={} alb={} engine={}",
-        splits.train.name,
-        splits.train.n(),
-        splits.train.p(),
-        splits.train.nnz(),
+        ds_name,
+        n,
+        p,
+        nnz,
         kind.name(),
         pen.l1,
         pen.l2,
@@ -448,7 +501,7 @@ fn cmd_train(argv: &[String]) -> i32 {
             checkpoint_every,
             resume,
         };
-        match process::train_cluster(&spec, Some(&splits)) {
+        match process::train_cluster(&spec, splits.as_ref()) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("cluster training failed: {e}");
@@ -456,6 +509,7 @@ fn cmd_train(argv: &[String]) -> i32 {
             }
         }
     } else {
+        let s = splits.as_ref().expect("non-cluster runs materialize the splits");
         match args.get("engine") {
             "xla" => {
                 let rt = match Runtime::start(args.get("artifacts")) {
@@ -468,11 +522,11 @@ fn cmd_train(argv: &[String]) -> i32 {
                     }
                 };
                 let compute = XlaCompute::new(rt.handle(), kind);
-                fit_distributed(&splits.train, Some(&splits.test), &compute, &pen, &cfg)
+                fit_distributed(&s.train, Some(&s.test), &compute, &pen, &cfg)
             }
             "native" => {
                 let compute = NativeCompute::new(kind);
-                fit_distributed(&splits.train, Some(&splits.test), &compute, &pen, &cfg)
+                fit_distributed(&s.train, Some(&s.test), &compute, &pen, &cfg)
             }
             other => {
                 eprintln!("unknown engine '{other}'");
@@ -481,9 +535,14 @@ fn cmd_train(argv: &[String]) -> i32 {
         }
     };
 
-    let scores = splits.test.x.mul_vec(&result.beta);
-    let auprc = metrics::auprc(&splits.test.y, &scores);
-    let auc = metrics::roc_auc(&splits.test.y, &scores);
+    let test: &dglmnet::data::Dataset = match (&shard_test, &splits) {
+        (Some(t), _) => t,
+        (None, Some(s)) => &s.test,
+        (None, None) => unreachable!("either the splits or the shard test rows exist"),
+    };
+    let scores = test.x.mul_vec(&result.beta);
+    let auprc = metrics::auprc(&test.y, &scores);
+    let auc = metrics::roc_auc(&test.y, &scores);
     println!(
         "\ndone: iters={} objective={:.6} nnz={}/{} test auPRC={:.4} ROC-AUC={:.4}",
         result.iters,
@@ -512,11 +571,7 @@ fn cmd_train(argv: &[String]) -> i32 {
         println!("comm by tag: {}", parts.join(" | "));
     }
     harness::print_rank_loads(&result.per_rank);
-    harness::print_convergence(
-        &splits.train.name,
-        &[&result.trace],
-        result.trace.best_objective(),
-    );
+    harness::print_convergence(&ds_name, &[&result.trace], result.trace.best_objective());
 
     let trace_path = args.get("trace");
     if !trace_path.is_empty() {
@@ -530,7 +585,7 @@ fn cmd_train(argv: &[String]) -> i32 {
     if !trace_out.is_empty() {
         let mut header = dglmnet::util::json::Json::obj();
         header
-            .set("dataset", splits.train.name.as_str())
+            .set("dataset", ds_name.as_str())
             .set("nodes", cfg.nodes)
             .set("iters", result.iters)
             .set("comm_bytes", result.comm_bytes)
@@ -551,7 +606,7 @@ fn cmd_train(argv: &[String]) -> i32 {
     let model_path = args.get("save-model");
     if !model_path.is_empty() {
         let model = dglmnet::glm::GlmModel::new(kind, result.beta.clone())
-            .with_meta("dataset", &splits.train.name)
+            .with_meta("dataset", &ds_name)
             .with_meta("l1", pen.l1)
             .with_meta("l2", pen.l2)
             .with_meta("nodes", cfg.nodes);
@@ -797,6 +852,118 @@ fn cmd_path(argv: &[String]) -> i32 {
         println!("model written to {model_path} ({} non-zero weights)", model.nnz());
     }
     0
+}
+
+fn convert_cli() -> Cli {
+    Cli::new(
+        "dglmnet convert",
+        "write a dataset as a binary columnar shard directory (checksummed \
+         header + one CSC feature-block file per rank + shared label and \
+         row shards; see DESIGN.md §Shard format). A cluster trained with \
+         `--dataset shards:<dir>` has each rank read only its own block",
+    )
+    .flag(
+        "dataset",
+        "",
+        "epsilon_like | webspam_like | clickstream | path to .libsvm \
+         (may also be given positionally: `dglmnet convert data.libsvm ...`)",
+    )
+    .required("out", "output shard directory (created; files are written atomically)")
+    .flag(
+        "blocks",
+        "8",
+        "number of feature blocks M — must equal the rank count of any \
+         cluster that trains from this directory",
+    )
+    .flag(
+        "partition",
+        "hashed",
+        "feature→block assignment: hashed (matches the text cluster path \
+         bit-for-bit) | contiguous | nnz (balances nonzeros)",
+    )
+    .flag("scale", "0.25", "synthetic corpus scale factor")
+    .flag("seed", "1", "random seed (corpus generation + hashed partition)")
+}
+
+fn cmd_convert(argv: &[String]) -> i32 {
+    let cli = convert_cli();
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(CliError::HelpRequested) => {
+            println!("{}", cli.help_text());
+            return 0;
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli.help_text());
+            return 2;
+        }
+    };
+    let dataset = if !args.get("dataset").is_empty() {
+        args.get("dataset").to_string()
+    } else if let Some(first) = args.positional().first() {
+        first.clone()
+    } else {
+        eprintln!(
+            "usage: dglmnet convert <dataset> --out <dir> [--blocks M] [--partition kind]\n\n{}",
+            cli.help_text()
+        );
+        return 2;
+    };
+    let kind = match dglmnet::data::shards::PartitionKind::parse(args.get("partition")) {
+        Some(k) => k,
+        None => {
+            eprintln!(
+                "unknown --partition '{}' (hashed | contiguous | nnz)",
+                args.get("partition")
+            );
+            return 2;
+        }
+    };
+    let out = std::path::Path::new(args.get("out"));
+    let report = dglmnet::data::shards::convert_recipe(
+        &dataset,
+        args.get_f64("scale"),
+        args.get_u64("seed"),
+        args.get_usize("blocks"),
+        kind,
+        out,
+    );
+    match report {
+        Ok(rep) => {
+            println!(
+                "convert: dataset={} n={} p={} nnz={} -> {} | {} blocks ({} partition), \
+                 {} files, {:.1} MiB",
+                rep.name,
+                rep.n,
+                rep.p,
+                rep.nnz,
+                out.display(),
+                rep.blocks,
+                rep.kind.name(),
+                rep.write.files,
+                rep.write.bytes as f64 / (1024.0 * 1024.0),
+            );
+            let cols: Vec<String> = rep
+                .write
+                .block_cols
+                .iter()
+                .zip(rep.write.block_nnz.iter())
+                .enumerate()
+                .map(|(r, (c, z))| format!("{r}:{c}c/{z}nz"))
+                .collect();
+            println!("blocks: {}", cols.join(" "));
+            println!(
+                "train from it with: dglmnet train --cluster <{} addrs> --dataset shards:{}",
+                rep.blocks,
+                out.display(),
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("convert failed: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_worker(argv: &[String]) -> i32 {

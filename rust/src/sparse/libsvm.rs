@@ -16,6 +16,12 @@ pub enum IndexBase {
     One,
 }
 
+/// Largest 0-based feature index any ingestion path accepts (text parse here
+/// and the binary shard-header validator in `data::shards`). Chosen so the
+/// index fits the `u32` column ids the sparse matrices store and `idx + 1`
+/// (the implied width) cannot wrap `usize` on hostile input.
+pub const MAX_FEATURE_INDEX: usize = (u32::MAX - 1) as usize;
+
 /// A labeled sparse dataset in example-major order.
 #[derive(Clone, Debug)]
 pub struct LibsvmData {
@@ -83,6 +89,12 @@ pub fn read<R: Read>(
                     idx - 1
                 }
             };
+            if idx > MAX_FEATURE_INDEX {
+                return Err(LibsvmError::Parse {
+                    line: lineno + 1,
+                    msg: format!("feature index {idx} above the supported bound {MAX_FEATURE_INDEX}"),
+                });
+            }
             let val: f64 = vs.parse().map_err(|e| LibsvmError::Parse {
                 line: lineno + 1,
                 msg: format!("bad value '{vs}': {e}"),
@@ -126,7 +138,10 @@ pub fn write_with_base<W: Write>(
     };
     for i in 0..data.x.nrows {
         let label = data.y[i];
-        if label == label.trunc() {
+        // Integer fast-path only when the cast is exact: an integral f64 with
+        // |label| ≤ 2^53 is representable in i64 without saturation. Anything
+        // larger (or non-finite) round-trips through f64's own formatting.
+        if label == label.trunc() && label.abs() <= 9_007_199_254_740_992.0 {
             write!(w, "{}", label as i64)?;
         } else {
             write!(w, "{label}")?;
@@ -190,6 +205,23 @@ mod tests {
     }
 
     #[test]
+    fn rejects_indices_above_the_feature_bound() {
+        // Regression: a hostile 0-based index of usize::MAX used to wrap in
+        // `max_col.max(idx + 1)` (release) or panic (debug). Now a Parse
+        // error, in both bases, as is anything past MAX_FEATURE_INDEX.
+        let huge = format!("1 {}:1.0\n", usize::MAX);
+        let err = read(huge.as_bytes(), IndexBase::Zero, 0).unwrap_err();
+        assert!(err.to_string().contains("above the supported bound"), "{err}");
+        assert!(read(huge.as_bytes(), IndexBase::One, 0).is_err());
+        let over = format!("1 {}:1.0\n", MAX_FEATURE_INDEX + 1);
+        assert!(read(over.as_bytes(), IndexBase::Zero, 0).is_err());
+        // The bound itself is accepted (1-based: idx-1 lands exactly on it).
+        let at = format!("1 {}:1.0\n", MAX_FEATURE_INDEX);
+        let d = read(at.as_bytes(), IndexBase::Zero, 0).unwrap();
+        assert_eq!(d.x.ncols, MAX_FEATURE_INDEX + 1);
+    }
+
+    #[test]
     fn write_read_roundtrip() {
         let d = read(SAMPLE.as_bytes(), IndexBase::One, 0).unwrap();
         let mut buf = Vec::new();
@@ -234,6 +266,25 @@ mod tests {
                 }
                 Ok(())
             });
+        }
+    }
+
+    #[test]
+    fn huge_integral_labels_roundtrip_exactly() {
+        use crate::sparse::csr::Csr;
+        // Regression: `label as i64` saturated for integral labels outside
+        // i64 range (e.g. 1e300), so the written text no longer matched the
+        // label. The fast-path now applies only below 2^53.
+        let y = vec![1e300, -1e300, 9_007_199_254_740_992.0, 1e16, 2.5, -1.0];
+        let d = LibsvmData {
+            x: Csr::from_rows(2, &vec![vec![(0, 1.0)]; 6]),
+            y,
+        };
+        let mut buf = Vec::new();
+        write(&mut buf, &d).unwrap();
+        let d2 = read(buf.as_slice(), IndexBase::One, 2).unwrap();
+        for (a, b) in d.y.iter().zip(d2.y.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} did not round-trip");
         }
     }
 

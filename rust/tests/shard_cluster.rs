@@ -1,0 +1,179 @@
+//! Out-of-core ingestion acceptance (protocol v7): a cluster trained from a
+//! `shards:<dir>` directory must (a) reproduce the text-ingest fit — the
+//! hashed partition recorded by the converter is the same one the text path
+//! derives, so the optimization problem per rank is bit-identical — and
+//! (b) actually be out-of-core: every rank's loaded-matrix dims and
+//! bytes-read stay strictly below the full p-column matrix.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+
+use dglmnet::cluster::allreduce::AllReduceAlgo;
+use dglmnet::cluster::process::{run_worker_on, train_cluster, JobMode, JobSpec, WorkerOverrides};
+use dglmnet::data::shards;
+use dglmnet::sparse::FeaturePartition;
+
+const SCALE: f64 = 0.03;
+const SEED: u64 = 5;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "dglmnet-shard-cluster-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn base_spec(cluster: Vec<String>, dataset: String) -> JobSpec {
+    JobSpec {
+        rank: 0,
+        cluster,
+        dataset,
+        scale: SCALE,
+        seed: SEED,
+        loss: "logistic".into(),
+        l1: 0.5,
+        l2: 0.1,
+        max_iters: 6,
+        mu0: 1.0,
+        adaptive_mu: true,
+        tol: 1e-7,
+        patience: 2,
+        eval_every: 0,
+        allreduce: AllReduceAlgo::Ring,
+        alb_kappa: None,
+        max_passes: 4,
+        chunk: 64,
+        straggler_delays: Vec::new(),
+        virtual_time: false,
+        slow_factors: Vec::new(),
+        mode: JobMode::Train,
+        lambda_grid: Vec::new(),
+        screen: false,
+        threads: Vec::new(),
+        checkpoint_dir: None,
+        checkpoint_every: 0,
+        resume: false,
+    }
+}
+
+/// Run a full in-process 3-rank cluster (coordinator + 2 worker threads on
+/// loopback) over the given dataset recipe.
+fn run_cluster(dataset: &str) -> dglmnet::coordinator::ClusterFitResult {
+    let w1 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let w2 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let a1 = w1.local_addr().unwrap().to_string();
+    let a2 = w2.local_addr().unwrap().to_string();
+    let spec = base_spec(vec!["127.0.0.1:0".into(), a1, a2], dataset.to_string());
+    let h1 = std::thread::spawn(move || run_worker_on(w1, WorkerOverrides::default()).unwrap());
+    let h2 = std::thread::spawn(move || run_worker_on(w2, WorkerOverrides::default()).unwrap());
+    let fit = train_cluster(&spec, None).unwrap();
+    h1.join().unwrap();
+    h2.join().unwrap();
+    fit
+}
+
+/// The headline acceptance test: convert → train from shards → compare with
+/// the text-ingest cluster fit, and assert the per-rank out-of-core bounds.
+#[test]
+fn shard_cluster_matches_text_ingest_and_stays_out_of_core() {
+    let dir = tmp_dir("parity");
+    let report = shards::convert_recipe(
+        "epsilon_like",
+        SCALE,
+        SEED,
+        3,
+        shards::PartitionKind::Hashed,
+        &dir,
+    )
+    .expect("convert");
+    assert_eq!(report.blocks, 3);
+
+    let text = run_cluster("epsilon_like");
+    let from_shards = run_cluster(&format!("shards:{}", dir.display()));
+
+    // Objective parity: ≤ 1e-6 relative (in practice bit-identical — the
+    // header partition equals the text path's hashed partition, so every
+    // rank solves the same block in the same order).
+    let gap = (from_shards.objective - text.objective).abs() / text.objective.abs().max(1e-12);
+    assert!(
+        gap < 1e-6,
+        "shard-ingest objective {} vs text-ingest {} (gap {gap:.3e})",
+        from_shards.objective,
+        text.objective,
+    );
+    assert_eq!(from_shards.beta.len(), text.beta.len());
+    for (j, (a, b)) in from_shards.beta.iter().zip(text.beta.iter()).enumerate() {
+        assert!((a - b).abs() < 1e-9, "β[{j}]: shards {a} vs text {b}");
+    }
+
+    // Out-of-core bounds: every rank loaded exactly its header block —
+    // strictly fewer columns than p (no rank materialized the full
+    // p-column matrix) — and read fewer bytes than the full train CSC.
+    let splits = dglmnet::harness::load_splits("epsilon_like", SCALE, SEED).unwrap();
+    let p = splits.train.p();
+    let full_bytes = splits.train.to_csc().storage_bytes() as u64;
+    let partition = FeaturePartition::hashed(p, 3, SEED);
+    assert_eq!(from_shards.per_rank.len(), 3);
+    for (r, load) in from_shards.per_rank.iter().enumerate() {
+        assert_eq!(load.rank, r);
+        assert_eq!(
+            load.loaded_cols,
+            partition.blocks[r].len(),
+            "rank {r} loaded-matrix width"
+        );
+        assert!(
+            load.loaded_cols < p,
+            "rank {r} materialized {} of {p} columns — not out-of-core",
+            load.loaded_cols
+        );
+        assert!(load.loaded_bytes > 0, "rank {r} reported no bytes read");
+        assert!(
+            load.loaded_bytes < full_bytes,
+            "rank {r} read {} bytes ≥ the full matrix footprint {full_bytes}",
+            load.loaded_bytes
+        );
+    }
+    // The text run, by contrast, charges every rank the full footprint.
+    for load in text.per_rank.iter() {
+        assert!(load.loaded_bytes >= full_bytes);
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A shard directory converted for M blocks refuses to serve a cluster of a
+/// different size — the partition is pinned to the block files.
+#[test]
+fn shard_cluster_rejects_mismatched_block_count() {
+    let dir = tmp_dir("mismatch");
+    shards::convert_recipe(
+        "epsilon_like",
+        SCALE,
+        SEED,
+        3,
+        shards::PartitionKind::Hashed,
+        &dir,
+    )
+    .expect("convert");
+
+    let w1 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let a1 = w1.local_addr().unwrap().to_string();
+    let spec = base_spec(
+        vec!["127.0.0.1:0".into(), a1],
+        format!("shards:{}", dir.display()),
+    );
+    // The worker fails the same way the coordinator does; don't unwrap it.
+    let h = std::thread::spawn(move || {
+        let _ = run_worker_on(w1, WorkerOverrides::default());
+    });
+    let err = train_cluster(&spec, None).unwrap_err().to_string();
+    assert!(
+        err.contains("blocks") && err.contains("--blocks 2"),
+        "error must point at the block-count mismatch and the fix: {err}"
+    );
+    h.join().unwrap();
+
+    std::fs::remove_dir_all(&dir).ok();
+}
