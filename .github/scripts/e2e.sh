@@ -254,6 +254,55 @@ case "$SCENARIO" in
     }'
     ;;
 
+  partition-e2e)
+    # Partition-strategy seam end to end: train the same 3-rank cluster job
+    # on the block-correlated corpus with the co-occurrence-clustered layout
+    # and with the default hashed layout. The banner must name the chosen
+    # strategy, every per-rank row must carry the cut diagnostic, and the
+    # two layouts must converge to the same optimum (≤ 1e-3 relative —
+    # the partition changes the iterates, not the convex problem).
+    spawn_workers 7190 2
+    "$BIN" train \
+      --cluster "$(cluster_list 7190 2)" \
+      --dataset block_correlated --scale 0.1 --seed 1 \
+      --loss logistic --l1 0.5 --l2 0.1 --max-iters 60 --eval-every 0 \
+      --partition cluster \
+      | tee train_cluster_part.log
+    wait
+    grep -q "^done:" train_cluster_part.log
+    grep -q "partition: strategy=cluster" train_cluster_part.log
+    # The per-rank table's trailing cut column: one 0.xxx (or "-") entry
+    # per rank row (table: rank | ... | threads | upd/thread | cut).
+    rows=$(awk -F'|' 'NF >= 12 { gsub(/ /, "", $2); gsub(/ /, "", $11);
+                      if ($2 ~ /^[0-9]+$/ && $11 ~ /^[0-9]\.[0-9]+$/) c++ }
+           END { print c + 0 }' train_cluster_part.log)
+    if [ "$rows" -ne 3 ]; then
+      echo "expected 3 per-rank rows with a numeric cut column, got $rows" >&2
+      exit 1
+    fi
+
+    spawn_workers 7200 2
+    "$BIN" train \
+      --cluster "$(cluster_list 7200 2)" \
+      --dataset block_correlated --scale 0.1 --seed 1 \
+      --loss logistic --l1 0.5 --l2 0.1 --max-iters 60 --eval-every 0 \
+      | tee train_hashed_part.log
+    wait
+    grep -q "^done:" train_hashed_part.log
+    grep -q "partition: strategy=hashed" train_hashed_part.log
+
+    objC=$(objective_of train_cluster_part.log)
+    objH=$(objective_of train_hashed_part.log)
+    awk -v a="$objC" -v b="$objH" 'BEGIN {
+      if (a == "" || b == "") { print "missing objective"; exit 1 }
+      d = (a - b) / a; if (d < 0) d = -d
+      if (d > 1e-3) {
+        printf "partition layouts disagree: cluster %s vs hashed %s (rel gap %g)\n", a, b, d
+        exit 1
+      }
+    }'
+    ;;
+
   *)
     echo "unknown scenario '$SCENARIO'" >&2
     exit 2

@@ -1,0 +1,203 @@
+//! Partition-quality benchmark: iterations-to-tolerance per strategy.
+//!
+//! d-GLMNET's block-diagonal Hessian model (7) is exact when no two feature
+//! blocks co-occur in a row; cross-block correlation forces the Theorem 1
+//! line search to damp the merged step (α < 1) and costs outer iterations.
+//! This bench plants that regime with `synth::block_correlated` — feature
+//! groups that are dense-and-correlated internally and never co-occur across
+//! groups — and measures, for every [`PartitionStrategy`], how many outer
+//! iterations `solver::dglmnet::fit` needs to bring the relative
+//! suboptimality (f − f*)/|f*| under 1e-6. A hashed layout scatters each
+//! group across all M ranks (high cut fraction, damped merges); the
+//! correlation-aware clustered layout recovers the planted groups (cut ≈ 0)
+//! and should need strictly fewer iterations.
+//!
+//! Each run appends a JSON record to `BENCH_partition_quality.json` at the
+//! repo root so the numbers accumulate into a trajectory across commits.
+//!
+//! Run with:
+//!
+//!     cargo bench --bench partition_quality
+//!
+//! `DGLMNET_SCALE` scales the row count (default 1.0).
+#![allow(clippy::disallowed_macros)]
+
+use std::path::Path;
+use std::time::Instant;
+
+use dglmnet::data::{synth, SynthConfig};
+use dglmnet::glm::loss::LossKind;
+use dglmnet::glm::regularizer::ElasticNet;
+use dglmnet::solver::compute::NativeCompute;
+use dglmnet::solver::dglmnet::DGlmnetConfig;
+use dglmnet::solver::path;
+use dglmnet::sparse::PartitionStrategy;
+use dglmnet::util::bench::Table;
+use dglmnet::util::json::{self, Json};
+
+const SEED: u64 = 17;
+const NODES: usize = 4;
+const GROUPS: usize = 4;
+const RHO: f64 = 0.9;
+const P: usize = 96;
+const MAX_ITERS: usize = 200;
+const REL_TOL: f64 = 1e-6;
+
+fn main() {
+    let scale: f64 = std::env::var("DGLMNET_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    let n = ((1600.0 * scale) as usize).max(400);
+
+    println!("=== Partition quality: outer iterations to (f - f*)/|f*| <= {REL_TOL:.0e} ===");
+    let ds = synth::block_correlated(&SynthConfig { n, p: P, seed: SEED }, GROUPS, RHO);
+    println!(
+        "block-correlated corpus: n={n} p={P} groups={GROUPS} rho={RHO} nodes={NODES}"
+    );
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let lambda1 = 0.05 * path::lambda_max(&ds, LossKind::Logistic);
+    let pen = ElasticNet::l1_only(lambda1);
+    let x_csc = ds.to_csc();
+
+    // Reference optimum: M = 1 removes the block-diagonal approximation
+    // entirely, so this is the tightest objective any layout can reach.
+    let reference = dglmnet::solver::dglmnet::fit(
+        &ds,
+        &compute,
+        &pen,
+        &DGlmnetConfig {
+            nodes: 1,
+            max_iters: 2 * MAX_ITERS,
+            tol: 0.0,
+            eval_every: 0,
+            seed: SEED,
+            ..Default::default()
+        },
+        None,
+    );
+
+    let fits: Vec<_> = PartitionStrategy::ALL
+        .iter()
+        .map(|&strat| {
+            let t0 = Instant::now();
+            let fit = dglmnet::solver::dglmnet::fit(
+                &ds,
+                &compute,
+                &pen,
+                &DGlmnetConfig {
+                    nodes: NODES,
+                    max_iters: MAX_ITERS,
+                    tol: 0.0,
+                    eval_every: 0,
+                    seed: SEED,
+                    partition: strat,
+                    ..Default::default()
+                },
+                None,
+            );
+            (strat, fit, t0.elapsed().as_secs_f64())
+        })
+        .collect();
+
+    // f* = best objective seen by anyone, so the winning strategy reaches
+    // zero suboptimality at its own last iteration at the latest.
+    let f_star = fits
+        .iter()
+        .map(|(_, f, _)| f.objective)
+        .chain([reference.objective])
+        .fold(f64::INFINITY, f64::min);
+    let denom = f_star.abs().max(1e-12);
+
+    let mut table = Table::new(&[
+        "strategy",
+        "iters to 1e-6",
+        "final subopt",
+        "mean cut",
+        "wall (s)",
+    ]);
+    let mut rec = Json::obj();
+    rec.set("bench", "partition_quality")
+        .set("n", n)
+        .set("p", P)
+        .set("groups", GROUPS)
+        .set("rho", RHO)
+        .set("nodes", NODES)
+        .set("lambda1", lambda1)
+        .set("rel_tol", REL_TOL)
+        .set("f_star", f_star);
+    for (strat, fit, wall) in &fits {
+        // First trace point at or under the tolerance; -1 = never reached.
+        let iters_to_tol: i64 = fit
+            .trace
+            .points
+            .iter()
+            .find(|pt| (pt.objective - f_star) / denom <= REL_TOL)
+            .map(|pt| pt.iter as i64)
+            .unwrap_or(-1);
+        let cuts = strat.resolve(&x_csc, NODES, SEED).cut_fractions(&x_csc, SEED);
+        let mean_cut = cuts.iter().sum::<f64>() / cuts.len().max(1) as f64;
+        let final_subopt = (fit.objective - f_star) / denom;
+        table.row(&[
+            strat.name().into(),
+            if iters_to_tol < 0 {
+                format!("> {MAX_ITERS}")
+            } else {
+                iters_to_tol.to_string()
+            },
+            format!("{final_subopt:.2e}"),
+            format!("{mean_cut:.3}"),
+            format!("{wall:.3}"),
+        ]);
+        rec.set(&format!("iters_{}", strat.name()), iters_to_tol)
+            .set(&format!("cut_{}", strat.name()), mean_cut)
+            .set(&format!("subopt_{}", strat.name()), final_subopt);
+    }
+    table.print();
+
+    let iters_of = |s: PartitionStrategy| {
+        fits.iter()
+            .find(|(st, _, _)| *st == s)
+            .and_then(|(_, f, _)| {
+                f.trace
+                    .points
+                    .iter()
+                    .find(|pt| (pt.objective - f_star) / denom <= REL_TOL)
+                    .map(|pt| pt.iter)
+            })
+    };
+    match (iters_of(PartitionStrategy::Clustered), iters_of(PartitionStrategy::Hashed)) {
+        (Some(c), Some(h)) if c < h => {
+            println!("clustered beats hashed: {c} vs {h} outer iterations");
+        }
+        (c, h) => println!(
+            "WARNING: clustered ({c:?}) did not beat hashed ({h:?}) — acceptance regression"
+        ),
+    }
+
+    rec.set(
+        "unix_ts",
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0),
+    );
+    append_record(Path::new("BENCH_partition_quality.json"), rec);
+}
+
+/// Append one record to a JSON-array trajectory file, creating it on first
+/// use. A malformed existing file is replaced rather than crashing the bench.
+fn append_record(path: &Path, rec: Json) {
+    let mut records = match std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| json::parse(&text).ok())
+    {
+        Some(Json::Arr(items)) => items,
+        _ => Vec::new(),
+    };
+    records.push(rec);
+    match std::fs::write(path, Json::Arr(records).dump()) {
+        Ok(()) => println!("appended record to {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

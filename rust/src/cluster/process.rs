@@ -67,6 +67,17 @@
 //! across survivors) is rejected for them, while full-cluster resume works
 //! unchanged. Path jobs stay text-only.
 //!
+//! Protocol v8 threads the partition-strategy seam (DESIGN.md
+//! §Partitioning) through the wire: the spec gains an optional `partition`
+//! field naming a [`PartitionStrategy`] (`hashed|contiguous|nnz|cluster`).
+//! Absent means hashed for text datasets and header-pinned for shard
+//! datasets; an explicit strategy that contradicts a shard header is
+//! rejected with a pointed error instead of silently re-deriving. Every
+//! rank resolves the partition through `PartitionStrategy::resolve` — one
+//! call site per run mode — and the train done report gains a `cut`
+//! cross-block co-occurrence fraction so the coordinator's per-rank table
+//! can show how much coupling the layout left across blocks.
+//!
 //! Datasets are recipes, not payloads: synthetic corpora are deterministic
 //! in `(name, scale, seed)`, and libsvm paths must be readable by every
 //! process. Engine is native-only here (the XLA runtime is per-process and
@@ -92,7 +103,7 @@ use crate::obs::span::SpanRecord;
 use crate::solver::compute::NativeCompute;
 use crate::solver::linesearch::LineSearchConfig;
 use crate::solver::path::PathResult;
-use crate::sparse::{Csc, FeaturePartition};
+use crate::sparse::{Csc, FeaturePartition, PartitionStrategy};
 use crate::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -253,6 +264,12 @@ pub struct JobSpec {
     /// after mesh formation; every worker blocks on its own before
     /// training.
     pub resume: bool,
+    /// Protocol v8: how features map to ranks. `None` keeps the historical
+    /// behavior — hashed for text datasets, header-pinned for shard
+    /// datasets. `Some(s)` resolves `s` on every rank; on a shards dataset
+    /// it must name the header's own strategy (the block files ARE the
+    /// partition) or ingestion fails with a pointed error.
+    pub partition: Option<PartitionStrategy>,
 }
 
 impl JobSpec {
@@ -308,6 +325,9 @@ impl JobSpec {
         }
         if let Some(dir) = &self.checkpoint_dir {
             o.set("checkpoint_dir", dir.as_str());
+        }
+        if let Some(strat) = self.partition {
+            o.set("partition", strat.name());
         }
         o
     }
@@ -468,6 +488,19 @@ impl JobSpec {
         }
         let checkpoint_every = ck_every as usize;
         let resume = matches!(v.get("resume"), Some(Json::Bool(true)));
+        // Protocol v8: optional partition strategy; an unknown name is a
+        // spec error, not a silent hashed fallback.
+        let partition = match v.get("partition") {
+            None => None,
+            Some(j) => {
+                let name = j
+                    .as_str()
+                    .ok_or_else(|| "non-string 'partition'".to_string())?;
+                Some(PartitionStrategy::parse(name).ok_or_else(|| {
+                    format!("unknown partition strategy '{name}' (hashed | contiguous | nnz | cluster)")
+                })?)
+            }
+        };
         if mode == JobMode::Path && (checkpoint_every > 0 || checkpoint_dir.is_some() || resume)
         {
             return Err("path jobs do not support checkpoint/resume".into());
@@ -501,6 +534,7 @@ impl JobSpec {
             checkpoint_dir,
             checkpoint_every,
             resume,
+            partition,
         };
         if spec.rank >= spec.cluster.len() {
             return Err(format!(
@@ -614,6 +648,10 @@ struct RankData {
     loaded_cols: usize,
     /// ...and the bytes it read (block + labels [+ test rows]) to do so.
     loaded_bytes: u64,
+    /// Protocol v8: this rank's cross-block co-occurrence fraction (see
+    /// `FeaturePartition::cut_fractions`); −1.0 = unknown (shard ranks
+    /// never hold the full matrix the statistic needs).
+    cut: f64,
 }
 
 /// Build one rank's training inputs from the spec's dataset recipe.
@@ -622,15 +660,31 @@ struct RankData {
 /// directory's block count to match the cluster size, and read exactly this
 /// rank's block file + the shared label shard (+ the test row shard when
 /// the spec evaluates). The partition comes from the header, not from
-/// re-hashing, so every rank agrees with the converter byte-for-byte.
+/// re-hashing, so every rank agrees with the converter byte-for-byte; a
+/// spec that names a *different* strategy is rejected (protocol v8) — the
+/// block files ARE the partition.
 ///
 /// Anything else: materialize the splits (or borrow `preloaded` when the
-/// caller already did), derive the hashed partition, and slice.
+/// caller already did), resolve the spec's partition strategy (absent =
+/// hashed) through the seam, and slice.
 fn prepare_rank_data(spec: &JobSpec, preloaded: Option<&Splits>) -> anyhow::Result<RankData> {
     let m = spec.cluster.len();
     if let Some(dir) = crate::data::shards::shard_recipe(&spec.dataset) {
         let dir = Path::new(dir);
         let header = crate::data::shards::open_header(dir)?;
+        if let Some(strat) = spec.partition {
+            anyhow::ensure!(
+                strat == header.kind,
+                "job spec asks for --partition {} but shard directory {} was \
+                 converted with --partition {} — a shards dataset pins the \
+                 partition to its block files; drop the flag or re-run \
+                 `dglmnet convert ... --partition {}`",
+                strat.name(),
+                dir.display(),
+                header.kind.name(),
+                strat.name(),
+            );
+        }
         anyhow::ensure!(
             header.num_blocks() == m,
             "shard directory {} holds {} feature blocks but the cluster has {m} ranks — \
@@ -673,6 +727,8 @@ fn prepare_rank_data(spec: &JobSpec, preloaded: Option<&Splits>) -> anyhow::Resu
             partition: header.partition,
             loaded_cols,
             loaded_bytes,
+            // No rank holds the full matrix, so the cut is unobservable.
+            cut: -1.0,
         })
     } else {
         let owned;
@@ -683,12 +739,19 @@ fn prepare_rank_data(spec: &JobSpec, preloaded: Option<&Splits>) -> anyhow::Resu
                 &owned
             }
         };
-        let partition = FeaturePartition::hashed(splits.train.p(), m, spec.seed);
         let x_csc = splits.train.to_csc();
+        // The single partition-resolution call site for a text-dataset
+        // rank (protocol v8): absent `partition` means hashed, matching
+        // every pre-v8 run bit-for-bit.
+        let partition = spec
+            .partition
+            .unwrap_or_default()
+            .resolve(&x_csc, m, spec.seed);
         // The text path materializes the whole matrix before slicing —
         // exactly the cost the shard format exists to avoid — so its
         // "bytes read" is the full CSC footprint.
         let loaded_bytes = x_csc.storage_bytes() as u64;
+        let cut = partition.cut_fractions(&x_csc, spec.seed)[spec.rank];
         let shard = partition.shard(&x_csc, spec.rank);
         let (test_shard, test_y) = if spec.eval_every > 0 {
             let tx = splits.test.to_csc();
@@ -709,6 +772,7 @@ fn prepare_rank_data(spec: &JobSpec, preloaded: Option<&Splits>) -> anyhow::Resu
             train_name: splits.train.name.clone(),
             partition,
             loaded_bytes,
+            cut,
         })
     }
 }
@@ -814,7 +878,18 @@ fn load_resume_points(
         ck.ranks.len(),
         ck.ranks.len(),
     );
-    let old = FeaturePartition::hashed(p, ck.ranks.len(), spec.seed);
+    // Rebuild the partition the checkpoint was written under: the same
+    // strategy the spec resolves, at the OLD cluster size. Data-dependent
+    // strategies need the matrix back — a recovery-only cost the dimension
+    // formulas avoid for hashed/contiguous.
+    let strat = spec.partition.unwrap_or_default();
+    let old = match strat.resolve_dims(p, ck.ranks.len(), spec.seed) {
+        Some(fp) => fp,
+        None => {
+            let splits = crate::harness::load_splits(&spec.dataset, spec.scale, spec.seed)?;
+            strat.resolve(&splits.train.to_csc(), ck.ranks.len(), spec.seed)
+        }
+    };
     anyhow::ensure!(
         old.blocks
             .iter()
@@ -861,8 +936,13 @@ fn solve_rank_path(
         .ok_or_else(|| anyhow::anyhow!("unknown loss '{}'", spec.loss))?;
     let compute = NativeCompute::new(kind);
 
-    let partition = FeaturePartition::hashed(splits.train.p(), m, spec.seed);
     let x_csc = splits.train.to_csc();
+    // The single partition-resolution call site for a path-job rank
+    // (protocol v8; path jobs are text-only, so no header to defer to).
+    let partition = spec
+        .partition
+        .unwrap_or_default()
+        .resolve(&x_csc, m, spec.seed);
     let shard = partition.shard(&x_csc, spec.rank);
     let val_csc = splits.validation.to_csc();
     let val_shard = partition.shard(&val_csc, spec.rank);
@@ -1084,6 +1164,8 @@ fn serve_one_job(listener: &TcpListener, overrides: &WorkerOverrides) -> anyhow:
                 // Protocol v7: per-rank ingestion accounting.
                 .set("loaded_cols", data.loaded_cols)
                 .set("loaded_bytes", data.loaded_bytes)
+                // Protocol v8: cross-block co-occurrence (−1 = unknown).
+                .set("cut", data.cut)
                 .set(
                     "updates_per_thread",
                     Json::Arr(
@@ -1434,6 +1516,7 @@ fn train_cluster_once(
     let mut rank0_load = RankLoad::from_output(&run.output);
     rank0_load.loaded_cols = data.loaded_cols;
     rank0_load.loaded_bytes = data.loaded_bytes;
+    rank0_load.cut = data.cut;
     let mut per_rank: Vec<RankLoad> = vec![rank0_load];
     let mut spans: Vec<SpanRecord> = run.output.spans.clone();
     let mut phase_acc: std::collections::BTreeMap<String, (u64, u64)> = run
@@ -1487,6 +1570,7 @@ fn train_cluster_once(
             updates_per_thread,
             loaded_cols: field("loaded_cols") as usize,
             loaded_bytes: field("loaded_bytes") as u64,
+            cut: done.get("cut").and_then(|j| j.as_f64()).unwrap_or(-1.0),
         });
     }
     per_rank.sort_by_key(|l| l.rank);
@@ -1651,6 +1735,7 @@ mod tests {
             checkpoint_dir: None,
             checkpoint_every: 0,
             resume: false,
+            partition: None,
         }
     }
 
@@ -1676,6 +1761,7 @@ mod tests {
         s.checkpoint_dir = Some("/tmp/ckpts".into());
         s.checkpoint_every = 2;
         s.resume = true;
+        s.partition = Some(PartitionStrategy::Clustered);
         let text = s.to_json().dump();
         let back = JobSpec::from_json(&text).unwrap();
         assert_eq!(back.rank, s.rank);
@@ -1705,6 +1791,32 @@ mod tests {
         assert_eq!(back.checkpoint_dir, s.checkpoint_dir);
         assert_eq!(back.checkpoint_every, s.checkpoint_every);
         assert_eq!(back.resume, s.resume);
+        assert_eq!(back.partition, s.partition);
+    }
+
+    #[test]
+    fn job_spec_partition_roundtrips_and_validates() {
+        // Absent stays absent (pre-v8 behavior: hashed for text datasets).
+        let s = spec();
+        let text = s.to_json().dump();
+        assert!(!text.contains("partition"));
+        assert_eq!(JobSpec::from_json(&text).unwrap().partition, None);
+        // Every named strategy survives the wire.
+        for strat in PartitionStrategy::ALL {
+            let mut s = spec();
+            s.partition = Some(strat);
+            let back = JobSpec::from_json(&s.to_json().dump()).unwrap();
+            assert_eq!(back.partition, Some(strat));
+        }
+        // Unknown names and non-strings are spec errors, never a silent
+        // hashed fallback.
+        let mut j = spec().to_json();
+        j.set("partition", "metis");
+        let err = JobSpec::from_json(&j.dump()).unwrap_err();
+        assert!(err.contains("partition strategy"), "unhelpful error: {err}");
+        let mut j = spec().to_json();
+        j.set("partition", 2u64);
+        assert!(JobSpec::from_json(&j.dump()).is_err());
     }
 
     #[test]
@@ -2010,6 +2122,13 @@ mod tests {
         for (r, load) in fit.per_rank.iter().enumerate() {
             assert_eq!(load.loaded_cols, part.blocks[r].len(), "rank {r} loaded_cols");
             assert!(load.loaded_bytes > 0, "rank {r} loaded_bytes");
+            // Protocol v8: the text path observes a real cut fraction on
+            // every rank (shards ranks would report the −1 sentinel).
+            assert!(
+                (0.0..=1.0).contains(&load.cut),
+                "rank {r} cut {} outside [0, 1]",
+                load.cut
+            );
         }
     }
 

@@ -53,8 +53,12 @@ const MAGIC: u32 = 0x4D4C_4764;
 /// out-of-core ingestion — the `dataset` recipe may name a binary shard
 /// directory (`shards:<dir>`), in which case each rank loads only its own
 /// feature-block file plus the shared labels, and the done report gains
-/// `loaded_cols`/`loaded_bytes` per-rank ingestion accounting.
-pub const PROTOCOL_VERSION: u32 = 7;
+/// `loaded_cols`/`loaded_bytes` per-rank ingestion accounting. v8: the
+/// partition-strategy seam — the job spec gained an optional `partition`
+/// field (`hashed|contiguous|nnz|cluster`; absent = hashed for text
+/// datasets, header-pinned for shard datasets) and the done report a `cut`
+/// cross-block co-occurrence diagnostic per rank.
+pub const PROTOCOL_VERSION: u32 = 8;
 
 /// Dial / handshake tuning.
 #[derive(Clone, Copy, Debug)]

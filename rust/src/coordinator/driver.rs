@@ -22,7 +22,7 @@ use crate::solver::compute::GlmCompute;
 use crate::solver::linesearch::LineSearchConfig;
 use crate::solver::path::{PathPoint, PathResult};
 use crate::solver::trace::Trace;
-use crate::sparse::{Csc, FeaturePartition};
+use crate::sparse::{Csc, FeaturePartition, PartitionStrategy};
 use crate::coordinator::worker::{
     run_worker, run_worker_path, PathJob, PathWorkerOutput, WorkerConfig, WorkerOutput,
     WorkerShared,
@@ -70,6 +70,10 @@ pub struct DistributedConfig {
     /// Checkpoint every k-th outer iteration (0 = off). SPMD-identical:
     /// it gates a collective gather.
     pub checkpoint_every: usize,
+    /// How features map to ranks — resolved once per run through
+    /// [`PartitionStrategy::resolve`] (the seam; see DESIGN.md
+    /// §Partitioning). Default = hashed, the historical layout.
+    pub partition: PartitionStrategy,
 }
 
 impl Default for DistributedConfig {
@@ -98,6 +102,7 @@ impl Default for DistributedConfig {
             slow_factors: Vec::new(),
             checkpoint_dir: None,
             checkpoint_every: 0,
+            partition: PartitionStrategy::default(),
         }
     }
 }
@@ -130,6 +135,12 @@ pub struct RankLoad {
     /// shard dataset; the full CSC footprint for a text recipe). 0 on
     /// fabric runs.
     pub loaded_bytes: u64,
+    /// Cross-block co-occurrence fraction of this rank's block (protocol
+    /// v8; see `FeaturePartition::cut_fractions`): of the sampled nonzero
+    /// slots co-active with this block's features, the share living in
+    /// OTHER blocks. −1.0 = unknown (shard ranks never see the full
+    /// matrix).
+    pub cut: f64,
 }
 
 impl RankLoad {
@@ -148,6 +159,9 @@ impl RankLoad {
             // v7); in-process fabric ranks share one materialized matrix.
             loaded_cols: 0,
             loaded_bytes: 0,
+            // The worker never sees the full matrix; whoever planned the
+            // partition fills the cut in (−1 = unknown until then).
+            cut: -1.0,
         }
     }
 
@@ -165,7 +179,8 @@ impl RankLoad {
             .set("sync_wait_secs", self.sync_wait_secs)
             .set("threads", self.threads)
             .set("loaded_cols", self.loaded_cols)
-            .set("loaded_bytes", self.loaded_bytes);
+            .set("loaded_bytes", self.loaded_bytes)
+            .set("cut", self.cut);
         o.set(
             "updates_per_thread",
             crate::util::json::Json::from(self.updates_per_thread.clone()),
@@ -209,6 +224,9 @@ struct ClusterPlan {
     shards: Vec<Csc>,
     test_shards: Option<Vec<Csc>>,
     worker_cfg_base: WorkerConfig,
+    /// Per-rank cross-block co-occurrence fractions under the resolved
+    /// partition (protocol v8 diagnostic; index = rank).
+    cuts: Vec<f64>,
 }
 
 fn plan_cluster(
@@ -225,9 +243,11 @@ fn plan_cluster(
         "virtual_time does not support hybrid threads (> 1): pool compute \
          is not charged to the virtual clock yet"
     );
-    let p = train.p();
-    let partition = FeaturePartition::hashed(p, cfg.nodes, cfg.seed);
     let x_csc = train.to_csc();
+    // The single partition-resolution call site for the in-process drivers
+    // (fabric and loopback TCP).
+    let partition = cfg.partition.resolve(&x_csc, cfg.nodes, cfg.seed);
+    let cuts = partition.cut_fractions(&x_csc, cfg.seed);
     let shards: Vec<Csc> = (0..cfg.nodes).map(|m| partition.shard(&x_csc, m)).collect();
     let test_shards: Option<Vec<Csc>> = test.map(|t| {
         let tx = t.to_csc();
@@ -265,6 +285,7 @@ fn plan_cluster(
         shards,
         test_shards,
         worker_cfg_base,
+        cuts,
     }
 }
 
@@ -286,6 +307,7 @@ fn rank_cfg(base: &WorkerConfig, cfg: &DistributedConfig, rank: usize) -> Worker
 fn assemble_result(
     train: &Dataset,
     partition: &FeaturePartition,
+    cuts: &[f64],
     outputs: Vec<WorkerOutput>,
     sim_wire_secs: f64,
 ) -> ClusterFitResult {
@@ -296,7 +318,15 @@ fn assemble_result(
     let comm_bytes: u64 = outputs.iter().map(|o| o.sent_bytes).sum();
     let comm_msgs: u64 = outputs.iter().map(|o| o.sent_msgs).sum();
     let barrier_wait_secs: f64 = outputs.iter().map(|o| o.sync_wait_secs).sum();
-    let per_rank: Vec<RankLoad> = outputs.iter().map(RankLoad::from_output).collect();
+    let per_rank: Vec<RankLoad> = outputs
+        .iter()
+        .map(|o| {
+            let mut load = RankLoad::from_output(o);
+            // The planner saw the full matrix, so it fills the cut in.
+            load.cut = cuts.get(o.rank).copied().unwrap_or(-1.0);
+            load
+        })
+        .collect();
     let spans: Vec<crate::obs::span::SpanRecord> =
         outputs.iter().flat_map(|o| o.spans.iter().cloned()).collect();
     let comm_by_phase = merge_comm_by_phase(&outputs);
@@ -407,7 +437,7 @@ pub fn fit_distributed(
         stats.total_bytes(),
         "fabric global accounting must equal the sum of per-endpoint sends"
     );
-    assemble_result(train, &plan.partition, outputs, stats.sim_wire_secs())
+    assemble_result(train, &plan.partition, &plan.cuts, outputs, stats.sim_wire_secs())
 }
 
 /// Train d-GLMNET over real TCP sockets on loopback: one thread per rank,
@@ -462,7 +492,7 @@ pub fn fit_distributed_tcp(
     .expect("cluster scope failed");
 
     let outputs: Vec<WorkerOutput> = outputs.into_iter().map(|o| o.unwrap()).collect();
-    Ok(assemble_result(train, &plan.partition, outputs, 0.0))
+    Ok(assemble_result(train, &plan.partition, &plan.cuts, outputs, 0.0))
 }
 
 /// Result of a distributed λ-path sweep: the reassembled per-λ models plus
@@ -693,6 +723,40 @@ mod tests {
         );
         for (a, b) in dist.beta.iter().zip(seq.beta.iter()) {
             assert!((a - b).abs() < 1e-9, "beta mismatch {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn every_partition_strategy_fits_and_reports_cuts() {
+        // Protocol v8: the strategy seam — any resolvable layout trains to
+        // a finite objective with Σ updates = iters × p, and every rank's
+        // cut diagnostic is a real fraction (the in-process planner sees
+        // the full matrix).
+        let train = ds(120, 12, 11);
+        let compute = NativeCompute::new(LossKind::Logistic);
+        let pen = ElasticNet::new(0.3, 0.1);
+        for strat in PartitionStrategy::ALL {
+            let cfg = DistributedConfig {
+                nodes: 3,
+                max_iters: 5,
+                eval_every: 0,
+                tol: 0.0,
+                partition: strat,
+                ..Default::default()
+            };
+            let fit = fit_distributed(&train, None, &compute, &pen, &cfg);
+            assert!(fit.objective.is_finite(), "{} objective", strat.name());
+            let total: u64 = fit.per_rank.iter().map(|l| l.cd_updates).sum();
+            assert_eq!(total, 5 * train.p() as u64, "{} updates", strat.name());
+            for load in &fit.per_rank {
+                assert!(
+                    (0.0..=1.0).contains(&load.cut),
+                    "{} rank {} cut {}",
+                    strat.name(),
+                    load.rank,
+                    load.cut
+                );
+            }
         }
     }
 

@@ -33,7 +33,7 @@ use std::fs;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::data::dataset::{Dataset, Splits};
 use crate::sparse::csc::Csc;
@@ -66,52 +66,12 @@ pub fn shard_recipe(dataset: &str) -> Option<&str> {
 }
 
 /// How the converter assigned features to blocks (recorded in the header).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum PartitionKind {
-    /// `hash(j) mod M` — identical to the text cluster path, so a converted
-    /// run is bit-for-bit the same optimization problem per rank.
-    Hashed,
-    /// Contiguous index ranges.
-    Contiguous,
-    /// nnz-balanced (LPT) blocks.
-    NnzBalanced,
-}
-
-impl PartitionKind {
-    pub fn parse(s: &str) -> Option<PartitionKind> {
-        match s {
-            "hashed" => Some(PartitionKind::Hashed),
-            "contiguous" => Some(PartitionKind::Contiguous),
-            "nnz" => Some(PartitionKind::NnzBalanced),
-            _ => None,
-        }
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            PartitionKind::Hashed => "hashed",
-            PartitionKind::Contiguous => "contiguous",
-            PartitionKind::NnzBalanced => "nnz",
-        }
-    }
-
-    fn tag(self) -> u64 {
-        match self {
-            PartitionKind::Hashed => 0,
-            PartitionKind::Contiguous => 1,
-            PartitionKind::NnzBalanced => 2,
-        }
-    }
-
-    fn from_tag(t: u64) -> Result<PartitionKind> {
-        match t {
-            0 => Ok(PartitionKind::Hashed),
-            1 => Ok(PartitionKind::Contiguous),
-            2 => Ok(PartitionKind::NnzBalanced),
-            _ => bail!("shard header names unknown partition kind tag {t}"),
-        }
-    }
-}
+/// Since the partition-strategy refactor this IS `sparse::PartitionStrategy`
+/// — the header's kind tag, the CLI spelling, and the job-spec field all
+/// name the same enum, resolved through `PartitionStrategy::resolve` in
+/// exactly one place per run mode. Unknown header tags are still rejected
+/// by `PartitionStrategy::from_tag`.
+pub use crate::sparse::partition::PartitionStrategy as PartitionKind;
 
 /// Parsed, validated `header.bin`.
 #[derive(Clone, Debug)]
@@ -782,11 +742,8 @@ pub fn convert_recipe(
     );
     let splits = crate::harness::load_splits(dataset, scale, seed)?;
     let p = splits.train.p();
-    let partition = match kind {
-        PartitionKind::Hashed => FeaturePartition::hashed(p, blocks, seed),
-        PartitionKind::Contiguous => FeaturePartition::contiguous(p, blocks),
-        PartitionKind::NnzBalanced => FeaturePartition::nnz_balanced(&splits.train.to_csc(), blocks),
-    };
+    // The single partition-resolution call site for `dglmnet convert`.
+    let partition = kind.resolve(&splits.train.to_csc(), blocks, seed);
     // Named corpora are synthesized in memory (base 0); anything else came
     // through the 1-based libsvm text reader.
     let named = matches!(dataset, "epsilon_like" | "webspam_like" | "clickstream");
@@ -1093,16 +1050,30 @@ mod tests {
 
     #[test]
     fn partition_kinds_roundtrip_and_parse() {
-        for kind in [
-            PartitionKind::Hashed,
-            PartitionKind::Contiguous,
-            PartitionKind::NnzBalanced,
-        ] {
+        for kind in PartitionKind::ALL {
             assert_eq!(PartitionKind::parse(kind.name()), Some(kind));
             assert_eq!(PartitionKind::from_tag(kind.tag()).unwrap(), kind);
         }
         assert_eq!(PartitionKind::parse("metis"), None);
         assert!(PartitionKind::from_tag(9).is_err());
+    }
+
+    /// The clustered kind tag (3) survives the header round trip, and the
+    /// header partition is exactly what the seam resolves for the same
+    /// (matrix, blocks, seed) — the invariant the text/shards parity tests
+    /// build on.
+    #[test]
+    fn convert_recipe_clustered_header_roundtrip() {
+        let dir = tmp_dir("convert-clustered");
+        let rep =
+            convert_recipe("epsilon_like", 0.03, 5, 3, PartitionKind::Clustered, &dir).unwrap();
+        assert_eq!(rep.kind, PartitionKind::Clustered);
+        let h = open_header(&dir).unwrap();
+        assert_eq!(h.kind, PartitionKind::Clustered);
+        let text = crate::harness::load_splits("epsilon_like", 0.03, 5).unwrap();
+        let want = PartitionKind::Clustered.resolve(&text.train.to_csc(), 3, 5);
+        assert_eq!(h.partition.blocks, want.blocks);
+        let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]

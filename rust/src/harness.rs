@@ -33,12 +33,15 @@ pub fn corpora(scale: f64, seed: u64) -> Vec<(&'static str, Splits)> {
 /// multi-node cluster materializes the identical data — the cluster runtime
 /// (`cluster::process`) relies on this. Named corpora use the same per-name
 /// seed derivation as [`corpora`] (`seed`, `seed+1`, `seed+2`), so a train
-/// run and a bench run at one seed see the same data.
+/// run and a bench run at one seed see the same data. `block_correlated`
+/// (the partition-quality corpus, `seed+3`) is resolvable here but not part
+/// of the [`corpora`] trio.
 pub fn load_splits(name: &str, scale: f64, seed: u64) -> anyhow::Result<Splits> {
     match name {
         "epsilon_like" => Ok(Corpus::epsilon_like(scale, seed)),
         "webspam_like" => Ok(Corpus::webspam_like(scale, seed + 1)),
         "clickstream" => Ok(Corpus::clickstream(scale, seed + 2)),
+        "block_correlated" => Ok(Corpus::block_correlated(scale, seed + 3)),
         recipe => {
             if let Some(dir) = crate::data::shards::shard_recipe(recipe) {
                 return crate::data::shards::load_splits_full(std::path::Path::new(dir));
@@ -211,7 +214,10 @@ pub fn print_convergence(dataset: &str, traces: &[&Trace], f_star: f64) {
 /// Per-rank Table-2-style load report — the columns that stay meaningful
 /// under asynchronous (ALB) runs: a straggler shows fewer CD updates and
 /// non-zero cut-offs, and the sync-wait column is the BSP barrier cost ALB
-/// exists to shrink. Shared by the CLI and the chaos test suite.
+/// exists to shrink. The trailing `cut` column is the protocol v8
+/// cross-block co-occurrence fraction of the rank's feature block ("-" when
+/// unknown, e.g. shard ranks that never see the full matrix). Shared by the
+/// CLI and the chaos test suite.
 pub fn print_rank_loads(ranks: &[RankLoad]) {
     if ranks.is_empty() {
         return;
@@ -227,6 +233,7 @@ pub fn print_rank_loads(ranks: &[RankLoad]) {
         "sync wait (s)",
         "threads",
         "upd/thread",
+        "cut",
     ]);
     for r in ranks {
         // Per-thread update spread: single number on the classic path, a
@@ -248,6 +255,11 @@ pub fn print_rank_loads(ranks: &[RankLoad]) {
             format!("{:.3}", r.sync_wait_secs),
             r.threads.max(1).to_string(),
             upd_per_thread,
+            if r.cut < 0.0 {
+                "-".to_string()
+            } else {
+                format!("{:.3}", r.cut)
+            },
         ]);
     }
     t.print();

@@ -55,7 +55,7 @@ use dglmnet::serve::{
     ModelRegistry, NativeFactory, Scorer, ServerConfig,
 };
 use dglmnet::solver::compute::{GlmCompute, NativeCompute};
-use dglmnet::sparse::libsvm;
+use dglmnet::sparse::{libsvm, PartitionStrategy};
 use dglmnet::util::bench::Table;
 use dglmnet::util::cli::{Cli, CliError};
 
@@ -160,6 +160,14 @@ fn train_cli() -> Cli {
         "virtual-time",
         "trace timestamps = max-over-ranks CPU time (× --slow-factors) + \
          modeled wire time, instead of wall-clock",
+    )
+    .flag(
+        "partition",
+        "",
+        "feature→block strategy: hashed (default) | contiguous | nnz \
+         (balances nonzeros) | cluster (co-occurrence clustering — groups \
+         correlated features on one rank). A shards:<dir> dataset pins the \
+         strategy its converter used",
     )
     .flag("engine", "native", "compute engine: native | xla (needs artifacts/)")
     .flag("artifacts", "artifacts", "artifacts directory for --engine xla")
@@ -290,6 +298,7 @@ fn cmd_train(argv: &[String]) -> i32 {
         }
     };
     let mut shard_test: Option<dglmnet::data::Dataset> = None;
+    let mut shard_kind: Option<PartitionStrategy> = None;
     let (ds_name, n, p, nnz) = match &splits {
         Some(s) => (s.train.name.clone(), s.train.n(), s.train.p(), s.train.nnz()),
         None => {
@@ -321,6 +330,7 @@ fn cmd_train(argv: &[String]) -> i32 {
                     return 2;
                 }
             }
+            shard_kind = Some(header.kind);
             (format!("{}-train", header.name), header.n, header.p, header.nnz)
         }
     };
@@ -424,6 +434,20 @@ fn cmd_train(argv: &[String]) -> i32 {
         eprintln!("--resume needs --cluster (in-process runs always start from zero)");
         return 2;
     }
+    // Partition strategy: empty = unset, which keeps the historical layout
+    // (hashed for text datasets, header-pinned for shards).
+    let partition_flag = match args.get("partition") {
+        "" => None,
+        name => match PartitionStrategy::parse(name) {
+            Some(s) => Some(s),
+            None => {
+                eprintln!(
+                    "unknown --partition '{name}' (hashed | contiguous | nnz | cluster)"
+                );
+                return 2;
+            }
+        },
+    };
     let cfg = DistributedConfig {
         nodes: if cluster.is_empty() {
             args.get_usize("nodes")
@@ -445,6 +469,7 @@ fn cmd_train(argv: &[String]) -> i32 {
         slow_factors: slow_factors.clone(),
         checkpoint_dir: checkpoint_dir.clone(),
         checkpoint_every,
+        partition: partition_flag.unwrap_or_default(),
         ..Default::default()
     };
 
@@ -461,6 +486,15 @@ fn cmd_train(argv: &[String]) -> i32 {
         threads.iter().max().copied().unwrap_or(1),
         cfg.alb_kappa.is_some(),
         args.get("engine"),
+    );
+    // The effective strategy line the e2e gates grep for: a shards dataset
+    // pins its header's kind regardless of the flag (a conflicting flag
+    // errors out inside ingestion).
+    let effective_partition = shard_kind.unwrap_or(partition_flag.unwrap_or_default());
+    println!(
+        "partition: strategy={}{}",
+        effective_partition.name(),
+        if shard_kind.is_some() { " (pinned by shard header)" } else { "" },
     );
 
     // Backend selection: a real multi-process TCP cluster when --cluster is
@@ -500,6 +534,7 @@ fn cmd_train(argv: &[String]) -> i32 {
             checkpoint_dir: checkpoint_dir.clone(),
             checkpoint_every,
             resume,
+            partition: partition_flag,
         };
         match process::train_cluster(&spec, splits.as_ref()) {
             Ok(r) => r,
@@ -655,6 +690,12 @@ fn path_cli() -> Cli {
         "intra-rank CD threads T (hybrid mode) for the sweep's screened \
          passes; with --cluster a comma list assigns one count per rank",
     )
+    .flag(
+        "partition",
+        "",
+        "feature→block strategy: hashed (default) | contiguous | nnz | \
+         cluster (co-occurrence clustering)",
+    )
     .flag("max-iters", "100", "outer iteration budget per λ point")
     .flag("seed", "1", "random seed")
     .flag("save-model", "", "write the validation-best model JSON to this path")
@@ -737,6 +778,18 @@ fn cmd_path(argv: &[String]) -> i32 {
             return 2;
         }
     };
+    let partition_flag = match args.get("partition") {
+        "" => None,
+        name => match PartitionStrategy::parse(name) {
+            Some(s) => Some(s),
+            None => {
+                eprintln!(
+                    "unknown --partition '{name}' (hashed | contiguous | nnz | cluster)"
+                );
+                return 2;
+            }
+        },
+    };
 
     println!(
         "path: dataset={} n={} p={} nnz={} | loss={} λ2={} | {} λ1 points [{} .. {}] | M={} screening={}",
@@ -751,6 +804,10 @@ fn cmd_path(argv: &[String]) -> i32 {
         lambdas.last().unwrap(),
         nodes,
         screen,
+    );
+    println!(
+        "partition: strategy={}",
+        partition_flag.unwrap_or_default().name()
     );
 
     let result = if !cluster.is_empty() {
@@ -783,6 +840,7 @@ fn cmd_path(argv: &[String]) -> i32 {
             checkpoint_dir: None,
             checkpoint_every: 0,
             resume: false,
+            partition: partition_flag,
         };
         match process::path_cluster(&spec, Some(&splits)) {
             Ok(r) => r,
@@ -799,6 +857,7 @@ fn cmd_path(argv: &[String]) -> i32 {
             seed,
             allreduce: AllReduceAlgo::Ring,
             threads: threads[0],
+            partition: partition_flag.unwrap_or_default(),
             ..Default::default()
         };
         let compute = NativeCompute::new(kind);
@@ -879,7 +938,8 @@ fn convert_cli() -> Cli {
         "partition",
         "hashed",
         "feature→block assignment: hashed (matches the text cluster path \
-         bit-for-bit) | contiguous | nnz (balances nonzeros)",
+         bit-for-bit) | contiguous | nnz (balances nonzeros) | cluster \
+         (co-occurrence clustering — groups correlated features per block)",
     )
     .flag("scale", "0.25", "synthetic corpus scale factor")
     .flag("seed", "1", "random seed (corpus generation + hashed partition)")
@@ -913,7 +973,7 @@ fn cmd_convert(argv: &[String]) -> i32 {
         Some(k) => k,
         None => {
             eprintln!(
-                "unknown --partition '{}' (hashed | contiguous | nnz)",
+                "unknown --partition '{}' (hashed | contiguous | nnz | cluster)",
                 args.get("partition")
             );
             return 2;

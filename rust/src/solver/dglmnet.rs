@@ -15,7 +15,7 @@ use crate::solver::compute::GlmCompute;
 use crate::solver::linesearch::{line_search, LineSearchConfig};
 use crate::solver::subproblem::{cd_cycle, CycleBudget, SubproblemState};
 use crate::solver::trace::{Trace, TracePoint};
-use crate::sparse::{Csc, FeaturePartition};
+use crate::sparse::{Csc, PartitionStrategy};
 use std::time::Instant;
 
 /// Configuration of Algorithm 1. Paper defaults: η₁ = η₂ = 2, adaptive μ for
@@ -40,6 +40,10 @@ pub struct DGlmnetConfig {
     pub linesearch: LineSearchConfig,
     /// Evaluate test metrics every k iterations (0 = never).
     pub eval_every: usize,
+    /// How features map to the M simulated blocks — resolved through
+    /// [`PartitionStrategy::resolve`], the same seam the distributed
+    /// drivers use, so an oracle comparison sees identical blocks.
+    pub partition: PartitionStrategy,
 }
 
 impl Default for DGlmnetConfig {
@@ -57,6 +61,7 @@ impl Default for DGlmnetConfig {
             seed: 0x5EED,
             linesearch: LineSearchConfig::default(),
             eval_every: 1,
+            partition: PartitionStrategy::default(),
         }
     }
 }
@@ -86,7 +91,7 @@ pub fn fit(
     let n = train.n();
     let p = train.p();
     let x_csc = train.to_csc();
-    let partition = FeaturePartition::hashed(p, cfg.nodes, cfg.seed);
+    let partition = cfg.partition.resolve(&x_csc, cfg.nodes, cfg.seed);
     let shards: Vec<Csc> = (0..cfg.nodes).map(|m| partition.shard(&x_csc, m)).collect();
 
     let mut beta = vec![0.0; p];

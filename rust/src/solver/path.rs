@@ -332,8 +332,8 @@ pub fn l1_path_with_screening(
     }
     let train = &splits.train;
     let n = train.n();
-    let partition = FeaturePartition::hashed(train.p(), cfg.nodes, cfg.seed);
     let x_csc = train.to_csc();
+    let partition = cfg.partition.resolve(&x_csc, cfg.nodes, cfg.seed);
     let shards: Vec<Csc> = (0..cfg.nodes).map(|m| partition.shard(&x_csc, m)).collect();
 
     let mut beta = vec![0.0; train.p()];

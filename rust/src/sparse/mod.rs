@@ -9,4 +9,4 @@ pub mod partition;
 
 pub use csc::Csc;
 pub use csr::Csr;
-pub use partition::{ExamplePartition, FeaturePartition};
+pub use partition::{ExamplePartition, FeaturePartition, PartitionStrategy};

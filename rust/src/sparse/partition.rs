@@ -4,13 +4,126 @@
 //! assigns feature j to node hash(j) mod M (Reduce-by-key). `FeaturePartition`
 //! reproduces that layout and also offers a balanced variant that equalizes
 //! per-node nnz (useful for the ALB ablation: hash splitting is what makes
-//! stragglers appear in the first place).
+//! stragglers appear in the first place) and a correlation-aware variant
+//! that clusters features by column co-occurrence (Scherrer et al. 2012:
+//! block CD converges in fewer iterations when correlated features share a
+//! block, because the per-block quadratic models then capture the coupling
+//! the merge step would otherwise fight over).
+//!
+//! `PartitionStrategy` is the single seam every run mode resolves a layout
+//! through — the CLI, the job spec, the shard-header kind tag, and the
+//! in-process drivers all name one of its variants instead of improvising a
+//! `FeaturePartition::hashed` call.
 //!
 //! `ExamplePartition` is the "horizontal" split used by the online-learning
 //! and L-BFGS baselines (Agarwal et al. 2014).
 
+use anyhow::{bail, Result};
+
 use crate::sparse::csc::Csc;
 use crate::sparse::csr::Csr;
+use crate::util::rng::Rng;
+
+/// Named feature→block layout, resolved into a concrete `FeaturePartition`
+/// in exactly one place per run mode via [`PartitionStrategy::resolve`].
+/// The discriminant doubles as the shard-header kind tag (wire-stable:
+/// never renumber, only append).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// `hash(j) mod M` — the paper's layout and the default everywhere.
+    #[default]
+    Hashed,
+    /// Contiguous index ranges (locality / worst-case correlation layout).
+    Contiguous,
+    /// nnz-balanced (LPT) blocks — equalizes per-iteration compute.
+    NnzBalanced,
+    /// Column co-occurrence clustering with an nnz-balance cap — groups
+    /// correlated features so fewer CD couplings cross block boundaries.
+    Clustered,
+}
+
+impl PartitionStrategy {
+    /// Every strategy, for exhaustive property tests.
+    pub const ALL: [PartitionStrategy; 4] = [
+        PartitionStrategy::Hashed,
+        PartitionStrategy::Contiguous,
+        PartitionStrategy::NnzBalanced,
+        PartitionStrategy::Clustered,
+    ];
+
+    /// The CLI spelling: `--partition hashed|contiguous|nnz|cluster`.
+    pub fn parse(s: &str) -> Option<PartitionStrategy> {
+        match s {
+            "hashed" => Some(PartitionStrategy::Hashed),
+            "contiguous" => Some(PartitionStrategy::Contiguous),
+            "nnz" => Some(PartitionStrategy::NnzBalanced),
+            "cluster" => Some(PartitionStrategy::Clustered),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PartitionStrategy::Hashed => "hashed",
+            PartitionStrategy::Contiguous => "contiguous",
+            PartitionStrategy::NnzBalanced => "nnz",
+            PartitionStrategy::Clustered => "cluster",
+        }
+    }
+
+    /// Shard-header / wire tag. Append-only: existing directories on disk
+    /// name these numbers forever.
+    pub fn tag(self) -> u64 {
+        match self {
+            PartitionStrategy::Hashed => 0,
+            PartitionStrategy::Contiguous => 1,
+            PartitionStrategy::NnzBalanced => 2,
+            PartitionStrategy::Clustered => 3,
+        }
+    }
+
+    pub fn from_tag(t: u64) -> Result<PartitionStrategy> {
+        match t {
+            0 => Ok(PartitionStrategy::Hashed),
+            1 => Ok(PartitionStrategy::Contiguous),
+            2 => Ok(PartitionStrategy::NnzBalanced),
+            3 => Ok(PartitionStrategy::Clustered),
+            _ => bail!("shard header names unknown partition kind tag {t}"),
+        }
+    }
+
+    /// Whether resolving needs the column structure (`nnz`, `cluster`) or
+    /// only the dimensions (`hashed`, `contiguous`). Gate for callers that
+    /// would otherwise have to materialize a matrix they don't hold (the
+    /// checkpoint-recovery re-shard).
+    pub fn needs_matrix(self) -> bool {
+        matches!(
+            self,
+            PartitionStrategy::NnzBalanced | PartitionStrategy::Clustered
+        )
+    }
+
+    /// Resolve a structure-free strategy from dimensions alone; `None` for
+    /// data-dependent strategies (use [`resolve`](Self::resolve)).
+    pub fn resolve_dims(self, p: usize, m: usize, seed: u64) -> Option<FeaturePartition> {
+        match self {
+            PartitionStrategy::Hashed => Some(FeaturePartition::hashed(p, m, seed)),
+            PartitionStrategy::Contiguous => Some(FeaturePartition::contiguous(p, m)),
+            _ => None,
+        }
+    }
+
+    /// THE seam: turn the named strategy into a concrete partition of the
+    /// matrix's columns. Deterministic in (x, m, seed) for every variant.
+    pub fn resolve(self, x: &Csc, m: usize, seed: u64) -> FeaturePartition {
+        match self {
+            PartitionStrategy::Hashed => FeaturePartition::hashed(x.ncols, m, seed),
+            PartitionStrategy::Contiguous => FeaturePartition::contiguous(x.ncols, m),
+            PartitionStrategy::NnzBalanced => FeaturePartition::nnz_balanced(x, m),
+            PartitionStrategy::Clustered => FeaturePartition::cooccurrence_clustered(x, m, seed),
+        }
+    }
+}
 
 /// Assignment of features to M nodes: S^1 ∪ ... ∪ S^M = {0..p}, disjoint.
 #[derive(Clone, Debug)]
@@ -28,6 +141,20 @@ pub fn hash64(mut x: u64) -> u64 {
     x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
     x ^ (x >> 31)
+}
+
+/// Rows examined by the co-occurrence clusterer and the cut diagnostic: a
+/// seeded sample of up to `COOCCURRENCE_SAMPLE_ROWS` rows (sorted, distinct),
+/// so both stay O(sample·nnz/n) on tall matrices and agree on what they saw.
+pub const COOCCURRENCE_SAMPLE_ROWS: usize = 512;
+
+fn sample_rows(n: usize, seed: u64) -> Vec<usize> {
+    if n <= COOCCURRENCE_SAMPLE_ROWS {
+        return (0..n).collect();
+    }
+    // Domain-separated from the corpus/partition seeds sharing the run seed.
+    let mut rng = Rng::new(seed ^ 0xC0_0CC0);
+    rng.sample_indices(n, COOCCURRENCE_SAMPLE_ROWS)
 }
 
 impl FeaturePartition {
@@ -61,6 +188,11 @@ impl FeaturePartition {
     /// Greedy nnz-balanced partition: features sorted by column nnz
     /// descending, each assigned to the currently lightest node (LPT
     /// scheduling). Minimizes per-iteration compute skew.
+    ///
+    /// Load ties break toward the LOWEST node index: `Iterator::min_by_key`
+    /// returns the *first* minimum and candidates are scanned `0..m`, so the
+    /// assignment is fully deterministic (pinned by
+    /// `nnz_balanced_tie_breaks_to_lowest_index`).
     pub fn nnz_balanced(x: &Csc, m: usize) -> FeaturePartition {
         assert!(m > 0);
         let p = x.ncols;
@@ -79,6 +211,132 @@ impl FeaturePartition {
             b.sort_unstable();
         }
         FeaturePartition { blocks, owner }
+    }
+
+    /// Correlation-aware partition: cluster columns by co-occurrence on a
+    /// deterministic row sample so correlated features land in the same
+    /// block (Scherrer et al. 2012, Bradley et al. 2011 — cross-block
+    /// correlation is what slows block-separable CD down).
+    ///
+    /// Greedy agglomerative assignment: columns are visited in descending
+    /// sampled-activity order (ties to the lowest feature id) and each joins
+    /// the block with the highest co-occurrence affinity — the number of
+    /// (sampled row, already-assigned column) pairs it shares with the
+    /// block — subject to an nnz-balance cap of `(1 + SLACK)/m` of the total
+    /// load. Zero affinity (or a full block) falls back to the lightest
+    /// block, lowest index first. Deterministic in `(x, m, seed)`.
+    pub fn cooccurrence_clustered(x: &Csc, m: usize, seed: u64) -> FeaturePartition {
+        assert!(m > 0);
+        let p = x.ncols;
+        // Per-column sampled row lists + sampled activity, one O(nnz) pass.
+        let sample = sample_rows(x.nrows, seed);
+        let mut slot_of = vec![usize::MAX; x.nrows];
+        for (s, &r) in sample.iter().enumerate() {
+            slot_of[r] = s;
+        }
+        let mut col_rows: Vec<Vec<usize>> = vec![Vec::new(); p];
+        for j in 0..p {
+            let (rows, _) = x.col_raw(j);
+            for &r in rows {
+                let s = slot_of[r as usize];
+                if s != usize::MAX {
+                    col_rows[j].push(s);
+                }
+            }
+        }
+        // Balance cap: no block may exceed its fair nnz share by more than
+        // SLACK, so clustering can never trade all balance for affinity.
+        const SLACK: f64 = 0.2;
+        let total: usize = (0..p).map(|j| x.col_nnz(j).max(1)).sum();
+        let cap = ((total as f64) * (1.0 + SLACK) / m as f64).ceil() as usize;
+
+        let mut order: Vec<usize> = (0..p).collect();
+        order.sort_unstable_by_key(|&j| (std::cmp::Reverse(col_rows[j].len()), j));
+
+        // coverage[b][s] = columns of block b active in sampled row s.
+        let mut coverage = vec![vec![0usize; sample.len()]; m];
+        let mut load = vec![0usize; m];
+        let mut blocks = vec![Vec::new(); m];
+        let mut owner = vec![0usize; p];
+        for j in order {
+            let mut best: Option<(usize, usize)> = None; // (affinity, block)
+            for (b, cov) in coverage.iter().enumerate() {
+                if load[b] + x.col_nnz(j).max(1) > cap {
+                    continue;
+                }
+                let affinity: usize = col_rows[j].iter().map(|&s| cov[s]).sum();
+                // Strict > keeps the lowest-index block on affinity ties.
+                let better = match best {
+                    None => true,
+                    Some((a, _)) => affinity > a,
+                };
+                if better {
+                    best = Some((affinity, b));
+                }
+            }
+            let node = match best {
+                // Real affinity: join the most-correlated block under cap.
+                Some((a, b)) if a > 0 => b,
+                // No signal (or every block capped): lightest block wins,
+                // lowest index first — degrades to LPT balancing.
+                _ => (0..m).min_by_key(|&k| load[k]).unwrap(),
+            };
+            load[node] += x.col_nnz(j).max(1);
+            for &s in &col_rows[j] {
+                coverage[node][s] += 1;
+            }
+            blocks[node].push(j);
+            owner[j] = node;
+        }
+        for b in blocks.iter_mut() {
+            b.sort_unstable();
+        }
+        FeaturePartition { blocks, owner }
+    }
+
+    /// Per-block cross-block co-occurrence fraction on a deterministic row
+    /// sample — the cut diagnostic next to `skew`. For block r, over sampled
+    /// rows i with active set A_i and in-block part B = A_i ∩ S^r:
+    /// cross = Σ_i |B|·(|A_i|−|B|) (pairs leaving the block) over
+    /// total = Σ_i |B|·(|A_i|−1) (all pairs touching the block). 0 = no
+    /// correlated feature crosses a boundary, →1 = every pair does; 0 also
+    /// when the block never co-occurs with anything (total = 0).
+    pub fn cut_fractions(&self, x: &Csc, seed: u64) -> Vec<f64> {
+        let m = self.num_nodes();
+        let sample = sample_rows(x.nrows, seed);
+        let mut slot_of = vec![usize::MAX; x.nrows];
+        for (s, &r) in sample.iter().enumerate() {
+            slot_of[r] = s;
+        }
+        // in_block[s][b] = |A_s ∩ S^b|, active[s] = |A_s| (sampled rows).
+        let mut in_block = vec![vec![0usize; m]; sample.len()];
+        let mut active = vec![0usize; sample.len()];
+        for j in 0..x.ncols {
+            let (rows, _) = x.col_raw(j);
+            for &r in rows {
+                let s = slot_of[r as usize];
+                if s != usize::MAX {
+                    in_block[s][self.owner[j]] += 1;
+                    active[s] += 1;
+                }
+            }
+        }
+        (0..m)
+            .map(|b| {
+                let mut cross = 0usize;
+                let mut total = 0usize;
+                for (s, &a) in active.iter().enumerate() {
+                    let k = in_block[s][b];
+                    cross += k * (a - k);
+                    total += k * (a.saturating_sub(1));
+                }
+                if total == 0 {
+                    0.0
+                } else {
+                    cross as f64 / total as f64
+                }
+            })
+            .collect()
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -102,16 +360,25 @@ impl FeaturePartition {
             .collect()
     }
 
-    /// max/mean nnz load ratio — 1.0 is perfectly balanced.
+    /// max/mean nnz load ratio — 1.0 is perfectly balanced. When every nnz
+    /// load is zero (an all-zero matrix) the ratio falls back to per-block
+    /// *column counts*, so an empty block next to a loaded one still
+    /// surfaces as skew instead of flattening to 1.0; only a partition with
+    /// nothing to balance at all (p = 0) reports 1.0.
     pub fn skew(&self, x: &Csc) -> f64 {
-        let loads = self.nnz_loads(x);
-        let max = *loads.iter().max().unwrap_or(&0) as f64;
-        let mean = loads.iter().sum::<usize>() as f64 / loads.len() as f64;
-        if mean == 0.0 {
-            1.0
-        } else {
-            max / mean
+        fn ratio(loads: &[usize]) -> Option<f64> {
+            let max = *loads.iter().max().unwrap_or(&0) as f64;
+            let mean = loads.iter().sum::<usize>() as f64 / loads.len().max(1) as f64;
+            if mean == 0.0 {
+                None
+            } else {
+                Some(max / mean)
+            }
         }
+        ratio(&self.nnz_loads(x)).unwrap_or_else(|| {
+            let cols: Vec<usize> = self.blocks.iter().map(|b| b.len()).collect();
+            ratio(&cols).unwrap_or(1.0)
+        })
     }
 
     /// Scatter a concatenation of per-block weight vectors back to global
@@ -165,29 +432,7 @@ impl ExamplePartition {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::prop;
-
-    fn check_is_partition(fp: &FeaturePartition, p: usize) -> Result<(), String> {
-        let mut seen = vec![false; p];
-        for (m, block) in fp.blocks.iter().enumerate() {
-            for &j in block {
-                if j >= p {
-                    return Err(format!("feature {j} out of range"));
-                }
-                if seen[j] {
-                    return Err(format!("feature {j} assigned twice"));
-                }
-                seen[j] = true;
-                if fp.owner[j] != m {
-                    return Err(format!("owner[{j}] inconsistent"));
-                }
-            }
-        }
-        if !seen.iter().all(|&s| s) {
-            return Err("not all features assigned".into());
-        }
-        Ok(())
-    }
+    use crate::util::prop::{self, check_is_partition};
 
     #[test]
     fn prop_hashed_is_partition() {
@@ -206,6 +451,55 @@ mod tests {
             let m = 1 + rng.below(16);
             check_is_partition(&FeaturePartition::contiguous(p, m), p)
         });
+    }
+
+    /// Satellite invariant: every named strategy — including the
+    /// data-dependent ones — yields a disjoint sorted cover of 0..p for
+    /// random (p, m, seed) and a random sparse matrix.
+    #[test]
+    fn prop_every_strategy_is_partition() {
+        prop::check("all strategies disjoint sorted cover", 40, |rng| {
+            let p = 1 + rng.below(120);
+            let m = 1 + rng.below(8);
+            let n = 1 + rng.below(60);
+            let seed = rng.next_u64();
+            let mut trips = Vec::new();
+            for _ in 0..rng.below(300) {
+                trips.push((rng.below(n), rng.below(p), rng.range_f64(-2.0, 2.0)));
+            }
+            let x = Csc::from_triplets(n, p, trips);
+            for strat in PartitionStrategy::ALL {
+                let fp = strat.resolve(&x, m, seed);
+                check_is_partition(&fp, p).map_err(|e| format!("{}: {e}", strat.name()))?;
+                if fp.num_nodes() != m {
+                    return Err(format!("{}: {} blocks, want {m}", strat.name(), fp.num_nodes()));
+                }
+                // The dims-only shortcut must agree with the full resolve.
+                if let Some(short) = strat.resolve_dims(p, m, seed) {
+                    if short.owner != fp.owner {
+                        return Err(format!("{}: resolve_dims diverged", strat.name()));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn strategy_parse_name_tag_roundtrip() {
+        for strat in PartitionStrategy::ALL {
+            assert_eq!(PartitionStrategy::parse(strat.name()), Some(strat));
+            assert_eq!(PartitionStrategy::from_tag(strat.tag()).unwrap(), strat);
+        }
+        assert_eq!(PartitionStrategy::parse("metis"), None);
+        assert!(PartitionStrategy::from_tag(9).is_err());
+        assert_eq!(PartitionStrategy::default(), PartitionStrategy::Hashed);
+        assert!(!PartitionStrategy::Hashed.needs_matrix());
+        assert!(!PartitionStrategy::Contiguous.needs_matrix());
+        assert!(PartitionStrategy::NnzBalanced.needs_matrix());
+        assert!(PartitionStrategy::Clustered.needs_matrix());
+        assert!(PartitionStrategy::NnzBalanced.resolve_dims(10, 2, 0).is_none());
+        assert!(PartitionStrategy::Clustered.resolve_dims(10, 2, 0).is_none());
     }
 
     #[test]
@@ -244,6 +538,116 @@ mod tests {
             "balanced {bal_skew} vs hashed {hash_skew}"
         );
         assert!(bal_skew < 1.2, "balanced skew too high: {bal_skew}");
+    }
+
+    /// Regression pin for the LPT tie-break: equal loads go to the lowest
+    /// node index (min_by_key returns the first minimum). With strictly
+    /// decreasing column nnz the visit order is the identity, so the whole
+    /// assignment is forced: 0→n0, 1→n1 (0 is heavier), 2→n1 (4<5), 3→n0.
+    #[test]
+    fn nnz_balanced_tie_breaks_to_lowest_index() {
+        let mut trips = Vec::new();
+        for (j, cnt) in [5usize, 4, 3, 2].into_iter().enumerate() {
+            for i in 0..cnt {
+                trips.push((i, j, 1.0));
+            }
+        }
+        let x = Csc::from_triplets(5, 4, trips);
+        let fp = FeaturePartition::nnz_balanced(&x, 2);
+        assert_eq!(fp.blocks, vec![vec![0, 3], vec![1, 2]]);
+        assert_eq!(fp.owner, vec![0, 1, 1, 0]);
+        // The all-tied degenerate case: one column, three nodes — the
+        // zero-load tie resolves to node 0, never 1 or 2.
+        let one = Csc::from_triplets(2, 1, vec![(0, 0, 1.0)]);
+        let fp1 = FeaturePartition::nnz_balanced(&one, 3);
+        assert_eq!(fp1.owner, vec![0]);
+        assert_eq!(fp1.blocks, vec![vec![0], vec![], vec![]]);
+    }
+
+    /// Empty blocks must surface as imbalance, not hide behind 1.0: an
+    /// all-zero matrix has zero nnz everywhere, so skew falls back to the
+    /// column-count ratio.
+    #[test]
+    fn skew_surfaces_empty_blocks_on_zero_nnz() {
+        let zero = Csc::from_triplets(3, 4, Vec::<(usize, usize, f64)>::new());
+        // All 4 columns on node 0 of 2: column-count loads [4, 0] → 4/2 = 2.
+        let lopsided = FeaturePartition {
+            blocks: vec![vec![0, 1, 2, 3], vec![]],
+            owner: vec![0; 4],
+        };
+        assert_eq!(lopsided.skew(&zero), 2.0);
+        // Balanced columns over a zero matrix really are balanced.
+        let even = FeaturePartition::contiguous(4, 2);
+        assert_eq!(even.skew(&zero), 1.0);
+        // Nothing to balance at all: stays 1.0.
+        let empty = FeaturePartition::contiguous(0, 2);
+        let none = Csc::from_triplets(3, 0, Vec::<(usize, usize, f64)>::new());
+        assert_eq!(empty.skew(&none), 1.0);
+    }
+
+    /// Two independent column groups (rows touch only one group): the
+    /// clusterer must separate them, driving its cut fractions to ~0 while
+    /// hashed mixes the groups and pays ~1/2 cross-block pairs.
+    #[test]
+    fn clustered_separates_block_structure_and_cuts_less_than_hashed() {
+        let mut trips = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(9);
+        for i in 0..200usize {
+            let group = i % 2;
+            // Anchor column per group: guarantees every group column
+            // co-occurs with its group's seed block at assignment time.
+            trips.push((i, 20 * group, 1.0));
+            for _ in 0..5 {
+                let j = 20 * group + rng.below(20);
+                trips.push((i, j, 1.0 + rng.f64()));
+            }
+        }
+        let x = Csc::from_triplets(200, 40, trips);
+        let fp = FeaturePartition::cooccurrence_clustered(&x, 2, 1);
+        check_is_partition(&fp, 40).unwrap();
+        // Each block holds exactly one group.
+        for block in &fp.blocks {
+            let groups: std::collections::HashSet<usize> =
+                block.iter().map(|&j| j / 20).collect();
+            assert_eq!(groups.len(), 1, "block mixes groups: {block:?}");
+        }
+        let cut_clustered = fp.cut_fractions(&x, 1);
+        let cut_hashed = FeaturePartition::hashed(40, 2, 1).cut_fractions(&x, 1);
+        for (c, h) in cut_clustered.iter().zip(cut_hashed.iter()) {
+            assert!(*c < 1e-9, "clustered cut should be ~0, got {c}");
+            assert!(*h > 0.3, "hashed cut should mix the groups, got {h}");
+        }
+        // Balance survives clustering: the cap keeps the groups even here.
+        assert!(fp.skew(&x) < 1.25, "clustered skew {}", fp.skew(&x));
+    }
+
+    #[test]
+    fn clustered_deterministic_per_seed() {
+        let mut trips = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(4);
+        for _ in 0..400 {
+            trips.push((rng.below(80), rng.below(60), rng.range_f64(-1.0, 1.0)));
+        }
+        let x = Csc::from_triplets(80, 60, trips);
+        let a = FeaturePartition::cooccurrence_clustered(&x, 4, 11);
+        let b = FeaturePartition::cooccurrence_clustered(&x, 4, 11);
+        assert_eq!(a.owner, b.owner);
+        check_is_partition(&a, 60).unwrap();
+    }
+
+    /// A fully uncorrelated layout (single-entry columns, disjoint rows) has
+    /// no co-occurrence at all — every strategy's cut is 0 and the clusterer
+    /// degrades to pure load balancing.
+    #[test]
+    fn cut_fraction_zero_without_cooccurrence() {
+        let trips: Vec<(usize, usize, f64)> = (0..10).map(|j| (j, j, 1.0)).collect();
+        let x = Csc::from_triplets(10, 10, trips);
+        let fp = FeaturePartition::cooccurrence_clustered(&x, 2, 3);
+        check_is_partition(&fp, 10).unwrap();
+        assert_eq!(fp.blocks[0].len(), 5);
+        for c in fp.cut_fractions(&x, 3) {
+            assert_eq!(c, 0.0);
+        }
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! the reproducing seed, plus a lightweight shrink loop for integer-vector
 //! inputs. Used by invariant tests across sparse/, solver/ and cluster/.
 
+use crate::sparse::FeaturePartition;
 use crate::util::rng::Rng;
 
 /// Run `cases` random trials of `prop`, reporting the seed of the first
@@ -36,6 +37,36 @@ pub fn sparse_vec(rng: &mut Rng, dim: usize, max_nnz: usize, scale: f64) -> Vec<
 /// Generate a random dense vector.
 pub fn dense_vec(rng: &mut Rng, dim: usize, scale: f64) -> Vec<f64> {
     (0..dim).map(|_| rng.range_f64(-scale, scale)).collect()
+}
+
+/// Assert `fp` is a disjoint, complete, owner-consistent cover of `0..p` —
+/// the invariant every `PartitionStrategy` must uphold (Theorem 1 needs
+/// nothing more of a layout). Shared by the partition property tests.
+pub fn check_is_partition(fp: &FeaturePartition, p: usize) -> Result<(), String> {
+    let mut seen = vec![false; p];
+    for (m, block) in fp.blocks.iter().enumerate() {
+        for w in block.windows(2) {
+            if w[0] >= w[1] {
+                return Err(format!("block {m} not sorted strictly ascending"));
+            }
+        }
+        for &j in block {
+            if j >= p {
+                return Err(format!("feature {j} out of range"));
+            }
+            if seen[j] {
+                return Err(format!("feature {j} assigned twice"));
+            }
+            seen[j] = true;
+            if fp.owner[j] != m {
+                return Err(format!("owner[{j}] inconsistent"));
+            }
+        }
+    }
+    if !seen.iter().all(|&s| s) {
+        return Err("not all features assigned".into());
+    }
+    Ok(())
 }
 
 /// Assert two floats are close (absolute + relative tolerance).

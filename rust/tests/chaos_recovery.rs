@@ -54,6 +54,7 @@ fn chaos_spec(cluster: Vec<String>) -> JobSpec {
         checkpoint_dir: None,
         checkpoint_every: 0,
         resume: false,
+        partition: None,
     }
 }
 

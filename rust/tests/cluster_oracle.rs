@@ -72,6 +72,55 @@ fn distributed_matches_reference_over_both_transports() {
     }
 }
 
+/// The clustered-partition column of the oracle matrix (job-spec v8): with
+/// `--partition cluster` the block structure comes from the co-occurrence
+/// clusterer instead of hashing, but it is resolved through the SAME seam
+/// on both sides, so for M ∈ {2, 4} over BOTH transports the distributed
+/// fit must still match the single-process reference within 1e-6 — on data
+/// with planted correlation structure, where the clusterer actually
+/// produces non-trivial blocks.
+#[test]
+fn clustered_partition_matches_reference_over_both_transports() {
+    use dglmnet::sparse::PartitionStrategy;
+    let train = synth::block_correlated(&SynthConfig { n: 160, p: 16, seed: 26 }, 4, 0.8);
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::new(0.3, 0.1);
+    for m in [2, 4] {
+        let mut rcfg = ref_cfg(m, 12, 26);
+        rcfg.partition = PartitionStrategy::Clustered;
+        let seq = dg::fit(&train, &compute, &pen, &rcfg, None);
+        let mut dcfg = dist_cfg(m, 12, 26);
+        dcfg.partition = PartitionStrategy::Clustered;
+        let fab = fit_distributed(&train, None, &compute, &pen, &dcfg);
+        let tcp = fit_distributed_tcp(&train, None, &compute, &pen, &dcfg)
+            .expect("tcp clustered cluster");
+        for (name, got) in [("fabric", &fab.objective), ("tcp", &tcp.objective)] {
+            let gap = (got - seq.objective).abs() / seq.objective.abs().max(1e-12);
+            assert!(
+                gap < 1e-6,
+                "{name} clustered M={m}: objective {} vs reference {} (gap {gap:.3e})",
+                got,
+                seq.objective
+            );
+        }
+        for (a, b) in fab.beta.iter().zip(seq.beta.iter()) {
+            assert!((a - b).abs() < 1e-8, "fabric clustered M={m} beta: {a} vs {b}");
+        }
+        for (a, b) in tcp.beta.iter().zip(seq.beta.iter()) {
+            assert!((a - b).abs() < 1e-8, "tcp clustered M={m} beta: {a} vs {b}");
+        }
+        // The per-rank table must carry the cut diagnostic for every rank.
+        for load in fab.per_rank.iter().chain(tcp.per_rank.iter()) {
+            assert!(
+                (0.0..=1.0).contains(&load.cut),
+                "clustered M={m}: rank {} cut {} outside [0, 1]",
+                load.rank,
+                load.cut
+            );
+        }
+    }
+}
+
 /// The ALB column of the oracle matrix: the asynchronous path has no
 /// iterate-for-iterate oracle (fast ranks run extra passes, stragglers cut
 /// short), but at convergence it must land on the same optimum — within a

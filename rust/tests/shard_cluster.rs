@@ -11,7 +11,7 @@ use std::path::PathBuf;
 use dglmnet::cluster::allreduce::AllReduceAlgo;
 use dglmnet::cluster::process::{run_worker_on, train_cluster, JobMode, JobSpec, WorkerOverrides};
 use dglmnet::data::shards;
-use dglmnet::sparse::FeaturePartition;
+use dglmnet::sparse::{FeaturePartition, PartitionStrategy};
 
 const SCALE: f64 = 0.03;
 const SEED: u64 = 5;
@@ -55,17 +55,27 @@ fn base_spec(cluster: Vec<String>, dataset: String) -> JobSpec {
         checkpoint_dir: None,
         checkpoint_every: 0,
         resume: false,
+        partition: None,
     }
 }
 
 /// Run a full in-process 3-rank cluster (coordinator + 2 worker threads on
 /// loopback) over the given dataset recipe.
 fn run_cluster(dataset: &str) -> dglmnet::coordinator::ClusterFitResult {
+    run_cluster_with(dataset, None)
+}
+
+/// Same, with an explicit `--partition` strategy in the job spec.
+fn run_cluster_with(
+    dataset: &str,
+    partition: Option<PartitionStrategy>,
+) -> dglmnet::coordinator::ClusterFitResult {
     let w1 = TcpListener::bind("127.0.0.1:0").unwrap();
     let w2 = TcpListener::bind("127.0.0.1:0").unwrap();
     let a1 = w1.local_addr().unwrap().to_string();
     let a2 = w2.local_addr().unwrap().to_string();
-    let spec = base_spec(vec!["127.0.0.1:0".into(), a1, a2], dataset.to_string());
+    let mut spec = base_spec(vec!["127.0.0.1:0".into(), a1, a2], dataset.to_string());
+    spec.partition = partition;
     let h1 = std::thread::spawn(move || run_worker_on(w1, WorkerOverrides::default()).unwrap());
     let h2 = std::thread::spawn(move || run_worker_on(w2, WorkerOverrides::default()).unwrap());
     let fit = train_cluster(&spec, None).unwrap();
@@ -139,6 +149,63 @@ fn shard_cluster_matches_text_ingest_and_stays_out_of_core() {
     for load in text.per_rank.iter() {
         assert!(load.loaded_bytes >= full_bytes);
     }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A shard directory converted with `--partition cluster` pins the clustered
+/// layout in its header: a cluster fed `shards:<dir>` with no partition flag
+/// must reproduce the text-ingest run that asks for the same strategy
+/// explicitly — bit-identical blocks, so β matches to 1e-9 — while an
+/// explicit *conflicting* flag is rejected with a pointed error instead of
+/// silently re-deriving a layout the block files don't have.
+#[test]
+fn shard_cluster_clustered_header_matches_text_run() {
+    let dir = tmp_dir("clustered");
+    let report = shards::convert_recipe(
+        "epsilon_like",
+        SCALE,
+        SEED,
+        3,
+        shards::PartitionKind::Clustered,
+        &dir,
+    )
+    .expect("convert");
+    assert_eq!(report.blocks, 3);
+
+    let text = run_cluster_with("epsilon_like", Some(PartitionStrategy::Clustered));
+    let recipe = format!("shards:{}", dir.display());
+    let from_shards = run_cluster(&recipe);
+
+    let gap = (from_shards.objective - text.objective).abs() / text.objective.abs().max(1e-12);
+    assert!(
+        gap < 1e-6,
+        "clustered shard-ingest objective {} vs text-ingest {} (gap {gap:.3e})",
+        from_shards.objective,
+        text.objective,
+    );
+    assert_eq!(from_shards.beta.len(), text.beta.len());
+    for (j, (a, b)) in from_shards.beta.iter().zip(text.beta.iter()).enumerate() {
+        assert!((a - b).abs() < 1e-9, "β[{j}]: shards {a} vs text {b}");
+    }
+
+    // A matching explicit flag is fine; a conflicting one must fail loudly.
+    let matching = run_cluster_with(&recipe, Some(PartitionStrategy::Clustered));
+    assert!((matching.objective - from_shards.objective).abs() < 1e-12);
+
+    let w1 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let a1 = w1.local_addr().unwrap().to_string();
+    let mut spec = base_spec(vec!["127.0.0.1:0".into(), a1], recipe);
+    spec.partition = Some(PartitionStrategy::Hashed);
+    let h = std::thread::spawn(move || {
+        let _ = run_worker_on(w1, WorkerOverrides::default());
+    });
+    let err = train_cluster(&spec, None).unwrap_err().to_string();
+    assert!(
+        err.contains("--partition") && err.contains("cluster"),
+        "error must point at the header/flag conflict: {err}"
+    );
+    h.join().unwrap();
 
     std::fs::remove_dir_all(&dir).ok();
 }
