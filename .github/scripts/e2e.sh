@@ -303,6 +303,62 @@ case "$SCENARIO" in
     }'
     ;;
 
+  kernels-e2e)
+    # Kernel-tier seam end to end (job-spec v9): the same 3-rank cluster job
+    # under the strict default and under --fast-math. Both banners must name
+    # their tier, and the reordered-accumulation run must stay within the
+    # documented end-to-end tolerance (≤ 1e-4 relative) of the strict run.
+    # Then the pin leg: a worker started with --fast-math off must REJECT a
+    # --fast-math job with the pointed mismatch error instead of silently
+    # solving on the wrong tier.
+    spawn_workers 7210 2
+    "$BIN" train \
+      --cluster "$(cluster_list 7210 2)" \
+      --dataset epsilon_like --scale 0.1 --seed 1 \
+      --loss logistic --l1 0.5 --l2 0.1 --max-iters 20 --eval-every 0 \
+      | tee train_strict.log
+    wait
+    grep -q "^done:" train_strict.log
+    grep -q "kernels=strict" train_strict.log
+
+    spawn_workers 7220 2
+    "$BIN" train \
+      --cluster "$(cluster_list 7220 2)" \
+      --dataset epsilon_like --scale 0.1 --seed 1 \
+      --loss logistic --l1 0.5 --l2 0.1 --max-iters 20 --eval-every 0 \
+      --fast-math \
+      | tee train_fast.log
+    wait
+    grep -q "^done:" train_fast.log
+    grep -q "kernels=fast-math" train_fast.log
+
+    objS=$(objective_of train_strict.log)
+    objF=$(objective_of train_fast.log)
+    awk -v a="$objS" -v b="$objF" 'BEGIN {
+      if (a == "" || b == "") { print "missing objective"; exit 1 }
+      d = (a - b) / a; if (d < 0) d = -d
+      if (d > 1e-4) {
+        printf "fast-math drifted past its tier: strict %s vs fast %s (rel gap %g)\n", a, b, d
+        exit 1
+      }
+    }'
+
+    # Pin leg: strict-pinned worker vs --fast-math job → pointed rejection.
+    spawn_workers 7230 1 --fast-math off
+    if "$BIN" train \
+      --cluster "$(cluster_list 7230 1)" \
+      --dataset epsilon_like --scale 0.1 --seed 1 \
+      --loss logistic --l1 0.5 --max-iters 2 --eval-every 0 \
+      --fast-math \
+      > kernels_mismatch.log 2>&1; then
+      echo "train must fail when a pinned worker rejects the kernel tier" >&2
+      exit 1
+    fi
+    grep -q "rejected the job" kernels_mismatch.log
+    grep -q "pinned to strict kernels" kernels_mismatch.log
+    wait || true
+    ;;
+
   *)
     echo "unknown scenario '$SCENARIO'" >&2
     exit 2

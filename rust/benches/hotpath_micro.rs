@@ -1,6 +1,9 @@
 //! Hot-path microbenchmarks — the §Perf instrumentation.
 //!
 //! Measures the building blocks the end-to-end figures are made of:
+//!   - the `kernels::` per-primitive matrix: scalar vs vector-strict vs
+//!     fast-math (plus the experimental f32-margin helpers), appended to
+//!     `BENCH_hotpath.json` as a trajectory across commits
 //!   - CD cycle throughput (effective nnz traversal rate) — the L3 hot loop
 //!   - AllReduce naive vs ring at realistic vector sizes
 //!   - XLA stats/linesearch execution vs the native oracle — the L2/L1 path
@@ -12,22 +15,179 @@
 // disallowed-macros lint only polices library code.
 #![allow(clippy::disallowed_macros)]
 
+use std::path::Path;
+
 use dglmnet::cluster::allreduce::{allreduce_sum, AllReduceAlgo};
 use dglmnet::cluster::fabric::{fabric, NetworkModel};
 use dglmnet::data::{synth, SynthConfig};
 use dglmnet::glm::loss::LossKind;
 use dglmnet::glm::regularizer::ElasticNet;
+use dglmnet::kernels::vector::f32mode;
+use dglmnet::kernels::{CdKernels, ScalarKernels, VectorKernels};
 use dglmnet::runtime::{Runtime, XlaCompute};
 use dglmnet::solver::compute::{GlmCompute, NativeCompute};
 use dglmnet::solver::subproblem::{cd_cycle, CycleBudget, SubproblemState};
-use dglmnet::util::bench::bench;
+use dglmnet::util::bench::{append_json_record, bench};
 use dglmnet::util::rng::Rng;
 
 fn main() {
+    kernel_matrix();
     cd_cycle_throughput();
     allreduce_comparison();
     xla_vs_native();
     linesearch_batching();
+}
+
+/// The `kernels::` primitive matrix: every hot-loop primitive timed under
+/// all three implementations. The benches construct the impls directly
+/// (never flipping the process-global mode) so the matrix is
+/// self-contained. Medians land in `BENCH_hotpath.json` keyed
+/// `<primitive>_<impl>_s`, plus derived `<primitive>_speedup` =
+/// scalar / vector-strict — the number the tentpole claims (≥ 1.0).
+fn kernel_matrix() {
+    println!("\n=== kernels:: primitive matrix (scalar | vector-strict | vector-fast) ===");
+    const N: usize = 1 << 20; // dense margin length
+    let mut rng = Rng::new(11);
+
+    // One long sparse column with ~50% density and striding row indices:
+    // streams like the power-law columns the CD loop actually touches.
+    let rows: Vec<u32> = (0..N as u32).step_by(2).collect();
+    let vals: Vec<f64> = rows.iter().map(|_| rng.range_f64(-2.0, 2.0)).collect();
+    let dense: Vec<f64> = (0..N).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+    let w: Vec<f64> = (0..N).map(|_| rng.range_f64(0.01, 0.25)).collect();
+    let z: Vec<f64> = (0..N).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+    let t: Vec<f64> = (0..N).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let d: Vec<f64> = (0..N).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let y: Vec<f64> = (0..N)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+        .collect();
+
+    let impls: [(&str, &dyn CdKernels); 3] = [
+        ("scalar", &ScalarKernels),
+        ("strict", &VectorKernels { fast: false }),
+        ("fast", &VectorKernels { fast: true }),
+    ];
+    // (record key, median seconds) pairs accumulated across the matrix.
+    let mut medians: Vec<(String, f64)> = Vec::new();
+    let mut record = |key: String, median: f64| medians.push((key, median));
+
+    for (tag, ker) in impls {
+        let s = bench(&format!("sparse_dot {tag} (nnz={})", rows.len()), 2, 10, || {
+            // SAFETY: rows holds strided indices < N == dense.len().
+            std::hint::black_box(unsafe { ker.sparse_dot(&rows, &vals, &dense) });
+        });
+        record(format!("sparse_dot_{tag}_s"), s.median());
+
+        let mut acc = dense.clone();
+        let s = bench(&format!("axpy_col {tag} (nnz={})", rows.len()), 2, 10, || {
+            // SAFETY: rows holds strided indices < N == acc.len().
+            unsafe { ker.axpy_col(&rows, &vals, 1e-9, &mut acc) };
+            std::hint::black_box(acc[0]);
+        });
+        record(format!("axpy_col_{tag}_s"), s.median());
+
+        let s = bench(
+            &format!("col_weighted_quad {tag} (nnz={})", rows.len()),
+            2,
+            10,
+            || {
+                // SAFETY: rows holds strided indices < N == w/z/t len.
+                std::hint::black_box(unsafe {
+                    ker.col_weighted_quad(&rows, &vals, &w, &z, &t, 1.0)
+                });
+            },
+        );
+        record(format!("col_weighted_quad_{tag}_s"), s.median());
+
+        let s = bench(&format!("neg_wz_dot {tag} (n={N})"), 2, 10, || {
+            std::hint::black_box(ker.neg_wz_dot(&w, &z, &d));
+        });
+        record(format!("neg_wz_dot_{tag}_s"), s.median());
+
+        let s = bench(&format!("logloss_sum {tag} (n={N})"), 2, 10, || {
+            std::hint::black_box(ker.logloss_sum(&y, &dense));
+        });
+        record(format!("logloss_sum_{tag}_s"), s.median());
+
+        let mut out = vec![0.0; N];
+        let s = bench(&format!("sigmoid_margins {tag} (n={N})"), 2, 10, || {
+            ker.sigmoid_margins(&dense, &mut out);
+            std::hint::black_box(out[0]);
+        });
+        record(format!("sigmoid_margins_{tag}_s"), s.median());
+
+        let mut m = dense.clone();
+        let s = bench(&format!("margin_update {tag} (n={N})"), 2, 10, || {
+            ker.margin_update_with_xdelta(&mut m, &d, 1e-9);
+            std::hint::black_box(m[0]);
+        });
+        record(format!("margin_update_{tag}_s"), s.median());
+    }
+
+    // The experimental f32-margin helpers (bench/parity only — not a
+    // solver dispatch mode): halved margin bytes vs the f64 kernels above.
+    let m32: Vec<f32> = dense.iter().map(|&x| x as f32).collect();
+    let d32: Vec<f32> = d.iter().map(|&x| x as f32).collect();
+    let s = bench(&format!("logloss_sum f32 (n={N})"), 2, 10, || {
+        std::hint::black_box(f32mode::logloss_sum_f32(&y, &m32));
+    });
+    record("logloss_sum_f32_s".to_string(), s.median());
+    let mut out32 = vec![0.0f32; N];
+    let s = bench(&format!("sigmoid_margins f32 (n={N})"), 2, 10, || {
+        f32mode::sigmoid_margins_f32(&m32, &mut out32);
+        std::hint::black_box(out32[0]);
+    });
+    record("sigmoid_margins_f32_s".to_string(), s.median());
+    let mut acc32 = m32.clone();
+    let s = bench(&format!("margin_update f32 (n={N})"), 2, 10, || {
+        f32mode::margin_update_f32(&mut acc32, &d32, 1e-9);
+        std::hint::black_box(acc32[0]);
+    });
+    record("margin_update_f32_s".to_string(), s.median());
+
+    // Derived speedups (scalar / vector-strict): the tentpole's claim is
+    // that the unrolled default is never slower than the reference.
+    let get = |key: &str| {
+        medians
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| *v)
+            .unwrap_or(f64::NAN)
+    };
+    let primitives = [
+        "sparse_dot",
+        "axpy_col",
+        "col_weighted_quad",
+        "neg_wz_dot",
+        "logloss_sum",
+        "sigmoid_margins",
+        "margin_update",
+    ];
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    for prim in primitives {
+        let sc = get(&format!("{prim}_scalar_s"));
+        let vs = get(&format!("{prim}_strict_s"));
+        let speedup = sc / vs.max(1e-12);
+        println!("    -> {prim}: vector-strict {speedup:.2}x vs scalar");
+        speedups.push((format!("{prim}_speedup"), speedup));
+    }
+
+    append_json_record(Path::new("BENCH_hotpath.json"), |rec| {
+        rec.set("bench", "hotpath_kernels").set("n", N);
+        for (k, v) in &medians {
+            rec.set(k.as_str(), *v);
+        }
+        for (k, v) in &speedups {
+            rec.set(k.as_str(), *v);
+        }
+        rec.set(
+            "unix_ts",
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|dur| dur.as_secs())
+                .unwrap_or(0),
+        );
+    });
 }
 
 fn cd_cycle_throughput() {

@@ -14,7 +14,7 @@
 use dglmnet::data::{synth, SynthConfig};
 use dglmnet::glm::regularizer::ElasticNet;
 use dglmnet::solver::subproblem::{cd_cycle, CycleBudget, HybridCd, SubproblemState};
-use dglmnet::util::bench::{bench, Table};
+use dglmnet::util::bench::{append_json_record, bench, Table};
 use dglmnet::util::rng::Rng;
 
 fn main() {
@@ -57,6 +57,7 @@ fn main() {
 
     let mut table = Table::new(&["threads", "pass (median)", "updates/s", "speedup vs T=1"]);
     let mut t1 = f64::NAN;
+    let mut medians: Vec<(usize, f64)> = Vec::new();
     for threads in [1usize, 2, 4, 8] {
         let mut h = HybridCd::new(&x, threads);
         let mut state = SubproblemState::new(p, n);
@@ -68,6 +69,7 @@ fn main() {
         if threads == 1 {
             t1 = med;
         }
+        medians.push((threads, med));
         table.row(&[
             threads.to_string(),
             dglmnet::util::bench::fmt_dur(med),
@@ -81,4 +83,24 @@ fn main() {
          zero-overhead check)",
         dglmnet::util::bench::fmt_dur(classic.median())
     );
+
+    // Same trajectory file as the kernel matrix: the hybrid pass is the
+    // composite workload the micro-kernels feed, so its history rides along.
+    append_json_record(std::path::Path::new("BENCH_hotpath.json"), |rec| {
+        rec.set("bench", "hybrid_speedup")
+            .set("n", n)
+            .set("p", p)
+            .set("nnz", nnz)
+            .set("classic_pass_s", classic.median());
+        for (threads, med) in &medians {
+            rec.set(format!("hybrid_t{threads}_s").as_str(), *med);
+        }
+        rec.set(
+            "unix_ts",
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+        );
+    });
 }

@@ -26,8 +26,7 @@ use std::path::Path;
 
 use dglmnet::data::shards::{self, PartitionKind};
 use dglmnet::sparse::libsvm::{self, LibsvmData};
-use dglmnet::util::bench::{bench, fmt_dur, Table};
-use dglmnet::util::json::{self, Json};
+use dglmnet::util::bench::{append_json_record, bench, fmt_dur, Table};
 
 const SEED: u64 = 7;
 const BLOCKS: usize = 4;
@@ -114,7 +113,7 @@ fn main() {
         text_bytes as f64 / (block_bytes as f64).max(1.0),
     );
 
-    append_record(Path::new("BENCH_shard_load.json"), |rec| {
+    append_json_record(Path::new("BENCH_shard_load.json"), |rec| {
         rec.set("bench", "shard_load")
             .set("scale", scale)
             .set("n", n)
@@ -137,23 +136,4 @@ fn main() {
     });
 
     let _ = std::fs::remove_dir_all(&tmp);
-}
-
-/// Append one record to a JSON-array trajectory file, creating it on first
-/// use. A malformed existing file is replaced rather than crashing the bench.
-fn append_record(path: &Path, fill: impl FnOnce(&mut Json)) {
-    let mut records = match std::fs::read_to_string(path)
-        .ok()
-        .and_then(|text| json::parse(&text).ok())
-    {
-        Some(Json::Arr(items)) => items,
-        _ => Vec::new(),
-    };
-    let mut rec = Json::obj();
-    fill(&mut rec);
-    records.push(rec);
-    match std::fs::write(path, Json::Arr(records).dump()) {
-        Ok(()) => println!("appended record to {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
-    }
 }

@@ -270,6 +270,13 @@ pub struct JobSpec {
     /// it must name the header's own strategy (the block files ARE the
     /// partition) or ingestion fails with a pointed error.
     pub partition: Option<PartitionStrategy>,
+    /// Protocol v9: run the reordered-accumulation fast-math kernels
+    /// (`kernels::KernelMode::FastMath`) instead of the bit-reproducible
+    /// strict default. Every rank pins its process-global kernel mode from
+    /// this flag before solving; a worker whose operator pinned the other
+    /// mode (`worker --fast-math on|off`) rejects the job outright — mixed
+    /// modes across ranks would break the deterministic-reduction story.
+    pub fast_math: bool,
 }
 
 impl JobSpec {
@@ -319,7 +326,8 @@ impl JobSpec {
                 Json::Arr(self.threads.iter().map(|&t| Json::Num(t as f64)).collect()),
             )
             .set("checkpoint_every", self.checkpoint_every)
-            .set("resume", self.resume);
+            .set("resume", self.resume)
+            .set("fast_math", self.fast_math);
         if let Some(kappa) = self.alb_kappa {
             o.set("alb_kappa", kappa);
         }
@@ -535,6 +543,7 @@ impl JobSpec {
             checkpoint_every,
             resume,
             partition,
+            fast_math: matches!(v.get("fast_math"), Some(Json::Bool(true))),
         };
         if spec.rank >= spec.cluster.len() {
             return Err(format!(
@@ -599,6 +608,12 @@ pub struct WorkerOverrides {
     /// dropped, peers observe a hang-up). Drives the fault-tolerance tests
     /// without an external `kill`.
     pub die_after_iters: Option<usize>,
+    /// Pin this worker's kernel mode (`worker --fast-math on|off`). Unlike
+    /// the other overrides this never *changes* the job — the kernel mode
+    /// is SPMD-critical, so a job spec that disagrees with the pin is
+    /// rejected in the accept loop (`serve_one_job`) before the ack.
+    /// `None` follows whatever the spec says.
+    pub fast_math: Option<bool>,
 }
 
 impl WorkerOverrides {
@@ -790,6 +805,10 @@ fn solve_rank(
         .ok_or_else(|| anyhow::anyhow!("unknown loss '{}'", spec.loss))?;
     let compute = NativeCompute::new(kind);
     let penalty = ElasticNet::new(spec.l1, spec.l2);
+    // Protocol v9: pin the kernel mode before any solver code touches a
+    // margin (mode-mismatched workers never reach this point — the accept
+    // loop rejected the job).
+    crate::kernels::set_fast_math(spec.fast_math);
 
     let mut transport =
         TcpTransport::with_listener(spec.rank, &spec.cluster, listener, mesh_options())?;
@@ -935,6 +954,9 @@ fn solve_rank_path(
     let kind = LossKind::parse(&spec.loss)
         .ok_or_else(|| anyhow::anyhow!("unknown loss '{}'", spec.loss))?;
     let compute = NativeCompute::new(kind);
+    // Protocol v9: pin the kernel mode before the sweep (same contract as
+    // solve_rank).
+    crate::kernels::set_fast_math(spec.fast_math);
 
     let x_csc = splits.train.to_csc();
     // The single partition-resolution call site for a path-job rank
@@ -1116,6 +1138,27 @@ fn serve_one_job(listener: &TcpListener, overrides: &WorkerOverrides) -> anyhow:
         }
     };
     crate::obs::log::set_rank(spec.rank);
+    // Protocol v9: an operator kernel-mode pin that disagrees with the spec
+    // rejects the job BEFORE the ack — the mode is SPMD-critical, and a
+    // rank running the other mode would silently break the cluster's
+    // deterministic-reduction (strict) or tolerance-tier (fast-math) story.
+    if let Some(pinned) = overrides.fast_math {
+        if pinned != spec.fast_math {
+            let tier = |on: bool| if on { "fast-math" } else { "strict" };
+            let msg = format!(
+                "worker is pinned to {} kernels (--fast-math {}) but the job spec says {}: \
+                 re-ship the job with the matching --fast-math setting or restart the \
+                 worker without the pin",
+                tier(pinned),
+                if pinned { "on" } else { "off" },
+                tier(spec.fast_math),
+            );
+            let mut nack = Json::obj();
+            nack.set("ok", false).set("rank", spec.rank).set("error", msg.as_str());
+            write_line(&mut ctrl_w, &nack)?;
+            anyhow::bail!("{msg}");
+        }
+    }
     crate::obs::metrics::global().counter("worker.jobs_accepted").inc();
     let mut ack = Json::obj();
     ack.set("ok", true).set("rank", spec.rank);
@@ -1123,7 +1166,7 @@ fn serve_one_job(listener: &TcpListener, overrides: &WorkerOverrides) -> anyhow:
     crate::obs_info!(
         "worker",
         format!(
-            "rank {}/{} | mode={} dataset={} scale={} loss={} λ1={} λ2={} alb={}",
+            "rank {}/{} | mode={} dataset={} scale={} loss={} λ1={} λ2={} alb={} kernels={}",
             spec.rank,
             spec.cluster.len(),
             spec.mode.name(),
@@ -1135,6 +1178,7 @@ fn serve_one_job(listener: &TcpListener, overrides: &WorkerOverrides) -> anyhow:
             spec.alb_kappa
                 .map(|k| format!("κ={k}"))
                 .unwrap_or_else(|| "off".into()),
+            if spec.fast_math { "fast-math" } else { "strict" },
         )
     );
 
@@ -1736,6 +1780,7 @@ mod tests {
             checkpoint_every: 0,
             resume: false,
             partition: None,
+            fast_math: false,
         }
     }
 
@@ -1792,6 +1837,21 @@ mod tests {
         assert_eq!(back.checkpoint_every, s.checkpoint_every);
         assert_eq!(back.resume, s.resume);
         assert_eq!(back.partition, s.partition);
+        assert_eq!(back.fast_math, s.fast_math);
+    }
+
+    #[test]
+    fn job_spec_fast_math_roundtrips() {
+        // Protocol v9: the kernel-mode pin survives the wire in both states
+        // (false must ship explicitly, not rely on field absence — a v9
+        // coordinator always says what mode it wants).
+        for on in [false, true] {
+            let mut s = spec();
+            s.fast_math = on;
+            let text = s.to_json().dump();
+            assert!(text.contains("fast_math"), "fast_math missing from {text}");
+            assert_eq!(JobSpec::from_json(&text).unwrap().fast_math, on);
+        }
     }
 
     #[test]

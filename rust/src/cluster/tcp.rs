@@ -57,8 +57,12 @@ const MAGIC: u32 = 0x4D4C_4764;
 /// partition-strategy seam — the job spec gained an optional `partition`
 /// field (`hashed|contiguous|nnz|cluster`; absent = hashed for text
 /// datasets, header-pinned for shard datasets) and the done report a `cut`
-/// cross-block co-occurrence diagnostic per rank.
-pub const PROTOCOL_VERSION: u32 = 8;
+/// cross-block co-occurrence diagnostic per rank. v9: the kernel-mode pin —
+/// the job spec gained a `fast_math` flag (reordered-accumulation kernels,
+/// `--fast-math`); every rank sets its process-global kernel mode from the
+/// spec before solving and a worker pinned to the other mode rejects the
+/// job, so a cluster can never silently mix strict and fast-math ranks.
+pub const PROTOCOL_VERSION: u32 = 9;
 
 /// Dial / handshake tuning.
 #[derive(Clone, Copy, Debug)]

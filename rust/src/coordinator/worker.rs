@@ -547,10 +547,8 @@ pub fn run_worker(
         let ls_span = journal.start(itn, "linesearch");
         // ∇L(β)ᵀΔβ from the cached working set: g_i = −w_i z_i exactly
         // (z = −g/w with the same floored w), so no extra stats pass.
-        let mut grad_dot = 0.0;
-        for i in 0..n {
-            grad_dot += -w[i] * z[i] * dmargins[i];
-        }
+        let ker = crate::kernels::active();
+        let grad_dot = ker.neg_wz_dot(&w, &z, &dmargins);
         // The line-search callback cannot return a Result through the
         // solver seam, so a transport failure inside it is stashed and
         // re-raised as soon as the search returns (the zeros handed back
@@ -589,12 +587,8 @@ pub fn run_worker(
 
         // ---- steps 8-9: apply the step ----
         if ls.alpha > 0.0 {
-            for (b, d) in beta.iter_mut().zip(state.delta_beta.iter()) {
-                *b += ls.alpha * d;
-            }
-            for (mi, di) in margins.iter_mut().zip(dmargins.iter()) {
-                *mi += ls.alpha * di;
-            }
+            ker.margin_update_with_xdelta(&mut beta, &state.delta_beta, ls.alpha);
+            ker.margin_update_with_xdelta(&mut margins, &dmargins, ls.alpha);
         }
         if cfg.adaptive_mu {
             if ls.alpha < 1.0 {
@@ -916,6 +910,9 @@ pub fn run_worker_path(
         t
     };
     let ep_cell = RefCell::new(transport);
+    // One kernel-mode lookup for the whole sweep — the mode was pinned from
+    // the job spec before this rank started solving.
+    let ker = crate::kernels::active();
 
     let mut points: Vec<PathPointLocal> = Vec::with_capacity(job.lambdas.len());
     let mut lambda_prev: Option<f64> = None;
@@ -934,7 +931,8 @@ pub fn run_worker_path(
         // Gradient pass only when a discard bound exists (mirrors
         // `l1_path`: the unscreened sweep does no extra O(nnz) work).
         let mut active: Vec<usize> = if thresh.is_some() {
-            let g: Vec<f64> = (0..n).map(|i| -w[i] * z[i]).collect();
+            let mut g = vec![0.0; n];
+            ker.neg_wz(&w, &z, &mut g);
             let grads = x.tmul_vec(&g);
             path::screen_columns(&beta, &grads, thresh)
         } else {
@@ -992,10 +990,7 @@ pub fn run_worker_path(
                 updates_local += did as u64;
                 let mut dmargins = state.t.clone();
                 allreduce_sum(*ep_cell.borrow_mut(), next_tag(), &mut dmargins, cfg.allreduce)?;
-                let mut grad_dot = 0.0;
-                for i in 0..n {
-                    grad_dot += -w[i] * z[i] * dmargins[i];
-                }
+                let grad_dot = ker.neg_wz_dot(&w, &z, &dmargins);
                 // Same stash-and-reraise dance as the train loop: the
                 // line-search callback has no Result channel of its own.
                 let ls_err: Cell<Option<TransportError>> = Cell::new(None);
@@ -1033,12 +1028,8 @@ pub fn run_worker_path(
                     return Err(e);
                 }
                 if ls.alpha > 0.0 {
-                    for (b, d) in beta.iter_mut().zip(state.delta_beta.iter()) {
-                        *b += ls.alpha * d;
-                    }
-                    for (mi, di) in margins.iter_mut().zip(dmargins.iter()) {
-                        *mi += ls.alpha * di;
-                    }
+                    ker.margin_update_with_xdelta(&mut beta, &state.delta_beta, ls.alpha);
+                    ker.margin_update_with_xdelta(&mut margins, &dmargins, ls.alpha);
                 }
                 if cfg.adaptive_mu {
                     if ls.alpha < 1.0 {
@@ -1077,7 +1068,8 @@ pub fn run_worker_path(
             // Any rank's violation re-cycles everyone (allreduced count),
             // so screening stays exact AND the schedule stays SPMD-uniform.
             let viol = {
-                let g: Vec<f64> = (0..n).map(|i| -w[i] * z[i]).collect();
+                let mut g = vec![0.0; n];
+                ker.neg_wz(&w, &z, &mut g);
                 let grads = x.tmul_vec(&g);
                 path::kkt_violations(&active, &grads, l1, path::KKT_SLACK)
             };

@@ -6,7 +6,8 @@
 //! second-derivative upper bounds — which make the CGD convergence theorem
 //! apply — are exposed as `hessian_bound()` and verified by tests.
 
-use crate::util::stats::{log1p_exp, normal_cdf, normal_pdf, sigmoid};
+use crate::kernels::{log1p_exp, sigmoid};
+use crate::util::stats::{normal_cdf, normal_pdf};
 
 /// Supported loss families (paper §5: convergence proved for these three;
 /// Poisson is the §9 "any separable one-dimensional" extension and carries a
@@ -162,6 +163,11 @@ fn mills_ratio_inv(t: f64) -> f64 {
 /// Sum of losses over a margin vector: L(β) given ŷ = Xβ.
 pub fn total_loss(kind: LossKind, y: &[f64], yhat: &[f64]) -> f64 {
     debug_assert_eq!(y.len(), yhat.len());
+    if kind == LossKind::Logistic {
+        // The hot-path family goes through the kernel seam (strict mode is
+        // bit-identical to the generic loop below).
+        return crate::kernels::active().logloss_sum(y, yhat);
+    }
     let mut acc = 0.0;
     for (yi, mi) in y.iter().zip(yhat.iter()) {
         acc += kind.value(*yi, *mi);

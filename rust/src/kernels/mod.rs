@@ -1,0 +1,259 @@
+//! The unified inner-loop kernel seam — exactly one implementation of each
+//! hot-path primitive (DESIGN.md §Kernels).
+//!
+//! Every loop the solver spends its time in — the fused Σwx²/Σwxz
+//! gather of the CD subproblem, the column scatter, the margin/β step
+//! applies, the −wz gradient passes, and the logistic sigmoid/loss sweeps —
+//! lives behind the [`CdKernels`] trait. Call sites (`solver/subproblem.rs`,
+//! `solver/compute.rs`, `coordinator/worker.rs`, `sparse/{csc,csr}.rs`,
+//! `glm/loss.rs`) dispatch through [`active()`], so swapping the
+//! implementation is a process-wide mode flip, not a code change.
+//!
+//! Three modes ([`KernelMode`]):
+//!
+//! * `ScalarStrict` — the readable reference loops (the pre-refactor code,
+//!   verbatim). Bit-exact by definition.
+//! * `VectorStrict` (default) — 4-way manually unrolled loops with ONE
+//!   sequential accumulator. Every floating-point addition happens in the
+//!   same left-to-right order as the scalar loop, so the results are
+//!   **bit-identical** to `ScalarStrict` — the hybrid/cluster oracles that
+//!   pin 1e-12 (and the bit-exact `assert_eq!` suites) hold unchanged. The
+//!   speedup comes from amortized loop control and hoisted bounds checks,
+//!   not from reassociation.
+//! * `FastMath` — the same unroll with FOUR independent accumulators
+//!   combined as `(a0+a1)+(a2+a3)`. Reassociating the sum breaks bit
+//!   reproducibility (tolerance tier: ≤ 1e-7 relative per primitive on
+//!   finite inputs; ~1e-4 end-to-end, see the cluster oracle), which is why
+//!   it is opt-in behind `--fast-math` and pinned in the v9 job spec —
+//!   ranks can never silently mix modes.
+//!
+//! Element-wise primitives (scatter, step apply, −wz, sigmoid) carry no
+//! accumulation order, so all three modes produce identical bits for them.
+
+pub mod scalar;
+pub mod vector;
+
+pub use scalar::ScalarKernels;
+pub use vector::VectorKernels;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which kernel implementation [`active()`] dispatches to (process-global).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum KernelMode {
+    /// Reference scalar loops (bit-exact baseline).
+    ScalarStrict = 0,
+    /// Unrolled, sequential-accumulator loops — bit-identical to scalar.
+    VectorStrict = 1,
+    /// Unrolled with split accumulators — reordered sums, opt-in.
+    FastMath = 2,
+}
+
+static MODE: AtomicU8 = AtomicU8::new(KernelMode::VectorStrict as u8);
+
+static SCALAR: ScalarKernels = ScalarKernels;
+static VECTOR_STRICT: VectorKernels = VectorKernels { fast: false };
+static VECTOR_FAST: VectorKernels = VectorKernels { fast: true };
+
+/// Set the process-global kernel mode. Ranks pin this from the job spec
+/// (`fast_math`, protocol v9) before any solver code runs; flipping it
+/// mid-fit would mix tolerance tiers and is never done by the drivers.
+pub fn set_mode(mode: KernelMode) {
+    MODE.store(mode as u8, Ordering::Relaxed);
+}
+
+/// Current process-global kernel mode.
+pub fn mode() -> KernelMode {
+    match MODE.load(Ordering::Relaxed) {
+        0 => KernelMode::ScalarStrict,
+        1 => KernelMode::VectorStrict,
+        _ => KernelMode::FastMath,
+    }
+}
+
+/// Pin the mode from a job spec's `fast_math` field: `true` selects
+/// [`KernelMode::FastMath`], `false` the strict default.
+pub fn set_fast_math(on: bool) {
+    set_mode(if on {
+        KernelMode::FastMath
+    } else {
+        KernelMode::VectorStrict
+    });
+}
+
+/// Whether the reordered-accumulation fast path is active.
+pub fn fast_math_enabled() -> bool {
+    mode() == KernelMode::FastMath
+}
+
+/// The kernel implementation for the current process-global mode. Hoist the
+/// returned reference outside hot loops (one atomic load + vtable per call).
+pub fn active() -> &'static dyn CdKernels {
+    match mode() {
+        KernelMode::ScalarStrict => &SCALAR,
+        KernelMode::VectorStrict => &VECTOR_STRICT,
+        KernelMode::FastMath => &VECTOR_FAST,
+    }
+}
+
+/// The inner-loop primitives of Algorithms 1–3. Sparse methods take the raw
+/// `(rows, vals)` column/row slices of the CSC/CSR layouts; dense methods
+/// take whole margin-length vectors.
+///
+/// The three sparse gather/scatter methods are `unsafe`: they elide
+/// per-entry bounds checks in the hottest loops of the solver (§Perf), so
+/// the caller must guarantee every index in `rows` is in bounds for every
+/// dense slice — which `Csc`/`Csr` construction plus the entry asserts of
+/// `cd_cycle`/`axpy_col` establish once per call instead of once per entry.
+pub trait CdKernels: Sync {
+    /// Implementation name (bench labels / trace banners).
+    fn name(&self) -> &'static str;
+
+    /// Σᵢ valsᵢ · dense[rowsᵢ] — the sparse column (or row) dot product.
+    ///
+    /// # Safety
+    /// Every index in `rows` must be < `dense.len()`.
+    unsafe fn sparse_dot(&self, rows: &[u32], vals: &[f64], dense: &[f64]) -> f64;
+
+    /// y[rowsᵢ] += coef · valsᵢ — the column scatter (element-wise: all
+    /// modes produce identical bits).
+    ///
+    /// # Safety
+    /// Every index in `rows` must be < `y.len()`.
+    unsafe fn axpy_col(&self, rows: &[u32], vals: &[f64], coef: f64, y: &mut [f64]);
+
+    /// The fused Algorithm-2 gather over one column:
+    /// `s1 = Σᵢ wᵢ xᵢ (zᵢ − μ tᵢ)`, `s2 = Σᵢ wᵢ xᵢ²` in ONE pass.
+    ///
+    /// # Safety
+    /// Every index in `rows` must be < `w.len()`, `z.len()` and `t.len()`.
+    unsafe fn col_weighted_quad(
+        &self,
+        rows: &[u32],
+        vals: &[f64],
+        w: &[f64],
+        z: &[f64],
+        t: &[f64],
+        mu: f64,
+    ) -> (f64, f64);
+
+    /// Σᵢ valsᵢ² — squared L2 norm of a value slice.
+    fn sq_norm(&self, vals: &[f64]) -> f64;
+
+    /// y ← y + α·d over dense vectors — the fused margin/β step apply
+    /// (merges the margin update with the line-search XΔβ accumulation;
+    /// with α = 1 it is the exact hybrid-partial accumulate). Element-wise:
+    /// identical bits in every mode.
+    fn margin_update_with_xdelta(&self, y: &mut [f64], d: &[f64], alpha: f64);
+
+    /// Σᵢ −wᵢ zᵢ dᵢ — ∇L(β)ᵀΔβ from the cached working set
+    /// (gᵢ = −wᵢzᵢ exactly, z = −g/w with the same floored w).
+    fn neg_wz_dot(&self, w: &[f64], z: &[f64], d: &[f64]) -> f64;
+
+    /// outᵢ = −wᵢ zᵢ — the screening-gradient working vector
+    /// (element-wise: identical bits in every mode).
+    fn neg_wz(&self, w: &[f64], z: &[f64], out: &mut [f64]);
+
+    /// outᵢ = σ(marginsᵢ) — the batched inverse logistic link
+    /// (element-wise: identical bits in every mode).
+    fn sigmoid_margins(&self, margins: &[f64], out: &mut [f64]);
+
+    /// Σᵢ log(1 + exp(−yᵢ mᵢ)) — total logistic loss at the margins.
+    fn logloss_sum(&self, y: &[f64], margins: &[f64]) -> f64;
+
+    /// out[k] = Σᵢ log(1 + exp(−yᵢ (mᵢ + αₖ dᵢ))) — the batched
+    /// line-search loss grid (i-outer/k-inner, matching the reference).
+    fn logloss_grid(
+        &self,
+        y: &[f64],
+        margins: &[f64],
+        dmargins: &[f64],
+        alphas: &[f64],
+        out: &mut [f64],
+    );
+}
+
+/// log(1 + exp(x)) computed without overflow for large |x| — the canonical
+/// implementation (was duplicated across `util/stats.rs` and callers).
+#[inline]
+pub fn log1p_exp(x: f64) -> f64 {
+    if x > 35.0 {
+        x
+    } else if x < -35.0 {
+        x.exp() // ~0, but keeps derivative continuity in tests
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// Numerically stable sigmoid — the canonical implementation (was
+/// `util/stats.rs:72` AND an implicit duplicate inside `glm/loss.rs`).
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        let e = (-x).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The mode cell is process-global and tests run multi-threaded in one
+    /// process, so tests never flip it — they only check the default and
+    /// the enum round trip on a value-level basis.
+    #[test]
+    fn default_mode_is_vector_strict() {
+        assert_eq!(mode(), KernelMode::VectorStrict);
+        assert!(!fast_math_enabled());
+        assert_eq!(active().name(), "vector-strict");
+    }
+
+    #[test]
+    fn mode_discriminants_roundtrip() {
+        for m in [
+            KernelMode::ScalarStrict,
+            KernelMode::VectorStrict,
+            KernelMode::FastMath,
+        ] {
+            let back = match m as u8 {
+                0 => KernelMode::ScalarStrict,
+                1 => KernelMode::VectorStrict,
+                _ => KernelMode::FastMath,
+            };
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn impl_names_distinct() {
+        assert_eq!(ScalarKernels.name(), "scalar");
+        assert_eq!(VectorKernels { fast: false }.name(), "vector-strict");
+        assert_eq!(VectorKernels { fast: true }.name(), "vector-fast");
+    }
+
+    #[test]
+    fn sigmoid_props() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!((sigmoid(100.0) - 1.0).abs() < 1e-15);
+        assert!(sigmoid(-100.0) < 1e-15);
+        for x in [-3.0, -1.0, 0.5, 2.0] {
+            assert!((sigmoid(x) + sigmoid(-x) - 1.0).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn log1p_exp_stable() {
+        assert!((log1p_exp(0.0) - std::f64::consts::LN_2).abs() < 1e-15);
+        assert!((log1p_exp(1000.0) - 1000.0).abs() < 1e-9);
+        assert!(log1p_exp(-1000.0).abs() < 1e-15);
+        for x in [-20.0, -3.0, 0.7, 15.0] {
+            assert!((log1p_exp(x) - log1p_exp(-x) - x).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! The scalar reference implementation of [`CdKernels`] — the pre-refactor
+//! inner loops, verbatim. This is the bit-exactness baseline every other
+//! implementation is held to (`rust/tests/kernel_parity.rs`), and the
+//! denominator of the `BENCH_hotpath.json` throughput records.
+
+use super::{log1p_exp, sigmoid, CdKernels};
+
+/// Reference loops: one entry at a time, one sequential accumulator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScalarKernels;
+
+impl CdKernels for ScalarKernels {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    unsafe fn sparse_dot(&self, rows: &[u32], vals: &[f64], dense: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for (r, v) in rows.iter().zip(vals.iter()) {
+            acc += v * dense.get_unchecked(*r as usize);
+        }
+        acc
+    }
+
+    unsafe fn axpy_col(&self, rows: &[u32], vals: &[f64], coef: f64, y: &mut [f64]) {
+        for (r, v) in rows.iter().zip(vals.iter()) {
+            *y.get_unchecked_mut(*r as usize) += coef * v;
+        }
+    }
+
+    unsafe fn col_weighted_quad(
+        &self,
+        rows: &[u32],
+        vals: &[f64],
+        w: &[f64],
+        z: &[f64],
+        t: &[f64],
+        mu: f64,
+    ) -> (f64, f64) {
+        let mut s1 = 0.0;
+        let mut s2 = 0.0;
+        for (r, v) in rows.iter().zip(vals.iter()) {
+            let i = *r as usize;
+            let wx = w.get_unchecked(i) * v;
+            s1 += wx * (z.get_unchecked(i) - mu * t.get_unchecked(i));
+            s2 += wx * v;
+        }
+        (s1, s2)
+    }
+
+    fn sq_norm(&self, vals: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for v in vals {
+            acc += v * v;
+        }
+        acc
+    }
+
+    fn margin_update_with_xdelta(&self, y: &mut [f64], d: &[f64], alpha: f64) {
+        assert_eq!(y.len(), d.len());
+        for (yi, di) in y.iter_mut().zip(d.iter()) {
+            *yi += alpha * di;
+        }
+    }
+
+    fn neg_wz_dot(&self, w: &[f64], z: &[f64], d: &[f64]) -> f64 {
+        assert_eq!(w.len(), z.len());
+        assert_eq!(w.len(), d.len());
+        let mut acc = 0.0;
+        for ((wi, zi), di) in w.iter().zip(z.iter()).zip(d.iter()) {
+            acc += -wi * zi * di;
+        }
+        acc
+    }
+
+    fn neg_wz(&self, w: &[f64], z: &[f64], out: &mut [f64]) {
+        assert_eq!(w.len(), z.len());
+        assert_eq!(w.len(), out.len());
+        for ((wi, zi), oi) in w.iter().zip(z.iter()).zip(out.iter_mut()) {
+            *oi = -wi * zi;
+        }
+    }
+
+    fn sigmoid_margins(&self, margins: &[f64], out: &mut [f64]) {
+        assert_eq!(margins.len(), out.len());
+        for (mi, oi) in margins.iter().zip(out.iter_mut()) {
+            *oi = sigmoid(*mi);
+        }
+    }
+
+    fn logloss_sum(&self, y: &[f64], margins: &[f64]) -> f64 {
+        assert_eq!(y.len(), margins.len());
+        let mut acc = 0.0;
+        for (yi, mi) in y.iter().zip(margins.iter()) {
+            acc += log1p_exp(-yi * mi);
+        }
+        acc
+    }
+
+    fn logloss_grid(
+        &self,
+        y: &[f64],
+        margins: &[f64],
+        dmargins: &[f64],
+        alphas: &[f64],
+        out: &mut [f64],
+    ) {
+        assert_eq!(y.len(), margins.len());
+        assert_eq!(y.len(), dmargins.len());
+        assert_eq!(alphas.len(), out.len());
+        out.fill(0.0);
+        // i-outer / k-inner, matching `NativeCompute::loss_at_alphas`: the
+        // margin row is read once per example, and each out[k] accumulates
+        // its terms in example order.
+        for i in 0..y.len() {
+            let yi = y[i];
+            let mi = margins[i];
+            let di = dmargins[i];
+            for (k, a) in alphas.iter().enumerate() {
+                let yh = mi + a * di;
+                out[k] += log1p_exp(-yi * yh);
+            }
+        }
+    }
+}

@@ -1,0 +1,422 @@
+//! The unrolled implementation of [`CdKernels`].
+//!
+//! Two flavors share the code here, selected by the `fast` field:
+//!
+//! * **strict** (`fast: false`, the process default) — 4-way unrolled
+//!   loops with ONE sequential accumulator. The additions happen in the
+//!   same left-to-right order as [`super::ScalarKernels`], so every result
+//!   is bit-identical to the reference; the win is amortized loop control,
+//!   per-call (not per-entry) bounds proof, and wider instruction-level
+//!   parallelism on the independent multiply trees. Safe for the 1e-12
+//!   hybrid/cluster oracles and the bit-exact `assert_eq!` suites.
+//! * **fast-math** (`fast: true`, `--fast-math`) — the same unroll with
+//!   FOUR independent accumulators per sum, combined `(a0+a1)+(a2+a3)`.
+//!   Breaking the sequential-add dependency chain lets the CPU retire ~4
+//!   adds per cycle instead of 1, at the cost of reassociation: results
+//!   drift from strict by ≤ 1e-7 relative per primitive on finite inputs
+//!   (pinned in `rust/tests/kernel_parity.rs`). Element-wise primitives and
+//!   the exp-bound loss grid have no accumulation order to reassociate, so
+//!   they share the strict path and stay bit-identical even here.
+//!
+//! The unroll width is `LANES = 4`: wide enough to fill two 256-bit FMA
+//! pipes on x86-64 and the dual 128-bit units on aarch64 once the
+//! const-bound lane loops are flattened (build with
+//! `RUSTFLAGS="-C target-cpu=native"` to let the backend pick the widest
+//! vectors), small enough that remainder handling stays cheap for the
+//! short sparse columns that dominate power-law data.
+//!
+//! [`f32mode`] holds the experimental f32-margins/f64-accumulator helpers
+//! (~2× memory bandwidth on the margin vectors); they are bench/parity
+//! material only and not dispatched by the solver.
+
+use super::{log1p_exp, sigmoid, CdKernels};
+
+/// Unroll width of every kernel in this module.
+pub const LANES: usize = 4;
+
+/// Unrolled kernels; `fast: true` enables split-accumulator reassociation.
+#[derive(Clone, Copy, Debug)]
+pub struct VectorKernels {
+    /// `false` = strict (bit-identical to scalar), `true` = fast-math.
+    pub fast: bool,
+}
+
+impl CdKernels for VectorKernels {
+    fn name(&self) -> &'static str {
+        if self.fast {
+            "vector-fast"
+        } else {
+            "vector-strict"
+        }
+    }
+
+    unsafe fn sparse_dot(&self, rows: &[u32], vals: &[f64], dense: &[f64]) -> f64 {
+        let n = rows.len();
+        let mut i = 0;
+        if self.fast {
+            let mut acc = [0.0f64; LANES];
+            while i + LANES <= n {
+                for lane in 0..LANES {
+                    let r = *rows.get_unchecked(i + lane) as usize;
+                    acc[lane] += vals.get_unchecked(i + lane) * dense.get_unchecked(r);
+                }
+                i += LANES;
+            }
+            let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+            while i < n {
+                let r = *rows.get_unchecked(i) as usize;
+                s += vals.get_unchecked(i) * dense.get_unchecked(r);
+                i += 1;
+            }
+            s
+        } else {
+            let mut s = 0.0;
+            while i + LANES <= n {
+                // one sequential accumulator: same add order as scalar
+                for lane in 0..LANES {
+                    let r = *rows.get_unchecked(i + lane) as usize;
+                    s += vals.get_unchecked(i + lane) * dense.get_unchecked(r);
+                }
+                i += LANES;
+            }
+            while i < n {
+                let r = *rows.get_unchecked(i) as usize;
+                s += vals.get_unchecked(i) * dense.get_unchecked(r);
+                i += 1;
+            }
+            s
+        }
+    }
+
+    unsafe fn axpy_col(&self, rows: &[u32], vals: &[f64], coef: f64, y: &mut [f64]) {
+        // Element-wise scatter: no accumulation order, identical in all modes.
+        let n = rows.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            for lane in 0..LANES {
+                let r = *rows.get_unchecked(i + lane) as usize;
+                *y.get_unchecked_mut(r) += coef * vals.get_unchecked(i + lane);
+            }
+            i += LANES;
+        }
+        while i < n {
+            let r = *rows.get_unchecked(i) as usize;
+            *y.get_unchecked_mut(r) += coef * vals.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    unsafe fn col_weighted_quad(
+        &self,
+        rows: &[u32],
+        vals: &[f64],
+        w: &[f64],
+        z: &[f64],
+        t: &[f64],
+        mu: f64,
+    ) -> (f64, f64) {
+        let n = rows.len();
+        let mut i = 0;
+        if self.fast {
+            let mut a1 = [0.0f64; LANES];
+            let mut a2 = [0.0f64; LANES];
+            while i + LANES <= n {
+                for lane in 0..LANES {
+                    let r = *rows.get_unchecked(i + lane) as usize;
+                    let v = *vals.get_unchecked(i + lane);
+                    let wx = w.get_unchecked(r) * v;
+                    a1[lane] += wx * (z.get_unchecked(r) - mu * t.get_unchecked(r));
+                    a2[lane] += wx * v;
+                }
+                i += LANES;
+            }
+            let mut s1 = (a1[0] + a1[1]) + (a1[2] + a1[3]);
+            let mut s2 = (a2[0] + a2[1]) + (a2[2] + a2[3]);
+            while i < n {
+                let r = *rows.get_unchecked(i) as usize;
+                let v = *vals.get_unchecked(i);
+                let wx = w.get_unchecked(r) * v;
+                s1 += wx * (z.get_unchecked(r) - mu * t.get_unchecked(r));
+                s2 += wx * v;
+                i += 1;
+            }
+            (s1, s2)
+        } else {
+            let mut s1 = 0.0;
+            let mut s2 = 0.0;
+            while i + LANES <= n {
+                // one sequential accumulator pair: same add order as scalar
+                for lane in 0..LANES {
+                    let r = *rows.get_unchecked(i + lane) as usize;
+                    let v = *vals.get_unchecked(i + lane);
+                    let wx = w.get_unchecked(r) * v;
+                    s1 += wx * (z.get_unchecked(r) - mu * t.get_unchecked(r));
+                    s2 += wx * v;
+                }
+                i += LANES;
+            }
+            while i < n {
+                let r = *rows.get_unchecked(i) as usize;
+                let v = *vals.get_unchecked(i);
+                let wx = w.get_unchecked(r) * v;
+                s1 += wx * (z.get_unchecked(r) - mu * t.get_unchecked(r));
+                s2 += wx * v;
+                i += 1;
+            }
+            (s1, s2)
+        }
+    }
+
+    fn sq_norm(&self, vals: &[f64]) -> f64 {
+        let n = vals.len();
+        let mut i = 0;
+        if self.fast {
+            let mut acc = [0.0f64; LANES];
+            while i + LANES <= n {
+                for lane in 0..LANES {
+                    // SAFETY: i + lane < i + LANES <= n.
+                    let v = unsafe { *vals.get_unchecked(i + lane) };
+                    acc[lane] += v * v;
+                }
+                i += LANES;
+            }
+            let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+            for v in &vals[i..] {
+                s += v * v;
+            }
+            s
+        } else {
+            let mut s = 0.0;
+            while i + LANES <= n {
+                for lane in 0..LANES {
+                    // SAFETY: i + lane < i + LANES <= n.
+                    let v = unsafe { *vals.get_unchecked(i + lane) };
+                    s += v * v;
+                }
+                i += LANES;
+            }
+            for v in &vals[i..] {
+                s += v * v;
+            }
+            s
+        }
+    }
+
+    fn margin_update_with_xdelta(&self, y: &mut [f64], d: &[f64], alpha: f64) {
+        // Element-wise: no accumulation order, identical in all modes.
+        assert_eq!(y.len(), d.len());
+        let n = y.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            for lane in 0..LANES {
+                // SAFETY: i + lane < i + LANES <= n == y.len() == d.len().
+                unsafe {
+                    *y.get_unchecked_mut(i + lane) += alpha * d.get_unchecked(i + lane);
+                }
+            }
+            i += LANES;
+        }
+        while i < n {
+            y[i] += alpha * d[i];
+            i += 1;
+        }
+    }
+
+    fn neg_wz_dot(&self, w: &[f64], z: &[f64], d: &[f64]) -> f64 {
+        assert_eq!(w.len(), z.len());
+        assert_eq!(w.len(), d.len());
+        let n = w.len();
+        let mut i = 0;
+        if self.fast {
+            let mut acc = [0.0f64; LANES];
+            while i + LANES <= n {
+                for lane in 0..LANES {
+                    // SAFETY: i + lane < n and all three slices have len n.
+                    unsafe {
+                        acc[lane] += -w.get_unchecked(i + lane)
+                            * z.get_unchecked(i + lane)
+                            * d.get_unchecked(i + lane);
+                    }
+                }
+                i += LANES;
+            }
+            let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+            while i < n {
+                s += -w[i] * z[i] * d[i];
+                i += 1;
+            }
+            s
+        } else {
+            let mut s = 0.0;
+            while i + LANES <= n {
+                for lane in 0..LANES {
+                    // SAFETY: i + lane < n and all three slices have len n.
+                    unsafe {
+                        s += -w.get_unchecked(i + lane)
+                            * z.get_unchecked(i + lane)
+                            * d.get_unchecked(i + lane);
+                    }
+                }
+                i += LANES;
+            }
+            while i < n {
+                s += -w[i] * z[i] * d[i];
+                i += 1;
+            }
+            s
+        }
+    }
+
+    fn neg_wz(&self, w: &[f64], z: &[f64], out: &mut [f64]) {
+        // Element-wise: no accumulation order, identical in all modes.
+        assert_eq!(w.len(), z.len());
+        assert_eq!(w.len(), out.len());
+        let n = w.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            for lane in 0..LANES {
+                // SAFETY: i + lane < n and all three slices have len n.
+                unsafe {
+                    *out.get_unchecked_mut(i + lane) =
+                        -w.get_unchecked(i + lane) * z.get_unchecked(i + lane);
+                }
+            }
+            i += LANES;
+        }
+        while i < n {
+            out[i] = -w[i] * z[i];
+            i += 1;
+        }
+    }
+
+    fn sigmoid_margins(&self, margins: &[f64], out: &mut [f64]) {
+        // Element-wise exp-bound map: identical in all modes. The unroll
+        // still helps by overlapping the independent exp pipelines.
+        assert_eq!(margins.len(), out.len());
+        let n = margins.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            for lane in 0..LANES {
+                // SAFETY: i + lane < n == margins.len() == out.len().
+                unsafe {
+                    *out.get_unchecked_mut(i + lane) = sigmoid(*margins.get_unchecked(i + lane));
+                }
+            }
+            i += LANES;
+        }
+        while i < n {
+            out[i] = sigmoid(margins[i]);
+            i += 1;
+        }
+    }
+
+    fn logloss_sum(&self, y: &[f64], margins: &[f64]) -> f64 {
+        assert_eq!(y.len(), margins.len());
+        let n = y.len();
+        let mut i = 0;
+        if self.fast {
+            let mut acc = [0.0f64; LANES];
+            while i + LANES <= n {
+                for lane in 0..LANES {
+                    // SAFETY: i + lane < n and both slices have len n.
+                    unsafe {
+                        acc[lane] += log1p_exp(
+                            -y.get_unchecked(i + lane) * margins.get_unchecked(i + lane),
+                        );
+                    }
+                }
+                i += LANES;
+            }
+            let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+            while i < n {
+                s += log1p_exp(-y[i] * margins[i]);
+                i += 1;
+            }
+            s
+        } else {
+            let mut s = 0.0;
+            while i + LANES <= n {
+                for lane in 0..LANES {
+                    // SAFETY: i + lane < n and both slices have len n.
+                    unsafe {
+                        s += log1p_exp(
+                            -y.get_unchecked(i + lane) * margins.get_unchecked(i + lane),
+                        );
+                    }
+                }
+                i += LANES;
+            }
+            while i < n {
+                s += log1p_exp(-y[i] * margins[i]);
+                i += 1;
+            }
+            s
+        }
+    }
+
+    fn logloss_grid(
+        &self,
+        y: &[f64],
+        margins: &[f64],
+        dmargins: &[f64],
+        alphas: &[f64],
+        out: &mut [f64],
+    ) {
+        // The grid is exp-bound and k-strided; reassociating the example
+        // sum buys nothing here, so fast-math shares the strict path and
+        // the line-search grid stays bit-identical in every mode.
+        assert_eq!(y.len(), margins.len());
+        assert_eq!(y.len(), dmargins.len());
+        assert_eq!(alphas.len(), out.len());
+        out.fill(0.0);
+        for i in 0..y.len() {
+            let yi = y[i];
+            let mi = margins[i];
+            let di = dmargins[i];
+            for (k, a) in alphas.iter().enumerate() {
+                let yh = mi + a * di;
+                // SAFETY: k < alphas.len() == out.len().
+                unsafe {
+                    *out.get_unchecked_mut(k) += log1p_exp(-yi * yh);
+                }
+            }
+        }
+    }
+}
+
+/// Experimental f32-margins / f64-accumulator kernels (ROADMAP item 1's
+/// "~2× memory bandwidth" mode). Margins live in f32 — halving the bytes
+/// the margin sweeps stream — while every reduction still accumulates in
+/// f64 so the sum does not lose ground to cancellation. f32's 1.2e-7
+/// epsilon sits ON the fast-math tolerance tier, so this stays a
+/// bench/parity playground rather than a solver dispatch mode; promote it
+/// only with its own end-to-end tolerance study.
+pub mod f32mode {
+    use super::super::{log1p_exp, sigmoid};
+
+    /// y ← y + α·d over f32 margin vectors.
+    pub fn margin_update_f32(y: &mut [f32], d: &[f32], alpha: f32) {
+        assert_eq!(y.len(), d.len());
+        for (yi, di) in y.iter_mut().zip(d.iter()) {
+            *yi += alpha * di;
+        }
+    }
+
+    /// Σᵢ log(1 + exp(−yᵢ mᵢ)) with f32 margins and an f64 accumulator.
+    pub fn logloss_sum_f32(y: &[f64], margins: &[f32]) -> f64 {
+        assert_eq!(y.len(), margins.len());
+        let mut acc = 0.0f64;
+        for (yi, mi) in y.iter().zip(margins.iter()) {
+            acc += log1p_exp(-yi * f64::from(*mi));
+        }
+        acc
+    }
+
+    /// outᵢ = σ(marginsᵢ) over f32 margins (computed in f64, rounded once).
+    pub fn sigmoid_margins_f32(margins: &[f32], out: &mut [f32]) {
+        assert_eq!(margins.len(), out.len());
+        for (mi, oi) in margins.iter().zip(out.iter_mut()) {
+            *oi = sigmoid(f64::from(*mi)) as f32;
+        }
+    }
+}

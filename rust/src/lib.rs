@@ -32,6 +32,7 @@ pub mod data;
 pub mod solver;
 pub mod glm;
 pub mod harness;
+pub mod kernels;
 pub mod metrics;
 pub mod obs;
 pub mod runtime;

@@ -209,6 +209,13 @@ fn train_cli() -> Cli {
         "with --cluster: start from the latest complete checkpoint under \
          --checkpoint-dir instead of from zero",
     )
+    .switch(
+        "fast-math",
+        "reordered-accumulation kernels: faster reductions at the cost of \
+         bit-reproducibility (results stay within the documented fast-math \
+         tolerance tier); with --cluster the flag rides in the v9 job spec \
+         so every rank runs the same kernels",
+    )
 }
 
 /// Apply a `--log-level` value to the global `obs::log` filter. Empty means
@@ -434,6 +441,11 @@ fn cmd_train(argv: &[String]) -> i32 {
         eprintln!("--resume needs --cluster (in-process runs always start from zero)");
         return 2;
     }
+    // Kernel mode: set the process-global pin here for in-process runs; the
+    // cluster path re-pins every rank (this one included) from the v9 job
+    // spec inside solve_rank, so both routes agree.
+    let fast_math = args.get_bool("fast-math");
+    dglmnet::kernels::set_fast_math(fast_math);
     // Partition strategy: empty = unset, which keeps the historical layout
     // (hashed for text datasets, header-pinned for shards).
     let partition_flag = match args.get("partition") {
@@ -474,7 +486,7 @@ fn cmd_train(argv: &[String]) -> i32 {
     };
 
     println!(
-        "train: dataset={} n={} p={} nnz={} | loss={} λ1={} λ2={} | M={} T={} alb={} engine={}",
+        "train: dataset={} n={} p={} nnz={} | loss={} λ1={} λ2={} | M={} T={} alb={} engine={} kernels={}",
         ds_name,
         n,
         p,
@@ -486,6 +498,7 @@ fn cmd_train(argv: &[String]) -> i32 {
         threads.iter().max().copied().unwrap_or(1),
         cfg.alb_kappa.is_some(),
         args.get("engine"),
+        if fast_math { "fast-math" } else { "strict" },
     );
     // The effective strategy line the e2e gates grep for: a shards dataset
     // pins its header's kind regardless of the flag (a conflicting flag
@@ -535,6 +548,7 @@ fn cmd_train(argv: &[String]) -> i32 {
             checkpoint_every,
             resume,
             partition: partition_flag,
+            fast_math,
         };
         match process::train_cluster(&spec, splits.as_ref()) {
             Ok(r) => r,
@@ -699,6 +713,13 @@ fn path_cli() -> Cli {
     .flag("max-iters", "100", "outer iteration budget per λ point")
     .flag("seed", "1", "random seed")
     .flag("save-model", "", "write the validation-best model JSON to this path")
+    .switch(
+        "fast-math",
+        "reordered-accumulation kernels: faster reductions at the cost of \
+         bit-reproducibility (results stay within the documented fast-math \
+         tolerance tier); with --cluster the flag rides in the v9 job spec \
+         so every rank runs the same kernels",
+    )
 }
 
 fn cmd_path(argv: &[String]) -> i32 {
@@ -790,6 +811,9 @@ fn cmd_path(argv: &[String]) -> i32 {
             }
         },
     };
+    // Same pin-here-and-in-the-spec pattern as cmd_train.
+    let fast_math = args.get_bool("fast-math");
+    dglmnet::kernels::set_fast_math(fast_math);
 
     println!(
         "path: dataset={} n={} p={} nnz={} | loss={} λ2={} | {} λ1 points [{} .. {}] | M={} screening={}",
@@ -841,6 +865,7 @@ fn cmd_path(argv: &[String]) -> i32 {
             checkpoint_every: 0,
             resume: false,
             partition: partition_flag,
+            fast_math,
         };
         match process::path_cluster(&spec, Some(&splits)) {
             Ok(r) => r,
@@ -1064,6 +1089,14 @@ fn cmd_worker(argv: &[String]) -> i32 {
          fault-tolerance tests without an external kill",
     )
     .flag(
+        "fast-math",
+        "",
+        "pin this rank's kernel tier: 'on' (fast-math only) or 'off' \
+         (strict only). A job spec that disagrees is rejected with a \
+         pointed error instead of silently mixing kernel tiers across the \
+         cluster; unset = follow whatever the job spec says (protocol v9)",
+    )
+    .flag(
         "log-level",
         "",
         "structured-log verbosity: error | warn | info | debug | trace \
@@ -1126,6 +1159,15 @@ fn cmd_worker(argv: &[String]) -> i32 {
                 eprintln!("--die-after must be a non-negative integer");
                 return 2;
             }
+        }
+    }
+    match args.get("fast-math") {
+        "" => {}
+        "on" => overrides.fast_math = Some(true),
+        "off" => overrides.fast_math = Some(false),
+        other => {
+            eprintln!("--fast-math must be 'on' or 'off', got '{other}'");
+            return 2;
         }
     }
     match process::run_worker_process(args.get("listen"), overrides, args.get_bool("rejoin")) {

@@ -40,10 +40,16 @@ pub trait GlmCompute: Send + Sync {
     }
 
     /// Inverse-link probabilities for a margin block — the serving path
-    /// (`serve::Scorer`). Default goes through the loss family's scalar
-    /// link; engine implementations may batch it.
+    /// (`serve::Scorer`). Logistic goes through the batched
+    /// `kernels::sigmoid_margins` sweep (element-wise, bit-identical in
+    /// every mode); other families use the loss family's scalar link.
     fn predict_probs(&self, margins: &[f64]) -> Vec<f64> {
         let kind = self.kind();
+        if kind == LossKind::Logistic {
+            let mut out = vec![0.0; margins.len()];
+            crate::kernels::active().sigmoid_margins(margins, &mut out);
+            return out;
+        }
         margins.iter().map(|&m| kind.prob(m)).collect()
     }
 }
@@ -91,6 +97,13 @@ impl GlmCompute for NativeCompute {
         debug_assert_eq!(y.len(), margins.len());
         debug_assert_eq!(y.len(), dmargins.len());
         let mut out = vec![0.0; alphas.len()];
+        if self.kind == LossKind::Logistic {
+            // The line-search grid for the hot-path family goes through the
+            // kernel seam; same i-outer/k-inner accumulation order, so the
+            // result is bit-identical to the generic loop below.
+            crate::kernels::active().logloss_grid(y, margins, dmargins, alphas, &mut out);
+            return out;
+        }
         for i in 0..y.len() {
             let (yi, mi, di) = (y[i], margins[i], dmargins[i]);
             for (k, &a) in alphas.iter().enumerate() {

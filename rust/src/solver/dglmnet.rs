@@ -107,6 +107,9 @@ pub fn fit(
 
     let mut trace = Trace::new("d-glmnet", &train.name);
     let started = Instant::now();
+    // One kernel-mode lookup for the whole fit — the mode is pinned before
+    // any solver runs (kernels::set_fast_math), never flipped mid-fit.
+    let ker = crate::kernels::active();
 
     let mut loss = compute.stats(&train.y, &margins, &mut w, &mut z);
     let mut reg = penalty.value(&beta);
@@ -140,18 +143,15 @@ pub fn fit(
                 st,
                 CycleBudget::full_cycle(block.len()),
             );
-            for i in 0..n {
-                dmargins[i] += st.t[i];
-            }
+            // Merge the block's XᵐΔβᵐ into the global direction (α = 1 is
+            // exact, so this is the same fused axpy as the step apply).
+            ker.margin_update_with_xdelta(&mut dmargins, &st.t, 1.0);
         }
 
         // ---- global line search over the merged direction ----
         // ∇L(β)ᵀΔβ from the cached working set: g_i = −w_i z_i exactly
         // (z = −g/w with the same floored w), so no extra stats pass.
-        let mut grad_dot = 0.0;
-        for i in 0..n {
-            grad_dot += -w[i] * z[i] * dmargins[i];
-        }
+        let grad_dot = ker.neg_wz_dot(&w, &z, &dmargins);
         let reg_ray = |alphas: &[f64]| -> Vec<f64> {
             let mut out = vec![0.0; alphas.len()];
             for (m, block) in partition.blocks.iter().enumerate() {
@@ -185,9 +185,7 @@ pub fn fit(
                     beta[j] += ls.alpha * st.delta_beta[local];
                 }
             }
-            for i in 0..n {
-                margins[i] += ls.alpha * dmargins[i];
-            }
+            ker.margin_update_with_xdelta(&mut margins, &dmargins, ls.alpha);
         }
 
         // ---- adaptive μ (Algorithm 1 steps 9-12) ----

@@ -146,6 +146,9 @@ pub fn cd_cycle(
         state.cursor = 0;
     }
     let t = &mut state.t;
+    // One mode lookup per cycle, not per column: the kernel seam is a
+    // vtable behind a relaxed atomic (kernels::active()).
+    let ker = crate::kernels::active();
     while updates < budget.max_updates {
         if let Some(stop) = budget.stop {
             if stop.load(Ordering::Relaxed) && updates >= 1 {
@@ -159,18 +162,9 @@ pub fn cd_cycle(
         let (rows, vals) = x.col_raw(j);
         // One fused pass over the column: s1 = Σ w x (z − μ t), s2 = Σ w x².
         // SAFETY: row indices are < nrows by Csc construction; w/z/t have
-        // length nrows (checked at entry) — elide the per-entry bounds
-        // checks in the hottest loop of the solver (§Perf).
-        let mut s1 = 0.0;
-        let mut s2 = 0.0;
-        for (r, v) in rows.iter().zip(vals.iter()) {
-            let i = *r as usize;
-            unsafe {
-                let wx = w.get_unchecked(i) * v;
-                s1 += wx * (z.get_unchecked(i) - mu * t.get_unchecked(i));
-                s2 += wx * v;
-            }
-        }
+        // length nrows (checked at entry) — the kernel elides the per-entry
+        // bounds checks in the hottest loop of the solver (§Perf).
+        let (s1, s2) = unsafe { ker.col_weighted_quad(rows, vals, w, z, t, mu) };
         let old_d = state.delta_beta[j];
         let lin = s1 + mu * (beta[j] + old_d) * s2 + nu * beta[j];
         let quad = mu * s2 + nu;
@@ -179,12 +173,8 @@ pub fn cd_cycle(
         let change = new_d - old_d;
         if change != 0.0 {
             state.delta_beta[j] = new_d;
-            // SAFETY: same bound argument as the gather loop above.
-            for (r, v) in rows.iter().zip(vals.iter()) {
-                unsafe {
-                    *t.get_unchecked_mut(*r as usize) += change * v;
-                }
-            }
+            // SAFETY: same bound argument as the gather above.
+            unsafe { ker.axpy_col(rows, vals, change, t) };
             max_delta = max_delta.max(change.abs());
         }
         updates += 1;

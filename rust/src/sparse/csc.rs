@@ -96,10 +96,10 @@ impl Csc {
     /// y += alpha * X[:, j] * coef  — scatter a scaled column into a dense vec.
     #[inline]
     pub fn axpy_col(&self, j: usize, coef: f64, y: &mut [f64]) {
+        assert!(y.len() >= self.nrows);
         let (rows, vals) = self.col_raw(j);
-        for (r, v) in rows.iter().zip(vals.iter()) {
-            y[*r as usize] += coef * v;
-        }
+        // SAFETY: constructors keep every rowidx < nrows ≤ y.len().
+        unsafe { crate::kernels::active().axpy_col(rows, vals, coef, y) }
     }
 
     /// Dense matrix-vector product y = X * beta (beta indexed by column).
@@ -118,14 +118,12 @@ impl Csc {
     /// Transpose-product g = Xᵀ v (g indexed by column).
     pub fn tmul_vec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(v.len(), self.nrows);
+        let ker = crate::kernels::active();
         let mut g = vec![0.0; self.ncols];
         for j in 0..self.ncols {
             let (rows, vals) = self.col_raw(j);
-            let mut acc = 0.0;
-            for (r, x) in rows.iter().zip(vals.iter()) {
-                acc += v[*r as usize] * x;
-            }
-            g[j] = acc;
+            // SAFETY: constructors keep every rowidx < nrows == v.len().
+            g[j] = unsafe { ker.sparse_dot(rows, vals, v) };
         }
         g
     }
@@ -208,7 +206,7 @@ impl Csc {
     /// Squared L2 norm of column j.
     pub fn col_sq_norm(&self, j: usize) -> f64 {
         let (_, vals) = self.col_raw(j);
-        vals.iter().map(|v| v * v).sum()
+        crate::kernels::active().sq_norm(vals)
     }
 
     /// Bytes of payload storage (colptr + rowidx + values) — used by the

@@ -83,12 +83,10 @@ impl Csr {
     /// Dot product of row i with a dense weight vector.
     #[inline]
     pub fn dot_row(&self, i: usize, beta: &[f64]) -> f64 {
+        assert!(beta.len() >= self.ncols);
         let (cols, vals) = self.row_raw(i);
-        let mut acc = 0.0;
-        for (c, v) in cols.iter().zip(vals.iter()) {
-            acc += beta[*c as usize] * v;
-        }
-        acc
+        // SAFETY: constructors keep every colidx < ncols ≤ beta.len().
+        unsafe { crate::kernels::active().sparse_dot(cols, vals, beta) }
     }
 
     /// Dense product y = X * beta.
@@ -100,10 +98,10 @@ impl Csr {
     /// g += coef_i * x_i for row i (gradient scatter).
     #[inline]
     pub fn axpy_row(&self, i: usize, coef: f64, g: &mut [f64]) {
+        assert!(g.len() >= self.ncols);
         let (cols, vals) = self.row_raw(i);
-        for (c, v) in cols.iter().zip(vals.iter()) {
-            g[*c as usize] += coef * v;
-        }
+        // SAFETY: constructors keep every colidx < ncols ≤ g.len().
+        unsafe { crate::kernels::active().axpy_col(cols, vals, coef, g) }
     }
 
     /// Transpose product g = Xᵀ v.

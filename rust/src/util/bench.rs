@@ -96,6 +96,29 @@ pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Summary 
     s
 }
 
+/// Append one record to a JSON-array trajectory file (the `BENCH_*.json`
+/// files at the repo root), creating it on first use. Each bench run pushes
+/// one timestamped object so the numbers accumulate into a trajectory
+/// across commits. A malformed existing file is replaced rather than
+/// crashing the bench.
+pub fn append_json_record(path: &std::path::Path, fill: impl FnOnce(&mut crate::util::json::Json)) {
+    use crate::util::json::{self, Json};
+    let mut records = match std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| json::parse(&text).ok())
+    {
+        Some(Json::Arr(items)) => items,
+        _ => Vec::new(),
+    };
+    let mut rec = Json::obj();
+    fill(&mut rec);
+    records.push(rec);
+    match std::fs::write(path, Json::Arr(records).dump()) {
+        Ok(()) => crate::obs::log::emit(&format!("appended record to {}", path.display())),
+        Err(e) => crate::obs::log::emit(&format!("could not write {}: {e}", path.display())),
+    }
+}
+
 /// Paper-style fixed-width table printer.
 pub struct Table {
     headers: Vec<String>,
@@ -188,5 +211,37 @@ mod tests {
     fn table_rejects_bad_arity() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only-one".to_string()]);
+    }
+
+    #[test]
+    fn append_json_record_accumulates_and_heals() {
+        use crate::util::json::{self, Json};
+        let path = std::env::temp_dir().join(format!(
+            "dglmnet_bench_append_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        append_json_record(&path, |r| {
+            r.set("k", 1.0);
+        });
+        append_json_record(&path, |r| {
+            r.set("k", 2.0);
+        });
+        let text = std::fs::read_to_string(&path).unwrap();
+        match json::parse(&text).unwrap() {
+            Json::Arr(items) => assert_eq!(items.len(), 2),
+            other => panic!("expected array, got {other:?}"),
+        }
+        // A malformed trajectory is replaced, not a crash.
+        std::fs::write(&path, "not json").unwrap();
+        append_json_record(&path, |r| {
+            r.set("k", 3.0);
+        });
+        let text = std::fs::read_to_string(&path).unwrap();
+        match json::parse(&text).unwrap() {
+            Json::Arr(items) => assert_eq!(items.len(), 1),
+            other => panic!("expected array, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

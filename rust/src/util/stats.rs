@@ -55,29 +55,10 @@ pub fn min(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::INFINITY, f64::min)
 }
 
-/// log(1 + exp(x)) computed without overflow for large |x|.
-#[inline]
-pub fn log1p_exp(x: f64) -> f64 {
-    if x > 35.0 {
-        x
-    } else if x < -35.0 {
-        x.exp() // ~0, but keeps derivative continuity in tests
-    } else {
-        x.exp().ln_1p()
-    }
-}
-
-/// Numerically stable sigmoid.
-#[inline]
-pub fn sigmoid(x: f64) -> f64 {
-    if x >= 0.0 {
-        let e = (-x).exp();
-        1.0 / (1.0 + e)
-    } else {
-        let e = x.exp();
-        e / (1.0 + e)
-    }
-}
+// The canonical `sigmoid`/`log1p_exp` moved to `kernels::` (the inner-loop
+// seam); re-exported here so historical `util::stats::sigmoid` paths keep
+// compiling. Their unit tests moved with them.
+pub use crate::kernels::{log1p_exp, sigmoid};
 
 /// Standard normal PDF.
 #[inline]
@@ -180,28 +161,6 @@ mod tests {
     fn variance_known() {
         let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
         assert!((variance(&xs) - 32.0 / 7.0).abs() < 1e-12);
-    }
-
-    #[test]
-    fn sigmoid_props() {
-        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
-        assert!((sigmoid(100.0) - 1.0).abs() < 1e-15);
-        assert!(sigmoid(-100.0) < 1e-15);
-        // symmetry
-        for x in [-3.0, -1.0, 0.5, 2.0] {
-            assert!((sigmoid(x) + sigmoid(-x) - 1.0).abs() < 1e-15);
-        }
-    }
-
-    #[test]
-    fn log1p_exp_stable() {
-        assert!((log1p_exp(0.0) - std::f64::consts::LN_2).abs() < 1e-15);
-        assert!((log1p_exp(1000.0) - 1000.0).abs() < 1e-9);
-        assert!(log1p_exp(-1000.0).abs() < 1e-15);
-        // identity: log1p_exp(x) - log1p_exp(-x) = x
-        for x in [-20.0, -3.0, 0.7, 15.0] {
-            assert!((log1p_exp(x) - log1p_exp(-x) - x).abs() < 1e-12);
-        }
     }
 
     #[test]

@@ -55,6 +55,7 @@ fn chaos_spec(cluster: Vec<String>) -> JobSpec {
         checkpoint_every: 0,
         resume: false,
         partition: None,
+        fast_math: false,
     }
 }
 

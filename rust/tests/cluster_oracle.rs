@@ -577,3 +577,205 @@ fn multiprocess_cluster_end_to_end() {
         "4-process cluster objective {cluster_obj} vs reference {seq} (gap {gap:.3e})"
     );
 }
+
+// ---------------------------------------------------------------------------
+// Fast-math kernel tier (job-spec v9): the reordered-accumulation kernels
+// are NOT bit-reproducible, so they get their own tolerance column in the
+// oracle matrix — and their own subprocess tests, because the kernel mode
+// is process-global and must never be flipped inside the test runner.
+// ---------------------------------------------------------------------------
+
+/// Spawn `n` `dglmnet worker` subprocesses (with `extra` CLI args appended),
+/// returning the children plus their resolved listen addresses. Each
+/// worker's stdout is drained on a background thread.
+#[allow(clippy::type_complexity)]
+fn spawn_worker_procs(
+    n: usize,
+    extra: &[&str],
+) -> (Vec<std::process::Child>, Vec<String>) {
+    use std::io::BufRead;
+    use std::process::{Command, Stdio};
+    let bin = env!("CARGO_BIN_EXE_dglmnet");
+    let mut workers = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..n {
+        let mut args = vec!["worker", "--listen", "127.0.0.1:0"];
+        args.extend_from_slice(extra);
+        let mut child = Command::new(bin)
+            .args(&args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn worker");
+        let stdout = child.stdout.take().expect("worker stdout");
+        let mut reader = std::io::BufReader::new(stdout);
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("worker banner");
+        let addr = line
+            .trim()
+            .strip_prefix("worker: listening on ")
+            .unwrap_or_else(|| panic!("unexpected worker banner: {line:?}"))
+            .to_string();
+        addrs.push(addr);
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            loop {
+                sink.clear();
+                if reader.read_line(&mut sink).unwrap_or(0) == 0 {
+                    break;
+                }
+            }
+        });
+        workers.push(child);
+    }
+    (workers, addrs)
+}
+
+fn kill_workers(mut workers: Vec<std::process::Child>) {
+    for c in workers.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+/// A `--fast-math` cluster reassociates every reduction, so it has no
+/// bit-for-bit oracle — but it must land within the documented end-to-end
+/// tolerance tier (~1e-4 relative) of the strict in-process reference on
+/// the identical recipe. This is the tolerance the DESIGN.md §Kernels tier
+/// table promises users of the flag.
+#[test]
+fn fast_math_cluster_tracks_strict_reference_within_tolerance() {
+    use std::process::Command;
+    let bin = env!("CARGO_BIN_EXE_dglmnet");
+    let (workers, addrs) = spawn_worker_procs(2, &[]);
+
+    let trace_path = std::env::temp_dir().join(format!(
+        "dglmnet_fastmath_e2e_{}.json",
+        std::process::id()
+    ));
+    let cluster = format!("127.0.0.1:0,{}", addrs.join(","));
+    let out = Command::new(bin)
+        .args([
+            "train",
+            "--cluster",
+            &cluster,
+            "--fast-math",
+            "--dataset",
+            "epsilon_like",
+            "--scale",
+            "0.05",
+            "--seed",
+            "1",
+            "--loss",
+            "logistic",
+            "--l1",
+            "0.5",
+            "--l2",
+            "0.0",
+            "--max-iters",
+            "8",
+            "--eval-every",
+            "0",
+            "--trace",
+            trace_path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run fast-math coordinator");
+    kill_workers(workers);
+    assert!(
+        out.status.success(),
+        "fast-math coordinator failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("kernels=fast-math"),
+        "train banner should advertise the kernel tier:\n{stdout}"
+    );
+
+    let text = std::fs::read_to_string(&trace_path).expect("trace file");
+    std::fs::remove_file(&trace_path).ok();
+    let trace = dglmnet::util::json::parse(&text).expect("trace json");
+    let objectives = match trace.get("objective") {
+        Some(dglmnet::util::json::Json::Arr(xs)) => {
+            xs.iter().filter_map(|x| x.as_f64()).collect::<Vec<_>>()
+        }
+        _ => panic!("trace has no objective series"),
+    };
+    let fast_obj = *objectives.last().expect("non-empty objective series");
+
+    // Strict in-process reference on the identical recipe (M = 3 blocks).
+    let splits = dglmnet::harness::load_splits("epsilon_like", 0.05, 1).expect("splits");
+    let compute = NativeCompute::new(LossKind::Logistic);
+    let pen = ElasticNet::new(0.5, 0.0);
+    let seq = dg::fit(
+        &splits.train,
+        &compute,
+        &pen,
+        &DGlmnetConfig {
+            nodes: 3,
+            max_iters: 8,
+            tol: 1e-7,
+            patience: 2,
+            seed: 1,
+            eval_every: 0,
+            ..Default::default()
+        },
+        None,
+    )
+    .objective;
+    let gap = (fast_obj - seq).abs() / seq.abs().max(1e-12);
+    assert!(
+        gap < 1e-4,
+        "fast-math cluster objective {fast_obj} vs strict reference {seq} (gap {gap:.3e}) \
+         exceeds the end-to-end tolerance tier"
+    );
+}
+
+/// A worker pinned to strict kernels (`--fast-math off`) must REJECT a
+/// `--fast-math` job with a pointed error instead of silently solving with
+/// the other tier — mixing kernel modes across ranks would corrupt the
+/// collectives' tolerance story without any visible symptom.
+#[test]
+fn worker_pinned_to_strict_rejects_fast_math_job() {
+    use std::process::Command;
+    let bin = env!("CARGO_BIN_EXE_dglmnet");
+    let (workers, addrs) = spawn_worker_procs(1, &["--fast-math", "off"]);
+
+    let cluster = format!("127.0.0.1:0,{}", addrs.join(","));
+    let out = Command::new(bin)
+        .args([
+            "train",
+            "--cluster",
+            &cluster,
+            "--fast-math",
+            "--dataset",
+            "epsilon_like",
+            "--scale",
+            "0.05",
+            "--seed",
+            "1",
+            "--max-iters",
+            "2",
+            "--eval-every",
+            "0",
+        ])
+        .output()
+        .expect("run mismatched coordinator");
+    kill_workers(workers);
+    assert!(
+        !out.status.success(),
+        "coordinator must fail when a worker rejects the kernel tier:\nstdout: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("rejected the job"),
+        "stderr should carry the ship-job rejection:\n{stderr}"
+    );
+    assert!(
+        stderr.contains("pinned to strict kernels"),
+        "stderr should carry the worker's pointed mismatch error:\n{stderr}"
+    );
+}

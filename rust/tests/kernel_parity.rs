@@ -1,0 +1,410 @@
+//! Kernel-parity properties for the `kernels::` seam (DESIGN.md §Kernels).
+//!
+//! Two distinct contracts are pinned here:
+//!
+//! * **strict parity** — `VectorKernels { fast: false }` must be
+//!   *bit-identical* (`to_bits` equality) to `ScalarKernels` on every
+//!   primitive, for every length (straddling the unroll width), and for
+//!   special values (±inf, subnormals). This is what lets the default mode
+//!   be the unrolled one without touching the 1e-12 hybrid/cluster oracles.
+//! * **fast-math tolerance** — `VectorKernels { fast: true }` reassociates
+//!   reductions, so it only promises ≤ 1e-7 relative agreement on finite
+//!   inputs (the documented per-primitive tier). Element-wise primitives
+//!   and the loss grid carry no accumulation order and must stay
+//!   bit-identical even in fast-math mode.
+//!
+//! These tests construct the implementations DIRECTLY — they never flip the
+//! process-global mode, because the test runner is multi-threaded and the
+//! mode cell is shared by every test in the process.
+
+use dglmnet::kernels::vector::{f32mode, LANES};
+use dglmnet::kernels::{CdKernels, ScalarKernels, VectorKernels};
+use dglmnet::util::prop;
+use dglmnet::util::rng::Rng;
+
+const SCALAR: ScalarKernels = ScalarKernels;
+const STRICT: VectorKernels = VectorKernels { fast: false };
+const FAST: VectorKernels = VectorKernels { fast: true };
+
+/// Per-primitive fast-math tolerance tier (relative, finite inputs).
+const FAST_TOL: f64 = 1e-7;
+
+/// Lengths that straddle the unroll width: empty, sub-lane, exactly one
+/// block, one block ± 1, several blocks ± remainders.
+fn straddle_lengths() -> Vec<usize> {
+    vec![
+        0,
+        1,
+        LANES - 1,
+        LANES,
+        LANES + 1,
+        2 * LANES,
+        3 * LANES + 2,
+        16 * LANES + 3,
+    ]
+}
+
+fn bits_eq(label: &str, a: f64, b: f64) -> Result<(), String> {
+    if a.to_bits() == b.to_bits() {
+        Ok(())
+    } else {
+        Err(format!("{label}: {a:?} != {b:?} (bitwise)"))
+    }
+}
+
+fn all_bits_eq(label: &str, a: &[f64], b: &[f64]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{label}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        bits_eq(&format!("{label}[{i}]"), *x, *y)?;
+    }
+    Ok(())
+}
+
+/// A random sparse column over a dense dimension `dim`: sorted unique u32
+/// row indices + values, sized to straddle the unroll width.
+fn sparse_col(rng: &mut Rng, dim: usize, nnz: usize) -> (Vec<u32>, Vec<f64>) {
+    let pairs = prop::sparse_vec(rng, dim, nnz, 3.0);
+    let rows: Vec<u32> = pairs.iter().map(|&(i, _)| i as u32).collect();
+    let vals: Vec<f64> = pairs.iter().map(|&(_, v)| v).collect();
+    (rows, vals)
+}
+
+// ---------------------------------------------------------------------------
+// strict parity: vector-strict ≡ scalar, bitwise
+// ---------------------------------------------------------------------------
+
+#[test]
+fn strict_sparse_dot_bit_exact() {
+    prop::check("strict sparse_dot ≡ scalar", 300, |rng| {
+        let dim = 8 + rng.below(120);
+        let (rows, vals) = sparse_col(rng, dim, 1 + rng.below(dim));
+        let dense = prop::dense_vec(rng, dim, 5.0);
+        let (a, b) = unsafe {
+            (
+                SCALAR.sparse_dot(&rows, &vals, &dense),
+                STRICT.sparse_dot(&rows, &vals, &dense),
+            )
+        };
+        bits_eq("sparse_dot", a, b)
+    });
+}
+
+#[test]
+fn strict_axpy_col_bit_exact() {
+    prop::check("strict axpy_col ≡ scalar", 300, |rng| {
+        let dim = 8 + rng.below(120);
+        let (rows, vals) = sparse_col(rng, dim, 1 + rng.below(dim));
+        let coef = rng.range_f64(-4.0, 4.0);
+        let base = prop::dense_vec(rng, dim, 2.0);
+        let mut ya = base.clone();
+        let mut yb = base;
+        unsafe {
+            SCALAR.axpy_col(&rows, &vals, coef, &mut ya);
+            STRICT.axpy_col(&rows, &vals, coef, &mut yb);
+        }
+        all_bits_eq("axpy_col", &ya, &yb)
+    });
+}
+
+#[test]
+fn strict_col_weighted_quad_bit_exact() {
+    prop::check("strict col_weighted_quad ≡ scalar", 300, |rng| {
+        let dim = 8 + rng.below(120);
+        let (rows, vals) = sparse_col(rng, dim, 1 + rng.below(dim));
+        // w is a working-weight vector: positive, floored like the solver's.
+        let w: Vec<f64> = (0..dim).map(|_| rng.range_f64(1e-6, 0.25)).collect();
+        let z = prop::dense_vec(rng, dim, 4.0);
+        let t = prop::dense_vec(rng, dim, 4.0);
+        let mu = rng.range_f64(0.0, 2.0);
+        let ((a1, a2), (b1, b2)) = unsafe {
+            (
+                SCALAR.col_weighted_quad(&rows, &vals, &w, &z, &t, mu),
+                STRICT.col_weighted_quad(&rows, &vals, &w, &z, &t, mu),
+            )
+        };
+        bits_eq("s1", a1, b1)?;
+        bits_eq("s2", a2, b2)
+    });
+}
+
+#[test]
+fn strict_dense_reductions_bit_exact_across_straddle_lengths() {
+    // Deterministic straddle sweep first (every remainder shape), then the
+    // randomized pass below hits random lengths on top.
+    for n in straddle_lengths() {
+        let mut rng = Rng::new(0xBEEF ^ n as u64);
+        let v = prop::dense_vec(&mut rng, n, 3.0);
+        let w: Vec<f64> = (0..n).map(|_| rng.range_f64(1e-6, 0.25)).collect();
+        let z = prop::dense_vec(&mut rng, n, 4.0);
+        let d = prop::dense_vec(&mut rng, n, 4.0);
+        let y: Vec<f64> = (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let m = prop::dense_vec(&mut rng, n, 8.0);
+        bits_eq("sq_norm", SCALAR.sq_norm(&v), STRICT.sq_norm(&v)).unwrap();
+        bits_eq(
+            "neg_wz_dot",
+            SCALAR.neg_wz_dot(&w, &z, &d),
+            STRICT.neg_wz_dot(&w, &z, &d),
+        )
+        .unwrap();
+        bits_eq(
+            "logloss_sum",
+            SCALAR.logloss_sum(&y, &m),
+            STRICT.logloss_sum(&y, &m),
+        )
+        .unwrap();
+    }
+}
+
+#[test]
+fn strict_dense_reductions_bit_exact_random_lengths() {
+    prop::check("strict dense reductions ≡ scalar", 300, |rng| {
+        let n = rng.below(200);
+        let v = prop::dense_vec(rng, n, 3.0);
+        let w: Vec<f64> = (0..n).map(|_| rng.range_f64(1e-6, 0.25)).collect();
+        let z = prop::dense_vec(rng, n, 4.0);
+        let d = prop::dense_vec(rng, n, 4.0);
+        bits_eq("sq_norm", SCALAR.sq_norm(&v), STRICT.sq_norm(&v))?;
+        bits_eq(
+            "neg_wz_dot",
+            SCALAR.neg_wz_dot(&w, &z, &d),
+            STRICT.neg_wz_dot(&w, &z, &d),
+        )
+    });
+}
+
+#[test]
+fn strict_parity_with_infinities_and_subnormals() {
+    // Special values must flow through the strict unroll bit-for-bit: the
+    // sequential accumulator sees the same operands in the same order, so
+    // ±inf propagation and subnormal rounding agree exactly.
+    let specials = [
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        f64::MIN_POSITIVE,          // smallest normal
+        f64::MIN_POSITIVE / 2048.0, // subnormal
+        -f64::MIN_POSITIVE / 4096.0,
+        0.0,
+        -0.0,
+        1e300,
+        -1e300,
+    ];
+    for n in straddle_lengths() {
+        let mut rng = Rng::new(0x5CA1E ^ n as u64);
+        let mut v = prop::dense_vec(&mut rng, n, 2.0);
+        // Sprinkle specials at positions covering block starts, interiors
+        // and the remainder tail.
+        for (k, s) in specials.iter().enumerate() {
+            if n > 0 {
+                let at = (k * 5 + 3) % n;
+                v[at] = *s;
+            }
+        }
+        let d = prop::dense_vec(&mut rng, n, 2.0);
+        bits_eq("sq_norm/special", SCALAR.sq_norm(&v), STRICT.sq_norm(&v)).unwrap();
+        bits_eq(
+            "neg_wz_dot/special",
+            SCALAR.neg_wz_dot(&v, &d, &d),
+            STRICT.neg_wz_dot(&v, &d, &d),
+        )
+        .unwrap();
+        // Sparse gather over a column whose values include the specials.
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let (a, b) = unsafe {
+            (
+                SCALAR.sparse_dot(&rows, &v, &d),
+                STRICT.sparse_dot(&rows, &v, &d),
+            )
+        };
+        bits_eq("sparse_dot/special", a, b).unwrap();
+    }
+}
+
+#[test]
+fn strict_logloss_grid_bit_exact() {
+    prop::check("strict logloss_grid ≡ scalar", 200, |rng| {
+        let n = rng.below(150);
+        let y: Vec<f64> = (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let m = prop::dense_vec(rng, n, 6.0);
+        let dm = prop::dense_vec(rng, n, 6.0);
+        let alphas = [1.0, 0.5, 0.25, 0.125, 0.0625];
+        let mut oa = vec![0.0; alphas.len()];
+        let mut ob = vec![0.0; alphas.len()];
+        SCALAR.logloss_grid(&y, &m, &dm, &alphas, &mut oa);
+        STRICT.logloss_grid(&y, &m, &dm, &alphas, &mut ob);
+        all_bits_eq("logloss_grid", &oa, &ob)
+    });
+}
+
+// ---------------------------------------------------------------------------
+// fast-math: reductions within the 1e-7 tier; element-wise still bit-exact
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fast_math_reductions_within_tier() {
+    prop::check("fast-math reductions ≤ 1e-7 relative", 300, |rng| {
+        let dim = 8 + rng.below(200);
+        let (rows, vals) = sparse_col(rng, dim, 1 + rng.below(dim));
+        let dense = prop::dense_vec(rng, dim, 5.0);
+        let w: Vec<f64> = (0..dim).map(|_| rng.range_f64(1e-6, 0.25)).collect();
+        let z = prop::dense_vec(rng, dim, 4.0);
+        let t = prop::dense_vec(rng, dim, 4.0);
+        let d = prop::dense_vec(rng, dim, 4.0);
+        let y: Vec<f64> = (0..dim).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let mu = rng.range_f64(0.0, 2.0);
+
+        let (sd_s, sd_f) = unsafe {
+            (
+                SCALAR.sparse_dot(&rows, &vals, &dense),
+                FAST.sparse_dot(&rows, &vals, &dense),
+            )
+        };
+        prop::close(sd_s, sd_f, FAST_TOL).map_err(|e| format!("sparse_dot: {e}"))?;
+
+        let ((s1, s2), (f1, f2)) = unsafe {
+            (
+                SCALAR.col_weighted_quad(&rows, &vals, &w, &z, &t, mu),
+                FAST.col_weighted_quad(&rows, &vals, &w, &z, &t, mu),
+            )
+        };
+        prop::close(s1, f1, FAST_TOL).map_err(|e| format!("quad s1: {e}"))?;
+        prop::close(s2, f2, FAST_TOL).map_err(|e| format!("quad s2: {e}"))?;
+
+        prop::close(SCALAR.sq_norm(&vals), FAST.sq_norm(&vals), FAST_TOL)
+            .map_err(|e| format!("sq_norm: {e}"))?;
+        prop::close(
+            SCALAR.neg_wz_dot(&w, &z, &d),
+            FAST.neg_wz_dot(&w, &z, &d),
+            FAST_TOL,
+        )
+        .map_err(|e| format!("neg_wz_dot: {e}"))?;
+        prop::close(
+            SCALAR.logloss_sum(&y, &z),
+            FAST.logloss_sum(&y, &z),
+            FAST_TOL,
+        )
+        .map_err(|e| format!("logloss_sum: {e}"))
+    });
+}
+
+#[test]
+fn fast_math_elementwise_still_bit_exact() {
+    prop::check("fast-math element-wise ≡ scalar (bitwise)", 300, |rng| {
+        let dim = 8 + rng.below(150);
+        let (rows, vals) = sparse_col(rng, dim, 1 + rng.below(dim));
+        let coef = rng.range_f64(-4.0, 4.0);
+        let base = prop::dense_vec(rng, dim, 2.0);
+        let d = prop::dense_vec(rng, dim, 3.0);
+        let w: Vec<f64> = (0..dim).map(|_| rng.range_f64(1e-6, 0.25)).collect();
+        let z = prop::dense_vec(rng, dim, 4.0);
+        let alpha = rng.range_f64(0.0, 1.0);
+
+        let mut ya = base.clone();
+        let mut yb = base.clone();
+        unsafe {
+            SCALAR.axpy_col(&rows, &vals, coef, &mut ya);
+            FAST.axpy_col(&rows, &vals, coef, &mut yb);
+        }
+        all_bits_eq("axpy_col", &ya, &yb)?;
+
+        let mut ma = base.clone();
+        let mut mb = base.clone();
+        SCALAR.margin_update_with_xdelta(&mut ma, &d, alpha);
+        FAST.margin_update_with_xdelta(&mut mb, &d, alpha);
+        all_bits_eq("margin_update", &ma, &mb)?;
+
+        let mut ga = vec![0.0; dim];
+        let mut gb = vec![0.0; dim];
+        SCALAR.neg_wz(&w, &z, &mut ga);
+        FAST.neg_wz(&w, &z, &mut gb);
+        all_bits_eq("neg_wz", &ga, &gb)?;
+
+        let mut pa = vec![0.0; dim];
+        let mut pb = vec![0.0; dim];
+        SCALAR.sigmoid_margins(&base, &mut pa);
+        FAST.sigmoid_margins(&base, &mut pb);
+        all_bits_eq("sigmoid_margins", &pa, &pb)
+    });
+}
+
+#[test]
+fn fast_math_logloss_grid_bit_exact() {
+    // The loss grid shares the strict path even in fast-math mode (it is
+    // exp-bound; nothing to reassociate) — pin that so line search stays
+    // bit-identical across modes.
+    prop::check("fast-math logloss_grid ≡ scalar (bitwise)", 200, |rng| {
+        let n = rng.below(150);
+        let y: Vec<f64> = (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let m = prop::dense_vec(rng, n, 6.0);
+        let dm = prop::dense_vec(rng, n, 6.0);
+        let alphas = [1.0, 0.5, 0.25];
+        let mut oa = vec![0.0; alphas.len()];
+        let mut ob = vec![0.0; alphas.len()];
+        SCALAR.logloss_grid(&y, &m, &dm, &alphas, &mut oa);
+        FAST.logloss_grid(&y, &m, &dm, &alphas, &mut ob);
+        all_bits_eq("logloss_grid", &oa, &ob)
+    });
+}
+
+#[test]
+fn fast_math_subnormal_inputs_stay_finite_and_close() {
+    // Subnormals: reassociation may round differently but must stay within
+    // the tier (the sums here are dominated by normal-range values).
+    let mut rng = Rng::new(0xD15EA5E);
+    for n in straddle_lengths() {
+        let mut v = prop::dense_vec(&mut rng, n, 1.0);
+        if n > 2 {
+            v[0] = f64::MIN_POSITIVE / 1024.0;
+            v[n / 2] = -f64::MIN_POSITIVE / 512.0;
+        }
+        let s = SCALAR.sq_norm(&v);
+        let f = FAST.sq_norm(&v);
+        assert!(f.is_finite());
+        prop::close(s, f, FAST_TOL).unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 margin mode: accumulates in f64, tolerances follow f32's epsilon
+// ---------------------------------------------------------------------------
+
+#[test]
+fn f32mode_matches_f64_kernels_at_f32_precision() {
+    prop::check("f32 margin kernels track f64 at ~1e-5", 200, |rng| {
+        let n = rng.below(150);
+        let m64 = prop::dense_vec(rng, n, 8.0);
+        let d64 = prop::dense_vec(rng, n, 2.0);
+        let y: Vec<f64> = (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let m32: Vec<f32> = m64.iter().map(|&x| x as f32).collect();
+        let d32: Vec<f32> = d64.iter().map(|&x| x as f32).collect();
+
+        // logloss: f64 accumulator over f32 margins — error is the f32
+        // representation of the margins, not the accumulation.
+        let l64 = SCALAR.logloss_sum(&y, &m64);
+        let l32 = f32mode::logloss_sum_f32(&y, &m32);
+        prop::close(l64, l32, 1e-5).map_err(|e| format!("logloss_sum_f32: {e}"))?;
+
+        // sigmoid: computed in f64, rounded once to f32.
+        let mut p64 = vec![0.0; n];
+        SCALAR.sigmoid_margins(&m64, &mut p64);
+        let mut p32 = vec![0.0f32; n];
+        f32mode::sigmoid_margins_f32(&m32, &mut p32);
+        for i in 0..n {
+            prop::close(p64[i], f64::from(p32[i]), 1e-5)
+                .map_err(|e| format!("sigmoid_margins_f32[{i}]: {e}"))?;
+        }
+
+        // step apply in f32 vs f64.
+        let alpha = rng.range_f64(0.0, 1.0);
+        let mut y64 = m64.clone();
+        SCALAR.margin_update_with_xdelta(&mut y64, &d64, alpha);
+        let mut y32 = m32.clone();
+        f32mode::margin_update_f32(&mut y32, &d32, alpha as f32);
+        for i in 0..n {
+            prop::close(y64[i], f64::from(y32[i]), 1e-5)
+                .map_err(|e| format!("margin_update_f32[{i}]: {e}"))?;
+        }
+        Ok(())
+    });
+}

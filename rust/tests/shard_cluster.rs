@@ -56,6 +56,7 @@ fn base_spec(cluster: Vec<String>, dataset: String) -> JobSpec {
         checkpoint_every: 0,
         resume: false,
         partition: None,
+        fast_math: false,
     }
 }
 
